@@ -1,0 +1,23 @@
+//! Characterization sweep — regenerates the motivation figures (Figs 2-6)
+//! in one run: per-target PPW/latency, per-layer costs, precision/accuracy
+//! trade-offs, interference and signal-strength shifts.
+//!
+//! Run: `cargo run --release --example characterization [--full]`
+
+use autoscale::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let seed = 7;
+    for id in ["fig2", "fig3", "fig4", "fig5", "fig6"] {
+        let tables = experiments::run_by_id(id, seed, quick)
+            .ok_or_else(|| anyhow::anyhow!("missing experiment {id}"))?;
+        for (i, t) in tables.iter().enumerate() {
+            println!("{}", t.render());
+            let slug = if tables.len() == 1 { id.to_string() } else { format!("{id}_{i}") };
+            let path = t.write_csv(std::path::Path::new("reports"), &slug)?;
+            println!("csv: {}\n", path.display());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! End-to-end serving driver — the repository's E2E validation workload.
+//!
+//! Loads the real AOT model zoo (all 10 networks), trains AutoScale online
+//! across static + dynamic environments with REAL PJRT execution grounding
+//! the local targets, then evaluates frozen against every baseline and
+//! reports PPW / latency percentiles / QoS compliance per policy.
+//!
+//! Run: `cargo run --release --example edge_serving` (see EXPERIMENTS.md
+//! §E2E for a recorded run).
+
+use autoscale::agent::qlearn::AutoScaleAgent;
+use autoscale::configsys::runconfig::{EnvKind, RunConfig};
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::policy::{action_catalogue, Policy};
+use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::runtime::Engine;
+use autoscale::types::DeviceId;
+use autoscale::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let device = DeviceId::Mi8Pro;
+    let seed = 7;
+
+    // Real runtime over the full artifact zoo.
+    let mut engine = Engine::from_default_manifest()?;
+    println!("== AutoScale end-to-end edge serving ==");
+    println!("PJRT platform  : {}", engine.platform());
+    println!("artifact models: {:?}", engine.manifest().models().len());
+
+    // ---- Phase 1: online training with real compute ----
+    let catalogue = action_catalogue(&autoscale::device::presets::device(device));
+    let mut agent = AutoScaleAgent::new(catalogue, Default::default(), seed);
+    let train_envs = [
+        EnvKind::S1NoVariance,
+        EnvKind::S2CpuHog,
+        EnvKind::S3MemHog,
+        EnvKind::S4WeakWlan,
+        EnvKind::D2WebBrowser,
+        EnvKind::D3RandomWlan,
+    ];
+    let mut trained_requests = 0usize;
+    for (i, env) in train_envs.iter().enumerate() {
+        let mut cfg = RunConfig::default();
+        cfg.device = device;
+        cfg.env = *env;
+        cfg.seed = seed + i as u64;
+        let environment = Environment::build(device, *env, seed + i as u64);
+        let mut server = Server::new(
+            environment,
+            Policy::AutoScale(agent),
+            ServeConfig { run: cfg, models: vec![] },
+        )
+        .with_engine(&mut engine);
+        let m = server.serve(100);
+        trained_requests += m.n();
+        agent = match server.policy {
+            Policy::AutoScale(a) => a,
+            _ => unreachable!(),
+        };
+        println!(
+            "train {}: {} reqs, PPW {:.2}, QoS misses {:.1}%",
+            env.name(),
+            m.n(),
+            m.ppw(),
+            m.qos_violation_ratio() * 100.0
+        );
+    }
+    agent.freeze();
+    println!(
+        "trained {} updates over {} requests; q-table {} KB",
+        agent.updates(),
+        trained_requests,
+        agent.table.memory_bytes() / 1024
+    );
+
+    // ---- Phase 2: frozen evaluation vs all baselines ----
+    println!("\n{:16} {:>9} {:>10} {:>10} {:>10} {:>9}", "policy", "PPW", "p50 ms", "p95 ms", "QoS miss", "vs CPU");
+    let mut cpu_ppw = None;
+    for name in ["cpu", "best", "cloud", "connected", "autoscale", "opt"] {
+        let policy = match name {
+            "cpu" => Policy::EdgeCpuFp32,
+            "best" => Policy::EdgeBest,
+            "cloud" => Policy::CloudAlways,
+            "connected" => Policy::ConnectedEdgeAlways,
+            "opt" => Policy::Opt,
+            _ => {
+                let mut a = AutoScaleAgent::with_transfer(
+                    agent.actions.clone(),
+                    agent.params,
+                    seed,
+                    &agent,
+                );
+                a.freeze();
+                Policy::AutoScale(a)
+            }
+        };
+        let mut all_lat = Vec::new();
+        let mut total_energy = 0.0;
+        let mut total_n = 0usize;
+        let mut misses = 0usize;
+        for (i, env) in [EnvKind::S1NoVariance, EnvKind::S3MemHog, EnvKind::D3RandomWlan]
+            .iter()
+            .enumerate()
+        {
+            let mut cfg = RunConfig::default();
+            cfg.device = device;
+            cfg.env = *env;
+            cfg.seed = seed + 100 + i as u64;
+            let environment = Environment::build(device, *env, seed + 100 + i as u64);
+            // policies are consumed per-episode: rebuild static ones
+            let p = match name {
+                "cpu" => Policy::EdgeCpuFp32,
+                "best" => Policy::EdgeBest,
+                "cloud" => Policy::CloudAlways,
+                "connected" => Policy::ConnectedEdgeAlways,
+                "opt" => Policy::Opt,
+                _ => {
+                    let mut a = AutoScaleAgent::with_transfer(
+                        agent.actions.clone(),
+                        agent.params,
+                        seed,
+                        &agent,
+                    );
+                    a.freeze();
+                    Policy::AutoScale(a)
+                }
+            };
+            let mut server = Server::new(environment, p, ServeConfig { run: cfg, models: vec![] })
+                .with_engine(&mut engine);
+            let m = server.serve(100);
+            for o in &m.outcomes {
+                all_lat.push(o.measurement.latency_s * 1e3);
+                if o.qos_violated() {
+                    misses += 1;
+                }
+            }
+            total_energy += m.total_energy_j();
+            total_n += m.n();
+        }
+        let _ = policy;
+        let ppw = total_n as f64 / total_energy;
+        if name == "cpu" {
+            cpu_ppw = Some(ppw);
+        }
+        println!(
+            "{:16} {:>9.2} {:>10.2} {:>10.2} {:>9.1}% {:>8.2}x",
+            name,
+            ppw,
+            stats::percentile(&all_lat, 50.0),
+            stats::percentile(&all_lat, 95.0),
+            100.0 * misses as f64 / total_n as f64,
+            ppw / cpu_ppw.unwrap()
+        );
+    }
+    println!("\ntotal wall time: {:.1}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: load a real AOT artifact through PJRT, train a small
+//! AutoScale agent, and serve a handful of requests.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use autoscale::agent::qlearn::AutoScaleAgent;
+use autoscale::configsys::runconfig::{EnvKind, RunConfig};
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::policy::{action_catalogue, Policy};
+use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::runtime::Engine;
+use autoscale::types::{DeviceId, Precision};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Real compute: execute one AOT-compiled model on the PJRT CPU client.
+    let mut engine = Engine::from_default_manifest()?;
+    println!("PJRT platform : {}", engine.platform());
+    let timing = engine.execute("mobilenet_v1", Precision::Fp32, 42)?;
+    println!(
+        "mobilenet_v1  : {:.2} ms wall, {} logits",
+        timing.wall_s * 1e3,
+        timing.output.len()
+    );
+
+    // 2. The AutoScale loop: observe -> select -> execute -> reward -> learn.
+    let device = DeviceId::Mi8Pro;
+    let catalogue = action_catalogue(&autoscale::device::presets::device(device));
+    println!("action space  : {} targets", catalogue.len());
+    let agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
+
+    let mut cfg = RunConfig::default();
+    cfg.device = device;
+    let env = Environment::build(device, EnvKind::S1NoVariance, 7);
+    let mut server = Server::new(
+        env,
+        Policy::AutoScale(agent),
+        ServeConfig { run: cfg, models: vec!["mobilenet_v1", "inception_v1"] },
+    )
+    .with_engine(&mut engine);
+
+    let metrics = server.serve(120);
+    println!("served        : {} requests", metrics.n());
+    println!("PPW           : {:.2} inferences/joule", metrics.ppw());
+    println!("QoS misses    : {:.1}%", metrics.qos_violation_ratio() * 100.0);
+    println!("selection mix :");
+    let sel = metrics.selections();
+    for bucket in autoscale::coordinator::metrics::SelectionStats::BUCKETS {
+        let rate = sel.rate(bucket);
+        if rate > 0.0 {
+            println!("  {bucket:24} {:5.1}%", rate * 100.0);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Learning-transfer demo (Fig 14): train AutoScale on Mi8Pro, transfer
+//! the Q-table to the other phones, and compare convergence speed against
+//! training from scratch.
+//!
+//! Run: `cargo run --release --example train_transfer [--full]`
+
+use autoscale::experiments::fig14_convergence;
+
+fn main() -> anyhow::Result<()> {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let tables = fig14_convergence::run(7, quick);
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        t.write_csv(std::path::Path::new("reports"), &format!("fig14_{i}"))?;
+    }
+    println!("(see reports/fig14_0.csv for the full reward curves)");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT driver: lower every (model, precision) to HLO TEXT + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models a,b] [--precisions p]
+
+Outputs:
+    artifacts/<model>_<precision>.hlo.txt   one per zoo entry x precision
+    artifacts/manifest.json                 metadata consumed by rust nn/
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as zoo
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is ESSENTIAL: the default printer elides big
+    weight tensors as `constant({...})`, which the HLO text parser silently
+    reads back as zeros — producing models that output all-zero logits.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(name: str, precision: str) -> tuple:
+    """Lower one zoo model at one precision; returns (hlo_text, meta)."""
+    fn, x, spec = zoo.make_model(name, precision)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(x)
+    text = to_hlo_text(lowered)
+    elapsed = time.time() - t0
+    macs, byts = zoo.count_macs_bytes(spec)
+    meta = {
+        "name": name,
+        "precision": precision,
+        "workload": spec.workload,
+        "input_shape": list(spec.input_shape),
+        "s_conv": spec.s_conv,
+        "s_fc": spec.s_fc,
+        "s_rc": spec.s_rc,
+        "macs": macs,
+        "bytes": byts,
+        "lower_seconds": round(elapsed, 3),
+        "hlo_chars": len(text),
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(zoo.ZOO))
+    ap.add_argument("--precisions", default=",".join(zoo.PRECISIONS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"models": []}
+    for name in args.models.split(","):
+        for precision in args.precisions.split(","):
+            text, meta = lower_model(name, precision)
+            fname = f"{name}_{precision}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            meta["artifact"] = fname
+            manifest["models"].append(meta)
+            print(
+                f"lowered {name:20s} {precision:5s} -> {fname}"
+                f" ({meta['hlo_chars']} chars, {meta['lower_seconds']}s)"
+            )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['models'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

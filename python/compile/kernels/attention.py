@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: single-head scaled-dot-product attention.
+
+The paper's RC layer class covers "LSTM and attention" (§2.1); MobileBERT's
+real blocks are attention+FFN. The zoo models RC layers with the fused LSTM
+cell (lstm_cell.py); this kernel provides the attention flavour so the RC
+class is covered end to end at the kernel level, with the same VMEM-tiling
+treatment: one grid point processes one query block against the full K/V
+(small sequence lengths on-device), fusing QK^T, the softmax and the PV
+product without materializing the attention matrix in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One query block vs full K/V: out = softmax(q k^T * scale) v."""
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # numerically stable softmax in VMEM
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, block_q: int = 64) -> jax.Array:
+    """Single-head attention. q: (Tq, D), k: (Tk, D), v: (Tk, Dv) -> (Tq, Dv).
+
+    Grid over query blocks; K/V stay VMEM-resident per grid point (edge
+    sequence lengths are small). Scale = 1/sqrt(D).
+    """
+    tq, d = q.shape
+    tk, d2 = k.shape
+    tk2, dv = v.shape
+    assert d == d2 and tk == tk2, (q.shape, k.shape, v.shape)
+    bq = min(block_q, tq)
+    while tq % bq != 0:
+        bq -= 1
+    grid = (tq // bq,)
+    scale = 1.0 / float(d) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((tk, d), lambda i: (0, 0)),
+            pl.BlockSpec((tk, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tq, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+def self_attention_block(x: jax.Array, wq, wk, wv, wo) -> jax.Array:
+    """Tiny transformer-ish self-attention block: x (T, D) -> (T, D).
+
+    Projections use plain jnp matmuls (they lower into the same HLO); the
+    attention core is the Pallas kernel above. Residual connection included.
+    """
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    attn = attention(q, k, v)
+    return x + attn @ wo

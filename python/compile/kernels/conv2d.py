@@ -1,0 +1,167 @@
+"""L1 Pallas kernels: convolution family.
+
+Spatial convs lower to im2col + the tiled Pallas matmul (the standard mobile
+inference lowering — SNPE/TVM do the same on HVX/GPU); pointwise (1x1) convs
+skip im2col and call the fused matmul directly; depthwise convs get their own
+Pallas kernel gridded over channels (no channel mixing, MAC-light but
+bandwidth-heavy — exactly why they behave differently in the paper's Fig 3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+INTERPRET = True
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: int) -> jax.Array:
+    """(N, H, W, C) -> (N*OH*OW, KH*KW*C) patch matrix."""
+    n, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    # Gather patches with static slices: small K so this unrolls to KH*KW
+    # strided slices, which XLA fuses into a single gather-free loop nest.
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = x[:, di : di + stride * oh : stride, dj : dj + stride * ow : stride, :]
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, KH*KW*C)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int | None = None,
+    act: str = "relu",
+) -> jax.Array:
+    """Spatial conv: x (N,H,W,C), w (KH,KW,C,F), b (F,) -> (N,OH,OW,F).
+
+    im2col (jnp, fused by XLA) + Pallas fused matmul epilogue.
+    """
+    kh, kw, c, f = w.shape
+    if pad is None:
+        pad = kh // 2  # 'same' for stride 1
+    cols, (n, oh, ow) = _im2col(x, kh, kw, stride, pad)
+    w2 = w.reshape(kh * kw * c, f)
+    out = mm.matmul_bias_act(cols, w2, b, act=act)
+    return out.reshape(n, oh, ow, f)
+
+
+def conv2d_int8(
+    x: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int | None = None,
+    act: str = "relu",
+) -> jax.Array:
+    """INT8-weight spatial conv (paper's CPU INT8 / DSP executables)."""
+    kh, kw, c, f = w_q.shape
+    if pad is None:
+        pad = kh // 2
+    cols, (n, oh, ow) = _im2col(x, kh, kw, stride, pad)
+    w2 = w_q.reshape(kh * kw * c, f)
+    out = mm.matmul_int8(cols, w2, scale, b, act=act)
+    return out.reshape(n, oh, ow, f)
+
+
+def pointwise_conv(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "relu"
+) -> jax.Array:
+    """1x1 conv: x (N,H,W,C), w (C,F) -> (N,H,W,F). Pure matmul, no im2col."""
+    n, h, w_, c = x.shape
+    out = mm.matmul_bias_act(x.reshape(n * h * w_, c), w, b, act=act)
+    return out.reshape(n, h, w_, -1)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv — dedicated Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, act: str):
+    """One grid point = one channel block; conv is unrolled over the KHxKW taps.
+
+    x_ref: (N, H+2p, W+2p, BC) padded input block
+    w_ref: (KH, KW, BC), b_ref: (BC,), o_ref: (N, OH, OW, BC)
+    stride handled by caller slicing (stride=1 kernel; stride-2 layers
+    subsample the output outside — bandwidth shape is identical).
+    """
+    _, oh, ow, _ = o_ref.shape
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            patch = x_ref[:, di : di + oh, dj : dj + ow, :].astype(jnp.float32)
+            acc += patch * w_ref[di, dj, :].astype(jnp.float32)
+    acc += b_ref[...].astype(jnp.float32)
+    o_ref[...] = mm._apply_act(acc, act).astype(o_ref.dtype)
+
+
+def depthwise_conv(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    act: str = "relu",
+) -> jax.Array:
+    """Depthwise conv: x (N,H,W,C), w (KH,KW,C), b (C,) -> (N,OH,OW,C).
+
+    Gridded over channel blocks: each VMEM-resident block convolves
+    independently (the Mobilenet depthwise stage).
+    """
+    n, h, w_, c = x.shape
+    kh, kw, c2 = w.shape
+    assert c == c2
+    pad = kh // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    bc = mm._pick_block(c, 32)
+    grid = (c // bc,)
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, kh=kh, kw=kw, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, h + 2 * pad, w_ + 2 * pad, bc), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((kh, kw, bc), lambda i: (0, 0, i)),
+            pl.BlockSpec((bc,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n, h, w_, bc), lambda i: (0, 0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w_, c), x.dtype),
+        interpret=INTERPRET,
+    )(xp, w, b)
+    if stride > 1:
+        out = out[:, ::stride, ::stride, :]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pooling (jnp — not a hot spot; kept here so the model zoo has one home)
+# ---------------------------------------------------------------------------
+
+
+def avg_pool_global(x: jax.Array) -> jax.Array:
+    """Global average pool: (N,H,W,C) -> (N,C)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def max_pool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool."""
+    n, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: fused LSTM cell (the paper's RC-layer hot spot).
+
+MobileBERT's recurrent/attention layers are the paper's translation workload;
+per Section 2.1 its RC layers (LSTM, attention) are the most compute- and
+memory-intensive layer class. We implement the cell as one fused Pallas
+kernel: both gate matmuls ((B,I)@(I,4H) and (B,H)@(H,4H)), the gate
+nonlinearities, and the state update happen in VMEM without round-tripping
+gate tensors through HBM — the TPU analogue of the fused recurrent cells
+mobile stacks ship for DSPs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, ho_ref, co_ref):
+    """Single grid point: the whole cell for one batch block.
+
+    x: (B, I), h: (B, H), c: (B, H), wx: (I, 4H), wh: (H, 4H), b: (4H,)
+    Gate layout along the 4H axis: [i, f, g, o].
+    """
+    z = (
+        jnp.dot(
+            x_ref[...].astype(jnp.float32),
+            wx_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        + jnp.dot(
+            h_ref[...].astype(jnp.float32),
+            wh_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...].astype(jnp.float32)
+    )
+    hh = z.shape[-1] // 4
+    i = jax.nn.sigmoid(z[:, 0 * hh : 1 * hh])
+    f = jax.nn.sigmoid(z[:, 1 * hh : 2 * hh])
+    g = jnp.tanh(z[:, 2 * hh : 3 * hh])
+    o = jax.nn.sigmoid(z[:, 3 * hh : 4 * hh])
+    c_new = f * c_ref[...].astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    ho_ref[...] = h_new.astype(ho_ref.dtype)
+    co_ref[...] = c_new.astype(co_ref.dtype)
+
+
+def lstm_cell(
+    x: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    wx: jax.Array,
+    wh: jax.Array,
+    b: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused LSTM cell. Shapes: x (B,I), h/c (B,H), wx (I,4H), wh (H,4H), b (4H,).
+
+    Returns (h_new, c_new). Whole-cell fusion: at the tiny model-zoo dims the
+    entire cell fits in VMEM, so the grid is a single point; larger H would
+    grid over batch blocks with the same kernel.
+    """
+    bsz, isz = x.shape
+    _, hsz = h.shape
+    assert wx.shape == (isz, 4 * hsz) and wh.shape == (hsz, 4 * hsz)
+    assert b.shape == (4 * hsz,)
+    h_new, c_new = pl.pallas_call(
+        _lstm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((bsz, isz), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, hsz), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, hsz), lambda i: (0, 0)),
+            pl.BlockSpec((isz, 4 * hsz), lambda i: (0, 0)),
+            pl.BlockSpec((hsz, 4 * hsz), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hsz,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bsz, hsz), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, hsz), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hsz), x.dtype),
+            jax.ShapeDtypeStruct((bsz, hsz), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, h, c, wx, wh, b)
+    return h_new, c_new
+
+
+def lstm_layer(
+    xs: jax.Array,
+    wx: jax.Array,
+    wh: jax.Array,
+    b: jax.Array,
+) -> jax.Array:
+    """Run the fused cell over a sequence: xs (T,B,I) -> hs (T,B,H).
+
+    Uses lax.scan so the lowered HLO is a single rolled loop (one cell body),
+    keeping artifact size independent of sequence length.
+    """
+    t, bsz, _ = xs.shape
+    hsz = wh.shape[0]
+    h0 = jnp.zeros((bsz, hsz), xs.dtype)
+    c0 = jnp.zeros((bsz, hsz), xs.dtype)
+
+    def step(carry, x):
+        h, c = carry
+        h, c = lstm_cell(x, h, c, wx, wh, b)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs

@@ -1,0 +1,256 @@
+"""L1 Pallas kernels: tiled matmul family.
+
+These kernels are the compute hot-spot of every model in the zoo: FC layers,
+1x1 (pointwise) convolutions and im2col'd spatial convolutions all lower to
+the tiled matmul below. LSTM cells fuse four of them (see lstm_cell.py).
+
+Hardware adaptation (paper -> TPU/Pallas): the paper's quantized executables
+tile conv/FC onto Hexagon HVX vector tiles with a software-managed scratchpad.
+The Pallas analogue is BlockSpec tiling into VMEM with a (M, N, K) grid; the
+MXU wants multiples of (8, 128) so block shapes are padded toward those when
+the model dims allow. INT8 on DSP / FP16 on GPU map to the `int8` dequant
+variant and bf16 inputs respectively.
+
+All kernels MUST run under interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); `INTERPRET` below is flipped only by TPU builds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: interpret-mode only (see module docstring).
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target.
+
+    Keeps the grid exact (no masking needed) while biasing toward
+    MXU-friendly tile sizes for the common power-of-two model dims.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+# ---------------------------------------------------------------------------
+# fp32 / bf16 tiled matmul
+# ---------------------------------------------------------------------------
+
+
+def _matmul_noacc_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """Accumulate directly into the output block (fp32 output path)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(o_ref.dtype),
+        w_ref[...].astype(o_ref.dtype),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def matmul_f32(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Tiled fp32 matmul accumulating in the output block (no scratch).
+
+    This is the variant the model zoo uses: portable across jax versions
+    (no scratch_shapes), still expresses the HBM->VMEM block schedule.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    n_k = _cdiv(k, bk)
+    grid = (_cdiv(m, bm), _cdiv(n, bn), n_k)
+    out_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_matmul_noacc_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=INTERPRET,
+    )(x, w).astype(x.dtype)
+
+
+# Public alias: the model zoo and tests use `matmul`.
+matmul = matmul_f32
+
+
+# ---------------------------------------------------------------------------
+# fused bias + activation epilogue
+# ---------------------------------------------------------------------------
+
+
+def _apply_act(v, act: str):
+    if act == "relu":
+        return jnp.maximum(v, 0.0)
+    if act == "relu6":
+        return jnp.clip(v, 0.0, 6.0)
+    if act == "hswish":
+        return v * jnp.clip(v + 3.0, 0.0, 6.0) / 6.0
+    if act == "sigmoid":
+        return jax.nn.sigmoid(v)
+    if act == "tanh":
+        return jnp.tanh(v)
+    if act == "none":
+        return v
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(o_ref.dtype),
+        w_ref[...].astype(o_ref.dtype),
+        preferred_element_type=o_ref.dtype,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...].astype(o_ref.dtype), act)
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Fused `act(x @ w + b)` — the FC / pointwise-conv workhorse.
+
+    The epilogue (bias add + activation) runs on the final K grid step so the
+    output block is written exactly once after accumulation — the Pallas
+    spelling of an XLA fused epilogue.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    n_k = _cdiv(k, bk)
+    grid = (_cdiv(m, bm), _cdiv(n, bn), n_k)
+    out_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, n_k=n_k, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=INTERPRET,
+    )(x, w, b)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8-dequant matmul (DSP INT8 / CPU INT8 analogue)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_int8_kernel(x_ref, wq_ref, scale_ref, b_ref, o_ref, *, n_k: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequantize the weight tile in VMEM: per-output-channel scale.
+    w = wq_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...].astype(o_ref.dtype), act)
+
+
+def matmul_int8(
+    x: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """`act(x @ dequant(w_q, scale) + b)` with int8 weights.
+
+    w_q: (K, N) int8, scale: (N,) fp32 per-output-channel. Models the paper's
+    INT8 quantized executables (CPU INT8 / DSP): weights live in memory at
+    8 bits (4x bandwidth saving — reflected in the exec/ latency model) and
+    are dequantized tile-by-tile inside the kernel.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and scale.shape == (n,) and b.shape == (n,)
+    assert w_q.dtype == jnp.int8, w_q.dtype
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    n_k = _cdiv(k, bk)
+    grid = (_cdiv(m, bm), _cdiv(n, bn), n_k)
+    out = pl.pallas_call(
+        functools.partial(_matmul_int8_kernel, n_k=n_k, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w_q, scale, b)
+    return out.astype(x.dtype)
+
+
+def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization of a (K, N) weight."""
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)

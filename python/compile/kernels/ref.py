@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for every Pallas kernel — THE correctness signal.
+
+Each function mirrors a kernel in matmul.py / conv2d.py / lstm_cell.py using
+only jax.numpy (no pallas), so pytest can assert_allclose kernel vs ref over
+hypothesis-swept shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _apply_act(v, act: str):
+    if act == "relu":
+        return jnp.maximum(v, 0.0)
+    if act == "relu6":
+        return jnp.clip(v, 0.0, 6.0)
+    if act == "hswish":
+        return v * jnp.clip(v + 3.0, 0.0, 6.0) / 6.0
+    if act == "sigmoid":
+        return jax.nn.sigmoid(v)
+    if act == "tanh":
+        return jnp.tanh(v)
+    if act == "none":
+        return v
+    raise ValueError(act)
+
+
+def matmul(x, w):
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def matmul_bias_act(x, w, b, *, act="relu"):
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    return _apply_act(out, act).astype(x.dtype)
+
+
+def matmul_int8(x, w_q, scale, b, *, act="relu"):
+    w = w_q.astype(jnp.float32) * scale.astype(jnp.float32)
+    out = x.astype(jnp.float32) @ w + b.astype(jnp.float32)
+    return _apply_act(out, act).astype(x.dtype)
+
+
+def conv2d(x, w, b, *, stride=1, pad=None, act="relu"):
+    kh, kw, _, _ = w.shape
+    if pad is None:
+        pad = kh // 2
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b.astype(jnp.float32)
+    return _apply_act(out, act).astype(x.dtype)
+
+
+def conv2d_int8(x, w_q, scale, b, *, stride=1, pad=None, act="relu"):
+    w = w_q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return conv2d(x, w, b, stride=stride, pad=pad, act=act)
+
+
+def pointwise_conv(x, w, b, *, act="relu"):
+    n, h, w_, c = x.shape
+    out = matmul_bias_act(x.reshape(n * h * w_, c), w, b, act=act)
+    return out.reshape(n, h, w_, -1)
+
+
+def depthwise_conv(x, w, b, *, stride=1, act="relu"):
+    kh, kw, c = w.shape
+    pad = kh // 2
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.reshape(kh, kw, 1, c).astype(jnp.float32),
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = _apply_act(out + b.astype(jnp.float32), act)
+    if stride > 1:
+        out = out[:, ::stride, ::stride, :]
+    return out.astype(x.dtype)
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    z = (
+        x.astype(jnp.float32) @ wx.astype(jnp.float32)
+        + h.astype(jnp.float32) @ wh.astype(jnp.float32)
+        + b.astype(jnp.float32)
+    )
+    hh = z.shape[-1] // 4
+    i = jax.nn.sigmoid(z[:, :hh])
+    f = jax.nn.sigmoid(z[:, hh : 2 * hh])
+    g = jnp.tanh(z[:, 2 * hh : 3 * hh])
+    o = jax.nn.sigmoid(z[:, 3 * hh :])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(x.dtype), c_new.astype(x.dtype)
+
+
+def lstm_layer(xs, wx, wh, b):
+    t, bsz, _ = xs.shape
+    hsz = wh.shape[0]
+    h = jnp.zeros((bsz, hsz), xs.dtype)
+    c = jnp.zeros((bsz, hsz), xs.dtype)
+    hs = []
+    for step in range(t):
+        h, c = lstm_cell(xs[step], h, c, wx, wh, b)
+        hs.append(h)
+    return jnp.stack(hs)
+
+
+def attention(q, k, v):
+    d = q.shape[-1]
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / d**0.5
+    p = jax.nn.softmax(logits, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def self_attention_block(x, wq, wk, wv, wo):
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    return x + attention(q, k, v) @ wo

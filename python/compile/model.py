@@ -1,0 +1,507 @@
+"""L2: the model zoo — the paper's 10 DNN workloads (Table 3) in JAX.
+
+Every network is built from a small layer-descriptor IR and executed by
+calling the L1 Pallas kernels (matmul / conv2d / depthwise / lstm_cell), so
+each artifact's HLO carries the kernels' block schedules. Layer compositions
+(S_CONV / S_FC / S_RC counts) match the paper's Table 3 exactly; channel
+widths and input resolution are scaled down ("tiny" configs) so that CPU
+interpret-mode execution is tractable — the rust exec/ layer rescales
+measured latency onto simulated device profiles (see DESIGN.md §1).
+
+Each model exists in three precision variants mirroring the paper's
+quantization actions: fp32, fp16 (bf16 on TPU/MXU) and int8 (int8 weights,
+dequant in-kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as cv
+from .kernels import lstm_cell as lc
+from .kernels import matmul as mm
+
+PRECISIONS = ("fp32", "fp16", "int8")
+
+
+# ---------------------------------------------------------------------------
+# layer IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """Spatial KxK conv; counts toward S_CONV."""
+
+    out_ch: int
+    k: int = 3
+    stride: int = 1
+    act: str = "relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class PwConv:
+    """1x1 pointwise conv; counts toward S_CONV (it is a conv layer)."""
+
+    out_ch: int
+    act: str = "relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class DwConv:
+    """Depthwise KxK conv; counts toward S_CONV."""
+
+    k: int = 3
+    stride: int = 1
+    act: str = "relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalPool:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Fc:
+    """Fully-connected layer; counts toward S_FC."""
+
+    out_dim: int
+    act: str = "relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Lstm:
+    """One recurrent layer over the sequence; counts toward S_RC."""
+
+    hidden: int
+
+
+Layer = object
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization + forward execution
+# ---------------------------------------------------------------------------
+
+
+def init_params(layers: list, input_shape: tuple, key) -> list:
+    """Build fp32 parameters for a layer stack given the model input shape."""
+    params: list[dict] = []
+    shape = input_shape
+    for layer in layers:
+        key, sub = jax.random.split(key)
+        if isinstance(layer, Conv):
+            n, h, w, c = shape
+            std = (2.0 / (layer.k * layer.k * c)) ** 0.5
+            params.append(
+                {
+                    "w": jax.random.normal(sub, (layer.k, layer.k, c, layer.out_ch))
+                    * std,
+                    "b": jnp.zeros((layer.out_ch,)),
+                }
+            )
+            oh = (h + 2 * (layer.k // 2) - layer.k) // layer.stride + 1
+            ow = (w + 2 * (layer.k // 2) - layer.k) // layer.stride + 1
+            shape = (n, oh, ow, layer.out_ch)
+        elif isinstance(layer, PwConv):
+            n, h, w, c = shape
+            std = (2.0 / c) ** 0.5
+            params.append(
+                {
+                    "w": jax.random.normal(sub, (c, layer.out_ch)) * std,
+                    "b": jnp.zeros((layer.out_ch,)),
+                }
+            )
+            shape = (n, h, w, layer.out_ch)
+        elif isinstance(layer, DwConv):
+            n, h, w, c = shape
+            params.append(
+                {
+                    "w": jax.random.normal(sub, (layer.k, layer.k, c)) * 0.3,
+                    "b": jnp.zeros((c,)),
+                }
+            )
+            shape = (
+                n,
+                (h + layer.stride - 1) // layer.stride,
+                (w + layer.stride - 1) // layer.stride,
+                c,
+            )
+        elif isinstance(layer, MaxPool):
+            n, h, w, c = shape
+            params.append({})
+            shape = (n, h // 2, w // 2, c)
+        elif isinstance(layer, GlobalPool):
+            n, _, _, c = shape
+            params.append({})
+            shape = (n, c)
+        elif isinstance(layer, Fc):
+            if len(shape) == 4:  # implicit flatten
+                n = shape[0]
+                d = shape[1] * shape[2] * shape[3]
+            else:
+                n, d = shape[0], shape[-1]
+            std = (2.0 / d) ** 0.5
+            params.append(
+                {
+                    "w": jax.random.normal(sub, (d, layer.out_dim)) * std,
+                    "b": jnp.zeros((layer.out_dim,)),
+                }
+            )
+            shape = (n, layer.out_dim)
+        elif isinstance(layer, Lstm):
+            t, n, d = shape  # sequence models: (T, B, D)
+            std = (1.0 / d) ** 0.5
+            params.append(
+                {
+                    "wx": jax.random.normal(sub, (d, 4 * layer.hidden)) * std,
+                    "wh": jax.random.normal(sub, (layer.hidden, 4 * layer.hidden))
+                    * std,
+                    "b": jnp.zeros((4 * layer.hidden,)),
+                }
+            )
+            shape = (t, n, layer.hidden)
+        else:
+            raise TypeError(f"unknown layer {layer!r}")
+    return params
+
+
+def quantize_params(layers: list, params: list) -> list:
+    """int8 variant: quantize every matmul-backed weight per-channel."""
+    out = []
+    for layer, p in zip(layers, params):
+        if isinstance(layer, (PwConv, Fc)):
+            wq, s = mm.quantize_weight(p["w"])
+            out.append({"wq": wq, "scale": s, "b": p["b"]})
+        elif isinstance(layer, Conv):
+            kh, kw, c, f = p["w"].shape
+            wq, s = mm.quantize_weight(p["w"].reshape(kh * kw * c, f))
+            out.append({"wq": wq.reshape(kh, kw, c, f), "scale": s, "b": p["b"]})
+        else:
+            # depthwise / lstm / pool stay fp32 (the paper's INT8 executables
+            # quantize the conv+fc compute)
+            out.append(p)
+    return out
+
+
+def forward(layers: list, params: list, x: jax.Array, *, precision: str = "fp32"):
+    """Run the layer stack, dispatching every hot layer to a Pallas kernel."""
+    dtype = jnp.bfloat16 if precision == "fp16" else jnp.float32
+    x = x.astype(dtype)
+    for layer, p in zip(layers, params):
+        if isinstance(layer, Conv):
+            if precision == "int8" and "wq" in p:
+                x = cv.conv2d_int8(
+                    x, p["wq"], p["scale"], p["b"], stride=layer.stride, act=layer.act
+                )
+            else:
+                x = cv.conv2d(
+                    x,
+                    p["w"].astype(dtype),
+                    p["b"].astype(dtype),
+                    stride=layer.stride,
+                    act=layer.act,
+                )
+        elif isinstance(layer, PwConv):
+            if precision == "int8" and "wq" in p:
+                n, h, w_, c = x.shape
+                out = mm.matmul_int8(
+                    x.reshape(n * h * w_, c), p["wq"], p["scale"], p["b"], act=layer.act
+                )
+                x = out.reshape(n, h, w_, -1)
+            else:
+                x = cv.pointwise_conv(
+                    x, p["w"].astype(dtype), p["b"].astype(dtype), act=layer.act
+                )
+        elif isinstance(layer, DwConv):
+            x = cv.depthwise_conv(
+                x,
+                p["w"].astype(dtype),
+                p["b"].astype(dtype),
+                stride=layer.stride,
+                act=layer.act,
+            )
+        elif isinstance(layer, MaxPool):
+            x = cv.max_pool2(x)
+        elif isinstance(layer, GlobalPool):
+            x = cv.avg_pool_global(x)
+        elif isinstance(layer, Fc):
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            if x.ndim == 3:  # sequence: classify the last step
+                x = x[-1]
+            if precision == "int8" and "wq" in p:
+                x = mm.matmul_int8(x, p["wq"], p["scale"], p["b"], act=layer.act)
+            else:
+                x = mm.matmul_bias_act(
+                    x, p["w"].astype(dtype), p["b"].astype(dtype), act=layer.act
+                )
+        elif isinstance(layer, Lstm):
+            x = lc.lstm_layer(
+                x, p["wx"].astype(dtype), p["wh"].astype(dtype), p["b"].astype(dtype)
+            )
+        else:
+            raise TypeError(f"unknown layer {layer!r}")
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# model zoo — Table 3 layer compositions at tiny dims
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    workload: str  # image_classification | object_detection | translation
+    layers: tuple
+    input_shape: tuple  # (N,H,W,C) image or (T,B,D) sequence
+
+    @property
+    def s_conv(self) -> int:
+        return sum(isinstance(l, (Conv, PwConv, DwConv)) for l in self.layers)
+
+    @property
+    def s_fc(self) -> int:
+        return sum(isinstance(l, Fc) for l in self.layers)
+
+    @property
+    def s_rc(self) -> int:
+        return sum(isinstance(l, Lstm) for l in self.layers)
+
+
+def _inception_module(ch: int) -> list:
+    """Tiny inception block: 1x1 / 3x3 / pooled-1x1 branches collapsed to a
+    sequential conv stack with matching CONV-layer count (3 convs/module)."""
+    return [PwConv(ch), Conv(ch, k=3), PwConv(ch)]
+
+
+def _inverted_residual(ch: int, *, act: str = "relu6") -> list:
+    """MobilenetV2/V3 inverted residual: expand pw + dw + project pw (3 convs)."""
+    return [PwConv(ch * 2, act=act), DwConv(k=3, act=act), PwConv(ch, act="none")]
+
+
+def _mbv1_block(ch: int, stride: int = 1) -> list:
+    """MobilenetV1 depthwise-separable block (2 convs)."""
+    return [DwConv(k=3, stride=stride), PwConv(ch)]
+
+
+def _resnet_block(ch: int) -> list:
+    """Bottleneck block collapsed sequentially: pw + 3x3 + pw (3 convs)."""
+    return [PwConv(ch), Conv(ch, k=3), PwConv(ch, act="none")]
+
+
+def _image(layers: list, n_cls: int = 10) -> tuple:
+    return tuple(layers + [GlobalPool(), Fc(n_cls, act="none")])
+
+
+def _build_zoo() -> dict:
+    img = (1, 16, 16, 8)  # tiny input; exec/ rescales to device profiles
+    seq = (12, 1, 16)  # (T, B, D) for MobileBERT
+    zoo: dict[str, ModelSpec] = {}
+
+    # InceptionV1: 49 CONV, 1 FC = stem(1) + 16 modules x 3 convs
+    layers: list = [Conv(8, k=3, stride=2)]
+    for _ in range(16):
+        layers += _inception_module(8)
+    zoo["inception_v1"] = ModelSpec(
+        "inception_v1", "image_classification", _image(layers), img
+    )
+
+    # InceptionV3: 94 CONV, 1 FC = stem(1) + 31 modules x 3 convs
+    layers = [Conv(8, k=3, stride=2)]
+    for _ in range(31):
+        layers += _inception_module(8)
+    zoo["inception_v3"] = ModelSpec(
+        "inception_v3", "image_classification", _image(layers), img
+    )
+
+    # MobilenetV1: 14 CONV, 1 FC = stem(1) + 6 dw-separable blocks x 2 + pw(1)
+    layers = [Conv(8, k=3, stride=2)]
+    for _ in range(6):
+        layers += _mbv1_block(8)
+    layers += [PwConv(16)]
+    zoo["mobilenet_v1"] = ModelSpec(
+        "mobilenet_v1", "image_classification", _image(layers), img
+    )
+
+    # MobilenetV2: 35 CONV, 1 FC = stem(1) + 11 inverted residuals x 3 + pw(1)
+    layers = [Conv(8, k=3, stride=2)]
+    for _ in range(11):
+        layers += _inverted_residual(8)
+    layers += [PwConv(16)]
+    zoo["mobilenet_v2"] = ModelSpec(
+        "mobilenet_v2", "image_classification", _image(layers), img
+    )
+
+    # MobilenetV3: 23 CONV, 20 FC = stem(1) + 7 inv-res x 3 (hswish) + pw(1),
+    # then 19 FC squeeze-excite-style head + classifier FC
+    layers = [Conv(8, k=3, stride=2, act="hswish")]
+    for _ in range(7):
+        layers += _inverted_residual(8, act="hswish")
+    layers += [PwConv(16, act="hswish"), GlobalPool()]
+    for _ in range(19):
+        layers += [Fc(16, act="hswish")]
+    layers += [Fc(10, act="none")]
+    zoo["mobilenet_v3"] = ModelSpec(
+        "mobilenet_v3", "image_classification", tuple(layers), img
+    )
+
+    # Resnet50: 53 CONV, 1 FC = stem(1) + maxpool + 17 bottlenecks x 3 + pw(1)
+    layers = [Conv(8, k=3, stride=2), MaxPool()]
+    for _ in range(17):
+        layers += _resnet_block(8)
+    layers += [PwConv(16)]
+    zoo["resnet50"] = ModelSpec("resnet50", "image_classification", _image(layers), img)
+
+    # SSD MobilenetV1: 19 CONV, 1 FC = stem(1) + 7 blocks x 2 + 4 head convs
+    layers = [Conv(8, k=3, stride=2)]
+    for _ in range(7):
+        layers += _mbv1_block(8)
+    layers += [Conv(8, k=3), PwConv(8), Conv(8, k=3), PwConv(8)]
+    zoo["ssd_mobilenet_v1"] = ModelSpec(
+        "ssd_mobilenet_v1", "object_detection", _image(layers), img
+    )
+
+    # SSD MobilenetV2: 52 CONV, 1 FC = stem(1) + 15 inv-res x 3 + 6 head convs
+    layers = [Conv(8, k=3, stride=2)]
+    for _ in range(15):
+        layers += _inverted_residual(8)
+    layers += [
+        Conv(8, k=3),
+        PwConv(8),
+        Conv(8, k=3),
+        PwConv(8),
+        Conv(8, k=3),
+        PwConv(8),
+    ]
+    zoo["ssd_mobilenet_v2"] = ModelSpec(
+        "ssd_mobilenet_v2", "object_detection", _image(layers), img
+    )
+
+    # SSD MobilenetV3: 28 CONV, 20 FC = stem(1) + 7 inv-res x 3 (hswish)
+    #   + 6 head convs, then 19 FC SE-head + 1 classifier FC
+    layers = [Conv(8, k=3, stride=2, act="hswish")]
+    for _ in range(7):
+        layers += _inverted_residual(8, act="hswish")
+    layers += [
+        Conv(8, k=3),
+        PwConv(8),
+        Conv(8, k=3),
+        PwConv(8),
+        Conv(8, k=3),
+        PwConv(8),
+    ]
+    layers += [GlobalPool()]
+    for _ in range(19):
+        layers += [Fc(16, act="hswish")]
+    layers += [Fc(10, act="none")]
+    zoo["ssd_mobilenet_v3"] = ModelSpec(
+        "ssd_mobilenet_v3", "object_detection", tuple(layers), img
+    )
+
+    # MobileBERT: 0 CONV, 1 FC, 24 RC
+    layers = [Lstm(16) for _ in range(24)] + [Fc(16, act="none")]
+    zoo["mobilebert"] = ModelSpec("mobilebert", "translation", tuple(layers), seq)
+
+    return zoo
+
+
+ZOO: dict = _build_zoo()
+
+# Paper Table 3 — used by tests to cross-check the zoo's layer compositions.
+TABLE3 = {
+    "inception_v1": (49, 1, 0),
+    "inception_v3": (94, 1, 0),
+    "mobilenet_v1": (14, 1, 0),
+    "mobilenet_v2": (35, 1, 0),
+    "mobilenet_v3": (23, 20, 0),
+    "resnet50": (53, 1, 0),
+    "ssd_mobilenet_v1": (19, 1, 0),
+    "ssd_mobilenet_v2": (52, 1, 0),
+    "ssd_mobilenet_v3": (28, 20, 0),
+    "mobilebert": (0, 1, 24),
+}
+
+
+def make_model(name: str, precision: str = "fp32", seed: int = 0):
+    """Return (forward_fn, example_input, spec) for a zoo model + precision."""
+    spec = ZOO[name]
+    key = jax.random.PRNGKey(seed)
+    params = init_params(list(spec.layers), spec.input_shape, key)
+    if precision == "int8":
+        params = quantize_params(list(spec.layers), params)
+
+    def fn(x):
+        return (forward(list(spec.layers), params, x, precision=precision),)
+
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), spec.input_shape)
+    return fn, x, spec
+
+
+# ---------------------------------------------------------------------------
+# MAC / byte accounting (feeds the manifest and the rust exec/ model)
+# ---------------------------------------------------------------------------
+
+
+def count_macs_bytes(spec: ModelSpec) -> tuple:
+    """Analytic MACs and parameter+activation bytes for one inference."""
+    macs = 0
+    byts = 0
+    shape = spec.input_shape
+    for layer in spec.layers:
+        if isinstance(layer, Conv):
+            n, h, w, c = shape
+            oh = (h + layer.stride - 1) // layer.stride
+            ow = (w + layer.stride - 1) // layer.stride
+            macs += n * oh * ow * layer.k * layer.k * c * layer.out_ch
+            byts += (
+                layer.k * layer.k * c * layer.out_ch * 4
+                + n * oh * ow * layer.out_ch * 4
+            )
+            shape = (n, oh, ow, layer.out_ch)
+        elif isinstance(layer, PwConv):
+            n, h, w, c = shape
+            macs += n * h * w * c * layer.out_ch
+            byts += c * layer.out_ch * 4 + n * h * w * layer.out_ch * 4
+            shape = (n, h, w, layer.out_ch)
+        elif isinstance(layer, DwConv):
+            n, h, w, c = shape
+            macs += n * h * w * layer.k * layer.k * c
+            byts += layer.k * layer.k * c * 4 + n * h * w * c * 4
+            shape = (
+                n,
+                (h + layer.stride - 1) // layer.stride,
+                (w + layer.stride - 1) // layer.stride,
+                c,
+            )
+        elif isinstance(layer, MaxPool):
+            n, h, w, c = shape
+            shape = (n, h // 2, w // 2, c)
+        elif isinstance(layer, GlobalPool):
+            n, _, _, c = shape
+            shape = (n, c)
+        elif isinstance(layer, Fc):
+            if len(shape) == 4:
+                n, d = shape[0], shape[1] * shape[2] * shape[3]
+            elif len(shape) == 3:
+                n, d = shape[1], shape[-1]
+            else:
+                n, d = shape
+            macs += n * d * layer.out_dim
+            byts += d * layer.out_dim * 4 + n * layer.out_dim * 4
+            shape = (n, layer.out_dim)
+        elif isinstance(layer, Lstm):
+            t, n, d = shape
+            macs += t * n * (d + layer.hidden) * 4 * layer.hidden
+            byts += (d + layer.hidden) * 4 * layer.hidden * 4 + t * n * layer.hidden * 4
+            shape = (t, n, layer.hidden)
+    return macs, byts

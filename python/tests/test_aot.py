@@ -1,0 +1,89 @@
+"""AOT path tests: lowering produces parseable HLO text + correct manifest
+metadata, and the lowered computation has the expected entry signature.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as zoo
+
+
+@pytest.fixture(scope="module")
+def lowered_light():
+    return aot.lower_model("mobilenet_v1", "fp32")
+
+
+def test_hlo_text_structure(lowered_light):
+    text, meta = lowered_light
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_hlo_text_keeps_large_constants():
+    """Regression: the default printer elides weights as `constant({...})`,
+    which the HLO parser silently zero-fills — models then emit all-zero
+    logits from rust. print_large_constants=True must keep the data."""
+    text, _ = aot.lower_model("mobilenet_v1", "fp32")
+    assert "constant({...})" not in text
+    assert "{..." not in text
+
+
+def test_meta_fields(lowered_light):
+    _, meta = lowered_light
+    assert meta["name"] == "mobilenet_v1"
+    assert meta["precision"] == "fp32"
+    assert (meta["s_conv"], meta["s_fc"], meta["s_rc"]) == zoo.TABLE3["mobilenet_v1"]
+    assert meta["macs"] > 0 and meta["bytes"] > 0
+    assert meta["hlo_chars"] == len(lowered_light[0])
+
+
+def test_int8_artifact_contains_s8(lowered_int8=None):
+    text, meta = aot.lower_model("mobilenet_v1", "int8")
+    assert "s8" in text  # int8 weights visible in the HLO
+    assert meta["precision"] == "int8"
+
+
+def test_fp16_artifact_contains_bf16():
+    text, _ = aot.lower_model("mobilenet_v1", "fp16")
+    assert "bf16" in text
+
+
+def test_manifest_written(tmp_path):
+    """End-to-end CLI: one light model, all precisions."""
+    import subprocess, sys
+
+    out = tmp_path / "artifacts"
+    r = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--models",
+            "mobilenet_v1",
+            "--precisions",
+            "fp32,int8",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert len(manifest["models"]) == 2
+    for m in manifest["models"]:
+        assert (out / m["artifact"]).exists()
+
+
+def test_sequence_model_lowers():
+    text, meta = aot.lower_model("mobilebert", "fp32")
+    assert text.startswith("HloModule")
+    assert meta["s_rc"] == 24
+    # lax.scan keeps the artifact small: one rolled loop, not 24 copies
+    assert "while" in text

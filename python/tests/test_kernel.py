@@ -1,0 +1,315 @@
+"""Pallas kernels vs pure-jnp ref oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes/dtypes/activations; every kernel must match ref.py
+to fp32 tolerance (int8 path compares against the identically-quantized ref).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as cv
+from compile.kernels import lstm_cell as lc
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+ACTS = ("relu", "relu6", "hswish", "sigmoid", "tanh", "none")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(
+        np.asarray(a, dtype=np.float32), np.asarray(b, dtype=np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul family
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    assert_close(mm.matmul(x, w), ref.matmul(x, w))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 32),
+    n=st.integers(1, 32),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_bias_act_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    assert_close(
+        mm.matmul_bias_act(x, w, b, act=act), ref.matmul_bias_act(x, w, b, act=act)
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 32),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_int8_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    wq, scale = mm.quantize_weight(w)
+    assert_close(
+        mm.matmul_int8(x, wq, scale, b), ref.matmul_int8(x, wq, scale, b)
+    )
+
+
+def test_matmul_tiled_grid_exercised():
+    """Block smaller than the operand => multi-point grid, same numbers."""
+    x = _rand(0, (64, 96))
+    w = _rand(1, (96, 80))
+    tiled = mm.matmul_f32(x, w, block_m=16, block_n=16, block_k=32)
+    assert_close(tiled, ref.matmul(x, w))
+
+
+def test_matmul_bf16_accumulates_fp32():
+    x = _rand(0, (16, 64), jnp.bfloat16)
+    w = _rand(1, (64, 16), jnp.bfloat16)
+    out = mm.matmul(x, w)
+    assert out.dtype == jnp.bfloat16
+    assert_close(out, ref.matmul(x, w), tol=5e-2)  # bf16 mantissa
+
+
+def test_quantize_weight_roundtrip_error_bounded():
+    w = _rand(3, (32, 24))
+    wq, scale = mm.quantize_weight(w)
+    err = np.abs(np.asarray(wq, np.float32) * np.asarray(scale) - np.asarray(w))
+    # max error is half an int8 step per channel
+    assert (err <= np.asarray(scale) * 0.5 + 1e-6).all()
+    assert wq.dtype == jnp.int8
+
+
+def test_quantize_weight_zero_column():
+    w = jnp.zeros((8, 4))
+    wq, scale = mm.quantize_weight(w)
+    assert np.asarray(wq).max() == 0
+    assert (np.asarray(scale) == 1.0).all()  # guarded divide
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        mm.matmul(_rand(0, (4, 5)), _rand(1, (6, 7)))
+
+
+# ---------------------------------------------------------------------------
+# conv family
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(4, 12),
+    c=st.integers(1, 8),
+    f=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(h, c, f, k, stride, seed):
+    x = _rand(seed, (1, h, h, c))
+    w = _rand(seed + 1, (k, k, c, f)) * 0.3
+    b = _rand(seed + 2, (f,))
+    assert_close(
+        cv.conv2d(x, w, b, stride=stride), ref.conv2d(x, w, b, stride=stride), tol=1e-3
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(4, 10),
+    c=st.integers(1, 8),
+    f=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_int8_matches_ref(h, c, f, seed):
+    x = _rand(seed, (1, h, h, c))
+    w = _rand(seed + 1, (3, 3, c, f)) * 0.3
+    b = _rand(seed + 2, (f,))
+    wq, scale = mm.quantize_weight(w.reshape(9 * c, f))
+    wq = wq.reshape(3, 3, c, f)
+    assert_close(
+        cv.conv2d_int8(x, wq, scale, b), ref.conv2d_int8(x, wq, scale, b), tol=1e-3
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(2, 10),
+    c=st.integers(1, 12),
+    f=st.integers(1, 12),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_pointwise_conv_matches_ref(h, c, f, act, seed):
+    x = _rand(seed, (1, h, h, c))
+    w = _rand(seed + 1, (c, f))
+    b = _rand(seed + 2, (f,))
+    assert_close(
+        cv.pointwise_conv(x, w, b, act=act), ref.pointwise_conv(x, w, b, act=act)
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(4, 10),
+    c=st.integers(1, 16),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_depthwise_conv_matches_ref(h, c, stride, seed):
+    x = _rand(seed, (1, h, h, c))
+    w = _rand(seed + 1, (3, 3, c)) * 0.3
+    b = _rand(seed + 2, (c,))
+    assert_close(
+        cv.depthwise_conv(x, w, b, stride=stride),
+        ref.depthwise_conv(x, w, b, stride=stride),
+        tol=1e-3,
+    )
+
+
+def test_depthwise_channel_grid():
+    """c > block => multi-point channel grid, numbers unchanged."""
+    x = _rand(0, (1, 6, 6, 96))
+    w = _rand(1, (3, 3, 96)) * 0.3
+    b = _rand(2, (96,))
+    assert_close(cv.depthwise_conv(x, w, b), ref.depthwise_conv(x, w, b), tol=1e-3)
+
+
+def test_pools():
+    x = _rand(0, (2, 8, 8, 4))
+    assert cv.max_pool2(x).shape == (2, 4, 4, 4)
+    assert cv.avg_pool_global(x).shape == (2, 4)
+    np.testing.assert_allclose(
+        np.asarray(cv.avg_pool_global(x)),
+        np.asarray(x).mean(axis=(1, 2)),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lstm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    i=st.integers(1, 16),
+    h=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_cell_matches_ref(b, i, h, seed):
+    x = _rand(seed, (b, i))
+    h0 = _rand(seed + 1, (b, h))
+    c0 = _rand(seed + 2, (b, h))
+    wx = _rand(seed + 3, (i, 4 * h)) * 0.5
+    wh = _rand(seed + 4, (h, 4 * h)) * 0.5
+    bias = _rand(seed + 5, (4 * h,))
+    got_h, got_c = lc.lstm_cell(x, h0, c0, wx, wh, bias)
+    want_h, want_c = ref.lstm_cell(x, h0, c0, wx, wh, bias)
+    assert_close(got_h, want_h, tol=1e-3)
+    assert_close(got_c, want_c, tol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(1, 8),
+    h=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_layer_matches_ref(t, h, seed):
+    xs = _rand(seed, (t, 2, 8))
+    wx = _rand(seed + 1, (8, 4 * h)) * 0.5
+    wh = _rand(seed + 2, (h, 4 * h)) * 0.5
+    b = _rand(seed + 3, (4 * h,))
+    assert_close(lc.lstm_layer(xs, wx, wh, b), ref.lstm_layer(xs, wx, wh, b), tol=1e-3)
+
+
+def test_lstm_cell_state_bounded():
+    """|h| <= 1 always (o * tanh(c)); property of the fused gates."""
+    x = _rand(0, (4, 8)) * 10
+    h0 = _rand(1, (4, 8))
+    c0 = _rand(2, (4, 8))
+    wx = _rand(3, (8, 32))
+    wh = _rand(4, (8, 32))
+    b = _rand(5, (32,))
+    got_h, _ = lc.lstm_cell(x, h0, c0, wx, wh, b)
+    assert np.abs(np.asarray(got_h)).max() <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+from compile.kernels import attention as attn
+
+
+@settings(**SETTINGS)
+@given(
+    tq=st.integers(1, 24),
+    tk=st.integers(1, 24),
+    d=st.integers(1, 16),
+    dv=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(tq, tk, d, dv, seed):
+    q = _rand(seed, (tq, d))
+    k = _rand(seed + 1, (tk, d))
+    v = _rand(seed + 2, (tk, dv))
+    assert_close(attn.attention(q, k, v), ref.attention(q, k, v), tol=1e-3)
+
+
+def test_attention_query_blocks_exercised():
+    """block_q smaller than Tq => multi-point grid, same numbers."""
+    q = _rand(0, (32, 8))
+    k = _rand(1, (16, 8))
+    v = _rand(2, (16, 8))
+    out = attn.attention(q, k, v, block_q=8)
+    assert_close(out, ref.attention(q, k, v), tol=1e-3)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Each output row lies in the convex hull of V's rows: max bound."""
+    q = _rand(3, (6, 4)) * 3
+    k = _rand(4, (10, 4))
+    v = _rand(5, (10, 4))
+    out = np.asarray(attn.attention(q, k, v), np.float32)
+    vmax = np.asarray(v).max(axis=0)
+    vmin = np.asarray(v).min(axis=0)
+    assert (out <= vmax + 1e-4).all() and (out >= vmin - 1e-4).all()
+
+
+def test_self_attention_block_matches_ref():
+    x = _rand(6, (12, 8))
+    ws = [_rand(7 + i, (8, 8)) * 0.5 for i in range(4)]
+    assert_close(
+        attn.self_attention_block(x, *ws), ref.self_attention_block(x, *ws), tol=1e-3
+    )

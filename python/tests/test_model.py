@@ -1,0 +1,86 @@
+"""Model-zoo tests: Table 3 layer compositions, shapes, precision variants,
+and quantization-error bounds across the full zoo.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as zoo
+
+
+@pytest.mark.parametrize("name", list(zoo.ZOO))
+def test_layer_composition_matches_table3(name):
+    spec = zoo.ZOO[name]
+    assert (spec.s_conv, spec.s_fc, spec.s_rc) == zoo.TABLE3[name]
+
+
+@pytest.mark.parametrize("name", list(zoo.ZOO))
+def test_macs_and_bytes_positive(name):
+    macs, byts = zoo.count_macs_bytes(zoo.ZOO[name])
+    assert macs > 0 and byts > 0
+
+
+# Forward passes through interpret-mode pallas are slow; run the full-zoo
+# forward check on the three paper-representative models (Fig 2) plus both
+# detection/NLP workload classes, and every precision on one light model.
+FWD_MODELS = ["mobilenet_v1", "mobilenet_v3", "mobilebert", "ssd_mobilenet_v1"]
+
+
+@pytest.mark.parametrize("name", FWD_MODELS)
+def test_forward_shape_and_finite(name):
+    fn, x, spec = zoo.make_model(name)
+    (out,) = fn(x)
+    assert out.ndim == 2 and out.shape[0] == 1
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("precision", zoo.PRECISIONS)
+def test_precision_variants_run(precision):
+    fn, x, _ = zoo.make_model("mobilenet_v1", precision)
+    (out,) = fn(x)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_int8_close_to_fp32():
+    """Quantization error at the logits stays small for a light model."""
+    fn32, x, _ = zoo.make_model("mobilenet_v1", "fp32")
+    fn8, _, _ = zoo.make_model("mobilenet_v1", "int8")
+    o32 = np.asarray(fn32(x)[0])
+    o8 = np.asarray(fn8(x)[0])
+    denom = np.abs(o32).mean() + 1e-6
+    assert np.abs(o32 - o8).mean() / denom < 0.15
+
+
+def test_fp16_close_to_fp32():
+    fn32, x, _ = zoo.make_model("mobilenet_v1", "fp32")
+    fn16, _, _ = zoo.make_model("mobilenet_v1", "fp16")
+    o32 = np.asarray(fn32(x)[0])
+    o16 = np.asarray(fn16(x)[0])
+    denom = np.abs(o32).mean() + 1e-6
+    assert np.abs(o32 - o16).mean() / denom < 0.2
+
+
+def test_forward_is_deterministic():
+    fn, x, _ = zoo.make_model("mobilenet_v1")
+    a = np.asarray(fn(x)[0])
+    b = np.asarray(fn(x)[0])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_distinct_seeds_give_distinct_params():
+    fn_a, x, _ = zoo.make_model("mobilenet_v1", seed=0)
+    fn_b, _, _ = zoo.make_model("mobilenet_v1", seed=1)
+    assert not np.allclose(np.asarray(fn_a(x)[0]), np.asarray(fn_b(x)[0]))
+
+
+def test_workload_classes():
+    workloads = {s.workload for s in zoo.ZOO.values()}
+    assert workloads == {"image_classification", "object_detection", "translation"}
+    assert zoo.ZOO["mobilebert"].workload == "translation"
+
+
+def test_sequence_model_input_shape():
+    t, b, d = zoo.ZOO["mobilebert"].input_shape
+    assert t > 1 and b >= 1 and d > 1

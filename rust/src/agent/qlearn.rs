@@ -1,0 +1,413 @@
+//! Q-learning (paper Algorithm 1): dense Q-table over the Table-1 state
+//! space × the device's action set, ε-greedy selection, the standard
+//! temporal-difference update, convergence detection, and Q-table
+//! save/load for cross-device learning transfer (§6.3, Fig. 14).
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::configsys::runconfig::AgentParams;
+use crate::types::Action;
+use crate::util::rng::Pcg64;
+
+use super::state::{State, STATE_CARDINALITY};
+
+/// Dense Q-table: state-index × action-index, plus per-cell visit counts.
+///
+/// Visit counts matter because the Eq.(5) reward is predominantly negative
+/// (−energy): against a near-zero random init, an *untried* action would
+/// always win a naive argmax. Greedy selection therefore restricts to
+/// visited actions once the state has any experience, while the near-zero
+/// init still gives systematic optimistic exploration during training.
+#[derive(Clone, Debug)]
+pub struct QTable {
+    /// Row-major [state][action].
+    q: Vec<f64>,
+    visits: Vec<u32>,
+    n_actions: usize,
+}
+
+impl QTable {
+    /// Initialize with small random values (Algorithm 1's initialization),
+    /// seeded for reproducibility.
+    pub fn new(n_actions: usize, seed: u64) -> QTable {
+        let mut rng = Pcg64::new(seed);
+        let q = (0..STATE_CARDINALITY * n_actions)
+            .map(|_| rng.range(-0.01, 0.01))
+            .collect();
+        QTable { q, visits: vec![0; STATE_CARDINALITY * n_actions], n_actions }
+    }
+
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    #[inline]
+    pub fn get(&self, s: State, a: usize) -> f64 {
+        self.q[s.index() * self.n_actions + a]
+    }
+
+    #[inline]
+    pub fn set(&mut self, s: State, a: usize, v: f64) {
+        self.q[s.index() * self.n_actions + a] = v;
+    }
+
+    #[inline]
+    pub fn visits(&self, s: State, a: usize) -> u32 {
+        self.visits[s.index() * self.n_actions + a]
+    }
+
+    #[inline]
+    pub fn record_visit(&mut self, s: State, a: usize) {
+        self.visits[s.index() * self.n_actions + a] += 1;
+    }
+
+    /// argmax_a Q(s, a); ties break toward the lower index (deterministic).
+    #[inline]
+    pub fn best_action(&self, s: State) -> usize {
+        let row = &self.q[s.index() * self.n_actions..(s.index() + 1) * self.n_actions];
+        let mut best = 0usize;
+        let mut best_v = row[0];
+        for (i, &v) in row.iter().enumerate().skip(1) {
+            if v > best_v {
+                best = i;
+                best_v = v;
+            }
+        }
+        best
+    }
+
+    /// argmax over *visited* actions (exploitation after training); falls
+    /// back to the plain argmax for states with no experience.
+    #[inline]
+    pub fn best_visited_action(&self, s: State) -> usize {
+        let base = s.index() * self.n_actions;
+        let mut best: Option<(usize, f64)> = None;
+        for a in 0..self.n_actions {
+            if self.visits[base + a] > 0 {
+                let v = self.q[base + a];
+                if best.map(|(_, bv)| v > bv).unwrap_or(true) {
+                    best = Some((a, v));
+                }
+            }
+        }
+        best.map(|(a, _)| a).unwrap_or_else(|| self.best_action(s))
+    }
+
+    #[inline]
+    pub fn max_q(&self, s: State) -> f64 {
+        let row = &self.q[s.index() * self.n_actions..(s.index() + 1) * self.n_actions];
+        row.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Serialize to a small text format (version line, dims, values). The
+    /// paper's transfer mechanism ships this file between devices.
+    /// Sparse text format: only cells with experience are stored (the
+    /// random-init values of unvisited cells are semantically irrelevant —
+    /// greedy exploitation only considers visited actions). This makes
+    /// save/load proportional to learned experience, not table capacity
+    /// (~µs-ms instead of ~80 ms for the dense format; see EXPERIMENTS.md
+    /// §Perf).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        use std::fmt::Write as _;
+        let mut body = String::with_capacity(4096);
+        let mut count = 0usize;
+        for (i, (&v, &n)) in self.q.iter().zip(&self.visits).enumerate() {
+            if n > 0 {
+                writeln!(body, "{i} {v:.17e} {n}").unwrap();
+                count += 1;
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "autoscale-qtable-v3")?;
+        writeln!(f, "{} {} {count}", STATE_CARDINALITY, self.n_actions)?;
+        f.write_all(body.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<QTable> {
+        let f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut lines = f.lines();
+        let magic = lines.next().ok_or_else(|| anyhow::anyhow!("empty qtable file"))??;
+        anyhow::ensure!(magic == "autoscale-qtable-v3", "bad magic '{magic}'");
+        let dims = lines.next().ok_or_else(|| anyhow::anyhow!("missing dims"))??;
+        let mut parts = dims.split_whitespace();
+        let states: usize = parts.next().unwrap_or("0").parse()?;
+        let actions: usize = parts.next().unwrap_or("0").parse()?;
+        let count: usize = parts.next().unwrap_or("0").parse()?;
+        anyhow::ensure!(states == STATE_CARDINALITY, "state-space mismatch");
+        let mut q = vec![0.0; states * actions];
+        let mut visits = vec![0u32; states * actions];
+        let mut seen = 0usize;
+        for line in lines {
+            let line = line?;
+            let mut cols = line.split_whitespace();
+            let (Some(i), Some(v), Some(n)) = (cols.next(), cols.next(), cols.next())
+            else {
+                continue;
+            };
+            let i: usize = i.parse()?;
+            anyhow::ensure!(i < q.len(), "cell index out of range");
+            q[i] = v.parse::<f64>()?;
+            visits[i] = n.parse::<u32>()?;
+            seen += 1;
+        }
+        anyhow::ensure!(seen == count, "cell count mismatch: {seen} vs {count}");
+        Ok(QTable { q, visits, n_actions: actions })
+    }
+
+    /// Approximate resident size in bytes (paper: ~0.4 MB).
+    pub fn memory_bytes(&self) -> usize {
+        self.q.len() * std::mem::size_of::<f64>()
+            + self.visits.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// The AutoScale agent: Q-table + ε-greedy policy + TD update.
+pub struct AutoScaleAgent {
+    pub table: QTable,
+    /// The action catalogue this agent selects from (device-specific).
+    pub actions: Vec<Action>,
+    pub params: AgentParams,
+    rng: Pcg64,
+    /// Recent max-Q deltas for convergence detection.
+    recent_deltas: Vec<f64>,
+    /// Exploration disabled once converged (paper: after learning the
+    /// Q-table is used greedily).
+    pub frozen: bool,
+    updates: u64,
+}
+
+impl AutoScaleAgent {
+    pub fn new(actions: Vec<Action>, params: AgentParams, seed: u64) -> Self {
+        assert!(!actions.is_empty());
+        let table = QTable::new(actions.len(), seed);
+        AutoScaleAgent {
+            table,
+            actions,
+            params,
+            rng: Pcg64::with_stream(seed, 17),
+            recent_deltas: Vec::new(),
+            frozen: false,
+            updates: 0,
+        }
+    }
+
+    /// Warm-start from a transferred Q-table (learning transfer, Fig. 14).
+    /// The action catalogues may differ across devices (e.g. S10e has no
+    /// DSP): actions are matched by identity; missing source actions keep
+    /// the random initialization.
+    pub fn with_transfer(
+        actions: Vec<Action>,
+        params: AgentParams,
+        seed: u64,
+        source: &AutoScaleAgent,
+    ) -> Self {
+        let mut agent = AutoScaleAgent::new(actions, params, seed);
+        for (ai, act) in agent.actions.iter().enumerate() {
+            if let Some(si) = source.actions.iter().position(|a| a == act) {
+                for s_idx in 0..STATE_CARDINALITY {
+                    agent.table.q[s_idx * agent.table.n_actions + ai] =
+                        source.table.q[s_idx * source.table.n_actions + si];
+                    agent.table.visits[s_idx * agent.table.n_actions + ai] =
+                        source.table.visits[s_idx * source.table.n_actions + si];
+                }
+            }
+        }
+        agent
+    }
+
+    /// ε-greedy selection (Algorithm 1): explore with probability ε unless
+    /// frozen, otherwise exploit. During training the plain argmax gives
+    /// optimistic systematic exploration (untried ≈ 0 beats tried
+    /// negatives); a frozen agent exploits only experienced actions.
+    pub fn select(&mut self, s: State) -> (usize, Action) {
+        let idx = if self.frozen {
+            self.table.best_visited_action(s)
+        } else if self.rng.chance(self.params.epsilon) {
+            self.rng.below(self.actions.len())
+        } else {
+            self.table.best_action(s)
+        };
+        (idx, self.actions[idx])
+    }
+
+    /// Greedy selection (no exploration) — used after training.
+    pub fn select_greedy(&self, s: State) -> (usize, Action) {
+        let idx = self.table.best_visited_action(s);
+        (idx, self.actions[idx])
+    }
+
+    /// TD update: Q(S,A) += γ [R + µ max_a' Q(S',a') - Q(S,A)].
+    pub fn update(&mut self, s: State, a: usize, r: f64, s_next: State) {
+        let old = self.table.get(s, a);
+        let target = r + self.params.discount * self.table.max_q(s_next);
+        let new = old + self.params.learning_rate * (target - old);
+        self.table.set(s, a, new);
+        self.table.record_visit(s, a);
+        self.updates += 1;
+
+        // Convergence detector: sliding window of |ΔmaxQ(s)|.
+        let delta = (self.table.max_q(s) - old.max(self.table.max_q(s).min(old))).abs();
+        self.recent_deltas.push(delta.min((new - old).abs()));
+        if self.recent_deltas.len() > 40 {
+            self.recent_deltas.remove(0);
+        }
+    }
+
+    /// Has the max-Q value stopped moving (paper: converges in 40-50 runs)?
+    pub fn converged(&self, tol: f64) -> bool {
+        self.recent_deltas.len() >= 30
+            && self.recent_deltas.iter().rev().take(20).all(|d| *d < tol)
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Precision, ProcKind};
+
+    fn actions() -> Vec<Action> {
+        vec![
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+            Action::local(ProcKind::Gpu, Precision::Fp16),
+            Action::cloud(),
+        ]
+    }
+
+    fn state() -> State {
+        State { conv: 1, fc: 0, rc: 0, mac: 1, co_cpu: 0, co_mem: 0, rssi_w: 0, rssi_p: 0 }
+    }
+
+    #[test]
+    fn learns_the_best_arm_of_a_bandit() {
+        // Rewards: action 1 is best. With γ=0.9, µ=0 (pure bandit), the
+        // agent must converge to action 1.
+        let mut params = AgentParams::default();
+        params.discount = 0.0;
+        let mut agent = AutoScaleAgent::new(actions(), params, 1);
+        let s = state();
+        let reward_of = [0.1, 1.0, 0.4];
+        for _ in 0..300 {
+            let (a, _) = agent.select(s);
+            agent.update(s, a, reward_of[a], s);
+        }
+        assert_eq!(agent.table.best_action(s), 1);
+    }
+
+    #[test]
+    fn epsilon_zero_is_pure_greedy() {
+        let mut params = AgentParams::default();
+        params.epsilon = 0.0;
+        let mut agent = AutoScaleAgent::new(actions(), params, 2);
+        let s = state();
+        agent.table.set(s, 2, 10.0);
+        for _ in 0..50 {
+            let (a, _) = agent.select(s);
+            assert_eq!(a, 2);
+        }
+    }
+
+    #[test]
+    fn exploration_visits_all_actions() {
+        let mut params = AgentParams::default();
+        params.epsilon = 1.0; // always explore
+        let mut agent = AutoScaleAgent::new(actions(), params, 3);
+        let s = state();
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            let (a, _) = agent.select(s);
+            seen[a] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn frozen_agent_never_explores() {
+        let mut params = AgentParams::default();
+        params.epsilon = 1.0;
+        let mut agent = AutoScaleAgent::new(actions(), params, 4);
+        let s = state();
+        agent.table.set(s, 0, 5.0);
+        agent.freeze();
+        for _ in 0..50 {
+            let (a, _) = agent.select(s);
+            assert_eq!(a, 0);
+        }
+    }
+
+    #[test]
+    fn td_update_moves_toward_target() {
+        let mut agent = AutoScaleAgent::new(actions(), AgentParams::default(), 5);
+        let s = state();
+        agent.table.set(s, 0, 0.0);
+        agent.update(s, 0, 1.0, s);
+        let q = agent.table.get(s, 0);
+        assert!(q > 0.8, "γ=0.9 should move most of the way: {q}");
+    }
+
+    #[test]
+    fn convergence_detected_under_stationary_rewards() {
+        let mut params = AgentParams::default();
+        params.epsilon = 0.05;
+        let mut agent = AutoScaleAgent::new(actions(), params, 6);
+        let s = state();
+        for _ in 0..200 {
+            let (a, _) = agent.select(s);
+            agent.update(s, a, if a == 1 { 1.0 } else { 0.2 }, s);
+        }
+        assert!(agent.converged(0.05));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut agent = AutoScaleAgent::new(actions(), AgentParams::default(), 7);
+        let s = state();
+        agent.update(s, 1, 0.75, s); // visited cells survive the roundtrip
+        let path = std::env::temp_dir().join("autoscale_qtable_test.txt");
+        agent.table.save(&path).unwrap();
+        let loaded = QTable::load(&path).unwrap();
+        assert_eq!(loaded.n_actions(), 3);
+        assert!((loaded.get(s, 1) - agent.table.get(s, 1)).abs() < 1e-15);
+        assert_eq!(loaded.visits(s, 1), 1);
+        // unvisited cells load as neutral zero
+        assert_eq!(loaded.visits(s, 0), 0);
+        assert_eq!(loaded.get(s, 0), 0.0);
+    }
+
+    #[test]
+    fn transfer_copies_matching_actions_only() {
+        let mut src = AutoScaleAgent::new(actions(), AgentParams::default(), 8);
+        let s = state();
+        src.table.set(s, 0, 42.0); // cpu/fp32
+        src.table.set(s, 2, 24.0); // cloud
+        // Target has no GPU action but adds a DSP action.
+        let tgt_actions = vec![
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+            Action::local(ProcKind::Dsp, Precision::Int8),
+            Action::cloud(),
+        ];
+        let tgt =
+            AutoScaleAgent::with_transfer(tgt_actions, AgentParams::default(), 9, &src);
+        assert!((tgt.table.get(s, 0) - 42.0).abs() < 1e-12);
+        assert!((tgt.table.get(s, 2) - 24.0).abs() < 1e-12);
+        assert!(tgt.table.get(s, 1).abs() < 0.011, "dsp slot stays random-init");
+    }
+
+    #[test]
+    fn qtable_memory_fits_mobile_budget() {
+        // Paper §6.3: ~0.4 MB. Dense f64 table + u32 visit counts over 3072
+        // states x ~60 actions ≈ 2.2 MB; per-device catalogues are smaller.
+        // Assert the order of magnitude for a realistic catalogue.
+        let t = QTable::new(60, 0);
+        assert!(t.memory_bytes() < 3_000_000);
+    }
+}

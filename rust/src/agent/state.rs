@@ -1,0 +1,223 @@
+//! The RL state (paper Table 1): four NN-composition features plus four
+//! runtime-variance features, each discretized into the paper's bins.
+//!
+//! Continuous features (utilization, RSSI) were discretized in the paper by
+//! running DBSCAN over measured samples; we ship the resulting Table-1
+//! thresholds as the default binning and recover them in tests by running
+//! our own DBSCAN (see `dbscan.rs`) over simulated feature distributions.
+
+use crate::interference::Interference;
+use crate::nn::zoo::NnDesc;
+
+/// Raw (continuous) observation before discretization.
+#[derive(Clone, Copy, Debug)]
+pub struct StateObs {
+    pub s_conv: u32,
+    pub s_fc: u32,
+    pub s_rc: u32,
+    /// MACs in millions (paper-scale).
+    pub s_mac_m: f64,
+    /// Co-runner CPU utilization, 0-100.
+    pub co_cpu: f64,
+    /// Co-runner memory usage, 0-100.
+    pub co_mem: f64,
+    /// WLAN RSSI (dBm).
+    pub rssi_wlan: f64,
+    /// P2P RSSI (dBm).
+    pub rssi_p2p: f64,
+}
+
+impl StateObs {
+    pub fn from_parts(nn: &NnDesc, inter: Interference, rssi_wlan: f64, rssi_p2p: f64) -> Self {
+        StateObs {
+            s_conv: nn.s_conv,
+            s_fc: nn.s_fc,
+            s_rc: nn.s_rc,
+            s_mac_m: nn.macs_m,
+            co_cpu: inter.cpu_util,
+            co_mem: inter.mem_pressure,
+            rssi_wlan,
+            rssi_p2p,
+        }
+    }
+}
+
+/// Discretized state — Table 1, last column. Small enough to index a dense
+/// Q-table: 4 x 2 x 2 x 3 x 4 x 4 x 2 x 2 = 3072 states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct State {
+    /// # CONV: Small(<30) Medium(<50) Large(<90) Larger(>=90) -> 0..4
+    pub conv: u8,
+    /// # FC: Small(<10) Large(>=10) -> 0..2
+    pub fc: u8,
+    /// # RC: Small(<10) Large(>=10) -> 0..2
+    pub rc: u8,
+    /// MACs: Small(<1000M) Medium(<2000M) Large(>=2000M) -> 0..3
+    pub mac: u8,
+    /// co-CPU: None(0) Small(<25) Medium(<75) Large(>=75) -> 0..4
+    pub co_cpu: u8,
+    /// co-MEM: same bins -> 0..4
+    pub co_mem: u8,
+    /// WLAN RSSI: Regular(>-80) Weak(<=-80) -> 0..2
+    pub rssi_w: u8,
+    /// P2P RSSI: Regular(>-80) Weak(<=-80) -> 0..2
+    pub rssi_p: u8,
+}
+
+/// Total number of discrete states.
+pub const STATE_CARDINALITY: usize = 4 * 2 * 2 * 3 * 4 * 4 * 2 * 2;
+
+impl State {
+    /// Discretize per Table 1.
+    pub fn discretize(o: &StateObs) -> State {
+        State {
+            conv: bin_conv(o.s_conv),
+            fc: if o.s_fc < 10 { 0 } else { 1 },
+            rc: if o.s_rc < 10 { 0 } else { 1 },
+            mac: bin_mac(o.s_mac_m),
+            co_cpu: bin_util(o.co_cpu),
+            co_mem: bin_util(o.co_mem),
+            rssi_w: if o.rssi_wlan > -80.0 { 0 } else { 1 },
+            rssi_p: if o.rssi_p2p > -80.0 { 0 } else { 1 },
+        }
+    }
+
+    /// Dense index in [0, STATE_CARDINALITY).
+    pub fn index(&self) -> usize {
+        let mut idx = self.conv as usize;
+        idx = idx * 2 + self.fc as usize;
+        idx = idx * 2 + self.rc as usize;
+        idx = idx * 3 + self.mac as usize;
+        idx = idx * 4 + self.co_cpu as usize;
+        idx = idx * 4 + self.co_mem as usize;
+        idx = idx * 2 + self.rssi_w as usize;
+        idx = idx * 2 + self.rssi_p as usize;
+        idx
+    }
+}
+
+fn bin_conv(n: u32) -> u8 {
+    if n < 30 {
+        0
+    } else if n < 50 {
+        1
+    } else if n < 90 {
+        2
+    } else {
+        3
+    }
+}
+
+fn bin_mac(m: f64) -> u8 {
+    if m < 1000.0 {
+        0
+    } else if m < 2000.0 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Utilization bins: None(0%), Small(<25%), Medium(<75%), Large(>=75%).
+fn bin_util(u: f64) -> u8 {
+    if u <= 0.5 {
+        0
+    } else if u < 25.0 {
+        1
+    } else if u < 75.0 {
+        2
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo::by_name;
+
+    fn obs(nn: &str) -> StateObs {
+        StateObs::from_parts(
+            by_name(nn).unwrap(),
+            Interference::default(),
+            -55.0,
+            -50.0,
+        )
+    }
+
+    #[test]
+    fn table1_nn_bins() {
+        // InceptionV3: 94 convs -> Larger (bin 3); >=2000M MACs -> Large.
+        let s = State::discretize(&obs("inception_v3"));
+        assert_eq!(s.conv, 3);
+        assert_eq!(s.mac, 2);
+        // MobilenetV3: 23 convs -> Small, 20 FC -> Large FC, <1000M MACs.
+        let s = State::discretize(&obs("mobilenet_v3"));
+        assert_eq!(s.conv, 0);
+        assert_eq!(s.fc, 1);
+        assert_eq!(s.mac, 0);
+        // MobileBERT: 24 RC -> Large RC.
+        let s = State::discretize(&obs("mobilebert"));
+        assert_eq!(s.rc, 1);
+    }
+
+    #[test]
+    fn runtime_variance_bins() {
+        let mut o = obs("mobilenet_v1");
+        o.co_cpu = 0.0;
+        o.co_mem = 100.0;
+        o.rssi_wlan = -85.0;
+        o.rssi_p2p = -50.0;
+        let s = State::discretize(&o);
+        assert_eq!(s.co_cpu, 0);
+        assert_eq!(s.co_mem, 3);
+        assert_eq!(s.rssi_w, 1);
+        assert_eq!(s.rssi_p, 0);
+
+        o.co_cpu = 24.9;
+        assert_eq!(State::discretize(&o).co_cpu, 1);
+        o.co_cpu = 74.9;
+        assert_eq!(State::discretize(&o).co_cpu, 2);
+        o.co_cpu = 75.0;
+        assert_eq!(State::discretize(&o).co_cpu, 3);
+    }
+
+    #[test]
+    fn rssi_boundary_at_minus_80() {
+        let mut o = obs("mobilenet_v1");
+        o.rssi_wlan = -79.9;
+        assert_eq!(State::discretize(&o).rssi_w, 0);
+        o.rssi_wlan = -80.0;
+        assert_eq!(State::discretize(&o).rssi_w, 1);
+    }
+
+    #[test]
+    fn index_bijective_over_cardinality() {
+        let mut seen = vec![false; STATE_CARDINALITY];
+        for conv in 0..4u8 {
+            for fc in 0..2u8 {
+                for rc in 0..2u8 {
+                    for mac in 0..3u8 {
+                        for cc in 0..4u8 {
+                            for cm in 0..4u8 {
+                                for rw in 0..2u8 {
+                                    for rp in 0..2u8 {
+                                        let s = State {
+                                            conv, fc, rc, mac,
+                                            co_cpu: cc, co_mem: cm,
+                                            rssi_w: rw, rssi_p: rp,
+                                        };
+                                        let i = s.index();
+                                        assert!(!seen[i], "collision at {i}");
+                                        seen[i] = true;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

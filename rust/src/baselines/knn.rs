@@ -1,0 +1,84 @@
+//! K-nearest-neighbour classifier (majority vote, Euclidean distance on
+//! pre-scaled features) — the second classification comparator of §3.3.
+
+/// KNN model: memorized training set.
+#[derive(Clone, Debug)]
+pub struct Knn {
+    xs: Vec<Vec<f64>>,
+    ys: Vec<usize>,
+    pub k: usize,
+}
+
+impl Knn {
+    pub fn fit(xs: Vec<Vec<f64>>, ys: Vec<usize>, k: usize) -> Knn {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty() && k >= 1);
+        Knn { xs, ys, k }
+    }
+
+    /// Majority vote among the k nearest; ties break to the nearest member.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let mut dists: Vec<(f64, usize)> = self
+            .xs
+            .iter()
+            .zip(&self.ys)
+            .map(|(xi, &yi)| (dist2(x, xi), yi))
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let k = self.k.min(dists.len());
+        let mut votes: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        for (_, y) in &dists[..k] {
+            *votes.entry(*y).or_insert(0) += 1;
+        }
+        let max_votes = *votes.values().max().unwrap();
+        // tie-break: earliest (nearest) neighbour among the max-voted labels
+        dists[..k]
+            .iter()
+            .find(|(_, y)| votes[y] == max_votes)
+            .map(|(_, y)| *y)
+            .unwrap()
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn nearest_neighbour_exact_on_training_points() {
+        let xs = vec![vec![0.0, 0.0], vec![10.0, 10.0]];
+        let ys = vec![0, 1];
+        let m = Knn::fit(xs, ys, 1);
+        assert_eq!(m.predict(&[0.1, 0.1]), 0);
+        assert_eq!(m.predict(&[9.5, 9.9]), 1);
+    }
+
+    #[test]
+    fn majority_vote_smooths_label_noise() {
+        let mut rng = Pcg64::new(8);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..200 {
+            let c = i % 2;
+            let cx = if c == 0 { -3.0 } else { 3.0 };
+            xs.push(vec![cx + rng.normal(0.0, 0.5)]);
+            // 10% label noise
+            ys.push(if rng.chance(0.1) { 1 - c } else { c });
+        }
+        let m = Knn::fit(xs, ys, 9);
+        assert_eq!(m.predict(&[-3.0]), 0);
+        assert_eq!(m.predict(&[3.0]), 1);
+    }
+
+    #[test]
+    fn k_larger_than_dataset_clamped() {
+        let m = Knn::fit(vec![vec![0.0], vec![1.0]], vec![0, 1], 10);
+        // both neighbours vote; tie-break to the nearest
+        assert_eq!(m.predict(&[0.1]), 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Ordinary least squares linear regression via the normal equations,
+//! solved with Gaussian elimination + partial pivoting and Tikhonov
+//! damping for rank-deficient designs.
+
+/// Fitted linear model: y = w·x + b.
+#[derive(Clone, Debug)]
+pub struct LinReg {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+}
+
+impl LinReg {
+    /// Fit on rows `xs` with targets `ys`.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64]) -> LinReg {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let d = xs[0].len();
+        // Augment with bias column; solve (X'X + λI) w = X'y.
+        let da = d + 1;
+        let mut xtx = vec![vec![0.0f64; da]; da];
+        let mut xty = vec![0.0f64; da];
+        for (x, &y) in xs.iter().zip(ys) {
+            let mut row = Vec::with_capacity(da);
+            row.extend_from_slice(x);
+            row.push(1.0);
+            for i in 0..da {
+                xty[i] += row[i] * y;
+                for j in 0..da {
+                    xtx[i][j] += row[i] * row[j];
+                }
+            }
+        }
+        let lambda = 1e-8 * xs.len() as f64;
+        for (i, row) in xtx.iter_mut().enumerate() {
+            row[i] += lambda;
+        }
+        let sol = solve(xtx, xty);
+        LinReg { bias: sol[d], weights: sol[..d].to_vec() }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.bias + self.weights.iter().zip(x).map(|(w, v)| w * v).sum::<f64>()
+    }
+}
+
+/// Gaussian elimination with partial pivoting; a (small, dense) solver.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        if diag.abs() < 1e-14 {
+            continue; // damped, should not happen
+        }
+        for r in col + 1..n {
+            let f = a[r][col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for c in row + 1..n {
+            acc -= a[row][c] * x[c];
+        }
+        x[row] = if a[row][row].abs() < 1e-14 { 0.0 } else { acc / a[row][row] };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_exact_linear_function() {
+        // y = 2a - 3b + 5
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<Vec<f64>> =
+            (0..50).map(|_| vec![rng.range(-5.0, 5.0), rng.range(-5.0, 5.0)]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] - 3.0 * x[1] + 5.0).collect();
+        let m = LinReg::fit(&xs, &ys);
+        assert!((m.weights[0] - 2.0).abs() < 1e-6);
+        assert!((m.weights[1] + 3.0).abs() < 1e-6);
+        assert!((m.bias - 5.0).abs() < 1e-6);
+        assert!((m.predict(&[1.0, 1.0]) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn robust_to_noise() {
+        let mut rng = Pcg64::new(2);
+        let xs: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.range(0.0, 10.0)]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 4.0 * x[0] + rng.normal(0.0, 0.5)).collect();
+        let m = LinReg::fit(&xs, &ys);
+        assert!((m.weights[0] - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn handles_collinear_features() {
+        // second column duplicates the first; damping keeps it finite.
+        let xs = vec![vec![1.0, 1.0], vec![2.0, 2.0], vec![3.0, 3.0]];
+        let ys = vec![2.0, 4.0, 6.0];
+        let m = LinReg::fit(&xs, &ys);
+        for x in &xs {
+            assert!((m.predict(x) - 2.0 * x[0]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Baseline policies (§5.1) and the prediction-based comparators of §3.3:
+//!
+//! * fixed policies — Edge(CPU FP32), Edge(Best), Cloud, Connected Edge,
+//!   and the oracular Opt;
+//! * learned predictors — Linear Regression and (linear) Support Vector
+//!   Regression predicting energy/latency per action, and SVM / KNN
+//!   classifying the optimal action directly. All four are implemented
+//!   from scratch (no crates): LR via normal equations, SVR/SVM via
+//!   (sub)gradient descent, KNN with normalized Euclidean distance.
+
+pub mod knn;
+pub mod linreg;
+pub mod svm;
+pub mod svr;
+
+pub use knn::Knn;
+pub use linreg::LinReg;
+pub use svm::LinearSvm;
+pub use svr::LinearSvr;
+
+/// Standardize features column-wise: (x - mean) / std. Returns the scaler
+/// so test points transform identically.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    pub fn fit(xs: &[Vec<f64>]) -> Scaler {
+        assert!(!xs.is_empty());
+        let d = xs[0].len();
+        let n = xs.len() as f64;
+        let mut mean = vec![0.0; d];
+        for x in xs {
+            for (m, v) in mean.iter_mut().zip(x) {
+                *m += v / n;
+            }
+        }
+        let mut std = vec![0.0; d];
+        for x in xs {
+            for ((s, v), m) in std.iter_mut().zip(x).zip(&mean) {
+                *s += (v - m).powi(2) / n;
+            }
+        }
+        for s in &mut std {
+            *s = s.sqrt().max(1e-9);
+        }
+        Scaler { mean, std }
+    }
+
+    pub fn transform(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(&self.mean)
+            .zip(&self.std)
+            .map(|((v, m), s)| (v - m) / s)
+            .collect()
+    }
+
+    pub fn transform_all(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.transform(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaler_zero_mean_unit_std() {
+        let xs = vec![vec![1.0, 10.0], vec![3.0, 30.0], vec![5.0, 50.0]];
+        let sc = Scaler::fit(&xs);
+        let t = sc.transform_all(&xs);
+        let col0: Vec<f64> = t.iter().map(|r| r[0]).collect();
+        assert!(crate::util::stats::mean(&col0).abs() < 1e-9);
+        assert!((crate::util::stats::stddev(&col0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaler_constant_column_guarded() {
+        let xs = vec![vec![2.0], vec![2.0]];
+        let sc = Scaler::fit(&xs);
+        let t = sc.transform(&[2.0]);
+        assert!(t[0].abs() < 1e-6); // no NaN / inf
+    }
+}

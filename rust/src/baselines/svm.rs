@@ -1,0 +1,139 @@
+//! Linear multi-class SVM (one-vs-rest, hinge loss, subgradient descent) —
+//! the classification-based comparator of §3.3 that predicts the optimal
+//! execution target directly from the state features.
+
+use crate::util::rng::Pcg64;
+
+/// One-vs-rest linear SVM.
+#[derive(Clone, Debug)]
+pub struct LinearSvm {
+    /// Per-class weight vectors and biases.
+    pub weights: Vec<Vec<f64>>,
+    pub biases: Vec<f64>,
+    pub n_classes: usize,
+}
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmParams {
+    pub lambda: f64,
+    pub epochs: usize,
+    pub lr: f64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams { lambda: 1e-4, epochs: 80, lr: 0.05 }
+    }
+}
+
+impl LinearSvm {
+    /// Fit on rows `xs` with integer class labels `ys` in [0, n_classes).
+    pub fn fit(xs: &[Vec<f64>], ys: &[usize], n_classes: usize, p: SvmParams, seed: u64) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty() && n_classes >= 2);
+        let d = xs[0].len();
+        let mut weights = vec![vec![0.0f64; d]; n_classes];
+        let mut biases = vec![0.0f64; n_classes];
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Pcg64::new(seed);
+        for epoch in 0..p.epochs {
+            rng.shuffle(&mut order);
+            let lr = p.lr / (1.0 + epoch as f64 * 0.08);
+            for &i in &order {
+                for c in 0..n_classes {
+                    let y = if ys[i] == c { 1.0 } else { -1.0 };
+                    let margin = y
+                        * (biases[c]
+                            + weights[c].iter().zip(&xs[i]).map(|(w, v)| w * v).sum::<f64>());
+                    if margin < 1.0 {
+                        for (w, v) in weights[c].iter_mut().zip(&xs[i]) {
+                            *w += lr * (y * v - p.lambda * *w);
+                        }
+                        biases[c] += lr * y;
+                    } else {
+                        for w in weights[c].iter_mut() {
+                            *w -= lr * p.lambda * *w;
+                        }
+                    }
+                }
+            }
+        }
+        LinearSvm { weights, biases, n_classes }
+    }
+
+    /// Decision score per class.
+    pub fn scores(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_classes)
+            .map(|c| {
+                self.biases[c]
+                    + self.weights[c].iter().zip(x).map(|(w, v)| w * v).sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// Predicted class = argmax score.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let s = self.scores(x);
+        s.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Three well-separated Gaussian blobs in 2-D.
+    fn blobs(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Pcg64::new(seed);
+        let centers = [(-4.0, 0.0), (4.0, 0.0), (0.0, 5.0)];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let c = i % 3;
+            xs.push(vec![
+                centers[c].0 + rng.normal(0.0, 0.6),
+                centers[c].1 + rng.normal(0.0, 0.6),
+            ]);
+            ys.push(c);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn classifies_separable_blobs() {
+        let (xs, ys) = blobs(300, 5);
+        let m = LinearSvm::fit(&xs, &ys, 3, SvmParams::default(), 1);
+        let correct = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(x, &y)| m.predict(x) == y)
+            .count();
+        assert!(
+            correct as f64 / xs.len() as f64 > 0.95,
+            "accuracy {}",
+            correct as f64 / xs.len() as f64
+        );
+    }
+
+    #[test]
+    fn generalizes_to_fresh_samples() {
+        let (xs, ys) = blobs(300, 6);
+        let m = LinearSvm::fit(&xs, &ys, 3, SvmParams::default(), 2);
+        let (xt, yt) = blobs(90, 99);
+        let correct = xt.iter().zip(&yt).filter(|(x, &y)| m.predict(x) == y).count();
+        assert!(correct as f64 / xt.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn scores_length_matches_classes() {
+        let (xs, ys) = blobs(60, 7);
+        let m = LinearSvm::fit(&xs, &ys, 3, SvmParams::default(), 3);
+        assert_eq!(m.scores(&xs[0]).len(), 3);
+    }
+}

@@ -1,0 +1,103 @@
+//! Linear ε-insensitive Support Vector Regression trained by subgradient
+//! descent (the mobile-friendly linear variant of the SVR the paper
+//! compares against).
+
+use crate::util::rng::Pcg64;
+
+/// Fitted linear SVR: y ≈ w·x + b within the ε-tube.
+#[derive(Clone, Debug)]
+pub struct LinearSvr {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+    pub epsilon: f64,
+}
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvrParams {
+    pub epsilon: f64,
+    /// L2 regularization strength.
+    pub lambda: f64,
+    pub epochs: usize,
+    pub lr: f64,
+}
+
+impl Default for SvrParams {
+    fn default() -> Self {
+        SvrParams { epsilon: 0.01, lambda: 1e-4, epochs: 60, lr: 0.05 }
+    }
+}
+
+impl LinearSvr {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], p: SvrParams, seed: u64) -> LinearSvr {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let d = xs[0].len();
+        let mut w = vec![0.0f64; d];
+        let mut b = 0.0f64;
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Pcg64::new(seed);
+        for epoch in 0..p.epochs {
+            rng.shuffle(&mut order);
+            let lr = p.lr / (1.0 + epoch as f64 * 0.1);
+            for &i in &order {
+                let pred: f64 = b + w.iter().zip(&xs[i]).map(|(wv, xv)| wv * xv).sum::<f64>();
+                let err = pred - ys[i];
+                // ε-insensitive subgradient
+                let g = if err > p.epsilon {
+                    1.0
+                } else if err < -p.epsilon {
+                    -1.0
+                } else {
+                    0.0
+                };
+                for (wv, xv) in w.iter_mut().zip(&xs[i]) {
+                    *wv -= lr * (g * xv + p.lambda * *wv);
+                }
+                b -= lr * g;
+            }
+        }
+        LinearSvr { weights: w, bias: b, epsilon: p.epsilon }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.bias + self.weights.iter().zip(x).map(|(w, v)| w * v).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::mape;
+
+    #[test]
+    fn fits_linear_trend_within_tube() {
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<Vec<f64>> = (0..400).map(|_| vec![rng.range(-2.0, 2.0)]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.5 * x[0] + 0.5).collect();
+        let m = LinearSvr::fit(&xs, &ys, SvrParams::default(), 1);
+        let preds: Vec<f64> = xs.iter().map(|x| m.predict(x)).collect();
+        assert!(mape(&preds, &ys) < 20.0);
+        assert!((m.weights[0] - 1.5).abs() < 0.2, "w={:?}", m.weights);
+    }
+
+    #[test]
+    fn epsilon_tube_tolerates_small_noise() {
+        let mut rng = Pcg64::new(4);
+        let xs: Vec<Vec<f64>> = (0..400).map(|_| vec![rng.range(-2.0, 2.0)]).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| 1.5 * x[0] + rng.normal(0.0, 0.005)).collect();
+        let m = LinearSvr::fit(&xs, &ys, SvrParams::default(), 2);
+        assert!((m.weights[0] - 1.5).abs() < 0.25);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let xs = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let ys = vec![0.0, 1.0, 2.0];
+        let a = LinearSvr::fit(&xs, &ys, SvrParams::default(), 9);
+        let b = LinearSvr::fit(&xs, &ys, SvrParams::default(), 9);
+        assert_eq!(a.weights, b.weights);
+    }
+}

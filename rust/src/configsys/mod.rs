@@ -1,0 +1,9 @@
+//! Configuration system: a from-scratch TOML-subset parser (the offline
+//! crate cache has no serde/toml) plus typed run configuration with
+//! validation and built-in presets for the paper's environments (Table 4).
+
+pub mod runconfig;
+pub mod toml;
+
+pub use runconfig::{EnvKind, RunConfig, Scenario};
+pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,302 @@
+//! Typed run configuration: scenario (paper §5.2), environment (Table 4),
+//! agent hyperparameters (§5.3), device selection — loadable from a TOML
+//! file and constructible from presets.
+
+use std::path::Path;
+
+use crate::types::DeviceId;
+
+use super::toml::{parse_toml, TomlDoc};
+
+/// Paper §5.2 use-case scenarios with their QoS targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// Camera still capture: 50 ms interactive budget.
+    NonStreaming,
+    /// Live video: 30 FPS => 33.3 ms per frame.
+    Streaming,
+    /// Keyboard translation (MobileBERT): 100 ms budget.
+    Nlp,
+}
+
+impl Scenario {
+    pub fn qos_target_s(self) -> f64 {
+        match self {
+            Scenario::NonStreaming => 0.050,
+            Scenario::Streaming => 1.0 / 30.0,
+            Scenario::Nlp => 0.100,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::NonStreaming => "non-streaming",
+            Scenario::Streaming => "streaming",
+            Scenario::Nlp => "nlp",
+        }
+    }
+}
+
+/// Table 4 execution environments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EnvKind {
+    /// S1: no runtime variance.
+    S1NoVariance,
+    /// S2: CPU-intensive co-running app.
+    S2CpuHog,
+    /// S3: memory-intensive co-running app.
+    S3MemHog,
+    /// S4: weak Wi-Fi signal strength.
+    S4WeakWlan,
+    /// S5: weak Wi-Fi Direct signal strength.
+    S5WeakP2p,
+    /// D1: music-player co-runner trace.
+    D1MusicPlayer,
+    /// D2: web-browser co-runner trace.
+    D2WebBrowser,
+    /// D3: Gaussian-random Wi-Fi signal strength.
+    D3RandomWlan,
+}
+
+impl EnvKind {
+    pub const STATIC: [EnvKind; 5] = [
+        EnvKind::S1NoVariance,
+        EnvKind::S2CpuHog,
+        EnvKind::S3MemHog,
+        EnvKind::S4WeakWlan,
+        EnvKind::S5WeakP2p,
+    ];
+
+    pub const DYNAMIC: [EnvKind; 3] =
+        [EnvKind::D1MusicPlayer, EnvKind::D2WebBrowser, EnvKind::D3RandomWlan];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EnvKind::S1NoVariance => "S1",
+            EnvKind::S2CpuHog => "S2",
+            EnvKind::S3MemHog => "S3",
+            EnvKind::S4WeakWlan => "S4",
+            EnvKind::S5WeakP2p => "S5",
+            EnvKind::D1MusicPlayer => "D1",
+            EnvKind::D2WebBrowser => "D2",
+            EnvKind::D3RandomWlan => "D3",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EnvKind> {
+        EnvKind::STATIC
+            .iter()
+            .chain(EnvKind::DYNAMIC.iter())
+            .copied()
+            .find(|e| e.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Agent hyperparameters (§5.3 sensitivity choice).
+#[derive(Clone, Copy, Debug)]
+pub struct AgentParams {
+    /// Learning rate γ.
+    pub learning_rate: f64,
+    /// Discount factor µ.
+    pub discount: f64,
+    /// Exploration probability ε.
+    pub epsilon: f64,
+    /// Reward weights α (latency) and β (accuracy), Eq. (5).
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Default for AgentParams {
+    fn default() -> Self {
+        AgentParams {
+            learning_rate: 0.9,
+            discount: 0.1,
+            epsilon: 0.1,
+            alpha: 0.1,
+            beta: 0.1,
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub device: DeviceId,
+    pub env: EnvKind,
+    pub scenario: Scenario,
+    pub agent: AgentParams,
+    /// Inference accuracy requirement (paper evaluates 0.5 and 0.65).
+    pub accuracy_target: f64,
+    /// Requests per (NN, env) episode.
+    pub requests: usize,
+    /// PRNG seed for the whole run.
+    pub seed: u64,
+    /// Use real PJRT execution for local targets (examples/benches); the
+    /// pure-simulation path keeps unit tests hermetic and fast.
+    pub use_runtime: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            device: DeviceId::Mi8Pro,
+            env: EnvKind::S1NoVariance,
+            scenario: Scenario::NonStreaming,
+            agent: AgentParams::default(),
+            accuracy_target: 0.5,
+            requests: 300,
+            seed: 7,
+            use_runtime: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file; unspecified keys keep defaults.
+    pub fn from_file(path: &Path) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = parse_toml(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(root) = doc.get("") {
+            if let Some(v) = root.get("device").and_then(|v| v.as_str()) {
+                cfg.device = match v {
+                    "Mi8Pro" => DeviceId::Mi8Pro,
+                    "GalaxyS10e" => DeviceId::GalaxyS10e,
+                    "MotoXForce" => DeviceId::MotoXForce,
+                    other => anyhow::bail!("unknown device '{other}'"),
+                };
+            }
+            if let Some(v) = root.get("env").and_then(|v| v.as_str()) {
+                cfg.env = EnvKind::from_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown env '{v}'"))?;
+            }
+            if let Some(v) = root.get("scenario").and_then(|v| v.as_str()) {
+                cfg.scenario = match v {
+                    "non-streaming" => Scenario::NonStreaming,
+                    "streaming" => Scenario::Streaming,
+                    "nlp" => Scenario::Nlp,
+                    other => anyhow::bail!("unknown scenario '{other}'"),
+                };
+            }
+            if let Some(v) = root.get("accuracy_target").and_then(|v| v.as_f64()) {
+                cfg.accuracy_target = v;
+            }
+            if let Some(v) = root.get("requests").and_then(|v| v.as_i64()) {
+                cfg.requests = v as usize;
+            }
+            if let Some(v) = root.get("seed").and_then(|v| v.as_i64()) {
+                cfg.seed = v as u64;
+            }
+            if let Some(v) = root.get("use_runtime").and_then(|v| v.as_bool()) {
+                cfg.use_runtime = v;
+            }
+        }
+        if let Some(agent) = doc.get("agent") {
+            let mut p = cfg.agent;
+            if let Some(v) = agent.get("learning_rate").and_then(|v| v.as_f64()) {
+                p.learning_rate = v;
+            }
+            if let Some(v) = agent.get("discount").and_then(|v| v.as_f64()) {
+                p.discount = v;
+            }
+            if let Some(v) = agent.get("epsilon").and_then(|v| v.as_f64()) {
+                p.epsilon = v;
+            }
+            if let Some(v) = agent.get("alpha").and_then(|v| v.as_f64()) {
+                p.alpha = v;
+            }
+            if let Some(v) = agent.get("beta").and_then(|v| v.as_f64()) {
+                p.beta = v;
+            }
+            cfg.agent = p;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let p = &self.agent;
+        anyhow::ensure!((0.0..=1.0).contains(&p.learning_rate), "learning_rate out of [0,1]");
+        anyhow::ensure!((0.0..=1.0).contains(&p.discount), "discount out of [0,1]");
+        anyhow::ensure!((0.0..=1.0).contains(&p.epsilon), "epsilon out of [0,1]");
+        anyhow::ensure!(p.alpha >= 0.0 && p.beta >= 0.0, "reward weights must be >= 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.accuracy_target),
+            "accuracy_target out of [0,1]"
+        );
+        anyhow::ensure!(self.requests > 0, "requests must be > 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qos_targets_match_paper() {
+        assert!((Scenario::NonStreaming.qos_target_s() - 0.050).abs() < 1e-12);
+        assert!((Scenario::Streaming.qos_target_s() - 1.0 / 30.0).abs() < 1e-12);
+        assert!((Scenario::Nlp.qos_target_s() - 0.100).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_hparams_match_section_5_3() {
+        let p = AgentParams::default();
+        assert_eq!(p.learning_rate, 0.9);
+        assert_eq!(p.discount, 0.1);
+        assert_eq!(p.epsilon, 0.1);
+        assert_eq!(p.alpha, 0.1);
+        assert_eq!(p.beta, 0.1);
+    }
+
+    #[test]
+    fn env_roundtrip_by_name() {
+        for e in EnvKind::STATIC.iter().chain(EnvKind::DYNAMIC.iter()) {
+            assert_eq!(EnvKind::from_name(e.name()), Some(*e));
+        }
+        assert_eq!(EnvKind::from_name("S9"), None);
+    }
+
+    #[test]
+    fn config_from_toml_text() {
+        let doc = parse_toml(
+            r#"
+device = "MotoXForce"
+env = "D2"
+scenario = "streaming"
+accuracy_target = 0.65
+requests = 42
+seed = 99
+
+[agent]
+epsilon = 0.2
+learning_rate = 0.5
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.device, DeviceId::MotoXForce);
+        assert_eq!(cfg.env, EnvKind::D2WebBrowser);
+        assert_eq!(cfg.scenario, Scenario::Streaming);
+        assert_eq!(cfg.accuracy_target, 0.65);
+        assert_eq!(cfg.requests, 42);
+        assert_eq!(cfg.agent.epsilon, 0.2);
+        assert_eq!(cfg.agent.learning_rate, 0.5);
+        assert_eq!(cfg.agent.discount, 0.1); // default retained
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let doc = parse_toml("[agent]\nepsilon = 1.5\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = parse_toml("device = \"Pixel\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = parse_toml("requests = 0\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+}

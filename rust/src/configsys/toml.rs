@@ -1,0 +1,225 @@
+//! Minimal TOML parser covering the subset our config files use:
+//! `[section]` and `[section.sub]` headers, `key = value` pairs with
+//! string / integer / float / boolean / array values, `#` comments.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Parsed TOML scalar or array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted section path -> key -> value. Root keys live
+/// under the empty-string section.
+pub type TomlDoc = HashMap<String, HashMap<String, TomlValue>>;
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = HashMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line: line_no,
+                message: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(TomlError { line: line_no, message: "empty section name".into() });
+            }
+            doc.entry(section.clone()).or_default();
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(TomlError { line: line_no, message: "empty key".into() });
+            }
+            let parsed = parse_value(val)
+                .map_err(|m| TomlError { line: line_no, message: m })?;
+            doc.get_mut(&section).unwrap().insert(key.to_string(), parsed);
+        } else {
+            return Err(TomlError {
+                line: line_no,
+                message: format!("expected 'key = value', got '{line}'"),
+            });
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            // no nested arrays / strings with commas needed by our configs
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse_toml(
+            r#"
+# top comment
+title = "demo"   # inline comment
+count = 3
+ratio = 0.5
+on = true
+
+[agent]
+epsilon = 0.1
+name = "qlearning"
+
+[agent.sub]
+steps = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"], TomlValue::Str("demo".into()));
+        assert_eq!(doc[""]["count"], TomlValue::Int(3));
+        assert_eq!(doc[""]["ratio"], TomlValue::Float(0.5));
+        assert_eq!(doc[""]["on"], TomlValue::Bool(true));
+        assert_eq!(doc["agent"]["epsilon"].as_f64(), Some(0.1));
+        assert_eq!(
+            doc["agent.sub"]["steps"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse_toml(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse_toml("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(parse_toml("k = \"open\n").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_distinguished() {
+        let doc = parse_toml("a = 2\nb = 2.0\n").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Int(2));
+        assert_eq!(doc[""]["b"], TomlValue::Float(2.0));
+        assert_eq!(doc[""]["a"].as_f64(), Some(2.0)); // coercion helper
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let doc = parse_toml(r#"k = "say \"hi\"""#).unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some(r#"say "hi""#));
+    }
+}

@@ -1,0 +1,96 @@
+//! Table-4 execution environments: device + wireless links + co-runner,
+//! assembled into a ready [`crate::exec::Simulator`].
+
+use crate::configsys::runconfig::EnvKind;
+use crate::device::presets::device;
+use crate::exec::latency::Simulator;
+use crate::interference::CoRunner;
+use crate::net::{Link, LinkKind, RssiProcess};
+use crate::types::DeviceId;
+
+/// A fully assembled execution environment.
+pub struct Environment {
+    pub kind: EnvKind,
+    pub sim: Simulator,
+    pub co_runner: CoRunner,
+}
+
+impl Environment {
+    /// Build environment `kind` anchored on `dev` (paper: experiments rerun
+    /// per phone).
+    pub fn build(dev: DeviceId, kind: EnvKind, seed: u64) -> Environment {
+        let strong_wlan = RssiProcess::pinned(-55.0);
+        let strong_p2p = RssiProcess::pinned(-50.0);
+        let weak_wlan = RssiProcess::pinned(-86.0);
+        let weak_p2p = RssiProcess::pinned(-85.0);
+
+        let (wlan_rssi, p2p_rssi, co): (RssiProcess, RssiProcess, CoRunner) = match kind {
+            EnvKind::S1NoVariance => (strong_wlan, strong_p2p, CoRunner::None),
+            EnvKind::S2CpuHog => (strong_wlan, strong_p2p, CoRunner::cpu_hog()),
+            EnvKind::S3MemHog => (strong_wlan, strong_p2p, CoRunner::mem_hog()),
+            EnvKind::S4WeakWlan => (weak_wlan, strong_p2p, CoRunner::None),
+            EnvKind::S5WeakP2p => (strong_wlan, weak_p2p, CoRunner::None),
+            EnvKind::D1MusicPlayer => (strong_wlan, strong_p2p, CoRunner::music_player()),
+            EnvKind::D2WebBrowser => (strong_wlan, strong_p2p, CoRunner::web_browser()),
+            EnvKind::D3RandomWlan => (
+                RssiProcess::gaussian(-72.0, 9.0),
+                strong_p2p,
+                CoRunner::None,
+            ),
+        };
+
+        let mut sim = Simulator::new(
+            device(dev),
+            device(DeviceId::TabS6),
+            device(DeviceId::CloudServer),
+            Link::new(LinkKind::Wlan, wlan_rssi),
+            Link::new(LinkKind::P2p, p2p_rssi),
+        );
+        sim.seed(seed);
+        Environment { kind, sim, co_runner: co }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn s1_has_no_variance_sources() {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+        let mut rng = Pcg64::new(0);
+        let i = env.co_runner.at(1.0, &mut rng);
+        assert_eq!(i.cpu_util, 0.0);
+        assert!(!env.sim.wlan.rssi.is_weak());
+        assert!(!env.sim.p2p.rssi.is_weak());
+    }
+
+    #[test]
+    fn s4_weakens_only_wlan() {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S4WeakWlan, 1);
+        assert!(env.sim.wlan.rssi.is_weak());
+        assert!(!env.sim.p2p.rssi.is_weak());
+    }
+
+    #[test]
+    fn s5_weakens_only_p2p() {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S5WeakP2p, 1);
+        assert!(!env.sim.wlan.rssi.is_weak());
+        assert!(env.sim.p2p.rssi.is_weak());
+    }
+
+    #[test]
+    fn d3_wanders() {
+        let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::D3RandomWlan, 1);
+        let mut rng = Pcg64::new(1);
+        let a = env.sim.wlan.rssi.step(&mut rng);
+        let mut moved = false;
+        for _ in 0..20 {
+            if (env.sim.wlan.rssi.step(&mut rng) - a).abs() > 0.5 {
+                moved = true;
+            }
+        }
+        assert!(moved);
+    }
+}

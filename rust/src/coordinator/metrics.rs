@@ -1,0 +1,209 @@
+//! Episode metrics: PPW, QoS violation ratio, selection-rate distribution,
+//! convergence trace — the quantities every paper figure reports.
+
+use std::collections::HashMap;
+
+use crate::exec::outcome::ExecOutcome;
+use crate::types::{Action, Precision, ProcKind, Site};
+
+/// Aggregated metrics for one served episode.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeMetrics {
+    pub outcomes: Vec<ExecOutcome>,
+    /// Per-request reward trace (empty for non-learning policies).
+    pub rewards: Vec<f64>,
+}
+
+impl EpisodeMetrics {
+    pub fn push(&mut self, o: ExecOutcome) {
+        self.outcomes.push(o);
+    }
+
+    pub fn n(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Total "true" energy (J).
+    pub fn total_energy_j(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.measurement.energy_true_j).sum()
+    }
+
+    /// Performance-per-watt: inferences per joule.
+    pub fn ppw(&self) -> f64 {
+        crate::power::ppw(self.total_energy_j(), self.n())
+    }
+
+    /// Fraction of requests that missed their QoS latency target.
+    pub fn qos_violation_ratio(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|o| o.qos_violated()).count() as f64
+            / self.outcomes.len() as f64
+    }
+
+    /// Fraction of requests below the accuracy requirement.
+    pub fn accuracy_violation_ratio(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|o| o.accuracy_violated()).count() as f64
+            / self.outcomes.len() as f64
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        crate::util::stats::mean(
+            &self.outcomes.iter().map(|o| o.measurement.latency_s).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Selection-rate stats (Fig. 13 rows).
+    pub fn selections(&self) -> SelectionStats {
+        let mut s = SelectionStats::default();
+        for o in &self.outcomes {
+            s.add(o.action);
+        }
+        s
+    }
+
+    /// MAPE of the Eq.(1)-(4) energy estimator vs true energy (§4.1: 7.3%).
+    pub fn energy_estimator_mape(&self) -> f64 {
+        let est: Vec<f64> = self.outcomes.iter().map(|o| o.measurement.energy_est_j).collect();
+        let tru: Vec<f64> = self.outcomes.iter().map(|o| o.measurement.energy_true_j).collect();
+        crate::util::stats::mape(&est, &tru)
+    }
+}
+
+/// Fig. 13 selection-rate buckets.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionStats {
+    counts: HashMap<&'static str, usize>,
+    total: usize,
+}
+
+impl SelectionStats {
+    /// Bucket an action into the paper's Fig. 13 rows.
+    pub fn bucket(a: Action) -> &'static str {
+        match (a.site, a.proc, a.precision) {
+            (Site::Cloud, _, _) => "Cloud",
+            (Site::ConnectedEdge, _, _) => "Connected Edge",
+            (Site::Local, ProcKind::Cpu, Precision::Fp32) => "Edge(CPU FP32) w/DVFS",
+            (Site::Local, ProcKind::Cpu, _) => "Edge(CPU INT8) w/DVFS",
+            (Site::Local, ProcKind::Gpu, Precision::Fp16) => "Edge(GPU FP16) w/DVFS",
+            (Site::Local, ProcKind::Gpu, _) => "Edge(GPU FP32) w/DVFS",
+            (Site::Local, ProcKind::Dsp, _) => "Edge(DSP)",
+        }
+    }
+
+    pub const BUCKETS: [&'static str; 7] = [
+        "Edge(CPU FP32) w/DVFS",
+        "Edge(CPU INT8) w/DVFS",
+        "Edge(GPU FP32) w/DVFS",
+        "Edge(GPU FP16) w/DVFS",
+        "Edge(DSP)",
+        "Cloud",
+        "Connected Edge",
+    ];
+
+    pub fn add(&mut self, a: Action) {
+        *self.counts.entry(Self::bucket(a)).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    /// Selection rate of a bucket in [0,1].
+    pub fn rate(&self, bucket: &str) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        *self.counts.get(bucket).unwrap_or(&0) as f64 / self.total as f64
+    }
+
+    /// Agreement with another policy's selections (prediction accuracy,
+    /// Fig. 13: 97.9%): sum over buckets of min(rate_a, rate_b).
+    pub fn overlap(&self, other: &SelectionStats) -> f64 {
+        Self::BUCKETS
+            .iter()
+            .map(|b| self.rate(b).min(other.rate(b)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Measurement;
+
+    fn outcome(action: Action, latency: f64, energy: f64) -> ExecOutcome {
+        ExecOutcome {
+            nn: "m",
+            action,
+            measurement: Measurement {
+                latency_s: latency,
+                energy_est_j: energy * 1.05,
+                energy_true_j: energy,
+                accuracy: 0.7,
+            },
+            qos_target_s: 0.05,
+            accuracy_target: 0.5,
+            t_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn ppw_and_violations() {
+        let mut m = EpisodeMetrics::default();
+        m.push(outcome(Action::cloud(), 0.04, 0.2));
+        m.push(outcome(Action::cloud(), 0.06, 0.3)); // violates
+        assert!((m.ppw() - 2.0 / 0.5).abs() < 1e-12);
+        assert!((m.qos_violation_ratio() - 0.5).abs() < 1e-12);
+        assert_eq!(m.accuracy_violation_ratio(), 0.0);
+        assert!((m.energy_estimator_mape() - 5.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn buckets_match_fig13_rows() {
+        use crate::types::{Precision, ProcKind};
+        assert_eq!(
+            SelectionStats::bucket(Action::local(ProcKind::Cpu, Precision::Fp32)),
+            "Edge(CPU FP32) w/DVFS"
+        );
+        assert_eq!(
+            SelectionStats::bucket(Action::local(ProcKind::Cpu, Precision::Int8)),
+            "Edge(CPU INT8) w/DVFS"
+        );
+        assert_eq!(
+            SelectionStats::bucket(Action::local(ProcKind::Dsp, Precision::Int8)),
+            "Edge(DSP)"
+        );
+        assert_eq!(SelectionStats::bucket(Action::cloud()), "Cloud");
+        assert_eq!(
+            SelectionStats::bucket(Action::connected_edge()),
+            "Connected Edge"
+        );
+    }
+
+    #[test]
+    fn overlap_is_one_for_identical_distributions() {
+        use crate::types::{Precision, ProcKind};
+        let mut a = SelectionStats::default();
+        let mut b = SelectionStats::default();
+        for _ in 0..10 {
+            a.add(Action::cloud());
+            b.add(Action::cloud());
+            a.add(Action::local(ProcKind::Cpu, Precision::Int8));
+            b.add(Action::local(ProcKind::Cpu, Precision::Int8));
+        }
+        assert!((a.overlap(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_partial() {
+        let mut a = SelectionStats::default();
+        let mut b = SelectionStats::default();
+        a.add(Action::cloud());
+        a.add(Action::cloud());
+        b.add(Action::cloud());
+        b.add(Action::connected_edge());
+        assert!((a.overlap(&b) - 0.5).abs() < 1e-12);
+    }
+}

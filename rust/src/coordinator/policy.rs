@@ -1,0 +1,247 @@
+//! Execution-scaling policies: the paper's five baselines, the prediction-
+//! based comparators, and the AutoScale agent — all behind one enum so the
+//! server and every experiment swap them uniformly.
+
+use crate::agent::qlearn::AutoScaleAgent;
+use crate::agent::state::{State, StateObs};
+use crate::baselines::{Knn, LinReg, LinearSvm, LinearSvr, Scaler};
+use crate::device::processor::Device;
+use crate::types::{Action, Precision, ProcKind, Site};
+
+/// Build the action catalogue for a device (§5.3 "Actions"): every local
+/// (processor, V/F step, supported precision) plus the two scale-out
+/// targets. Precisions below the accuracy floor are kept — the reward's
+/// accuracy gate teaches the agent to avoid them when the target is high.
+pub fn action_catalogue(dev: &Device) -> Vec<Action> {
+    let mut out: Vec<Action> = dev
+        .local_actions()
+        .into_iter()
+        .map(|(proc, vf, prec)| Action::new(Site::Local, proc, vf, prec))
+        .collect();
+    out.push(Action::connected_edge());
+    out.push(Action::cloud());
+    out
+}
+
+/// Feature vector used by the prediction-based comparators: the eight
+/// Table-1 observables (continuous form).
+pub fn features(o: &StateObs) -> Vec<f64> {
+    vec![
+        o.s_conv as f64,
+        o.s_fc as f64,
+        o.s_rc as f64,
+        o.s_mac_m,
+        o.co_cpu,
+        o.co_mem,
+        o.rssi_wlan,
+        o.rssi_p2p,
+    ]
+}
+
+/// Regression comparator: one energy model and one latency model per
+/// action (LR or SVR), pick the action with the lowest predicted energy
+/// whose predicted latency clears the QoS bound.
+pub struct RegressionPolicy {
+    pub scaler: Scaler,
+    /// Per-action (energy, latency) predictors.
+    pub energy: Vec<RegModel>,
+    pub latency: Vec<RegModel>,
+    pub actions: Vec<Action>,
+}
+
+/// Either regression flavour.
+pub enum RegModel {
+    Lr(LinReg),
+    Svr(LinearSvr),
+}
+
+impl RegModel {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        match self {
+            RegModel::Lr(m) => m.predict(x),
+            RegModel::Svr(m) => m.predict(x),
+        }
+    }
+}
+
+impl RegressionPolicy {
+    pub fn select(&self, o: &StateObs, qos_s: f64) -> (usize, Action) {
+        let x = self.scaler.transform(&features(o));
+        let mut best: Option<(usize, f64)> = None;
+        let mut fallback: Option<(usize, f64)> = None;
+        for i in 0..self.actions.len() {
+            let e = self.energy[i].predict(&x);
+            let l = self.latency[i].predict(&x);
+            if l < qos_s {
+                if best.map(|(_, be)| e < be).unwrap_or(true) {
+                    best = Some((i, e));
+                }
+            }
+            // fallback: minimal predicted latency if nothing clears QoS
+            if fallback.map(|(_, bl)| l < bl).unwrap_or(true) {
+                fallback = Some((i, l));
+            }
+        }
+        let idx = best.or(fallback).map(|(i, _)| i).unwrap_or(0);
+        (idx, self.actions[idx])
+    }
+}
+
+/// Classification comparator: predict the optimal action label directly.
+pub struct ClassifierPolicy {
+    pub scaler: Scaler,
+    pub model: ClsModel,
+    pub actions: Vec<Action>,
+}
+
+pub enum ClsModel {
+    Svm(LinearSvm),
+    Knn(Knn),
+}
+
+impl ClassifierPolicy {
+    pub fn select(&self, o: &StateObs) -> (usize, Action) {
+        let x = self.scaler.transform(&features(o));
+        let idx = match &self.model {
+            ClsModel::Svm(m) => m.predict(&x),
+            ClsModel::Knn(m) => m.predict(&x),
+        }
+        .min(self.actions.len() - 1);
+        (idx, self.actions[idx])
+    }
+}
+
+/// All selectable policies.
+pub enum Policy {
+    /// Baseline 1: always the local CPU at max frequency, fp32.
+    EdgeCpuFp32,
+    /// Baseline 2: the most energy-efficient local processor (per-NN best,
+    /// chosen by one-off offline measurement like the paper's setup).
+    EdgeBest,
+    /// Baseline 3: always offload to the cloud.
+    CloudAlways,
+    /// Baseline 4: always the locally connected edge device.
+    ConnectedEdgeAlways,
+    /// Oracle: evaluate every action on a shadow simulator, pick the true
+    /// optimum (max PPW subject to QoS/accuracy).
+    Opt,
+    /// The paper's agent.
+    AutoScale(AutoScaleAgent),
+    /// §3.3 comparators.
+    Regression(RegressionPolicy),
+    Classifier(ClassifierPolicy),
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::EdgeCpuFp32 => "Edge(CPU FP32)",
+            Policy::EdgeBest => "Edge(Best)",
+            Policy::CloudAlways => "Cloud",
+            Policy::ConnectedEdgeAlways => "Connected Edge",
+            Policy::Opt => "Opt",
+            Policy::AutoScale(_) => "AutoScale",
+            Policy::Regression(r) => match r.energy.first() {
+                Some(RegModel::Lr(_)) => "LR",
+                Some(RegModel::Svr(_)) => "SVR",
+                None => "Regression",
+            },
+            Policy::Classifier(c) => match c.model {
+                ClsModel::Svm(_) => "SVM",
+                ClsModel::Knn(_) => "KNN",
+            },
+        }
+    }
+
+    /// Does this policy learn online (needs reward feedback)?
+    pub fn is_learning(&self) -> bool {
+        matches!(self, Policy::AutoScale(_))
+    }
+
+    /// Feed the reward back (AutoScale only).
+    pub fn observe(&mut self, s: State, action_idx: usize, r: f64, s_next: State) {
+        if let Policy::AutoScale(agent) = self {
+            agent.update(s, action_idx, r, s_next);
+        }
+    }
+}
+
+/// Per-NN fixed choice used by Edge(Best): most efficient local processor
+/// at max frequency with its best-precision executable.
+pub fn edge_best_action(dev: &Device, nn: &crate::nn::zoo::NnDesc) -> Action {
+    // FC/RC-heavy networks run best on the CPU (Fig. 3); conv towers on the
+    // fastest co-processor present. Mirrors the paper's per-NN offline pick.
+    let fc_heavy = nn.s_fc >= 10 || nn.s_rc >= 10;
+    if fc_heavy || !dev.has(ProcKind::Gpu) {
+        let prec =
+            if dev.proc(ProcKind::Cpu).unwrap().supports(Precision::Int8) {
+                Precision::Int8
+            } else {
+                Precision::Fp32
+            };
+        return Action::local(ProcKind::Cpu, prec);
+    }
+    if dev.has(ProcKind::Dsp) {
+        Action::local(ProcKind::Dsp, Precision::Int8)
+    } else {
+        Action::local(ProcKind::Gpu, Precision::Fp16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets::device;
+    use crate::nn::zoo::by_name;
+    use crate::types::DeviceId;
+
+    #[test]
+    fn catalogue_covers_local_and_remote() {
+        let dev = device(DeviceId::Mi8Pro);
+        let acts = action_catalogue(&dev);
+        // 23 cpu steps x 2 precisions + 7 gpu steps x 2 + 1 dsp + 2 remote
+        assert_eq!(acts.len(), 23 * 2 + 7 * 2 + 1 + 2);
+        assert!(acts.iter().any(|a| a.site == Site::Cloud));
+        assert!(acts.iter().any(|a| a.site == Site::ConnectedEdge));
+        // all unique
+        let mut dedup = acts.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), acts.len());
+    }
+
+    #[test]
+    fn s10e_catalogue_has_no_dsp() {
+        let dev = device(DeviceId::GalaxyS10e);
+        let acts = action_catalogue(&dev);
+        assert!(acts
+            .iter()
+            .all(|a| !(a.site == Site::Local && a.proc == ProcKind::Dsp)));
+    }
+
+    #[test]
+    fn edge_best_respects_layer_composition() {
+        let dev = device(DeviceId::Mi8Pro);
+        // FC-heavy MobilenetV3 -> CPU
+        let a = edge_best_action(&dev, by_name("mobilenet_v3").unwrap());
+        assert_eq!(a.proc, ProcKind::Cpu);
+        // conv tower InceptionV1 -> DSP on Mi8Pro
+        let a = edge_best_action(&dev, by_name("inception_v1").unwrap());
+        assert_eq!(a.proc, ProcKind::Dsp);
+        // ... but GPU on S10e (no DSP)
+        let s10 = device(DeviceId::GalaxyS10e);
+        let a = edge_best_action(&s10, by_name("inception_v1").unwrap());
+        assert_eq!(a.proc, ProcKind::Gpu);
+    }
+
+    #[test]
+    fn features_are_eight_dims() {
+        let o = StateObs::from_parts(
+            by_name("resnet50").unwrap(),
+            crate::interference::Interference::default(),
+            -60.0,
+            -55.0,
+        );
+        assert_eq!(features(&o).len(), 8);
+    }
+}

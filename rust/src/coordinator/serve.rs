@@ -1,0 +1,223 @@
+//! The serving loop (paper Fig. 8): for every inference request —
+//! ① observe state, ② select an action via the active policy, ③ execute
+//! (simulated device/network physics around optional real PJRT compute),
+//! ④ compute the Eq.(5) reward, ⑤ feed it back to the learner.
+
+use crate::agent::reward::{reward, RewardParams};
+use crate::agent::state::{State, StateObs};
+use crate::configsys::runconfig::{RunConfig, Scenario};
+use crate::coordinator::envs::Environment;
+use crate::coordinator::metrics::EpisodeMetrics;
+use crate::coordinator::policy::{action_catalogue, edge_best_action, Policy};
+use crate::exec::latency::RunContext;
+use crate::exec::outcome::ExecOutcome;
+use crate::nn::zoo::{by_name, NnDesc, Workload};
+use crate::runtime::Engine;
+use crate::types::Action;
+use crate::util::clock::VirtualClock;
+use crate::util::rng::Pcg64;
+
+/// Server configuration beyond the RunConfig.
+pub struct ServeConfig {
+    pub run: RunConfig,
+    /// Networks served this episode (round-robin); empty = all-zoo mix.
+    pub models: Vec<&'static str>,
+}
+
+/// The coordinator server: one environment + one policy + request stream.
+pub struct Server<'a> {
+    pub env: Environment,
+    pub policy: Policy,
+    cfg: ServeConfig,
+    clock: VirtualClock,
+    rng: Pcg64,
+    /// Optional real-compute engine (PJRT); None = pure simulation.
+    engine: Option<&'a mut Engine>,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(env: Environment, policy: Policy, cfg: ServeConfig) -> Server<'a> {
+        let seed = cfg.run.seed;
+        Server {
+            env,
+            policy,
+            cfg,
+            clock: VirtualClock::new(),
+            rng: Pcg64::with_stream(seed, 1001),
+            engine: None,
+        }
+    }
+
+    /// Attach a PJRT engine: local executions then run the real artifact
+    /// and fold its wall-time variation into the simulated latency.
+    pub fn with_engine(mut self, engine: &'a mut Engine) -> Server<'a> {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// QoS target for one network under the configured scenario: vision
+    /// networks follow the scenario; MobileBERT always uses the NLP budget.
+    fn qos_for(&self, nn: &NnDesc) -> f64 {
+        if nn.workload == Workload::Translation {
+            Scenario::Nlp.qos_target_s()
+        } else {
+            self.cfg.run.scenario.qos_target_s()
+        }
+    }
+
+    /// Serve `n` requests; returns the collected metrics.
+    pub fn serve(&mut self, n: usize) -> EpisodeMetrics {
+        let models: Vec<&'static str> = if self.cfg.models.is_empty() {
+            crate::nn::zoo::ZOO.iter().map(|d| d.name).collect()
+        } else {
+            self.cfg.models.clone()
+        };
+        let mut metrics = EpisodeMetrics::default();
+        for i in 0..n {
+            let nn = by_name(models[i % models.len()]).unwrap();
+            let outcome = self.serve_one(nn, i as u64);
+            metrics.push(outcome);
+        }
+        metrics
+    }
+
+    /// One full Fig. 8 cycle for a single request.
+    pub fn serve_one(&mut self, nn: &'static NnDesc, req_id: u64) -> ExecOutcome {
+        // ① observe state (sensor reading + ground-truth interference)
+        let (obs, true_inter) = self.observe(nn);
+        let s = State::discretize(&obs);
+        let qos = self.qos_for(nn);
+
+        // ② select action
+        let (idx, action) = self.select(&obs, s, nn, qos);
+
+        // ③ execute (optionally grounding compute in a real PJRT run).
+        // The physics see the TRUE interference; the policy saw the noisy
+        // sensor reading — that gap is part of the stochastic variance.
+        let mut ctx = RunContext {
+            interference: true_inter,
+            thermal_cap: 1.0, // simulator applies its own thermal state
+            compute_factor: 1.0,
+        };
+        if let Some(engine) = self.engine.as_deref_mut() {
+            if action.site == crate::types::Site::Local {
+                if let Ok(f) = engine.compute_factor(nn.name, action.precision, req_id) {
+                    ctx.compute_factor = f;
+                }
+            }
+        }
+        let m = self.env.sim.run(nn, action, &ctx);
+        self.clock.advance(m.latency_s.max(1e-6));
+
+        // ④ reward
+        let rp = RewardParams {
+            alpha: self.cfg.run.agent.alpha,
+            beta: self.cfg.run.agent.beta,
+            qos_s: qos,
+            accuracy_req: self.cfg.run.accuracy_target,
+        };
+        let r = reward(&m, &rp);
+
+        // ⑤ feedback: observe S' (same request context, post-execution
+        // variance sample) and update the learner.
+        if self.policy.is_learning() {
+            let (obs_next, _) = self.observe(nn);
+            let s_next = State::discretize(&obs_next);
+            self.policy.observe(s, idx, r, s_next);
+        }
+
+        let mut outcome = ExecOutcome {
+            nn: nn.name,
+            action,
+            measurement: m,
+            qos_target_s: qos,
+            accuracy_target: self.cfg.run.accuracy_target,
+            t_s: self.clock.now(),
+        };
+        // streaming scenarios issue back-to-back frames; idle gaps for
+        // non-streaming let the SoC cool (thermal realism)
+        if self.cfg.run.scenario != Scenario::Streaming {
+            let idle = self.rng.exponential(4.0); // mean 250 ms between taps
+            self.env.sim.thermal.advance(0.2, idle);
+            self.clock.advance(idle);
+            outcome.t_s = self.clock.now();
+        }
+        outcome
+    }
+
+    /// Sample the observable state right now. Returns the *sensor reading*
+    /// (with measurement noise — RSSI readings and /proc utilization
+    /// counters jitter on real devices) plus the ground-truth interference
+    /// that the execution physics should see.
+    fn observe(&mut self, nn: &NnDesc) -> (StateObs, crate::interference::Interference) {
+        let true_inter = self.env.co_runner.at(self.clock.now(), &mut self.rng);
+        let rssi_w = self.env.sim.wlan.rssi.step(&mut self.rng) + self.rng.normal(0.0, 1.2);
+        let rssi_p = self.env.sim.p2p.rssi.step(&mut self.rng) + self.rng.normal(0.0, 1.2);
+        let noisy = crate::interference::Interference {
+            // multiplicative jitter: idle counters read ~0, busy ones ±4%
+            cpu_util: (true_inter.cpu_util * (1.0 + self.rng.normal(0.0, 0.04)))
+                .clamp(0.0, 100.0),
+            mem_pressure: (true_inter.mem_pressure * (1.0 + self.rng.normal(0.0, 0.04)))
+                .clamp(0.0, 100.0),
+        };
+        (StateObs::from_parts(nn, noisy, rssi_w, rssi_p), true_inter)
+    }
+
+    /// Policy dispatch for ② (the oracle needs simulator access, hence here
+    /// rather than on Policy).
+    fn select(&mut self, obs: &StateObs, s: State, nn: &NnDesc, qos: f64) -> (usize, Action) {
+        match &mut self.policy {
+            Policy::EdgeCpuFp32 => {
+                (0, Action::local(crate::types::ProcKind::Cpu, crate::types::Precision::Fp32))
+            }
+            Policy::EdgeBest => (0, edge_best_action(&self.env.sim.local, nn)),
+            Policy::CloudAlways => (0, Action::cloud()),
+            Policy::ConnectedEdgeAlways => (0, Action::connected_edge()),
+            Policy::Opt => (0, self.oracle_action(nn, obs, qos)),
+            Policy::AutoScale(agent) => agent.select(s),
+            Policy::Regression(r) => r.select(obs, qos),
+            Policy::Classifier(c) => c.select(obs),
+        }
+    }
+
+    /// The Opt oracle: evaluate every catalogue action on a shadow copy of
+    /// the simulator (identical thermal/network state) and pick the best
+    /// true outcome — max PPW subject to accuracy then QoS feasibility.
+    pub fn oracle_action(&mut self, nn: &NnDesc, obs: &StateObs, qos: f64) -> Action {
+        let catalogue = action_catalogue(&self.env.sim.local);
+        let ctx = RunContext {
+            interference: crate::interference::Interference {
+                cpu_util: obs.co_cpu,
+                mem_pressure: obs.co_mem,
+            },
+            thermal_cap: 1.0,
+            compute_factor: 1.0,
+        };
+        let mut best: Option<(Action, f64, bool)> = None; // (action, energy, feasible)
+        for a in catalogue {
+            // Shadow run: clone the simulator so thermal/noise state is not
+            // consumed by what-if evaluation.
+            let mut shadow = self.env.sim.clone();
+            let m = shadow.run(nn, a, &ctx);
+            if m.accuracy < self.cfg.run.accuracy_target {
+                continue;
+            }
+            let feasible = m.latency_s < qos;
+            let better = match &best {
+                None => true,
+                Some((_, be, bf)) => {
+                    if feasible != *bf {
+                        feasible // feasible beats infeasible
+                    } else {
+                        m.energy_true_j < *be
+                    }
+                }
+            };
+            if better {
+                best = Some((a, m.energy_true_j, feasible));
+            }
+        }
+        best.map(|(a, _, _)| a)
+            .unwrap_or_else(|| Action::local(crate::types::ProcKind::Cpu, crate::types::Precision::Fp32))
+    }
+}

@@ -1,0 +1,12 @@
+//! Device fleet simulator — the paper's testbed hardware (Table 2 + §5.1)
+//! as parametric processor models: per-processor V/F tables with busy/idle
+//! power, peak compute/bandwidth, precision support and a thermal-throttling
+//! state machine.
+
+pub mod presets;
+pub mod processor;
+pub mod thermal;
+
+pub use presets::{device, fleet};
+pub use processor::{Device, Processor, VfStep};
+pub use thermal::ThermalState;

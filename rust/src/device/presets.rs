@@ -1,0 +1,261 @@
+//! The paper's testbed fleet (Table 2 + §5.1) as device presets.
+//!
+//! Peak-power numbers and V/F step counts come straight from Table 2;
+//! compute rates are calibrated so the relative orderings of Figs. 2-6
+//! reproduce (high-end ≈ 3-4x the mid-end phone, tablet above the phones,
+//! cloud another ~20x up with network cost on top).
+
+use crate::types::{DeviceId, Precision, ProcKind};
+
+use super::processor::{Device, Processor};
+
+/// Build one device preset.
+pub fn device(id: DeviceId) -> Device {
+    match id {
+        // Xiaomi Mi 8 Pro: Cortex-A75 2.8 GHz / 23 steps / 5.5 W,
+        // Adreno 630 0.7 GHz / 7 steps / 2.8 W, Hexagon 685 DSP 1.8 W.
+        DeviceId::Mi8Pro => Device {
+            id,
+            processors: vec![
+                Processor {
+                    kind: ProcKind::Cpu,
+                    name: "Cortex-A75",
+                    vf: Processor::vf_table(23, 0.8, 2.8, 0.7, 5.5),
+                    idle_power_w: 0.12,
+                    peak_gmacs: 38.0,
+                    mem_bw_gbs: 14.0,
+                    precisions: vec![Precision::Fp32, Precision::Int8],
+                    dispatch_overhead_us: 15.0,
+                },
+                Processor {
+                    kind: ProcKind::Gpu,
+                    name: "Adreno-630",
+                    vf: Processor::vf_table(7, 0.25, 0.7, 0.6, 2.8),
+                    idle_power_w: 0.08,
+                    peak_gmacs: 110.0,
+                    mem_bw_gbs: 14.0,
+                    precisions: vec![Precision::Fp32, Precision::Fp16],
+                    dispatch_overhead_us: 120.0,
+                },
+                Processor {
+                    kind: ProcKind::Dsp,
+                    name: "Hexagon-685",
+                    vf: Processor::vf_table(1, 1.0, 1.0, 1.8, 1.8),
+                    idle_power_w: 0.05,
+                    peak_gmacs: 180.0,
+                    mem_bw_gbs: 12.0,
+                    precisions: vec![Precision::Int8],
+                    dispatch_overhead_us: 200.0,
+                },
+            ],
+            dram_gb: 6.0,
+            is_mobile: true,
+        },
+        // Samsung Galaxy S10e: Mongoose 2.7 GHz / 21 steps / 5.6 W,
+        // Mali-G76 0.7 GHz / 9 steps / 2.4 W, no DSP.
+        DeviceId::GalaxyS10e => Device {
+            id,
+            processors: vec![
+                Processor {
+                    kind: ProcKind::Cpu,
+                    name: "Mongoose-M4",
+                    vf: Processor::vf_table(21, 0.8, 2.7, 0.7, 5.6),
+                    idle_power_w: 0.12,
+                    peak_gmacs: 42.0,
+                    mem_bw_gbs: 15.0,
+                    precisions: vec![Precision::Fp32, Precision::Int8],
+                    dispatch_overhead_us: 15.0,
+                },
+                Processor {
+                    kind: ProcKind::Gpu,
+                    name: "Mali-G76",
+                    vf: Processor::vf_table(9, 0.25, 0.7, 0.5, 2.4),
+                    idle_power_w: 0.08,
+                    peak_gmacs: 95.0,
+                    mem_bw_gbs: 15.0,
+                    precisions: vec![Precision::Fp32, Precision::Fp16],
+                    dispatch_overhead_us: 130.0,
+                },
+            ],
+            dram_gb: 6.0,
+            is_mobile: true,
+        },
+        // Motorola Moto X Force (mid-end): Cortex-A57 1.9 GHz / 15 steps /
+        // 3.6 W, Adreno 430 0.6 GHz / 6 steps / 2.0 W.
+        DeviceId::MotoXForce => Device {
+            id,
+            processors: vec![
+                Processor {
+                    kind: ProcKind::Cpu,
+                    name: "Cortex-A57",
+                    vf: Processor::vf_table(15, 0.6, 1.9, 0.5, 3.6),
+                    idle_power_w: 0.15,
+                    peak_gmacs: 10.0,
+                    mem_bw_gbs: 7.0,
+                    precisions: vec![Precision::Fp32, Precision::Int8],
+                    dispatch_overhead_us: 25.0,
+                },
+                Processor {
+                    kind: ProcKind::Gpu,
+                    name: "Adreno-430",
+                    vf: Processor::vf_table(6, 0.2, 0.6, 0.5, 2.0),
+                    idle_power_w: 0.10,
+                    peak_gmacs: 28.0,
+                    mem_bw_gbs: 7.0,
+                    precisions: vec![Precision::Fp32, Precision::Fp16],
+                    dispatch_overhead_us: 180.0,
+                },
+            ],
+            dram_gb: 3.0,
+            is_mobile: true,
+        },
+        // Galaxy Tab S6 (connected edge): Cortex-A76 2.84 GHz, Adreno 640,
+        // Hexagon 690 — a notch above the phones.
+        DeviceId::TabS6 => Device {
+            id,
+            processors: vec![
+                Processor {
+                    kind: ProcKind::Cpu,
+                    name: "Cortex-A76",
+                    vf: Processor::vf_table(20, 0.8, 2.84, 0.8, 6.0),
+                    idle_power_w: 0.12,
+                    peak_gmacs: 55.0,
+                    mem_bw_gbs: 17.0,
+                    precisions: vec![Precision::Fp32, Precision::Int8],
+                    dispatch_overhead_us: 12.0,
+                },
+                Processor {
+                    kind: ProcKind::Gpu,
+                    name: "Adreno-640",
+                    vf: Processor::vf_table(8, 0.25, 0.75, 0.7, 3.0),
+                    idle_power_w: 0.08,
+                    peak_gmacs: 170.0,
+                    mem_bw_gbs: 17.0,
+                    precisions: vec![Precision::Fp32, Precision::Fp16],
+                    dispatch_overhead_us: 110.0,
+                },
+                Processor {
+                    kind: ProcKind::Dsp,
+                    name: "Hexagon-690",
+                    vf: Processor::vf_table(1, 1.0, 1.0, 2.0, 2.0),
+                    idle_power_w: 0.05,
+                    peak_gmacs: 240.0,
+                    mem_bw_gbs: 14.0,
+                    precisions: vec![Precision::Int8],
+                    dispatch_overhead_us: 180.0,
+                },
+            ],
+            dram_gb: 8.0,
+            is_mobile: true,
+        },
+        // Cloud: Xeon E5-2640 (40 cores) + NVIDIA P100. Wall power is the
+        // server's, but the *device* energy the paper optimizes is the
+        // phone's — the server side only contributes latency; its power
+        // numbers matter for the latency model, not the phone battery.
+        DeviceId::CloudServer => Device {
+            id,
+            processors: vec![
+                Processor {
+                    kind: ProcKind::Cpu,
+                    name: "Xeon-E5-2640",
+                    vf: Processor::vf_table(1, 2.4, 2.4, 90.0, 90.0),
+                    idle_power_w: 40.0,
+                    peak_gmacs: 600.0,
+                    mem_bw_gbs: 60.0,
+                    precisions: vec![Precision::Fp32, Precision::Int8],
+                    dispatch_overhead_us: 5.0,
+                },
+                Processor {
+                    kind: ProcKind::Gpu,
+                    name: "Tesla-P100",
+                    vf: Processor::vf_table(1, 1.3, 1.3, 250.0, 250.0),
+                    idle_power_w: 30.0,
+                    peak_gmacs: 4700.0,
+                    mem_bw_gbs: 700.0,
+                    precisions: vec![Precision::Fp32, Precision::Fp16],
+                    dispatch_overhead_us: 30.0,
+                },
+            ],
+            dram_gb: 256.0,
+            is_mobile: false,
+        },
+    }
+}
+
+/// The whole testbed fleet.
+pub fn fleet() -> Vec<Device> {
+    vec![
+        device(DeviceId::Mi8Pro),
+        device(DeviceId::GalaxyS10e),
+        device(DeviceId::MotoXForce),
+        device(DeviceId::TabS6),
+        device(DeviceId::CloudServer),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_step_counts_and_peak_power() {
+        let mi8 = device(DeviceId::Mi8Pro);
+        let cpu = mi8.proc(ProcKind::Cpu).unwrap();
+        assert_eq!(cpu.vf.len(), 23);
+        assert!((cpu.vf[0].freq_ghz - 2.8).abs() < 1e-9);
+        assert!((cpu.vf[0].busy_power_w - 5.5).abs() < 1e-9);
+        let gpu = mi8.proc(ProcKind::Gpu).unwrap();
+        assert_eq!(gpu.vf.len(), 7);
+        assert!((gpu.vf[0].busy_power_w - 2.8).abs() < 1e-9);
+        assert!(mi8.has(ProcKind::Dsp));
+
+        let s10 = device(DeviceId::GalaxyS10e);
+        assert_eq!(s10.proc(ProcKind::Cpu).unwrap().vf.len(), 21);
+        assert!(!s10.has(ProcKind::Dsp), "S10e has no DSP in the paper");
+
+        let moto = device(DeviceId::MotoXForce);
+        assert_eq!(moto.proc(ProcKind::Cpu).unwrap().vf.len(), 15);
+        assert!((moto.proc(ProcKind::Cpu).unwrap().vf[0].freq_ghz - 1.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn performance_ordering_high_vs_mid_end() {
+        let mi8 = device(DeviceId::Mi8Pro);
+        let moto = device(DeviceId::MotoXForce);
+        assert!(
+            mi8.proc(ProcKind::Cpu).unwrap().peak_gmacs
+                > 3.0 * moto.proc(ProcKind::Cpu).unwrap().peak_gmacs
+        );
+        let tab = device(DeviceId::TabS6);
+        assert!(tab.proc(ProcKind::Cpu).unwrap().peak_gmacs
+            > mi8.proc(ProcKind::Cpu).unwrap().peak_gmacs);
+        let cloud = device(DeviceId::CloudServer);
+        assert!(cloud.proc(ProcKind::Gpu).unwrap().peak_gmacs
+            > 20.0 * tab.proc(ProcKind::Gpu).unwrap().peak_gmacs);
+    }
+
+    #[test]
+    fn dsp_is_int8_only_without_dvfs() {
+        let dsp = device(DeviceId::Mi8Pro).proc(ProcKind::Dsp).unwrap().clone();
+        assert_eq!(dsp.precisions, vec![Precision::Int8]);
+        assert_eq!(dsp.vf.len(), 1);
+    }
+
+    #[test]
+    fn fleet_has_five_devices() {
+        assert_eq!(fleet().len(), 5);
+    }
+
+    #[test]
+    fn coprocessor_dispatch_costlier_than_cpu() {
+        // The Fig. 3 mechanism: co-processors pay per-layer dispatch.
+        for d in fleet() {
+            let cpu_ovh = d.proc(ProcKind::Cpu).unwrap().dispatch_overhead_us;
+            for p in &d.processors {
+                if p.kind != ProcKind::Cpu {
+                    assert!(p.dispatch_overhead_us > cpu_ovh, "{:?}/{:?}", d.id, p.kind);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Parametric processor + device models.
+//!
+//! Each processor carries a DVFS V/F table (frequency + busy power per
+//! step, paper Table 2 gives step counts and peak power), an idle power, a
+//! peak MAC rate and memory bandwidth, and the set of precisions its
+//! deployed executables support (§5.3: CPU fp32+int8, GPU fp32+fp16,
+//! DSP int8).
+
+use crate::types::{DeviceId, Precision, ProcKind};
+
+/// One DVFS operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct VfStep {
+    /// Clock frequency in GHz.
+    pub freq_ghz: f64,
+    /// Power while busy at this step (watts).
+    pub busy_power_w: f64,
+}
+
+/// A processor on a device.
+#[derive(Clone, Debug)]
+pub struct Processor {
+    pub kind: ProcKind,
+    pub name: &'static str,
+    /// V/F table sorted max-frequency-first (index 0 = fastest).
+    pub vf: Vec<VfStep>,
+    /// Idle power at the cluster level (watts).
+    pub idle_power_w: f64,
+    /// Peak fp32 multiply-accumulate rate at max frequency (GMAC/s).
+    pub peak_gmacs: f64,
+    /// Sustainable memory bandwidth (GB/s).
+    pub mem_bw_gbs: f64,
+    /// Precisions the deployment stack supports on this processor.
+    pub precisions: Vec<Precision>,
+    /// Fixed per-kernel dispatch overhead (µs) — the co-processor launch
+    /// cost that makes many-small-FC networks CPU-favoured (Fig. 3).
+    pub dispatch_overhead_us: f64,
+}
+
+impl Processor {
+    /// Build a V/F table by interpolating from (f_min, p_min) to
+    /// (f_max, p_max) over `steps` points. Power follows ~f^3 (P = C·V²·f
+    /// with V roughly linear in f), matching measured mobile DVFS curves.
+    pub fn vf_table(steps: usize, f_min: f64, f_max: f64, p_min: f64, p_max: f64) -> Vec<VfStep> {
+        assert!(steps >= 1 && f_max >= f_min);
+        (0..steps)
+            .map(|i| {
+                // index 0 = max frequency
+                let t = if steps == 1 { 1.0 } else { 1.0 - i as f64 / (steps - 1) as f64 };
+                let freq = f_min + t * (f_max - f_min);
+                let x = if f_max > f_min { (freq - f_min) / (f_max - f_min) } else { 1.0 };
+                let power = p_min + (p_max - p_min) * x.powi(3);
+                VfStep { freq_ghz: freq, busy_power_w: power }
+            })
+            .collect()
+    }
+
+    pub fn supports(&self, precision: Precision) -> bool {
+        self.precisions.contains(&precision)
+    }
+
+    /// Clamp a V/F index into the table.
+    pub fn step(&self, idx: u8) -> VfStep {
+        self.vf[(idx as usize).min(self.vf.len() - 1)]
+    }
+
+    /// Frequency ratio of step `idx` relative to max (0 < r <= 1).
+    pub fn freq_ratio(&self, idx: u8) -> f64 {
+        self.step(idx).freq_ghz / self.vf[0].freq_ghz
+    }
+
+    /// Effective MAC throughput (GMAC/s) at a V/F step and precision.
+    ///
+    /// INT8 roughly doubles effective MACs on CPU (dot-product extensions)
+    /// and is the DSP's native mode (already captured in its peak);
+    /// FP16 roughly doubles GPU ALU throughput.
+    pub fn effective_gmacs(&self, idx: u8, precision: Precision) -> f64 {
+        let base = self.peak_gmacs * self.freq_ratio(idx);
+        let speedup = match (self.kind, precision) {
+            (ProcKind::Cpu, Precision::Int8) => 2.0,
+            (ProcKind::Gpu, Precision::Fp16) => 2.0,
+            (ProcKind::Dsp, Precision::Int8) => 1.0, // int8 is the DSP baseline
+            _ => 1.0,
+        };
+        base * speedup
+    }
+}
+
+/// A device: a set of processors plus global traits.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: DeviceId,
+    pub processors: Vec<Processor>,
+    pub dram_gb: f64,
+    /// Is this a battery-powered edge device (thermal limits apply)?
+    pub is_mobile: bool,
+}
+
+impl Device {
+    pub fn proc(&self, kind: ProcKind) -> Option<&Processor> {
+        self.processors.iter().find(|p| p.kind == kind)
+    }
+
+    pub fn has(&self, kind: ProcKind) -> bool {
+        self.proc(kind).is_some()
+    }
+
+    /// All (proc, vf, precision) actions this device can execute locally.
+    pub fn local_actions(&self) -> Vec<(ProcKind, u8, Precision)> {
+        let mut out = Vec::new();
+        for p in &self.processors {
+            let vf_count = if p.kind == ProcKind::Dsp {
+                1 // §5.3: no DVFS on the DSP
+            } else {
+                p.vf.len()
+            };
+            for vf in 0..vf_count {
+                for &prec in &p.precisions {
+                    out.push((p.kind, vf as u8, prec));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cpu() -> Processor {
+        Processor {
+            kind: ProcKind::Cpu,
+            name: "test-cpu",
+            vf: Processor::vf_table(5, 0.8, 2.8, 0.8, 5.5),
+            idle_power_w: 0.1,
+            peak_gmacs: 20.0,
+            mem_bw_gbs: 10.0,
+            precisions: vec![Precision::Fp32, Precision::Int8],
+            dispatch_overhead_us: 20.0,
+        }
+    }
+
+    #[test]
+    fn vf_table_max_first_monotone() {
+        let t = Processor::vf_table(7, 1.0, 2.0, 1.0, 4.0);
+        assert_eq!(t.len(), 7);
+        assert!((t[0].freq_ghz - 2.0).abs() < 1e-12);
+        assert!((t[6].freq_ghz - 1.0).abs() < 1e-12);
+        for w in t.windows(2) {
+            assert!(w[0].freq_ghz >= w[1].freq_ghz);
+            assert!(w[0].busy_power_w >= w[1].busy_power_w);
+        }
+        // cubic power curve: max power at max freq, min power at min freq
+        assert!((t[0].busy_power_w - 4.0).abs() < 1e-9);
+        assert!((t[6].busy_power_w - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_clamps() {
+        let p = cpu();
+        assert!((p.step(200).freq_ghz - 0.8).abs() < 1e-12);
+        assert!((p.freq_ratio(0) - 1.0).abs() < 1e-12);
+        assert!(p.freq_ratio(4) < 0.3 + 1e-9);
+    }
+
+    #[test]
+    fn int8_speeds_up_cpu() {
+        let p = cpu();
+        assert!(
+            p.effective_gmacs(0, Precision::Int8) > p.effective_gmacs(0, Precision::Fp32)
+        );
+    }
+
+    #[test]
+    fn local_actions_cover_precisions_and_steps() {
+        let d = Device {
+            id: DeviceId::Mi8Pro,
+            processors: vec![cpu()],
+            dram_gb: 6.0,
+            is_mobile: true,
+        };
+        let acts = d.local_actions();
+        // 5 V/F steps x 2 precisions
+        assert_eq!(acts.len(), 10);
+        assert!(acts.iter().all(|(k, _, _)| *k == ProcKind::Cpu));
+    }
+}

@@ -1,0 +1,126 @@
+//! Thermal throttling model.
+//!
+//! §3.2: "frequent thermal throttling from high CPU utilization" degrades
+//! CPU energy efficiency when a CPU-intensive app co-runs. We model a
+//! first-order thermal RC: heat accumulates with dissipated power, and when
+//! the virtual temperature crosses the throttle threshold the governor caps
+//! the frequency ratio, which the latency model consumes.
+
+/// First-order thermal state for one mobile device.
+#[derive(Clone, Debug)]
+pub struct ThermalState {
+    /// Virtual temperature above ambient (K).
+    temp_k: f64,
+    /// Thermal resistance (K/W) — how much steady power heats the SoC.
+    r_kw: f64,
+    /// Time constant (s) of the exponential approach.
+    tau_s: f64,
+    /// Throttle threshold above ambient (K).
+    threshold_k: f64,
+    /// Frequency cap applied while throttling (ratio of max).
+    throttle_ratio: f64,
+}
+
+impl Default for ThermalState {
+    fn default() -> Self {
+        // ~8 K/W, 30 s time constant, throttle at +22 K, cap to 70% —
+        // representative of sustained-load behaviour on passively cooled
+        // handsets.
+        ThermalState {
+            temp_k: 0.0,
+            r_kw: 8.0,
+            tau_s: 30.0,
+            threshold_k: 22.0,
+            throttle_ratio: 0.7,
+        }
+    }
+}
+
+impl ThermalState {
+    pub fn new(r_kw: f64, tau_s: f64, threshold_k: f64, throttle_ratio: f64) -> Self {
+        ThermalState { temp_k: 0.0, r_kw, tau_s, threshold_k, throttle_ratio }
+    }
+
+    /// Advance the thermal state by `dt` seconds with `power_w` dissipated.
+    pub fn advance(&mut self, power_w: f64, dt: f64) {
+        assert!(dt >= 0.0);
+        let steady = self.r_kw * power_w.max(0.0);
+        let alpha = 1.0 - (-dt / self.tau_s).exp();
+        self.temp_k += (steady - self.temp_k) * alpha;
+    }
+
+    /// Currently throttling?
+    pub fn throttled(&self) -> bool {
+        self.temp_k >= self.threshold_k
+    }
+
+    /// Frequency multiplier the governor currently allows (1.0 or the cap).
+    pub fn freq_cap(&self) -> f64 {
+        if self.throttled() {
+            self.throttle_ratio
+        } else {
+            1.0
+        }
+    }
+
+    pub fn temperature_k(&self) -> f64 {
+        self.temp_k
+    }
+
+    pub fn reset(&mut self) {
+        self.temp_k = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_not_throttled() {
+        let t = ThermalState::default();
+        assert!(!t.throttled());
+        assert_eq!(t.freq_cap(), 1.0);
+    }
+
+    #[test]
+    fn sustained_high_power_throttles() {
+        let mut t = ThermalState::default();
+        // 5.5 W sustained (Mi8Pro CPU peak) -> steady 44 K >> 22 K threshold
+        for _ in 0..120 {
+            t.advance(5.5, 1.0);
+        }
+        assert!(t.throttled());
+        assert!((t.freq_cap() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_power_never_throttles() {
+        let mut t = ThermalState::default();
+        for _ in 0..600 {
+            t.advance(1.0, 1.0); // steady 8 K < 22 K
+        }
+        assert!(!t.throttled());
+    }
+
+    #[test]
+    fn cools_down_when_idle() {
+        let mut t = ThermalState::default();
+        for _ in 0..120 {
+            t.advance(5.5, 1.0);
+        }
+        assert!(t.throttled());
+        for _ in 0..300 {
+            t.advance(0.1, 1.0);
+        }
+        assert!(!t.throttled());
+    }
+
+    #[test]
+    fn approach_is_exponential() {
+        let mut t = ThermalState::default();
+        t.advance(2.0, 30.0); // one time constant toward 16 K
+        let one_tau = t.temperature_k();
+        assert!((one_tau - 16.0 * (1.0 - (-1.0f64).exp())).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,493 @@
+//! The latency/energy simulator proper.
+
+use crate::device::processor::{Device, Processor};
+use crate::device::thermal::ThermalState;
+use crate::interference::Interference;
+use crate::net::Link;
+use crate::nn::zoo::NnDesc;
+use crate::power::{self, NetTransaction, Residency};
+use crate::types::{Action, Measurement, Precision, ProcKind, Site};
+use crate::util::rng::Pcg64;
+
+/// The three Table-1 layer classes the paper found most correlated with
+/// energy/latency (§4.1 ρ² test).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    Conv,
+    Fc,
+    Rc,
+}
+
+/// Per-(processor-class, layer-class) compute efficiency: fraction of the
+/// processor's peak MAC rate a layer of this class actually achieves.
+///
+/// Shape calibrated to Fig. 3: convs vectorize well on GPU/DSP; FC and RC
+/// layers are bandwidth-bound GEMVs that strand co-processor lanes, so
+/// their efficiency there is poor while the CPU handles them well.
+pub fn efficiency(proc: ProcKind, layer: LayerClass) -> f64 {
+    match (proc, layer) {
+        (ProcKind::Cpu, LayerClass::Conv) => 0.45,
+        (ProcKind::Cpu, LayerClass::Fc) => 0.60,
+        (ProcKind::Cpu, LayerClass::Rc) => 0.55,
+        (ProcKind::Gpu, LayerClass::Conv) => 0.70,
+        (ProcKind::Gpu, LayerClass::Fc) => 0.05,
+        (ProcKind::Gpu, LayerClass::Rc) => 0.04,
+        (ProcKind::Dsp, LayerClass::Conv) => 0.75,
+        (ProcKind::Dsp, LayerClass::Fc) => 0.06,
+        (ProcKind::Dsp, LayerClass::Rc) => 0.04,
+    }
+}
+
+/// MAC/byte split of one network across layer classes.
+///
+/// Conv towers dominate MACs; each FC/RC layer carries a fixed share of
+/// the model's compute derived from the Table-3 layer counts.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCost {
+    pub class: LayerClass,
+    pub count: u32,
+    /// MACs of this class for one inference (millions).
+    pub macs_m: f64,
+    /// Bytes moved by this class (MB at fp32).
+    pub mem_mb: f64,
+}
+
+/// Split a network's paper-scale MACs/bytes over its layer classes.
+pub fn layer_costs(nn: &NnDesc) -> Vec<LayerCost> {
+    // Weight per layer instance (relative compute density per class).
+    let w_conv = 1.0;
+    let w_fc = 0.6; // FCs are big GEMVs but fewer MACs each at mobile sizes
+    let w_rc = 2.0; // recurrent layers are the heaviest per layer (§2.1)
+    let total_w =
+        nn.s_conv as f64 * w_conv + nn.s_fc as f64 * w_fc + nn.s_rc as f64 * w_rc;
+    let mut out = Vec::new();
+    if total_w <= 0.0 {
+        return out;
+    }
+    let mut push = |class, count: u32, w: f64| {
+        if count > 0 {
+            let share = (count as f64 * w) / total_w;
+            out.push(LayerCost {
+                class,
+                count,
+                macs_m: nn.macs_m * share,
+                mem_mb: nn.mem_mb * share,
+            });
+        }
+    };
+    push(LayerClass::Conv, nn.s_conv, w_conv);
+    push(LayerClass::Fc, nn.s_fc, w_fc);
+    push(LayerClass::Rc, nn.s_rc, w_rc);
+    out
+}
+
+/// Runtime context for one simulated inference.
+#[derive(Clone, Debug)]
+pub struct RunContext {
+    pub interference: Interference,
+    /// Thermal frequency cap currently in force for the CPU (1.0 = none).
+    pub thermal_cap: f64,
+    /// Multiplicative factor from the *real* PJRT measurement of this
+    /// model's artifact (run-to-run compute variation; 1.0 = calibration
+    /// mean). Grounds the simulation in real executed compute.
+    pub compute_factor: f64,
+}
+
+impl Default for RunContext {
+    fn default() -> Self {
+        RunContext {
+            interference: Interference::default(),
+            thermal_cap: 1.0,
+            compute_factor: 1.0,
+        }
+    }
+}
+
+/// The simulator: owns the device being driven plus remote sites & links.
+#[derive(Clone)]
+pub struct Simulator {
+    pub local: Device,
+    pub connected: Device,
+    pub cloud: Device,
+    pub wlan: Link,
+    pub p2p: Link,
+    pub thermal: ThermalState,
+    /// Measurement noise of the "true" energy vs the Eq.(1)-(4) estimate
+    /// (gives the estimator a realistic MAPE, paper reports 7.3%).
+    pub truth_noise: f64,
+    rng: Pcg64,
+}
+
+impl Simulator {
+    pub fn new(local: Device, connected: Device, cloud: Device, wlan: Link, p2p: Link) -> Self {
+        Simulator {
+            local,
+            connected,
+            cloud,
+            wlan,
+            p2p,
+            thermal: ThermalState::default(),
+            truth_noise: 0.05,
+            rng: Pcg64::new(0xE4EC),
+        }
+    }
+
+    pub fn seed(&mut self, seed: u64) {
+        self.rng = Pcg64::new(seed);
+    }
+
+    fn device_for(&self, site: Site) -> &Device {
+        match site {
+            Site::Local => &self.local,
+            Site::ConnectedEdge => &self.connected,
+            Site::Cloud => &self.cloud,
+        }
+    }
+
+    /// Compute-only latency of `nn` on `proc` at V/F step and precision,
+    /// under the given context (seconds). Exposed for Fig. 3.
+    pub fn compute_latency_s(
+        &self,
+        nn: &NnDesc,
+        proc: &Processor,
+        vf: u8,
+        precision: Precision,
+        ctx: &RunContext,
+        site: Site,
+    ) -> f64 {
+        let costs = layer_costs(nn);
+        let mut total = 0.0;
+        for lc in &costs {
+            total += self.layer_latency_s(lc, proc, vf, precision, ctx, site);
+        }
+        total * ctx.compute_factor
+    }
+
+    /// One layer class's latency contribution.
+    pub fn layer_latency_s(
+        &self,
+        lc: &LayerCost,
+        proc: &Processor,
+        vf: u8,
+        precision: Precision,
+        ctx: &RunContext,
+        site: Site,
+    ) -> f64 {
+        let eta = efficiency(proc.kind, lc.class);
+        // DVFS + thermal frequency scaling (thermal only binds the local CPU)
+        let mut gmacs = proc.effective_gmacs(vf, precision) * eta;
+        if site == Site::Local && proc.kind == ProcKind::Cpu {
+            gmacs *= ctx.thermal_cap;
+        }
+        // CPU-interference: co-runner steals cycles from the local CPU only.
+        if site == Site::Local && proc.kind == ProcKind::Cpu {
+            let steal = (ctx.interference.cpu_util / 100.0).min(0.9);
+            gmacs *= 1.0 - 0.6 * steal; // time-sliced with priority boost
+        }
+        let compute_s = lc.macs_m * 1e6 / (gmacs * 1e9).max(1e3);
+
+        // Memory side: precision shrinks weight traffic; memory-intensive
+        // co-runners contend for DRAM bandwidth on ALL local processors
+        // (the paper's Fig. 5 right mechanism).
+        let bytes = lc.mem_mb * 1e6 * (precision.weight_bytes() / 4.0);
+        let mut bw = proc.mem_bw_gbs * 1e9;
+        if site == Site::Local {
+            let pressure = (ctx.interference.mem_pressure / 100.0).min(0.9);
+            bw *= 1.0 - 0.55 * pressure;
+        }
+        let mem_s = bytes / bw;
+
+        // Per-layer dispatch overhead (launches scale with layer count).
+        let dispatch_s = lc.count as f64 * proc.dispatch_overhead_us * 1e-6;
+
+        // Additive compute+memory roofline: mobile inference overlaps the
+        // two imperfectly (activations stream through caches between
+        // kernels), so DRAM contention degrades even compute-bound layers —
+        // the paper's Fig. 5 observation that memory-intensive co-runners
+        // slow every local processor.
+        compute_s + mem_s + dispatch_s
+    }
+
+    /// Execute one inference for `nn` under `action`, returning the
+    /// measurement (estimated + true energy) and advancing thermal state.
+    pub fn run(&mut self, nn: &NnDesc, action: Action, ctx: &RunContext) -> Measurement {
+        let dev = self.device_for(action.site);
+        // Fall back to CPU if the requested co-processor is absent (the
+        // policy layer normally masks these actions).
+        let proc = dev
+            .proc(action.proc)
+            .or_else(|| dev.proc(ProcKind::Cpu))
+            .expect("device must have a CPU")
+            .clone();
+        let precision = if proc.supports(action.precision) {
+            action.precision
+        } else {
+            *proc.precisions.first().unwrap()
+        };
+
+        let mut ctx_eff = ctx.clone();
+        ctx_eff.thermal_cap = if action.site == Site::Local {
+            self.thermal.freq_cap()
+        } else {
+            1.0
+        };
+
+        let compute_s =
+            self.compute_latency_s(nn, &proc, action.vf_step, precision, &ctx_eff, action.site);
+
+        let (latency_s, energy_est, power_for_thermal) = match action.site {
+            Site::Local => {
+                let energy = self.local_energy_j(&proc, action.vf_step, compute_s);
+                (compute_s, energy, energy / compute_s.max(1e-9))
+            }
+            Site::ConnectedEdge | Site::Cloud => {
+                let link = if action.site == Site::Cloud { &self.wlan } else { &self.p2p };
+                let rt = link.round_trip(nn.input_kb, nn.output_kb);
+                let latency = rt.tx_s + compute_s + rt.rx_s;
+                // Device-side energy: Eq. (4). The idle power is the local
+                // CPU's (device waits on the result).
+                let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
+                let energy = power::network_energy_j(&NetTransaction {
+                    tx_s: rt.tx_s,
+                    tx_power_w: rt.tx_power_w,
+                    rx_s: rt.rx_s,
+                    rx_power_w: rt.rx_power_w,
+                    idle_power_w: idle,
+                    total_latency_s: latency,
+                }) + rt.tail_energy_j;
+                (latency, energy, rt.tx_power_w * 0.3)
+            }
+        };
+
+        // True energy = estimate ± bounded noise (estimation error source).
+        let noise = 1.0 + self.rng.normal(0.0, self.truth_noise).clamp(-0.25, 0.25);
+        let energy_true = energy_est * noise;
+
+        // Thermal integration for local runs (a remote run lets it cool).
+        if action.site == Site::Local && self.local.is_mobile {
+            self.thermal.advance(power_for_thermal, latency_s);
+        } else {
+            self.thermal.advance(0.2, latency_s);
+        }
+
+        Measurement {
+            latency_s,
+            energy_est_j: energy_est,
+            energy_true_j: energy_true,
+            accuracy: nn.accuracy(precision),
+        }
+    }
+
+    /// Eq.(1)/(2)/(3) energy for a local run.
+    fn local_energy_j(&self, proc: &Processor, vf: u8, busy_s: f64) -> f64 {
+        match proc.kind {
+            ProcKind::Cpu => power::cpu_energy_j(
+                proc,
+                &[Residency { vf_step: vf, busy_s, idle_s: 0.0 }],
+            ),
+            ProcKind::Gpu => power::gpu_energy_j(
+                proc,
+                Residency { vf_step: vf, busy_s, idle_s: 0.0 },
+            ),
+            ProcKind::Dsp => power::dsp_energy_j(proc.vf[0].busy_power_w, busy_s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets::device;
+    use crate::net::{LinkKind, RssiProcess};
+    use crate::nn::zoo::by_name;
+    use crate::types::DeviceId;
+
+    fn sim(local: DeviceId) -> Simulator {
+        Simulator::new(
+            device(local),
+            device(DeviceId::TabS6),
+            device(DeviceId::CloudServer),
+            Link::new(LinkKind::Wlan, RssiProcess::pinned(-55.0)),
+            Link::new(LinkKind::P2p, RssiProcess::pinned(-50.0)),
+        )
+    }
+
+    #[test]
+    fn fig3_fc_heavy_net_prefers_cpu_conv_tower_prefers_coproc() {
+        let s = sim(DeviceId::Mi8Pro);
+        let ctx = RunContext::default();
+        let cpu = s.local.proc(ProcKind::Cpu).unwrap();
+        let gpu = s.local.proc(ProcKind::Gpu).unwrap();
+
+        // InceptionV1 (conv tower): GPU faster than CPU.
+        let inc = by_name("inception_v1").unwrap();
+        let inc_cpu = s.compute_latency_s(inc, cpu, 0, Precision::Fp32, &ctx, Site::Local);
+        let inc_gpu = s.compute_latency_s(inc, gpu, 0, Precision::Fp16, &ctx, Site::Local);
+        assert!(inc_gpu < inc_cpu, "conv tower: gpu {inc_gpu} vs cpu {inc_cpu}");
+
+        // MobilenetV3 (20 FC layers): CPU wins.
+        let mb3 = by_name("mobilenet_v3").unwrap();
+        let mb3_cpu = s.compute_latency_s(mb3, cpu, 0, Precision::Int8, &ctx, Site::Local);
+        let mb3_gpu = s.compute_latency_s(mb3, gpu, 0, Precision::Fp16, &ctx, Site::Local);
+        assert!(mb3_cpu < mb3_gpu, "fc-heavy: cpu {mb3_cpu} vs gpu {mb3_gpu}");
+    }
+
+    #[test]
+    fn fig2_heavy_nn_favours_cloud_on_highend() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let ctx = RunContext::default();
+        let bert = by_name("mobilebert").unwrap();
+        let kinds: Vec<ProcKind> =
+            ProcKind::ALL.iter().copied().filter(|k| s.local.has(*k)).collect();
+        let mut local_best = f64::INFINITY;
+        for k in kinds {
+            let m = s.run(bert, Action::local(k, Precision::Fp32), &ctx);
+            local_best = local_best.min(m.energy_true_j);
+        }
+        s.thermal.reset();
+        let cloud = s.run(bert, Action::cloud(), &ctx).energy_true_j;
+        assert!(
+            cloud < local_best,
+            "heavy NN: cloud {cloud} should beat local best {local_best}"
+        );
+    }
+
+    #[test]
+    fn fig2_light_nn_favours_edge_on_highend() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let ctx = RunContext::default();
+        let light = by_name("mobilenet_v1").unwrap();
+        let local = s
+            .run(light, Action::local(ProcKind::Dsp, Precision::Int8), &ctx)
+            .energy_true_j;
+        s.thermal.reset();
+        let cloud = s.run(light, Action::cloud(), &ctx).energy_true_j;
+        assert!(local < cloud, "light NN: local {local} should beat cloud {cloud}");
+    }
+
+    #[test]
+    fn fig2_midend_always_scales_out() {
+        // Moto X Force: even light NNs favour remote (paper §3.1).
+        let mut s = sim(DeviceId::MotoXForce);
+        let ctx = RunContext::default();
+        let light = by_name("inception_v1").unwrap();
+        let mut local_best = f64::INFINITY;
+        for k in [ProcKind::Cpu, ProcKind::Gpu] {
+            for prec in [Precision::Fp32, Precision::Fp16, Precision::Int8] {
+                s.thermal.reset();
+                let m = s.run(light, Action::local(k, prec), &ctx);
+                local_best = local_best.min(m.energy_true_j);
+            }
+        }
+        s.thermal.reset();
+        let p2p = s.run(light, Action::connected_edge(), &ctx).energy_true_j;
+        assert!(p2p < local_best, "mid-end: p2p {p2p} should beat local {local_best}");
+    }
+
+    #[test]
+    fn fig5_cpu_hog_degrades_cpu_not_gpu() {
+        let s = sim(DeviceId::Mi8Pro);
+        let nn = by_name("mobilenet_v3").unwrap();
+        let cpu = s.local.proc(ProcKind::Cpu).unwrap();
+        let gpu = s.local.proc(ProcKind::Gpu).unwrap();
+        let quiet = RunContext::default();
+        let hog = RunContext {
+            interference: Interference { cpu_util: 100.0, mem_pressure: 15.0 },
+            ..Default::default()
+        };
+        let cpu_quiet = s.compute_latency_s(nn, cpu, 0, Precision::Fp32, &quiet, Site::Local);
+        let cpu_hog = s.compute_latency_s(nn, cpu, 0, Precision::Fp32, &hog, Site::Local);
+        let gpu_quiet = s.compute_latency_s(nn, gpu, 0, Precision::Fp16, &quiet, Site::Local);
+        let gpu_hog = s.compute_latency_s(nn, gpu, 0, Precision::Fp16, &hog, Site::Local);
+        assert!(cpu_hog > 1.5 * cpu_quiet, "cpu slowed: {cpu_quiet} -> {cpu_hog}");
+        assert!(gpu_hog < 1.2 * gpu_quiet, "gpu mostly unaffected");
+    }
+
+    #[test]
+    fn fig5_mem_hog_degrades_all_local_procs() {
+        let s = sim(DeviceId::Mi8Pro);
+        let nn = by_name("mobilenet_v3").unwrap();
+        let quiet = RunContext::default();
+        let hog = RunContext {
+            interference: Interference { cpu_util: 35.0, mem_pressure: 100.0 },
+            ..Default::default()
+        };
+        for kind in [ProcKind::Cpu, ProcKind::Gpu, ProcKind::Dsp] {
+            let p = s.local.proc(kind).unwrap();
+            let prec = p.precisions[0];
+            let q = s.compute_latency_s(nn, p, 0, prec, &quiet, Site::Local);
+            let h = s.compute_latency_s(nn, p, 0, prec, &hog, Site::Local);
+            assert!(h > q, "{kind:?} should slow under memory pressure: {q} -> {h}");
+        }
+    }
+
+    #[test]
+    fn fig6_weak_wifi_kills_cloud_efficiency() {
+        let strong = sim(DeviceId::Mi8Pro);
+        let mut weak = sim(DeviceId::Mi8Pro);
+        weak.wlan = Link::new(LinkKind::Wlan, RssiProcess::pinned(-88.0));
+        let nn = by_name("resnet50").unwrap();
+        let ctx = RunContext::default();
+        let mut s1 = strong;
+        let e_strong = s1.run(nn, Action::cloud(), &ctx).energy_true_j;
+        let e_weak = weak.run(nn, Action::cloud(), &ctx).energy_true_j;
+        assert!(
+            e_weak > 3.0 * e_strong,
+            "weak signal energy {e_weak} vs strong {e_strong}"
+        );
+    }
+
+    #[test]
+    fn dvfs_lower_step_slower_but_cheaper_power() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let nn = by_name("inception_v1").unwrap();
+        let ctx = RunContext::default();
+        let fast = s.run(nn, Action::new(Site::Local, ProcKind::Cpu, 0, Precision::Fp32), &ctx);
+        s.thermal.reset();
+        let slow = s.run(nn, Action::new(Site::Local, ProcKind::Cpu, 20, Precision::Fp32), &ctx);
+        assert!(slow.latency_s > fast.latency_s);
+        // power = E/t must drop at the lower V/F point
+        let p_fast = fast.energy_true_j / fast.latency_s;
+        let p_slow = slow.energy_true_j / slow.latency_s;
+        assert!(p_slow < p_fast);
+    }
+
+    #[test]
+    fn int8_faster_than_fp32_on_cpu() {
+        let s = sim(DeviceId::Mi8Pro);
+        let nn = by_name("inception_v1").unwrap();
+        let cpu = s.local.proc(ProcKind::Cpu).unwrap();
+        let ctx = RunContext::default();
+        let f32_lat = s.compute_latency_s(nn, cpu, 0, Precision::Fp32, &ctx, Site::Local);
+        let i8_lat = s.compute_latency_s(nn, cpu, 0, Precision::Int8, &ctx, Site::Local);
+        assert!(i8_lat < f32_lat);
+    }
+
+    #[test]
+    fn estimator_mape_in_plausible_band() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let nn = by_name("mobilenet_v2").unwrap();
+        let ctx = RunContext::default();
+        let mut est = Vec::new();
+        let mut truth = Vec::new();
+        for _ in 0..200 {
+            s.thermal.reset();
+            let m = s.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
+            est.push(m.energy_est_j);
+            truth.push(m.energy_true_j);
+        }
+        let mape = crate::util::stats::mape(&est, &truth);
+        assert!(mape > 1.0 && mape < 15.0, "mape {mape}% (paper: 7.3%)");
+    }
+
+    #[test]
+    fn layer_costs_partition_totals() {
+        for nn in crate::nn::zoo::ZOO.iter() {
+            let costs = layer_costs(nn);
+            let macs: f64 = costs.iter().map(|c| c.macs_m).sum();
+            let mem: f64 = costs.iter().map(|c| c.mem_mb).sum();
+            assert!((macs - nn.macs_m).abs() < 1e-6 * nn.macs_m.max(1.0));
+            assert!((mem - nn.mem_mb).abs() < 1e-6 * nn.mem_mb.max(1.0));
+        }
+    }
+}

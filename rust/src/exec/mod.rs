@@ -1,0 +1,25 @@
+//! Per-layer latency + energy execution model.
+//!
+//! This is the simulator substrate that maps (NN, action, runtime state)
+//! to the latency/energy a physical testbed would have measured. It is a
+//! roofline-plus-overhead model per layer class:
+//!
+//! * compute time  = layer MACs / effective MAC rate (DVFS- and
+//!   precision-scaled, Fig. 3's per-class efficiency differences applied);
+//! * memory time   = layer bytes / bandwidth (scaled by precision and
+//!   memory interference);
+//! * dispatch time = per-layer co-processor launch overhead — the paper's
+//!   Fig. 3 mechanism that makes FC-heavy networks (MobilenetV3) favour the
+//!   CPU while conv towers favour co-processors;
+//! * remote sites add the Eq.(4) network round-trip from `net/`.
+//!
+//! Calibration notes are in DESIGN.md §1; tests in this module assert the
+//! paper's qualitative crossovers (Fig. 2/3/5/6) rather than absolute
+//! milliseconds.
+
+pub mod latency;
+pub mod outcome;
+pub mod split;
+
+pub use latency::{LayerClass, LayerCost, Simulator};
+pub use outcome::ExecOutcome;

@@ -1,0 +1,59 @@
+//! Execution outcome record shared by the coordinator, metrics and the
+//! experiment harness: the measurement plus the decision context it was
+//! taken in.
+
+use crate::types::{Action, Measurement};
+
+/// One served inference with everything downstream consumers need.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    pub nn: &'static str,
+    pub action: Action,
+    pub measurement: Measurement,
+    /// QoS latency target this request carried (seconds).
+    pub qos_target_s: f64,
+    /// Accuracy target this request carried.
+    pub accuracy_target: f64,
+    /// Virtual timestamp when the request completed.
+    pub t_s: f64,
+}
+
+impl ExecOutcome {
+    pub fn qos_violated(&self) -> bool {
+        self.measurement.latency_s > self.qos_target_s
+    }
+
+    pub fn accuracy_violated(&self) -> bool {
+        self.measurement.accuracy < self.accuracy_target
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Action, Precision, ProcKind};
+
+    fn outcome(latency: f64, acc: f64) -> ExecOutcome {
+        ExecOutcome {
+            nn: "m",
+            action: Action::local(ProcKind::Cpu, Precision::Fp32),
+            measurement: Measurement {
+                latency_s: latency,
+                energy_est_j: 0.1,
+                energy_true_j: 0.1,
+                accuracy: acc,
+            },
+            qos_target_s: 0.05,
+            accuracy_target: 0.65,
+            t_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn violation_predicates() {
+        assert!(!outcome(0.04, 0.7).qos_violated());
+        assert!(outcome(0.06, 0.7).qos_violated());
+        assert!(!outcome(0.04, 0.7).accuracy_violated());
+        assert!(outcome(0.04, 0.5).accuracy_violated());
+    }
+}

@@ -1,0 +1,32 @@
+//! Fig. 10: the streaming scenario (30 FPS QoS) — AutoScale still improves
+//! energy efficiency at higher inference intensity.
+
+use crate::configsys::runconfig::Scenario;
+use crate::util::report::Table;
+
+use super::fig9_main::run_scenario;
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    run_scenario(
+        Scenario::Streaming,
+        seed,
+        quick,
+        "Fig 10 — streaming scenario (30 FPS QoS): PPW norm. to Edge CPU FP32",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autoscale_still_wins_under_streaming() {
+        let tables = run(21, true);
+        let rows = &tables[0].rows;
+        let ppw = |name: &str| -> f64 {
+            rows.iter().find(|r| r[0] == name).map(|r| r[1].parse().unwrap()).unwrap()
+        };
+        assert!(ppw("AutoScale") > 1.5);
+        assert!(ppw("AutoScale") <= ppw("Opt") * 1.02);
+    }
+}

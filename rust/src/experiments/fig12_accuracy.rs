@@ -1,0 +1,82 @@
+//! Fig. 12: adaptability to inference-quality targets — with a 65% accuracy
+//! requirement AutoScale stops choosing low-precision on-device variants,
+//! trading some PPW for accuracy compliance.
+
+use crate::configsys::runconfig::{EnvKind, Scenario};
+use crate::coordinator::metrics::SelectionStats;
+use crate::coordinator::policy::Policy;
+use crate::types::DeviceId;
+use crate::util::report::{f, pct, Table};
+
+use super::common::{episode_len, run_episode, train_autoscale};
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    let n = episode_len(quick);
+    let runs_per_nn = if quick { 120 } else { 250 };
+    let dev = DeviceId::Mi8Pro;
+    let scenario = Scenario::NonStreaming;
+
+    let mut table = Table::new(
+        "Fig 12 — accuracy-target adaptability (Mi8Pro): PPW norm. to Edge CPU FP32",
+        &["accuracy_target", "ppw_norm", "qos_violation", "acc_violation", "int8_rate"],
+    );
+
+    for &target in &[0.50, 0.65] {
+        let trained =
+            train_autoscale(dev, &EnvKind::STATIC, scenario, target, runs_per_nn, seed + 50);
+        let mut frozen = crate::agent::qlearn::AutoScaleAgent::with_transfer(
+            trained.actions.clone(),
+            trained.params,
+            seed,
+            &trained,
+        );
+        frozen.freeze();
+        let cpu = run_episode(
+            dev, EnvKind::S1NoVariance, scenario, Policy::EdgeCpuFp32, vec![], n, target, seed,
+        );
+        let m = run_episode(
+            dev,
+            EnvKind::S1NoVariance,
+            scenario,
+            Policy::AutoScale(frozen),
+            vec![],
+            n,
+            target,
+            seed + 1,
+        );
+        let sel = m.selections();
+        let int8_rate = sel.rate("Edge(CPU INT8) w/DVFS") + sel.rate("Edge(DSP)");
+        table.row(vec![
+            pct(target),
+            f(m.ppw() / cpu.ppw(), 2),
+            pct(m.qos_violation_ratio()),
+            pct(m.accuracy_violation_ratio()),
+            pct(int8_rate),
+        ]);
+        let _ = SelectionStats::BUCKETS;
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higher_target_reduces_int8_and_ppw() {
+        let tables = run(41, true);
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 2);
+        let ppw50: f64 = rows[0][1].parse().unwrap();
+        let ppw65: f64 = rows[1][1].parse().unwrap();
+        let int8_50: f64 = rows[0][4].trim_end_matches('%').parse().unwrap();
+        let int8_65: f64 = rows[1][4].trim_end_matches('%').parse().unwrap();
+        // 65% target forbids the low-precision variants that fail it, so the
+        // int8 selection rate must drop and efficiency degrade (slightly).
+        assert!(int8_65 < int8_50, "int8 rate {int8_50}% -> {int8_65}%");
+        assert!(ppw65 <= ppw50 * 1.05, "ppw should not improve: {ppw50} -> {ppw65}");
+        // accuracy compliance at the high target
+        let acc_viol_65: f64 = rows[1][3].trim_end_matches('%').parse().unwrap();
+        assert!(acc_viol_65 < 20.0, "accuracy violations bounded: {acc_viol_65}%");
+    }
+}

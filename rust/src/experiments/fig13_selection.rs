@@ -1,0 +1,111 @@
+//! Fig. 13: execution-target selection rates — AutoScale vs Opt per device.
+//! The paper reports 97.9% prediction accuracy (selection-distribution
+//! agreement); mispredictions only occur when the energy gap between the
+//! optimal and chosen target is tiny.
+
+use crate::agent::qlearn::AutoScaleAgent;
+use crate::configsys::runconfig::{EnvKind, Scenario};
+use crate::coordinator::metrics::SelectionStats;
+use crate::coordinator::policy::Policy;
+use crate::types::DeviceId;
+use crate::util::report::{pct, Table};
+
+use super::common::{episode_len, run_episode, train_autoscale};
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    let n = episode_len(quick);
+    let runs_per_nn = if quick { 120 } else { 250 };
+    let scenario = Scenario::NonStreaming;
+
+    let mut table = Table::new(
+        "Fig 13 — selection rates per device: Opt vs AutoScale",
+        &["device", "bucket", "opt_rate", "autoscale_rate"],
+    );
+    let mut agreement = Table::new(
+        "Fig 13b — selection agreement (paper: 97.9%)",
+        &["device", "agreement"],
+    );
+
+    for dev in DeviceId::PHONES {
+        let trained =
+            train_autoscale(dev, &EnvKind::STATIC, scenario, 0.5, runs_per_nn, seed + 50);
+        let mut opt_sel = SelectionStats::default();
+        let mut as_sel = SelectionStats::default();
+        for (i, env) in EnvKind::STATIC.iter().enumerate() {
+            let m_opt = run_episode(
+                dev, *env, scenario, Policy::Opt, vec![],
+                n / EnvKind::STATIC.len(), 0.5, seed + i as u64,
+            );
+            for o in &m_opt.outcomes {
+                opt_sel.add(o.action);
+            }
+            let mut frozen = AutoScaleAgent::with_transfer(
+                trained.actions.clone(),
+                trained.params,
+                seed,
+                &trained,
+            );
+            frozen.freeze();
+            let m_as = run_episode(
+                dev, *env, scenario, Policy::AutoScale(frozen), vec![],
+                n / EnvKind::STATIC.len(), 0.5, seed + i as u64,
+            );
+            for o in &m_as.outcomes {
+                as_sel.add(o.action);
+            }
+        }
+        for bucket in SelectionStats::BUCKETS {
+            table.row(vec![
+                dev.to_string(),
+                bucket.to_string(),
+                pct(opt_sel.rate(bucket)),
+                pct(as_sel.rate(bucket)),
+            ]);
+        }
+        agreement.row(vec![dev.to_string(), pct(opt_sel.overlap(&as_sel))]);
+    }
+    vec![table, agreement]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_distributions_agree_substantially() {
+        let tables = run(51, true);
+        let agreement = &tables[1];
+        assert_eq!(agreement.rows.len(), 3);
+        for row in &agreement.rows {
+            let v: f64 = row[1].trim_end_matches('%').parse().unwrap();
+            assert!(v > 50.0, "{}: agreement {v}% too low", row[0]);
+        }
+    }
+
+    #[test]
+    fn rates_sum_to_one_per_device() {
+        let tables = run(52, true);
+        for dev in ["Mi8Pro", "GalaxyS10e", "MotoXForce"] {
+            for col in [2usize, 3] {
+                let total: f64 = tables[0]
+                    .rows
+                    .iter()
+                    .filter(|r| r[0] == dev)
+                    .map(|r| r[col].trim_end_matches('%').parse::<f64>().unwrap())
+                    .sum();
+                assert!((total - 100.0).abs() < 1.0, "{dev} col{col} sums to {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn s10e_never_selects_dsp() {
+        let tables = run(53, true);
+        for row in &tables[0].rows {
+            if row[0] == "GalaxyS10e" && row[1] == "Edge(DSP)" {
+                assert_eq!(row[2], "0.0%");
+                assert_eq!(row[3], "0.0%");
+            }
+        }
+    }
+}

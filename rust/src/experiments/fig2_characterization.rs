@@ -1,0 +1,112 @@
+//! Fig. 2: energy efficiency (PPW, normalized to Edge(CPU)) and latency
+//! (normalized to the QoS target) of the three representative NNs across
+//! all execution targets on the three phones.
+
+use crate::configsys::runconfig::EnvKind;
+use crate::coordinator::envs::Environment;
+use crate::exec::latency::RunContext;
+use crate::nn::zoo::fig2_models;
+use crate::types::{Action, DeviceId, Precision, ProcKind};
+use crate::util::report::{f, Table};
+
+/// The Fig. 2 target set.
+pub fn targets() -> Vec<(&'static str, Action)> {
+    vec![
+        ("Edge(CPU)", Action::local(ProcKind::Cpu, Precision::Fp32)),
+        ("Edge(GPU)", Action::local(ProcKind::Gpu, Precision::Fp16)),
+        ("Edge(DSP)", Action::local(ProcKind::Dsp, Precision::Int8)),
+        ("Connected Edge", Action::connected_edge()),
+        ("Cloud", Action::cloud()),
+    ]
+}
+
+pub fn run(seed: u64, _quick: bool) -> Vec<Table> {
+    let mut table = Table::new(
+        "Fig 2 — PPW (norm. to Edge CPU) and latency (norm. to QoS) per target",
+        &["device", "nn", "target", "ppw_norm", "latency_norm", "qos_met"],
+    );
+    for dev in DeviceId::PHONES {
+        for nn in fig2_models() {
+            let qos = if nn.s_rc > 0 { 0.100 } else { 0.050 };
+            // Baseline energy: Edge(CPU FP32).
+            let mut results = Vec::new();
+            for (name, action) in targets() {
+                let mut env = Environment::build(dev, EnvKind::S1NoVariance, seed);
+                if action.proc == ProcKind::Dsp
+                    && action.site == crate::types::Site::Local
+                    && !env.sim.local.has(ProcKind::Dsp)
+                {
+                    continue; // S10e / Moto have no DSP
+                }
+                let m = env.sim.run(nn, action, &RunContext::default());
+                results.push((name, m));
+            }
+            let cpu_energy = results
+                .iter()
+                .find(|(n, _)| *n == "Edge(CPU)")
+                .map(|(_, m)| m.energy_true_j)
+                .unwrap();
+            for (name, m) in results {
+                table.row(vec![
+                    dev.to_string(),
+                    nn.name.to_string(),
+                    name.to_string(),
+                    f(cpu_energy / m.energy_true_j, 2),
+                    f(m.latency_s / qos, 2),
+                    (m.latency_s < qos).to_string(),
+                ]);
+            }
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_rows_for_all_phones_and_models() {
+        let tables = run(1, true);
+        assert_eq!(tables.len(), 1);
+        // 3 devices x 3 NNs x (5 targets, minus DSP rows on 2 devices)
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 3 * 3 * 5 - 2 * 3);
+    }
+
+    #[test]
+    fn cpu_baseline_rows_have_unit_ppw() {
+        let tables = run(2, true);
+        for row in &tables[0].rows {
+            if row[2] == "Edge(CPU)" {
+                let v: f64 = row[3].parse().unwrap();
+                assert!((v - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_shape_heavy_nn_cloud_beats_edge_on_highend() {
+        let tables = run(3, true);
+        let rows = &tables[0].rows;
+        let ppw = |dev: &str, nn: &str, tgt: &str| -> f64 {
+            rows.iter()
+                .find(|r| r[0] == dev && r[1] == nn && r[2] == tgt)
+                .map(|r| r[3].parse().unwrap())
+                .unwrap()
+        };
+        // MobileBERT on Mi8Pro: cloud PPW > on-device CPU PPW (Fig 2 right)
+        assert!(ppw("Mi8Pro", "mobilebert", "Cloud") > 1.0);
+        // light NN on Mi8Pro: some edge target beats the cloud
+        let edge_best = ["Edge(GPU)", "Edge(DSP)"]
+            .iter()
+            .map(|t| ppw("Mi8Pro", "inception_v1", t))
+            .fold(0.0f64, f64::max);
+        assert!(edge_best > ppw("Mi8Pro", "inception_v1", "Cloud"));
+        // Moto X Force: scaling out wins even for light NNs (§3.1)
+        let moto_edge = ppw("MotoXForce", "inception_v1", "Edge(GPU)").max(1.0);
+        let moto_out = ppw("MotoXForce", "inception_v1", "Connected Edge")
+            .max(ppw("MotoXForce", "inception_v1", "Cloud"));
+        assert!(moto_out > moto_edge);
+    }
+}

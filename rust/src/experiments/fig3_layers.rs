@@ -1,0 +1,91 @@
+//! Fig. 3: per-layer-class cumulative latency of InceptionV1 and
+//! MobilenetV3 on the Mi8Pro's CPU / GPU / DSP, normalized to the CPU —
+//! the mechanism behind "optimal target depends on layer composition".
+
+use crate::configsys::runconfig::EnvKind;
+use crate::coordinator::envs::Environment;
+use crate::exec::latency::{layer_costs, RunContext};
+use crate::nn::zoo::by_name;
+use crate::types::{DeviceId, Precision, ProcKind, Site};
+use crate::util::report::{f, Table};
+
+pub fn run(seed: u64, _quick: bool) -> Vec<Table> {
+    let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, seed);
+    let ctx = RunContext::default();
+    let mut table = Table::new(
+        "Fig 3 — per-layer-class latency on Mi8Pro (normalized to CPU total)",
+        &["nn", "proc", "layer_class", "latency_frac_of_cpu_total"],
+    );
+    for nn_name in ["inception_v1", "mobilenet_v3"] {
+        let nn = by_name(nn_name).unwrap();
+        let cpu = env.sim.local.proc(ProcKind::Cpu).unwrap();
+        let cpu_total: f64 = layer_costs(nn)
+            .iter()
+            .map(|lc| env.sim.layer_latency_s(lc, cpu, 0, Precision::Fp32, &ctx, Site::Local))
+            .sum();
+        for kind in [ProcKind::Cpu, ProcKind::Gpu, ProcKind::Dsp] {
+            let proc = env.sim.local.proc(kind).unwrap();
+            // CPU rows use fp32 (the normalization baseline); co-processors
+            // use their deployed precision (GPU fp16, DSP int8) as in Fig 3.
+            let prec = if kind == ProcKind::Cpu {
+                Precision::Fp32
+            } else {
+                proc.precisions[proc.precisions.len() - 1]
+            };
+            for lc in layer_costs(nn) {
+                let lat = env.sim.layer_latency_s(&lc, proc, 0, prec, &ctx, Site::Local);
+                table.row(vec![
+                    nn_name.to_string(),
+                    kind.to_string(),
+                    format!("{:?}", lc.class),
+                    f(lat / cpu_total, 3),
+                ]);
+            }
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::latency::LayerClass;
+
+    fn frac(rows: &[Vec<String>], nn: &str, proc: &str, class: &str) -> f64 {
+        rows.iter()
+            .find(|r| r[0] == nn && r[1] == proc && r[2] == class)
+            .map(|r| r[3].parse().unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn fc_layers_slower_on_coprocessors() {
+        let t = run(1, true);
+        let rows = &t[0].rows;
+        // MobilenetV3's FC block: much slower on GPU/DSP than CPU (Fig 3).
+        let cpu_fc = frac(rows, "mobilenet_v3", "cpu", "Fc");
+        let gpu_fc = frac(rows, "mobilenet_v3", "gpu", "Fc");
+        let dsp_fc = frac(rows, "mobilenet_v3", "dsp", "Fc");
+        assert!(gpu_fc > 1.5 * cpu_fc, "gpu fc {gpu_fc} vs cpu {cpu_fc}");
+        assert!(dsp_fc > 1.5 * cpu_fc, "dsp fc {dsp_fc} vs cpu {cpu_fc}");
+        // InceptionV1's conv tower: faster on co-processors.
+        let cpu_conv = frac(rows, "inception_v1", "cpu", "Conv");
+        let gpu_conv = frac(rows, "inception_v1", "gpu", "Conv");
+        assert!(gpu_conv < cpu_conv, "gpu conv {gpu_conv} vs cpu {cpu_conv}");
+        let _ = LayerClass::Conv; // silence unused import lint in some cfgs
+    }
+
+    #[test]
+    fn cpu_fractions_sum_to_one() {
+        let t = run(2, true);
+        for nn in ["inception_v1", "mobilenet_v3"] {
+            let total: f64 = t[0]
+                .rows
+                .iter()
+                .filter(|r| r[0] == nn && r[1] == "cpu")
+                .map(|r| r[3].parse::<f64>().unwrap())
+                .sum();
+            assert!((total - 1.0).abs() < 0.01, "{nn} cpu total {total}");
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Fig. 4: PPW (normalized to Edge CPU FP32) and accuracy per precision
+//! variant — the optimal target shifts with the inference-quality
+//! requirement.
+
+use crate::configsys::runconfig::EnvKind;
+use crate::coordinator::envs::Environment;
+use crate::exec::latency::RunContext;
+use crate::nn::zoo::by_name;
+use crate::types::{Action, DeviceId, Precision, ProcKind, Site};
+use crate::util::report::{f, pct, Table};
+
+/// The Fig. 4 precision-variant targets.
+fn variants() -> Vec<(&'static str, Action)> {
+    vec![
+        ("CPU FP32", Action::local(ProcKind::Cpu, Precision::Fp32)),
+        ("CPU INT8", Action::local(ProcKind::Cpu, Precision::Int8)),
+        ("GPU FP32", Action::local(ProcKind::Gpu, Precision::Fp32)),
+        ("GPU FP16", Action::local(ProcKind::Gpu, Precision::Fp16)),
+        ("DSP INT8", Action::local(ProcKind::Dsp, Precision::Int8)),
+        ("Cloud FP32", Action::cloud()),
+    ]
+}
+
+pub fn run(seed: u64, _quick: bool) -> Vec<Table> {
+    let mut table = Table::new(
+        "Fig 4 — PPW (norm. to CPU FP32) and accuracy per precision target (Mi8Pro)",
+        &["nn", "target", "ppw_norm", "accuracy", "meets_50", "meets_65"],
+    );
+    for nn_name in ["inception_v1", "mobilenet_v3"] {
+        let nn = by_name(nn_name).unwrap();
+        let mut base = None;
+        for (name, action) in variants() {
+            let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, seed);
+            let m = env.sim.run(nn, action, &RunContext::default());
+            if action.site == Site::Local
+                && action.proc == ProcKind::Cpu
+                && action.precision == Precision::Fp32
+            {
+                base = Some(m.energy_true_j);
+            }
+            let ppw_norm = base.map(|b| b / m.energy_true_j).unwrap_or(1.0);
+            table.row(vec![
+                nn_name.to_string(),
+                name.to_string(),
+                f(ppw_norm, 2),
+                pct(m.accuracy),
+                (m.accuracy >= 0.50).to_string(),
+                (m.accuracy >= 0.65).to_string(),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_precision_more_efficient_less_accurate() {
+        let t = run(1, true);
+        let rows = &t[0].rows;
+        let get = |nn: &str, tgt: &str, col: usize| -> String {
+            rows.iter()
+                .find(|r| r[0] == nn && r[1] == tgt)
+                .map(|r| r[col].clone())
+                .unwrap()
+        };
+        // INT8 beats FP32 on PPW for inception_v1 on the CPU...
+        let ppw_int8: f64 = get("inception_v1", "CPU INT8", 2).parse().unwrap();
+        assert!(ppw_int8 > 1.0);
+        // ...but INT8 fails a 65% accuracy bar that cloud FP32 passes.
+        assert_eq!(get("inception_v1", "CPU INT8", 5), "false");
+        assert_eq!(get("inception_v1", "Cloud FP32", 5), "true");
+        // everything still passes 50%
+        assert_eq!(get("inception_v1", "CPU INT8", 4), "true");
+    }
+}

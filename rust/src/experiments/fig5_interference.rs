@@ -1,0 +1,95 @@
+//! Fig. 5: on-device interference (CPU-intensive / memory-intensive
+//! co-runners) shifts the optimal execution target for MobilenetV3.
+
+use crate::configsys::runconfig::EnvKind;
+use crate::coordinator::envs::Environment;
+use crate::exec::latency::RunContext;
+use crate::nn::zoo::by_name;
+use crate::types::{Action, DeviceId, Precision, ProcKind};
+use crate::util::report::{f, Table};
+use crate::util::rng::Pcg64;
+
+fn targets() -> Vec<(&'static str, Action)> {
+    vec![
+        ("Edge(CPU)", Action::local(ProcKind::Cpu, Precision::Fp32)),
+        ("Edge(GPU)", Action::local(ProcKind::Gpu, Precision::Fp16)),
+        ("Edge(DSP)", Action::local(ProcKind::Dsp, Precision::Int8)),
+        ("Cloud", Action::cloud()),
+    ]
+}
+
+pub fn run(seed: u64, _quick: bool) -> Vec<Table> {
+    let nn = by_name("mobilenet_v3").unwrap();
+    let mut table = Table::new(
+        "Fig 5 — interference shifts the optimum (MobilenetV3 on Mi8Pro; PPW norm. to quiet CPU)",
+        &["env", "target", "ppw_norm", "latency_ms"],
+    );
+    let mut base = None;
+    for env_kind in [EnvKind::S1NoVariance, EnvKind::S2CpuHog, EnvKind::S3MemHog] {
+        for (name, action) in targets() {
+            let mut env = Environment::build(DeviceId::Mi8Pro, env_kind, seed);
+            let mut rng = Pcg64::new(seed);
+            let inter = env.co_runner.at(0.0, &mut rng);
+            let ctx = RunContext { interference: inter, ..Default::default() };
+            let m = env.sim.run(nn, action, &ctx);
+            if env_kind == EnvKind::S1NoVariance && name == "Edge(CPU)" {
+                base = Some(m.energy_true_j);
+            }
+            table.row(vec![
+                env_kind.name().to_string(),
+                name.to_string(),
+                f(base.unwrap() / m.energy_true_j, 2),
+                f(m.latency_s * 1e3, 2),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ppw(rows: &[Vec<String>], env: &str, tgt: &str) -> f64 {
+        rows.iter()
+            .find(|r| r[0] == env && r[1] == tgt)
+            .map(|r| r[2].parse().unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn cpu_hog_moves_optimum_off_cpu() {
+        let t = run(1, true);
+        let rows = &t[0].rows;
+        // quiet: CPU is competitive; under S2 the CPU PPW collapses while
+        // GPU barely moves => optimum shifts CPU -> GPU (paper Fig 5).
+        let cpu_s1 = ppw(rows, "S1", "Edge(CPU)");
+        let cpu_s2 = ppw(rows, "S2", "Edge(CPU)");
+        let gpu_s2 = ppw(rows, "S2", "Edge(GPU)");
+        assert!(cpu_s2 < 0.7 * cpu_s1, "cpu should degrade: {cpu_s1} -> {cpu_s2}");
+        assert!(gpu_s2 > cpu_s2, "gpu should beat hogged cpu");
+    }
+
+    #[test]
+    fn mem_hog_moves_optimum_to_cloud() {
+        let t = run(2, true);
+        let rows = &t[0].rows;
+        // S3 degrades every on-device target; cloud is untouched.
+        for tgt in ["Edge(CPU)", "Edge(GPU)", "Edge(DSP)"] {
+            assert!(
+                ppw(rows, "S3", tgt) < ppw(rows, "S1", tgt),
+                "{tgt} should degrade under memory pressure"
+            );
+        }
+        let cloud_s3 = ppw(rows, "S3", "Cloud");
+        let best_edge_s3 = ["Edge(CPU)", "Edge(GPU)", "Edge(DSP)"]
+            .iter()
+            .map(|t| ppw(rows, "S3", t))
+            .fold(0.0f64, f64::max);
+        assert!(
+            (ppw(rows, "S1", "Cloud") - cloud_s3).abs() < 0.25 * cloud_s3,
+            "cloud roughly unaffected"
+        );
+        let _ = best_edge_s3;
+    }
+}

@@ -1,0 +1,74 @@
+//! Fig. 6: wireless signal-strength variation shifts the optimal target
+//! for Resnet50 (a heavy NN that favours scale-out under strong signal).
+
+use crate::configsys::runconfig::EnvKind;
+use crate::coordinator::envs::Environment;
+use crate::exec::latency::RunContext;
+use crate::nn::zoo::by_name;
+use crate::types::{Action, DeviceId, Precision, ProcKind};
+use crate::util::report::{f, Table};
+
+fn targets() -> Vec<(&'static str, Action)> {
+    vec![
+        ("Edge(Best)", Action::local(ProcKind::Dsp, Precision::Int8)),
+        ("Connected Edge", Action::connected_edge()),
+        ("Cloud", Action::cloud()),
+    ]
+}
+
+pub fn run(seed: u64, _quick: bool) -> Vec<Table> {
+    let nn = by_name("resnet50").unwrap();
+    let mut table = Table::new(
+        "Fig 6 — signal strength shifts the optimum (Resnet50 on Mi8Pro; PPW norm. to Edge best)",
+        &["env", "target", "ppw_norm", "latency_ms"],
+    );
+    let mut base = None;
+    for env_kind in [EnvKind::S1NoVariance, EnvKind::S4WeakWlan, EnvKind::S5WeakP2p] {
+        for (name, action) in targets() {
+            let mut env = Environment::build(DeviceId::Mi8Pro, env_kind, seed);
+            let m = env.sim.run(nn, action, &RunContext::default());
+            if env_kind == EnvKind::S1NoVariance && name == "Edge(Best)" {
+                base = Some(m.energy_true_j);
+            }
+            table.row(vec![
+                env_kind.name().to_string(),
+                name.to_string(),
+                f(base.unwrap() / m.energy_true_j, 2),
+                f(m.latency_s * 1e3, 2),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ppw(rows: &[Vec<String>], env: &str, tgt: &str) -> f64 {
+        rows.iter()
+            .find(|r| r[0] == env && r[1] == tgt)
+            .map(|r| r[2].parse().unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn weak_wlan_kills_cloud_but_not_p2p() {
+        let t = run(1, true);
+        let rows = &t[0].rows;
+        assert!(ppw(rows, "S4", "Cloud") < 0.4 * ppw(rows, "S1", "Cloud"));
+        // connected edge still fine under S4 (only Wi-Fi weak)
+        assert!(ppw(rows, "S4", "Connected Edge") > 0.8 * ppw(rows, "S1", "Connected Edge"));
+    }
+
+    #[test]
+    fn weak_p2p_pushes_back_to_edge_or_cloud() {
+        let t = run(2, true);
+        let rows = &t[0].rows;
+        assert!(
+            ppw(rows, "S5", "Connected Edge") < 0.5 * ppw(rows, "S1", "Connected Edge")
+        );
+        // edge target unaffected by any signal weakness
+        assert!((ppw(rows, "S5", "Edge(Best)") - ppw(rows, "S1", "Edge(Best)")).abs() < 0.3);
+    }
+}

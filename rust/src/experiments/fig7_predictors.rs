@@ -1,0 +1,170 @@
+//! Fig. 7: prediction-based approaches (LR, SVR, SVM, KNN) vs Edge(CPU)
+//! and Opt under stochastic runtime variance — PPW, QoS violation ratio,
+//! and the regression MAPE / classifier miss rates reported in §3.3.
+
+use crate::configsys::runconfig::{EnvKind, Scenario};
+use crate::coordinator::policy::{features, ClsModel, Policy};
+use crate::types::{Action, DeviceId};
+use crate::util::report::{f, pct, Table};
+use crate::util::stats;
+
+use super::common::{
+    collect_dataset, episode_len, fit_classifier, fit_regression, run_episode, Sample,
+};
+
+/// Environments with stochastic variance (the regime where prediction-based
+/// approaches struggle).
+const VARIANCE_ENVS: [EnvKind; 4] =
+    [EnvKind::S2CpuHog, EnvKind::S3MemHog, EnvKind::S4WeakWlan, EnvKind::D3RandomWlan];
+
+/// Evaluate one policy (rebuilt per env via `mk`) across the variance
+/// environments; returns (mean ppw, mean violation ratio).
+fn evaluate(
+    mk: &dyn Fn() -> Policy,
+    dev: DeviceId,
+    n: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut ppws = Vec::new();
+    let mut viols = Vec::new();
+    for (i, env) in VARIANCE_ENVS.iter().enumerate() {
+        let m = run_episode(
+            dev,
+            *env,
+            Scenario::NonStreaming,
+            mk(),
+            vec![],
+            n / VARIANCE_ENVS.len(),
+            0.5,
+            seed + i as u64,
+        );
+        ppws.push(m.ppw());
+        viols.push(m.qos_violation_ratio());
+    }
+    (stats::mean(&ppws), stats::mean(&viols))
+}
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    let dev = DeviceId::Mi8Pro;
+    let qos = Scenario::NonStreaming.qos_target_s();
+    let per_env = if quick { 40 } else { 120 };
+    let (samples, actions) = collect_dataset(dev, &VARIANCE_ENVS, qos, 0.5, per_env, seed);
+    let n = episode_len(quick);
+
+    let mut main = Table::new(
+        "Fig 7 — prediction-based approaches vs Opt under runtime variance (Mi8Pro)",
+        &["policy", "ppw_norm_to_cpu", "qos_violation"],
+    );
+
+    let (cpu_ppw, cpu_viol) = evaluate(&|| Policy::EdgeCpuFp32, dev, n, seed + 10);
+    main.row(vec!["Edge(CPU)".into(), f(1.0, 2), pct(cpu_viol)]);
+
+    type Maker<'a> = (&'static str, Box<dyn Fn() -> Policy + 'a>);
+    let makers: Vec<Maker> = vec![
+        ("LR", Box::new(|| fit_regression(&samples, &actions, false, seed))),
+        ("SVR", Box::new(|| fit_regression(&samples, &actions, true, seed))),
+        ("SVM", Box::new(|| fit_classifier(&samples, &actions, false, seed))),
+        ("KNN", Box::new(|| fit_classifier(&samples, &actions, true, seed))),
+    ];
+    for (idx, (name, mk)) in makers.iter().enumerate() {
+        let (ppw, viol) = evaluate(mk.as_ref(), dev, n, seed + 30 + idx as u64 * 7);
+        main.row(vec![(*name).into(), f(ppw / cpu_ppw, 2), pct(viol)]);
+    }
+
+    let (opt_ppw, opt_viol) = evaluate(&|| Policy::Opt, dev, n, seed + 20);
+    main.row(vec!["Opt".into(), f(opt_ppw / cpu_ppw, 2), pct(opt_viol)]);
+
+    vec![main, error_table(&samples, &actions, dev, qos, per_env, seed)]
+}
+
+/// §3.3 error table: regression MAPE + classifier miss rate on held-out
+/// samples (fresh dataset, different seed).
+fn error_table(
+    samples: &[Sample],
+    actions: &[Action],
+    dev: DeviceId,
+    qos: f64,
+    per_env: usize,
+    seed: u64,
+) -> Table {
+    let (test, _) =
+        collect_dataset(dev, &VARIANCE_ENVS, qos, 0.5, (per_env / 2).max(10), seed + 999);
+    let mut errs = Table::new(
+        "Fig 7b — predictor error under runtime variance",
+        &["model", "metric", "value"],
+    );
+    for (svr, name) in [(false, "LR"), (true, "SVR")] {
+        if let Policy::Regression(rp) = fit_regression(samples, actions, svr, seed) {
+            let mut preds = Vec::new();
+            let mut actuals = Vec::new();
+            for s in &test {
+                let x = rp.scaler.transform(&features(&s.obs));
+                for (ai, model) in rp.energy.iter().enumerate() {
+                    preds.push(model.predict(&x).max(1e-9));
+                    actuals.push(s.energy[ai]);
+                }
+            }
+            errs.row(vec![
+                name.into(),
+                "energy MAPE".into(),
+                pct(stats::mape(&preds, &actuals) / 100.0),
+            ]);
+        }
+    }
+    for (knn, name) in [(false, "SVM"), (true, "KNN")] {
+        if let Policy::Classifier(cp) = fit_classifier(samples, actions, knn, seed) {
+            let miss = test
+                .iter()
+                .filter(|s| {
+                    let x = cp.scaler.transform(&features(&s.obs));
+                    let pred = match &cp.model {
+                        ClsModel::Svm(m) => m.predict(&x),
+                        ClsModel::Knn(m) => m.predict(&x),
+                    };
+                    pred != s.best
+                })
+                .count() as f64
+                / test.len() as f64;
+            errs.row(vec![name.into(), "miss-classification".into(), pct(miss)]);
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictors_beat_cpu_but_trail_opt() {
+        let tables = run(5, true);
+        let rows = &tables[0].rows;
+        let ppw = |name: &str| -> f64 {
+            rows.iter().find(|r| r[0] == name).map(|r| r[1].parse().unwrap()).unwrap()
+        };
+        let opt = ppw("Opt");
+        assert!(opt > 1.5, "Opt should clearly beat Edge(CPU): {opt}");
+        let mut preds = Vec::new();
+        for p in ["LR", "SVR", "SVM", "KNN"] {
+            let v = ppw(p);
+            assert!(v > 0.5, "{p} should not collapse: {v}");
+            // episode noise can let a memorizing classifier graze the
+            // feasibility-first oracle on raw PPW (while violating QoS
+            // more); allow a tolerance but never a clear win
+            assert!(v < opt * 1.08, "{p} must not beat the oracle: {v} vs {opt}");
+            preds.push(v);
+        }
+        // the paper's point: on average a significant gap remains to Opt
+        let mean_pred = crate::util::stats::mean(&preds);
+        assert!(mean_pred < 0.95 * opt, "gap to Opt: mean {mean_pred} vs {opt}");
+    }
+
+    #[test]
+    fn error_table_has_all_models() {
+        let tables = run(6, true);
+        let names: Vec<&str> = tables[1].rows.iter().map(|r| r[0].as_str()).collect();
+        for m in ["LR", "SVR", "SVM", "KNN"] {
+            assert!(names.contains(&m));
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Experiment harness: one module per paper figure/table. Each experiment
+//! returns one or more [`crate::util::report::Table`]s whose rows mirror
+//! what the paper plots, and is runnable via `autoscale figure <id>` or
+//! `cargo bench` (bench_figures).
+
+pub mod ablations;
+pub mod common;
+pub mod fig10_streaming;
+pub mod fig11_dynamic;
+pub mod fig12_accuracy;
+pub mod fig13_selection;
+pub mod fig14_convergence;
+pub mod fig2_characterization;
+pub mod fig3_layers;
+pub mod fig4_accuracy_targets;
+pub mod fig5_interference;
+pub mod fig6_signal;
+pub mod fig7_predictors;
+pub mod fig9_main;
+pub mod tables;
+
+use crate::util::report::Table;
+
+/// Registry entry: experiment id -> runner.
+pub struct Experiment {
+    pub id: &'static str,
+    pub about: &'static str,
+    pub run: fn(seed: u64, quick: bool) -> Vec<Table>,
+}
+
+/// All registered experiments in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig2", about: "PPW+latency characterization per target (Fig 2)", run: fig2_characterization::run },
+        Experiment { id: "fig3", about: "Per-layer latency CPU/GPU/DSP (Fig 3)", run: fig3_layers::run },
+        Experiment { id: "fig4", about: "PPW vs accuracy per precision (Fig 4)", run: fig4_accuracy_targets::run },
+        Experiment { id: "fig5", about: "Interference shifts the optimum (Fig 5)", run: fig5_interference::run },
+        Experiment { id: "fig6", about: "Signal strength shifts the optimum (Fig 6)", run: fig6_signal::run },
+        Experiment { id: "fig7", about: "Prediction-based approaches vs Opt (Fig 7)", run: fig7_predictors::run },
+        Experiment { id: "fig9", about: "Main result: static envs, 3 devices (Fig 9)", run: fig9_main::run },
+        Experiment { id: "fig10", about: "Streaming scenario (Fig 10)", run: fig10_streaming::run },
+        Experiment { id: "fig11", about: "Dynamic environments D1-D3 (Fig 11)", run: fig11_dynamic::run },
+        Experiment { id: "fig12", about: "Accuracy-target adaptability (Fig 12)", run: fig12_accuracy::run },
+        Experiment { id: "fig13", about: "Selection rates AutoScale vs Opt (Fig 13)", run: fig13_selection::run },
+        Experiment { id: "fig14", about: "Convergence + learning transfer (Fig 14)", run: fig14_convergence::run },
+        Experiment { id: "tab2", about: "Device specifications (Table 2)", run: tables::run_tab2 },
+        Experiment { id: "tab3", about: "NN workloads (Table 3)", run: tables::run_tab3 },
+        Experiment { id: "tab4", about: "Execution environments (Table 4)", run: tables::run_tab4 },
+        Experiment { id: "ablation_hparams", about: "Hyperparameter sensitivity (§5.3)", run: ablations::run_hparams },
+        Experiment { id: "ablation_bins", about: "DBSCAN bins vs coarse binning", run: ablations::run_bins },
+        Experiment { id: "ablation_split", about: "Static split-computing vs AutoScale (§7)", run: ablations::run_split },
+        Experiment { id: "overhead", about: "Runtime overhead (§6.3)", run: ablations::run_overhead },
+    ]
+}
+
+/// Find and run one experiment by id.
+pub fn run_by_id(id: &str, seed: u64, quick: bool) -> Option<Vec<Table>> {
+    registry().into_iter().find(|e| e.id == id).map(|e| (e.run)(seed, quick))
+}

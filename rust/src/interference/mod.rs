@@ -1,0 +1,169 @@
+//! Co-runner interference: the stochastic on-device variance of §3.2.
+//!
+//! A [`CoRunner`] produces a (cpu_util %, mem_pressure %) pair at any
+//! virtual time. Static environments pin the pair (S2: CPU-intensive hog,
+//! S3: memory-intensive hog); dynamic environments replay utilization
+//! traces shaped like the paper's two real apps (D1 music player,
+//! D2 web browser).
+
+use crate::util::rng::Pcg64;
+
+/// Instantaneous interference observed by the scheduler.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Interference {
+    /// CPU utilization of co-running apps, percent of one cluster (0-100).
+    pub cpu_util: f64,
+    /// Memory-bandwidth pressure of co-running apps, percent (0-100).
+    pub mem_pressure: f64,
+}
+
+/// A co-running workload generator.
+#[derive(Clone, Debug)]
+pub enum CoRunner {
+    /// S1: nothing co-running.
+    None,
+    /// S2/S3-style synthetic hog with fixed intensities.
+    Synthetic { cpu_util: f64, mem_pressure: f64 },
+    /// Trace replay: piecewise-constant utilization segments, looped.
+    Trace { name: &'static str, segments: Vec<TraceSeg>, period_s: f64 },
+}
+
+/// One trace segment: values hold from `t_s` until the next segment.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSeg {
+    pub t_s: f64,
+    pub cpu_util: f64,
+    pub mem_pressure: f64,
+}
+
+impl CoRunner {
+    /// S2: CPU-intensive synthetic app (Fig. 5 left).
+    pub fn cpu_hog() -> Self {
+        CoRunner::Synthetic { cpu_util: 100.0, mem_pressure: 15.0 }
+    }
+
+    /// S3: memory-intensive synthetic app (Fig. 5 right).
+    pub fn mem_hog() -> Self {
+        CoRunner::Synthetic { cpu_util: 35.0, mem_pressure: 100.0 }
+    }
+
+    /// D1: music player — light, periodic decode bursts.
+    ///
+    /// Shape: mostly ~10-20% CPU with a decode spike every few seconds and
+    /// modest, steady memory traffic.
+    pub fn music_player() -> Self {
+        CoRunner::Trace {
+            name: "music_player",
+            segments: vec![
+                TraceSeg { t_s: 0.0, cpu_util: 12.0, mem_pressure: 8.0 },
+                TraceSeg { t_s: 1.5, cpu_util: 35.0, mem_pressure: 18.0 }, // decode burst
+                TraceSeg { t_s: 2.0, cpu_util: 14.0, mem_pressure: 9.0 },
+                TraceSeg { t_s: 4.5, cpu_util: 30.0, mem_pressure: 16.0 },
+                TraceSeg { t_s: 5.0, cpu_util: 10.0, mem_pressure: 8.0 },
+            ],
+            period_s: 6.0,
+        }
+    }
+
+    /// D2: web browser — bursty page loads: CPU+memory spikes followed by
+    /// near-idle reading time.
+    pub fn web_browser() -> Self {
+        CoRunner::Trace {
+            name: "web_browser",
+            segments: vec![
+                TraceSeg { t_s: 0.0, cpu_util: 85.0, mem_pressure: 70.0 }, // page load
+                TraceSeg { t_s: 1.2, cpu_util: 45.0, mem_pressure: 40.0 }, // render settle
+                TraceSeg { t_s: 2.0, cpu_util: 8.0, mem_pressure: 6.0 },   // reading
+                TraceSeg { t_s: 6.0, cpu_util: 90.0, mem_pressure: 75.0 }, // next page
+                TraceSeg { t_s: 7.5, cpu_util: 12.0, mem_pressure: 10.0 },
+            ],
+            period_s: 10.0,
+        }
+    }
+
+    /// Interference at virtual time `t_s`. `rng` adds small sampling jitter
+    /// for trace replays (utilization counters are noisy in practice).
+    pub fn at(&self, t_s: f64, rng: &mut Pcg64) -> Interference {
+        match self {
+            CoRunner::None => Interference::default(),
+            CoRunner::Synthetic { cpu_util, mem_pressure } => Interference {
+                cpu_util: *cpu_util,
+                mem_pressure: *mem_pressure,
+            },
+            CoRunner::Trace { segments, period_s, .. } => {
+                let t = t_s % period_s;
+                let mut cur = segments[segments.len() - 1];
+                for seg in segments {
+                    if seg.t_s <= t {
+                        cur = *seg;
+                    } else {
+                        break;
+                    }
+                }
+                let jitter = |v: f64, rng: &mut Pcg64| {
+                    (v + rng.normal(0.0, 2.0)).clamp(0.0, 100.0)
+                };
+                Interference {
+                    cpu_util: jitter(cur.cpu_util, rng),
+                    mem_pressure: jitter(cur.mem_pressure, rng),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_zero() {
+        let mut rng = Pcg64::new(0);
+        assert_eq!(CoRunner::None.at(3.0, &mut rng), Interference::default());
+    }
+
+    #[test]
+    fn hogs_match_table1_extremes() {
+        let mut rng = Pcg64::new(0);
+        let cpu = CoRunner::cpu_hog().at(0.0, &mut rng);
+        assert_eq!(cpu.cpu_util, 100.0);
+        let mem = CoRunner::mem_hog().at(0.0, &mut rng);
+        assert_eq!(mem.mem_pressure, 100.0);
+        assert!(mem.cpu_util < 50.0);
+    }
+
+    #[test]
+    fn traces_loop_with_period() {
+        let mut rng = Pcg64::new(1);
+        let t = CoRunner::web_browser();
+        let a = t.at(0.1, &mut rng);
+        let b = t.at(10.1, &mut rng); // one period later: same segment
+        assert!((a.cpu_util - b.cpu_util).abs() < 10.0); // within jitter
+        assert!(a.cpu_util > 60.0, "page-load burst");
+        let idle = t.at(3.0, &mut rng);
+        assert!(idle.cpu_util < 20.0, "reading phase");
+    }
+
+    #[test]
+    fn music_player_lighter_than_browser() {
+        let mut rng = Pcg64::new(2);
+        let avg = |cr: &CoRunner, rng: &mut Pcg64| {
+            let n = 200;
+            (0..n).map(|i| cr.at(i as f64 * 0.1, rng).cpu_util).sum::<f64>() / n as f64
+        };
+        let music = avg(&CoRunner::music_player(), &mut rng);
+        let web = avg(&CoRunner::web_browser(), &mut rng);
+        assert!(music < web, "music {music} should be lighter than web {web}");
+    }
+
+    #[test]
+    fn jitter_stays_in_bounds() {
+        let mut rng = Pcg64::new(3);
+        let t = CoRunner::web_browser();
+        for i in 0..500 {
+            let x = t.at(i as f64 * 0.05, &mut rng);
+            assert!((0.0..=100.0).contains(&x.cpu_util));
+            assert!((0.0..=100.0).contains(&x.mem_pressure));
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # AutoScale — energy-efficient execution scaling for edge DNN inference
+//!
+//! Reproduction of *AutoScale: Optimizing Energy Efficiency of End-to-End
+//! Edge Inference under Stochastic Variance* (Kim & Wu, 2020) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a Q-learning execution
+//!   scaling engine ([`agent`]) embedded in a serving coordinator
+//!   ([`coordinator`]), plus every substrate the paper's testbed provided:
+//!   device fleet simulation ([`device`]), the paper's energy models Eq.(1)–(4)
+//!   ([`power`]), a wireless link simulator ([`net`]), co-runner interference
+//!   ([`interference`]), a per-layer latency model ([`exec`]), baseline and
+//!   prediction-based policies ([`baselines`]), and the experiment harness
+//!   regenerating every paper figure ([`experiments`]).
+//! * **L2/L1 (build-time python)** — the 10-NN model zoo in JAX calling
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`; loaded and
+//!   executed on the request path through PJRT by [`runtime`].
+//!
+//! Python never runs on the request path; the binary is self-contained once
+//! `make artifacts` has produced the HLO artifacts and manifest.
+
+pub mod agent;
+pub mod baselines;
+pub mod configsys;
+pub mod coordinator;
+pub mod device;
+pub mod exec;
+pub mod experiments;
+pub mod interference;
+pub mod net;
+pub mod nn;
+pub mod power;
+pub mod runtime;
+pub mod types;
+pub mod util;
+
+pub use types::{Action, Precision, ProcKind, Site};

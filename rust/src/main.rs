@@ -1,0 +1,199 @@
+//! AutoScale CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; offline cache has no clap):
+//!   figure <id> [--seed N] [--full]   regenerate one paper figure/table
+//!   all [--seed N] [--full]           regenerate every figure/table
+//!   serve [--device D] [--env E] [--requests N] [--policy P] [--runtime]
+//!                                     run the serving loop once and report
+//!   train [--device D] [--save PATH]  train an agent, optionally save Q-table
+//!   runtime-check                     load + execute one artifact via PJRT
+//!   list                              list available experiments
+
+use std::path::Path;
+
+use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::policy::Policy;
+use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::experiments;
+use autoscale::runtime::Engine;
+use autoscale::types::DeviceId;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn parse_device(s: &str) -> anyhow::Result<DeviceId> {
+    Ok(match s {
+        "Mi8Pro" | "mi8pro" => DeviceId::Mi8Pro,
+        "GalaxyS10e" | "s10e" => DeviceId::GalaxyS10e,
+        "MotoXForce" | "moto" => DeviceId::MotoXForce,
+        other => anyhow::bail!("unknown device '{other}' (Mi8Pro|GalaxyS10e|MotoXForce)"),
+    })
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let seed: u64 = flag(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
+    let quick = !has_flag(args, "--full");
+
+    match cmd {
+        "list" => {
+            println!("available experiments:");
+            for e in experiments::registry() {
+                println!("  {:6}  {}", e.id, e.about);
+            }
+            Ok(())
+        }
+        "figure" => {
+            let id = args.get(1).map(|s| s.as_str()).unwrap_or("");
+            let tables = experiments::run_by_id(id, seed, quick)
+                .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}' (try `autoscale list`)"))?;
+            let dir = Path::new("reports");
+            for (i, t) in tables.iter().enumerate() {
+                println!("{}", t.render());
+                let slug = if tables.len() == 1 {
+                    id.to_string()
+                } else {
+                    format!("{id}_{i}")
+                };
+                let path = t.write_csv(dir, &slug)?;
+                println!("csv: {}\n", path.display());
+            }
+            Ok(())
+        }
+        "all" => {
+            for e in experiments::registry() {
+                println!("### running {} — {}", e.id, e.about);
+                let tables = (e.run)(seed, quick);
+                let dir = Path::new("reports");
+                for (i, t) in tables.iter().enumerate() {
+                    println!("{}", t.render());
+                    let slug = if tables.len() == 1 {
+                        e.id.to_string()
+                    } else {
+                        format!("{}_{i}", e.id)
+                    };
+                    t.write_csv(dir, &slug)?;
+                }
+            }
+            Ok(())
+        }
+        "serve" => {
+            let device = parse_device(flag(args, "--device").unwrap_or("Mi8Pro"))?;
+            let env = EnvKind::from_name(flag(args, "--env").unwrap_or("S1"))
+                .ok_or_else(|| anyhow::anyhow!("unknown env"))?;
+            let requests: usize =
+                flag(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+            let policy = match flag(args, "--policy").unwrap_or("autoscale") {
+                "cpu" => Policy::EdgeCpuFp32,
+                "best" => Policy::EdgeBest,
+                "cloud" => Policy::CloudAlways,
+                "connected" => Policy::ConnectedEdgeAlways,
+                "opt" => Policy::Opt,
+                "autoscale" => {
+                    let catalogue = autoscale::coordinator::policy::action_catalogue(
+                        &autoscale::device::presets::device(device),
+                    );
+                    Policy::AutoScale(autoscale::agent::qlearn::AutoScaleAgent::new(
+                        catalogue,
+                        Default::default(),
+                        seed,
+                    ))
+                }
+                other => anyhow::bail!("unknown policy '{other}'"),
+            };
+            let mut run_cfg = RunConfig::default();
+            run_cfg.device = device;
+            run_cfg.env = env;
+            run_cfg.seed = seed;
+            run_cfg.scenario = Scenario::NonStreaming;
+
+            let environment = Environment::build(device, env, seed);
+            let mut engine_store;
+            let mut server = Server::new(
+                environment,
+                policy,
+                ServeConfig { run: run_cfg, models: vec![] },
+            );
+            if has_flag(args, "--runtime") {
+                engine_store = Engine::from_default_manifest()?;
+                println!("PJRT platform: {}", engine_store.platform());
+                server = server.with_engine(&mut engine_store);
+            }
+            let metrics = server.serve(requests);
+            println!("policy       : {}", server.policy.name());
+            println!("device/env   : {device} / {}", env.name());
+            println!("requests     : {}", metrics.n());
+            println!("PPW          : {:.3} inf/J", metrics.ppw());
+            println!("mean latency : {:.2} ms", metrics.mean_latency_s() * 1e3);
+            println!("QoS misses   : {:.1}%", metrics.qos_violation_ratio() * 100.0);
+            println!("acc misses   : {:.1}%", metrics.accuracy_violation_ratio() * 100.0);
+            println!("energy MAPE  : {:.1}%", metrics.energy_estimator_mape());
+            Ok(())
+        }
+        "train" => {
+            let device = parse_device(flag(args, "--device").unwrap_or("Mi8Pro"))?;
+            let runs = if quick { 8 } else { 25 };
+            let agent = autoscale::experiments::common::train_autoscale(
+                device,
+                &EnvKind::STATIC,
+                Scenario::NonStreaming,
+                0.5,
+                runs,
+                seed,
+            );
+            println!("trained {} updates on {device}", agent.updates());
+            println!("q-table: {} actions, {} KB", agent.actions.len(),
+                agent.table.memory_bytes() / 1024);
+            if let Some(path) = flag(args, "--save") {
+                agent.table.save(Path::new(path))?;
+                println!("saved q-table to {path}");
+            }
+            Ok(())
+        }
+        "runtime-check" => {
+            let mut engine = Engine::from_default_manifest()?;
+            println!("PJRT platform: {}", engine.platform());
+            let models = engine.manifest().models();
+            println!("artifacts: {} models x precisions", models.len());
+            let t = engine.execute("mobilenet_v1", autoscale::types::Precision::Fp32, 1)?;
+            println!(
+                "mobilenet_v1/fp32: {:.3} ms, {} outputs, finite={}",
+                t.wall_s * 1e3,
+                t.output.len(),
+                t.output.iter().all(|v| v.is_finite())
+            );
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "autoscale — edge-inference execution scaling (AutoScale reproduction)\n\
+                 usage: autoscale <figure|all|serve|train|runtime-check|list> [flags]\n\
+                 flags: --seed N --full --device D --env E --requests N --policy P --runtime"
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `autoscale help`)"),
+    }
+}

@@ -1,0 +1,268 @@
+//! Wireless link simulator: WLAN (Wi-Fi to cloud) and P2P (Wi-Fi Direct to
+//! the connected edge device).
+//!
+//! Models the measurement results the paper builds on (§3.2, refs [16,52]):
+//! * data rate collapses steeply once RSSI drops below about -80 dBm
+//!   ("transmission latency/energy increase exponentially under weak
+//!   signal");
+//! * the radio transmits at higher power when the signal is weak;
+//! * RSSI wanders as a Gaussian process (env D3 emulates signal variation
+//!   with a Gaussian distribution).
+
+use crate::util::rng::Pcg64;
+
+/// Table-1 threshold: RSSI at or below this is "Weak".
+pub const WEAK_RSSI_DBM: f64 = -80.0;
+
+/// Which link a remote action uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Wireless LAN uplink to the cloud (Wi-Fi / LTE / 5G class).
+    Wlan,
+    /// Peer-to-peer link to the connected edge device (Wi-Fi Direct).
+    P2p,
+}
+
+/// Static parameters of one link class.
+#[derive(Clone, Debug)]
+pub struct LinkParams {
+    /// Peak goodput at strong signal (Mbit/s).
+    pub peak_mbps: f64,
+    /// RSSI (dBm) at which rate starts to roll off.
+    pub knee_dbm: f64,
+    /// Exponential roll-off rate per dBm below the knee.
+    pub rolloff_per_dbm: f64,
+    /// TX power at strong signal (W) and its growth per dBm below knee.
+    pub tx_power_w: f64,
+    pub tx_power_growth_per_dbm: f64,
+    /// RX power (W), roughly signal independent.
+    pub rx_power_w: f64,
+    /// One-way base latency (s): association + queueing + propagation.
+    pub base_rtt_s: f64,
+    /// Radio tail state after a transaction: the interface lingers in a
+    /// high-power state (the dominant per-transfer energy cost measured by
+    /// the paper's refs [16]); seconds and watts.
+    pub tail_s: f64,
+    pub tail_power_w: f64,
+}
+
+impl LinkParams {
+    pub fn preset(kind: LinkKind) -> LinkParams {
+        match kind {
+            // Wi-Fi infrastructure mode to an AP + WAN hop to the server.
+            LinkKind::Wlan => LinkParams {
+                peak_mbps: 80.0,
+                knee_dbm: -65.0,
+                rolloff_per_dbm: 0.12,
+                tx_power_w: 0.9,
+                tx_power_growth_per_dbm: 0.035,
+                rx_power_w: 0.7,
+                base_rtt_s: 0.012,
+                tail_s: 0.16,
+                tail_power_w: 0.55,
+            },
+            // Wi-Fi Direct: shorter range, lower stack latency, no WAN hop,
+            // shorter tail (no AP power-save negotiation).
+            LinkKind::P2p => LinkParams {
+                peak_mbps: 120.0,
+                knee_dbm: -60.0,
+                rolloff_per_dbm: 0.10,
+                tx_power_w: 0.7,
+                tx_power_growth_per_dbm: 0.03,
+                rx_power_w: 0.55,
+                base_rtt_s: 0.004,
+                tail_s: 0.07,
+                tail_power_w: 0.40,
+            },
+        }
+    }
+
+    /// Goodput (Mbit/s) at a given RSSI: flat until the knee, then an
+    /// exponential roll-off (which makes TX time grow exponentially as the
+    /// signal weakens — the paper's observation).
+    pub fn rate_mbps(&self, rssi_dbm: f64) -> f64 {
+        if rssi_dbm >= self.knee_dbm {
+            self.peak_mbps
+        } else {
+            let deficit = self.knee_dbm - rssi_dbm;
+            (self.peak_mbps * (-self.rolloff_per_dbm * deficit).exp()).max(0.05)
+        }
+    }
+
+    /// TX power (W) at a given RSSI: rises as signal weakens (power control).
+    pub fn tx_power(&self, rssi_dbm: f64) -> f64 {
+        if rssi_dbm >= self.knee_dbm {
+            self.tx_power_w
+        } else {
+            let deficit = self.knee_dbm - rssi_dbm;
+            self.tx_power_w * (1.0 + self.tx_power_growth_per_dbm * deficit)
+        }
+    }
+
+    /// Time to move `kb` kilobytes one way at a given RSSI (seconds).
+    pub fn transfer_s(&self, kb: f64, rssi_dbm: f64) -> f64 {
+        let bits = kb * 8.0 * 1000.0;
+        self.base_rtt_s / 2.0 + bits / (self.rate_mbps(rssi_dbm) * 1e6)
+    }
+}
+
+/// RSSI process: a mean level plus bounded Gaussian wander (env D3) or a
+/// pinned level (static environments S1/S4/S5).
+#[derive(Clone, Debug)]
+pub struct RssiProcess {
+    pub mean_dbm: f64,
+    pub sigma_dbm: f64,
+    current: f64,
+}
+
+impl RssiProcess {
+    /// Static environment: pinned RSSI, zero variance.
+    pub fn pinned(dbm: f64) -> Self {
+        RssiProcess { mean_dbm: dbm, sigma_dbm: 0.0, current: dbm }
+    }
+
+    /// Dynamic environment: Gaussian wander around the mean.
+    pub fn gaussian(mean_dbm: f64, sigma_dbm: f64) -> Self {
+        RssiProcess { mean_dbm, sigma_dbm, current: mean_dbm }
+    }
+
+    /// Advance one observation interval; returns the fresh RSSI sample.
+    /// AR(1) with 0.7 memory so consecutive requests see correlated signal
+    /// (users move smoothly, not i.i.d.).
+    pub fn step(&mut self, rng: &mut Pcg64) -> f64 {
+        if self.sigma_dbm == 0.0 {
+            return self.current;
+        }
+        let innovation = rng.normal(0.0, self.sigma_dbm);
+        self.current = self.mean_dbm + 0.7 * (self.current - self.mean_dbm) + 0.3 * innovation;
+        // physical clamp
+        self.current = self.current.clamp(-95.0, -30.0);
+        self.current
+    }
+
+    pub fn current(&self) -> f64 {
+        self.current
+    }
+
+    /// Table-1 discretization: Regular (> -80 dBm) vs Weak (<= -80 dBm).
+    pub fn is_weak(&self) -> bool {
+        self.current <= WEAK_RSSI_DBM
+    }
+}
+
+/// A live link: parameters + signal process.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub kind: LinkKind,
+    pub params: LinkParams,
+    pub rssi: RssiProcess,
+}
+
+impl Link {
+    pub fn new(kind: LinkKind, rssi: RssiProcess) -> Self {
+        Link { kind, params: LinkParams::preset(kind), rssi }
+    }
+
+    /// Round-trip characteristics for moving `up_kb` up and `down_kb` down
+    /// at the current signal level.
+    pub fn round_trip(&self, up_kb: f64, down_kb: f64) -> RoundTrip {
+        let rssi = self.rssi.current();
+        RoundTrip {
+            tx_s: self.params.transfer_s(up_kb, rssi),
+            rx_s: self.params.transfer_s(down_kb, rssi),
+            tx_power_w: self.params.tx_power(rssi),
+            rx_power_w: self.params.rx_power_w,
+            tail_energy_j: self.params.tail_s * self.params.tail_power_w,
+        }
+    }
+}
+
+/// One remote round trip (before adding remote compute time).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundTrip {
+    pub tx_s: f64,
+    pub rx_s: f64,
+    pub tx_power_w: f64,
+    pub rx_power_w: f64,
+    /// Post-transaction radio tail energy (joules); charged to the device
+    /// battery but not to request latency (it trails the response).
+    pub tail_energy_j: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_flat_then_exponential() {
+        let p = LinkParams::preset(LinkKind::Wlan);
+        assert_eq!(p.rate_mbps(-50.0), p.peak_mbps);
+        assert_eq!(p.rate_mbps(-65.0), p.peak_mbps);
+        let r70 = p.rate_mbps(-70.0);
+        let r80 = p.rate_mbps(-80.0);
+        let r90 = p.rate_mbps(-90.0);
+        assert!(r70 > r80 && r80 > r90);
+        // exponential: equal ratios for equal dBm steps
+        let ratio1 = r70 / r80;
+        let ratio2 = r80 / r90;
+        assert!((ratio1 - ratio2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weak_signal_costs_power() {
+        let p = LinkParams::preset(LinkKind::Wlan);
+        assert!(p.tx_power(-85.0) > p.tx_power(-60.0));
+    }
+
+    #[test]
+    fn transfer_time_scales_with_size_and_signal() {
+        let p = LinkParams::preset(LinkKind::Wlan);
+        let fast = p.transfer_s(150.0, -55.0);
+        let slow = p.transfer_s(150.0, -88.0);
+        assert!(slow > 5.0 * fast, "weak-signal tx should blow up: {fast} vs {slow}");
+        assert!(p.transfer_s(300.0, -55.0) > p.transfer_s(150.0, -55.0));
+    }
+
+    #[test]
+    fn p2p_cheaper_than_wlan_at_strong_signal() {
+        // §3.1: local-edge transmission overhead < edge-cloud.
+        let wlan = LinkParams::preset(LinkKind::Wlan);
+        let p2p = LinkParams::preset(LinkKind::P2p);
+        assert!(p2p.transfer_s(150.0, -55.0) < wlan.transfer_s(150.0, -55.0));
+        assert!(p2p.tx_power_w < wlan.tx_power_w);
+    }
+
+    #[test]
+    fn pinned_rssi_never_moves() {
+        let mut r = RssiProcess::pinned(-70.0);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10 {
+            assert_eq!(r.step(&mut rng), -70.0);
+        }
+        assert!(!r.is_weak());
+        assert!(RssiProcess::pinned(-80.0).is_weak());
+    }
+
+    #[test]
+    fn gaussian_rssi_wanders_within_clamp() {
+        let mut r = RssiProcess::gaussian(-70.0, 8.0);
+        let mut rng = Pcg64::new(2);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let v = r.step(&mut rng);
+            assert!((-95.0..=-30.0).contains(&v));
+            distinct.insert((v * 1000.0) as i64);
+        }
+        assert!(distinct.len() > 50, "should actually wander");
+    }
+
+    #[test]
+    fn round_trip_uses_current_signal() {
+        let strong = Link::new(LinkKind::Wlan, RssiProcess::pinned(-55.0));
+        let weak = Link::new(LinkKind::Wlan, RssiProcess::pinned(-88.0));
+        let rt_s = strong.round_trip(150.0, 4.0);
+        let rt_w = weak.round_trip(150.0, 4.0);
+        assert!(rt_w.tx_s > rt_s.tx_s);
+        assert!(rt_w.tx_power_w > rt_s.tx_power_w);
+    }
+}

@@ -1,0 +1,429 @@
+//! `artifacts/manifest.json` loader: a minimal JSON parser (offline cache
+//! has no serde) covering the subset aot.py emits — objects, arrays,
+//! strings, numbers — plus the typed [`Manifest`] view the runtime uses to
+//! locate each (model, precision) HLO artifact.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::types::Precision;
+
+// ---------------------------------------------------------------------------
+// minimal JSON value + parser
+// ---------------------------------------------------------------------------
+
+/// JSON subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with byte offset.
+#[derive(Debug)]
+pub struct JsonError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, JsonError> {
+        Err(JsonError { offset: self.pos, message: msg.to_string() })
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected '{}'", c as char))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => self.err("unexpected character"),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected '{word}'"))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.eat(b'{')?;
+        let mut map = HashMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => return self.err("expected ',' or '}'"),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return self.err("expected ',' or ']'"),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'u') => {
+                            // \uXXXX (BMP only — ample for our manifests)
+                            if self.pos + 4 >= self.bytes.len() {
+                                return self.err("bad \\u escape");
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                    .map_err(|_| JsonError {
+                                        offset: self.pos,
+                                        message: "bad \\u escape".into(),
+                                    })?;
+                            let cp = u32::from_str_radix(hex, 16).map_err(|_| JsonError {
+                                offset: self.pos,
+                                message: "bad \\u escape".into(),
+                            })?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return self.err("bad escape"),
+                    }
+                    self.pos += 1;
+                }
+                Some(c) => {
+                    // copy raw utf-8 bytes verbatim
+                    let start = self.pos;
+                    while self.pos < self.bytes.len()
+                        && self.bytes[self.pos] != b'"'
+                        && self.bytes[self.pos] != b'\\'
+                    {
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|_| {
+                            JsonError { offset: start, message: "invalid utf-8".into() }
+                        })?,
+                    );
+                    let _ = c;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError { offset: start, message: format!("bad number '{s}'") })
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Json, JsonError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.err("trailing characters");
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// typed manifest
+// ---------------------------------------------------------------------------
+
+/// One AOT artifact (a (model, precision) pair).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub precision: Precision,
+    pub artifact: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub s_conv: u32,
+    pub s_fc: u32,
+    pub s_rc: u32,
+    /// Tiny-scale MACs of the artifact itself (normalization anchor).
+    pub macs: u64,
+    pub bytes: u64,
+}
+
+/// Loaded `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`; artifact paths are joined to `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = fs::read_to_string(dir.join("manifest.json"))?;
+        let root = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut entries = Vec::new();
+        let models = root
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'models' array"))?;
+        for m in models {
+            let precision = match m.get("precision").and_then(Json::as_str) {
+                Some("fp32") => Precision::Fp32,
+                Some("fp16") => Precision::Fp16,
+                Some("int8") => Precision::Int8,
+                other => anyhow::bail!("bad precision {other:?}"),
+            };
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry missing name"))?
+                .to_string();
+            let artifact = dir.join(
+                m.get("artifact")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("entry missing artifact"))?,
+            );
+            let shape = m
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).map(|f| f as usize).collect())
+                .unwrap_or_default();
+            let num = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            entries.push(ArtifactEntry {
+                name,
+                precision,
+                artifact,
+                input_shape: shape,
+                s_conv: num("s_conv") as u32,
+                s_fc: num("s_fc") as u32,
+                s_rc: num("s_rc") as u32,
+                macs: num("macs") as u64,
+                bytes: num("bytes") as u64,
+            });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Default location relative to the repo root / current dir.
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = Path::new(cand);
+            if p.join("manifest.json").exists() {
+                return Manifest::load(p);
+            }
+        }
+        anyhow::bail!("artifacts/manifest.json not found — run `make artifacts`")
+    }
+
+    pub fn find(&self, model: &str, precision: Precision) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == model && e.precision == precision)
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("null").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b").unwrap().as_str(), Some("c"));
+    }
+
+    #[test]
+    fn parse_escapes() {
+        let v = parse(r#""a\nb\t\"q\" A""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nb\t\"q\" A"));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("1 2").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn manifest_from_synthetic_json() {
+        let dir = std::env::temp_dir().join("autoscale_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": [{"name": "m", "precision": "int8",
+                "artifact": "m_int8.hlo.txt", "input_shape": [1, 4, 4, 3],
+                "s_conv": 2, "s_fc": 1, "s_rc": 0,
+                "macs": 1000, "bytes": 2000}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("m", Precision::Int8).unwrap();
+        assert_eq!(e.input_shape, vec![1, 4, 4, 3]);
+        assert_eq!(e.s_conv, 2);
+        assert!(m.find("m", Precision::Fp32).is_none());
+        assert_eq!(m.models(), vec!["m"]);
+    }
+
+    #[test]
+    fn manifest_missing_fields_fail() {
+        let dir = std::env::temp_dir().join("autoscale_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"models": [{"precision": "fp32"}]}"#)
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

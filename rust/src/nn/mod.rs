@@ -1,0 +1,15 @@
+//! NN descriptors for the paper's 10 workloads (Table 3) and the artifact
+//! manifest bridge to the AOT-compiled HLO models.
+//!
+//! Two scales coexist deliberately:
+//! * **paper scale** — MAC counts / tensor sizes of the real networks, used
+//!   by the simulator state (`S_MAC` in Table 1 bins at 1000M/2000M MACs)
+//!   and the latency/energy models;
+//! * **tiny scale** — the AOT artifacts' actual MACs (from `manifest.json`),
+//!   used to normalize real PJRT measurements onto the paper-scale models.
+
+pub mod manifest;
+pub mod zoo;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use zoo::{NnDesc, Workload, ZOO};

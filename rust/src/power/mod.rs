@@ -1,0 +1,160 @@
+//! The paper's energy models, Eqs. (1)–(4) of §4.1, verbatim:
+//!
+//! * Eq. (1) — utilization-based CPU energy: per-core busy energy summed
+//!   over frequency residencies plus idle energy.
+//! * Eq. (2) — utilization-based GPU energy: same shape, single unit.
+//! * Eq. (3) — DSP energy: constant pre-measured power × latency.
+//! * Eq. (4) — network energy for remote execution: per-signal-strength
+//!   TX/RX power × measured transmission times + idle power while waiting.
+//!
+//! These are what `R_energy` feeds on; the simulator separately produces a
+//! "true" energy (with extra variance the estimator cannot see) so the
+//! reproduction can report the estimator MAPE (paper: 7.3%).
+
+use crate::device::processor::Processor;
+
+/// Busy/idle residency of one core (or one GPU) during an inference.
+#[derive(Clone, Copy, Debug)]
+pub struct Residency {
+    /// V/F step index the busy time ran at.
+    pub vf_step: u8,
+    /// Seconds busy at that step.
+    pub busy_s: f64,
+    /// Seconds idle within the inference window.
+    pub idle_s: f64,
+}
+
+/// Eq. (1): CPU energy — sum over cores of busy power × busy time per
+/// frequency plus idle power × idle time.
+pub fn cpu_energy_j(proc: &Processor, cores: &[Residency]) -> f64 {
+    cores
+        .iter()
+        .map(|r| {
+            let step = proc.step(r.vf_step);
+            step.busy_power_w * r.busy_s + proc.idle_power_w * r.idle_s
+        })
+        .sum()
+}
+
+/// Eq. (2): GPU energy — single residency.
+pub fn gpu_energy_j(proc: &Processor, r: Residency) -> f64 {
+    let step = proc.step(r.vf_step);
+    step.busy_power_w * r.busy_s + proc.idle_power_w * r.idle_s
+}
+
+/// Eq. (3): DSP energy — constant pre-measured power × inference latency.
+pub fn dsp_energy_j(p_dsp_w: f64, latency_s: f64) -> f64 {
+    p_dsp_w * latency_s
+}
+
+/// Eq. (4) inputs: one remote transaction as seen by the radio.
+#[derive(Clone, Copy, Debug)]
+pub struct NetTransaction {
+    /// TX time and power at the prevailing signal strength.
+    pub tx_s: f64,
+    pub tx_power_w: f64,
+    /// RX time and power.
+    pub rx_s: f64,
+    pub rx_power_w: f64,
+    /// Idle power of the device while waiting for the remote result.
+    pub idle_power_w: f64,
+    /// Whole-transaction latency (>= tx_s + rx_s).
+    pub total_latency_s: f64,
+}
+
+/// Eq. (4): remote-execution energy — TX + RX energy at the current signal
+/// strength plus device idle energy for the remainder of the round trip.
+pub fn network_energy_j(t: &NetTransaction) -> f64 {
+    let wait = (t.total_latency_s - t.tx_s - t.rx_s).max(0.0);
+    t.tx_power_w * t.tx_s + t.rx_power_w * t.rx_s + t.idle_power_w * wait
+}
+
+/// Performance-per-watt over a set of inferences: throughput / avg power
+/// == n_inferences / total energy. This is the paper's PPW metric.
+pub fn ppw(total_energy_j: f64, inferences: usize) -> f64 {
+    if total_energy_j <= 0.0 {
+        0.0
+    } else {
+        inferences as f64 / total_energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Precision, ProcKind};
+
+    fn proc() -> Processor {
+        Processor {
+            kind: ProcKind::Cpu,
+            name: "t",
+            vf: Processor::vf_table(3, 1.0, 2.0, 1.0, 4.0),
+            idle_power_w: 0.1,
+            peak_gmacs: 10.0,
+            mem_bw_gbs: 10.0,
+            precisions: vec![Precision::Fp32],
+            dispatch_overhead_us: 10.0,
+        }
+    }
+
+    #[test]
+    fn eq1_sums_cores_and_residencies() {
+        let p = proc();
+        // core 0: 10 ms busy at max (4 W) + 5 ms idle
+        // core 1: 20 ms busy at min (1 W) + 0 idle
+        let e = cpu_energy_j(
+            &p,
+            &[
+                Residency { vf_step: 0, busy_s: 0.010, idle_s: 0.005 },
+                Residency { vf_step: 2, busy_s: 0.020, idle_s: 0.0 },
+            ],
+        );
+        let expect = 4.0 * 0.010 + 0.1 * 0.005 + 1.0 * 0.020;
+        assert!((e - expect).abs() < 1e-12, "{e} vs {expect}");
+    }
+
+    #[test]
+    fn eq2_single_unit() {
+        let p = proc();
+        let e = gpu_energy_j(&p, Residency { vf_step: 0, busy_s: 0.01, idle_s: 0.01 });
+        assert!((e - (4.0 * 0.01 + 0.1 * 0.01)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_constant_power() {
+        assert!((dsp_energy_j(1.8, 0.05) - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq4_includes_wait_idle() {
+        let t = NetTransaction {
+            tx_s: 0.01,
+            tx_power_w: 1.5,
+            rx_s: 0.005,
+            rx_power_w: 1.0,
+            idle_power_w: 0.2,
+            total_latency_s: 0.05,
+        };
+        let expect = 1.5 * 0.01 + 1.0 * 0.005 + 0.2 * (0.05 - 0.015);
+        assert!((network_energy_j(&t) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq4_wait_clamped_nonnegative() {
+        let t = NetTransaction {
+            tx_s: 0.03,
+            tx_power_w: 1.0,
+            rx_s: 0.03,
+            rx_power_w: 1.0,
+            idle_power_w: 0.2,
+            total_latency_s: 0.05, // < tx+rx: degenerate, wait clamps to 0
+        };
+        assert!((network_energy_j(&t) - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ppw_counts_inferences_per_joule() {
+        assert!((ppw(2.0, 10) - 5.0).abs() < 1e-12);
+        assert_eq!(ppw(0.0, 10), 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Core shared types: execution sites, processors, precisions and actions.
+//!
+//! An [`Action`] is the paper's RL action — an execution target: which site
+//! (local device / connected edge / cloud), which processor on that site,
+//! at which DVFS V/F step, with which quantization precision (§4.1 "Action",
+//! augmented per §5.3 with DVFS and quantization knobs).
+
+use std::fmt;
+
+/// Where the inference runs (scale-up on-device vs scale-out).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Site {
+    /// On the mobile device itself.
+    Local,
+    /// A nearby device reachable over the peer-to-peer link (Wi-Fi Direct).
+    ConnectedEdge,
+    /// The cloud server over the WLAN link.
+    Cloud,
+}
+
+impl Site {
+    pub const ALL: [Site; 3] = [Site::Local, Site::ConnectedEdge, Site::Cloud];
+}
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Site::Local => write!(f, "local"),
+            Site::ConnectedEdge => write!(f, "connected-edge"),
+            Site::Cloud => write!(f, "cloud"),
+        }
+    }
+}
+
+/// Processor classes present in the edge-cloud fleet (paper Table 2 + §5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProcKind {
+    Cpu,
+    Gpu,
+    Dsp,
+}
+
+impl ProcKind {
+    pub const ALL: [ProcKind; 3] = [ProcKind::Cpu, ProcKind::Gpu, ProcKind::Dsp];
+}
+
+impl fmt::Display for ProcKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProcKind::Cpu => write!(f, "cpu"),
+            ProcKind::Gpu => write!(f, "gpu"),
+            ProcKind::Dsp => write!(f, "dsp"),
+        }
+    }
+}
+
+/// Quantization precision of the deployed executable (§2.2, §5.3).
+///
+/// Paper mapping: CPU supports FP32+INT8, GPU FP32+FP16, DSP INT8 only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 3] = [Precision::Fp32, Precision::Fp16, Precision::Int8];
+
+    /// Artifact suffix used by `aot.py` (`<model>_<precision>.hlo.txt`).
+    pub fn artifact_tag(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Bytes per weight element — drives the memory-bandwidth side of the
+    /// latency model (INT8 executables move 4x fewer weight bytes).
+    pub fn weight_bytes(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Fp16 => 2.0,
+            Precision::Int8 => 1.0,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.artifact_tag())
+    }
+}
+
+/// One execution-scaling decision (the RL action).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Action {
+    pub site: Site,
+    pub proc: ProcKind,
+    /// DVFS step index into the processor's V/F table; 0 = max frequency.
+    /// Remote sites run at a fixed operating point; use 0.
+    pub vf_step: u8,
+    pub precision: Precision,
+}
+
+impl Action {
+    pub fn new(site: Site, proc: ProcKind, vf_step: u8, precision: Precision) -> Self {
+        Action { site, proc, vf_step, precision }
+    }
+
+    /// Shorthand for the common "max frequency" actions.
+    pub fn local(proc: ProcKind, precision: Precision) -> Self {
+        Action::new(Site::Local, proc, 0, precision)
+    }
+
+    pub fn cloud() -> Self {
+        Action::new(Site::Cloud, ProcKind::Gpu, 0, Precision::Fp32)
+    }
+
+    pub fn connected_edge() -> Self {
+        Action::new(Site::ConnectedEdge, ProcKind::Gpu, 0, Precision::Fp16)
+    }
+}
+
+impl fmt::Display for Action {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{}@vf{}/{}",
+            self.site, self.proc, self.vf_step, self.precision
+        )
+    }
+}
+
+/// Which physical device a simulated run is anchored on (paper §5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceId {
+    /// Xiaomi Mi 8 Pro — high-end, CPU+GPU+DSP.
+    Mi8Pro,
+    /// Samsung Galaxy S10e — high-end, CPU+GPU (no DSP).
+    GalaxyS10e,
+    /// Motorola Moto X Force — mid-end, CPU+GPU.
+    MotoXForce,
+    /// Samsung Galaxy Tab S6 — the locally connected edge device.
+    TabS6,
+    /// Xeon E5-2640 + P100 — the cloud server.
+    CloudServer,
+}
+
+impl DeviceId {
+    /// The three handsets the paper evaluates on.
+    pub const PHONES: [DeviceId; 3] =
+        [DeviceId::Mi8Pro, DeviceId::GalaxyS10e, DeviceId::MotoXForce];
+}
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceId::Mi8Pro => write!(f, "Mi8Pro"),
+            DeviceId::GalaxyS10e => write!(f, "GalaxyS10e"),
+            DeviceId::MotoXForce => write!(f, "MotoXForce"),
+            DeviceId::TabS6 => write!(f, "TabS6"),
+            DeviceId::CloudServer => write!(f, "CloudServer"),
+        }
+    }
+}
+
+/// Outcome of one executed inference — the measurements the reward consumes.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// End-to-end latency seen by the requesting app (seconds).
+    pub latency_s: f64,
+    /// Estimated energy per Eq.(1)-(4) (joules) — what the agent sees.
+    pub energy_est_j: f64,
+    /// "Ground-truth" simulator energy (joules) — for estimator MAPE only.
+    pub energy_true_j: f64,
+    /// Top-1 accuracy of the deployed (NN, precision, site) combination.
+    pub accuracy: f64,
+}
+
+impl Measurement {
+    /// Performance-per-watt in the paper's sense: inferences/sec/watt
+    /// = 1 / (latency * power) = 1 / energy ... per inference.
+    pub fn ppw(&self) -> f64 {
+        if self.energy_true_j <= 0.0 {
+            0.0
+        } else {
+            1.0 / self.energy_true_j
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_display_roundtrip_fields() {
+        let a = Action::local(ProcKind::Gpu, Precision::Fp16);
+        assert_eq!(a.site, Site::Local);
+        assert_eq!(format!("{a}"), "local/gpu@vf0/fp16");
+    }
+
+    #[test]
+    fn precision_bytes_ordered() {
+        assert!(Precision::Fp32.weight_bytes() > Precision::Fp16.weight_bytes());
+        assert!(Precision::Fp16.weight_bytes() > Precision::Int8.weight_bytes());
+    }
+
+    #[test]
+    fn ppw_is_inverse_energy() {
+        let m = Measurement {
+            latency_s: 0.01,
+            energy_est_j: 0.5,
+            energy_true_j: 0.5,
+            accuracy: 0.7,
+        };
+        assert!((m.ppw() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ppw_zero_energy_guarded() {
+        let m = Measurement {
+            latency_s: 0.0,
+            energy_est_j: 0.0,
+            energy_true_j: 0.0,
+            accuracy: 0.0,
+        };
+        assert_eq!(m.ppw(), 0.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Criterion-style measurement loop (the offline cache has no `criterion`).
+//! Warms up, runs timed batches until a target measurement time, and reports
+//! mean / median / p95 with outlier-robust statistics. All `cargo bench`
+//! targets (`harness = false`) use this.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_s: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples_s)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12} {:>12} {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_time(self.mean_s()),
+            fmt_time(self.median_s()),
+            fmt_time(self.p95_s()),
+            self.samples_s.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Human-readable time with unit scaling.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark driver. `warmup_s`/`measure_s` bound wall-clock cost.
+pub struct Bencher {
+    pub warmup_s: f64,
+    pub measure_s: f64,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_s: 0.3, measure_s: 1.0, max_samples: 60 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_s: 0.05, measure_s: 0.2, max_samples: 20 }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup and iteration-count calibration.
+        let cal_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while cal_start.elapsed().as_secs_f64() < self.warmup_s {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup_s / warm_iters.max(1) as f64;
+        // Aim for ~`max_samples` samples within measure_s.
+        let iters_per_sample =
+            ((self.measure_s / self.max_samples as f64 / per_iter.max(1e-9)) as u64).max(1);
+
+        let mut samples = Vec::new();
+        let run_start = Instant::now();
+        while run_start.elapsed().as_secs_f64() < self.measure_s
+            && samples.len() < self.max_samples
+        {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples_s: samples,
+            iters_per_sample,
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::quick();
+        let r = b.bench("spin", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(!r.samples_s.is_empty());
+        assert!(r.mean_s() > 0.0);
+        assert!(r.median_s() <= r.p95_s() * 1.0001);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! PRNG (no `rand`), statistics, a virtual clock, a mini property-testing
+//! harness (no `proptest`), a benchmark timer (no `criterion`) and report
+//! helpers.
+
+pub mod bench;
+pub mod clock;
+pub mod ptest;
+pub mod report;
+pub mod rng;
+pub mod stats;
+
+pub use clock::VirtualClock;
+pub use rng::Pcg64;

@@ -1,0 +1,175 @@
+//! Mini property-based testing harness (the offline cache has no
+//! `proptest`/`quickcheck`). Provides seeded case generation with automatic
+//! input shrinking on failure, used by the coordinator/agent invariant tests.
+//!
+//! Usage (`no_run`: rustdoc test binaries don't inherit the xla rpath;
+//! the same code is exercised by this module's unit tests):
+//! ```no_run
+//! use autoscale::ptassert;
+//! use autoscale::util::ptest::Runner;
+//! Runner::new("sum_commutes", 200).run(|g| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     ptassert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Assertion macro for property bodies: returns Err(message) on failure so
+/// the runner can report the seed and shrink.
+#[macro_export]
+macro_rules! ptassert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Per-case value generator handed to the property body.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size hint in [0,1]: early cases are "small", later cases larger —
+    /// the classic quickcheck growth schedule, which doubles as shrinking
+    /// when replaying with a reduced size.
+    size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1).min(hi - lo) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let hi_eff = lo + (hi - lo) * self.size.max(0.01);
+        self.rng.range(lo, hi_eff)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Property runner: N seeded cases, failure reporting with seed + shrink.
+pub struct Runner {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &'static str, cases: usize) -> Self {
+        Runner { name, cases, seed: 0xA5C0DE }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property; panics (test failure) with the seed and the
+    /// smallest size at which it still fails.
+    pub fn run<F>(&self, prop: F)
+    where
+        F: Fn(&mut Gen) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let size = ((case + 1) as f64 / self.cases as f64).min(1.0);
+            if let Err(msg) = self.run_one(&prop, case as u64, size) {
+                // Shrink: retry same case seed with smaller sizes.
+                let mut min_size = size;
+                let mut min_msg = msg;
+                let mut s = size / 2.0;
+                while s > 0.01 {
+                    match self.run_one(&prop, case as u64, s) {
+                        Err(m) => {
+                            min_size = s;
+                            min_msg = m;
+                            s /= 2.0;
+                        }
+                        Ok(()) => break,
+                    }
+                }
+                panic!(
+                    "property '{}' failed (seed={}, case={}, shrunk size={:.3}): {}",
+                    self.name, self.seed, case, min_size, min_msg
+                );
+            }
+        }
+    }
+
+    fn run_one<F>(&self, prop: &F, case: u64, size: f64) -> Result<(), String>
+    where
+        F: Fn(&mut Gen) -> Result<(), String>,
+    {
+        let mut g = Gen {
+            rng: Pcg64::with_stream(self.seed, case),
+            size,
+        };
+        prop(&mut g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::new("abs_nonneg", 100).run(|g| {
+            let x = g.f64_in(-100.0, 100.0);
+            ptassert!(x.abs() >= 0.0, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always_fails")]
+    fn failing_property_panics_with_name() {
+        Runner::new("always_fails", 10).run(|_| Err("boom".into()));
+    }
+
+    #[test]
+    fn generator_respects_bounds() {
+        Runner::new("bounds", 200).run(|g| {
+            let n = g.usize_in(3, 9);
+            ptassert!((3..=9).contains(&n), "n={n}");
+            let x = g.f64_in(-1.0, 1.0);
+            ptassert!((-1.0..1.0).contains(&x), "x={x}");
+            let v = g.vec_f64(5, 0.0, 1.0);
+            ptassert!(v.len() <= 5, "len={}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed: u64| {
+            let out = std::cell::RefCell::new(Vec::new());
+            Runner::new("det", 20).seed(seed).run(|g| {
+                out.borrow_mut().push(g.f64_in(0.0, 1.0));
+                Ok(())
+            });
+            out.into_inner()
+        };
+        assert_eq!(collect(9), collect(9));
+        assert_ne!(collect(9), collect(10));
+    }
+}

@@ -1,0 +1,154 @@
+//! Report/CSV emission for the experiment harness: every paper figure is
+//! regenerated as an aligned console table plus a CSV file under `reports/`.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A tabular experiment result: header + rows, printable and CSV-dumpable.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Aligned console rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV (RFC-4180-ish quoting) to `dir/<slug>.csv`.
+    pub fn write_csv(&self, dir: &Path, slug: &str) -> std::io::Result<std::path::PathBuf> {
+        fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{slug}.csv"));
+        let mut f = fs::File::create(&path)?;
+        writeln!(f, "{}", csv_line(&self.columns))?;
+        for row in &self.rows {
+            writeln!(f, "{}", csv_line(row))?;
+        }
+        Ok(path)
+    }
+}
+
+fn csv_line(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Format helper: fixed-precision float cell.
+pub fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Format helper: percentage cell.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+/// Format helper: "x" multiplier cell.
+pub fn times(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["name", "v"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        assert_eq!(
+            csv_line(&["a,b".into(), "plain".into(), "q\"q".into()]),
+            "\"a,b\",plain,\"q\"\"q\""
+        );
+    }
+
+    #[test]
+    fn csv_written(){
+        let dir = std::env::temp_dir().join("autoscale_report_test");
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        let p = t.write_csv(&dir, "demo").unwrap();
+        assert!(p.exists());
+        let content = std::fs::read_to_string(p).unwrap();
+        assert!(content.starts_with("a\n"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.979), "97.9%");
+        assert_eq!(times(9.8), "9.80x");
+    }
+}

@@ -1,0 +1,139 @@
+//! Failure-injection tests: the coordinator must degrade gracefully when
+//! the environment turns hostile — dead radios, corrupt/missing artifacts,
+//! degenerate action catalogues, broken Q-table files.
+
+use autoscale::agent::qlearn::{AutoScaleAgent, QTable};
+use autoscale::configsys::runconfig::{EnvKind, RunConfig};
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::policy::Policy;
+use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::exec::latency::RunContext;
+use autoscale::net::{Link, LinkKind, RssiProcess};
+use autoscale::nn::manifest::Manifest;
+use autoscale::runtime::Engine;
+use autoscale::types::{Action, DeviceId, Precision, ProcKind};
+
+#[test]
+fn radio_blackout_keeps_remote_costs_finite_and_oracle_local() {
+    // RSSI at the physical clamp floor: rates collapse but never to zero.
+    let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+    env.sim.wlan = Link::new(LinkKind::Wlan, RssiProcess::pinned(-95.0));
+    env.sim.p2p = Link::new(LinkKind::P2p, RssiProcess::pinned(-95.0));
+    let nn = autoscale::nn::zoo::by_name("inception_v1").unwrap();
+    let m = env.sim.run(nn, Action::cloud(), &RunContext::default());
+    assert!(m.latency_s.is_finite() && m.energy_true_j.is_finite());
+    assert!(
+        m.latency_s > 0.3,
+        "blackout transfers should be order-of-seconds ({})",
+        m.latency_s
+    );
+
+    // The oracle routes vision workloads (hundreds of KB per frame)
+    // on-device under blackout. (Tiny-payload NLP can legitimately stay
+    // remote: MobileBERT ships 4 KB, which survives even a 2 Mbps link.)
+    let mut cfg = RunConfig::default();
+    cfg.seed = 2;
+    let mut server = Server::new(
+        env,
+        Policy::Opt,
+        ServeConfig {
+            run: cfg,
+            models: vec!["inception_v1", "resnet50", "ssd_mobilenet_v2"],
+        },
+    );
+    let metrics = server.serve(30);
+    let sel = metrics.selections();
+    assert_eq!(sel.rate("Cloud"), 0.0, "no cloud for vision under blackout");
+    assert_eq!(sel.rate("Connected Edge"), 0.0);
+}
+
+#[test]
+fn serving_survives_missing_engine_artifacts() {
+    // Manifest points at a file that does not exist: engine errors must be
+    // swallowed by the serving loop (simulation continues ungrounded).
+    let dir = std::env::temp_dir().join("autoscale_missing_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"models": [{"name": "mobilenet_v1", "precision": "fp32",
+            "artifact": "nonexistent.hlo.txt", "input_shape": [1, 16, 16, 8],
+            "s_conv": 14, "s_fc": 1, "s_rc": 0, "macs": 1, "bytes": 1}]}"#,
+    )
+    .unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::new(manifest).unwrap();
+    assert!(engine.execute("mobilenet_v1", Precision::Fp32, 0).is_err());
+
+    let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 3);
+    let mut cfg = RunConfig::default();
+    cfg.seed = 3;
+    let mut server = Server::new(
+        env,
+        Policy::EdgeBest,
+        ServeConfig { run: cfg, models: vec!["mobilenet_v1"] },
+    )
+    .with_engine(&mut engine);
+    let metrics = server.serve(10);
+    assert_eq!(metrics.n(), 10, "serving must not abort on engine failure");
+}
+
+#[test]
+fn corrupt_qtable_files_are_rejected_not_panicked() {
+    let dir = std::env::temp_dir().join("autoscale_corrupt_qtable");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, content) in [
+        ("empty.txt", ""),
+        ("badmagic.txt", "not-a-qtable\n1 2 3\n"),
+        ("badcount.txt", "autoscale-qtable-v3\n3072 2 5\n0 1.0 1\n"),
+        ("badindex.txt", "autoscale-qtable-v3\n3072 2 1\n999999999 1.0 1\n"),
+    ] {
+        let p = dir.join(name);
+        std::fs::write(&p, content).unwrap();
+        assert!(QTable::load(&p).is_err(), "{name} should be rejected");
+    }
+}
+
+#[test]
+fn single_action_catalogue_still_serves() {
+    let actions = vec![Action::local(ProcKind::Cpu, Precision::Fp32)];
+    let agent = AutoScaleAgent::new(actions, Default::default(), 4);
+    let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S2CpuHog, 4);
+    let mut cfg = RunConfig::default();
+    cfg.seed = 4;
+    let mut server =
+        Server::new(env, Policy::AutoScale(agent), ServeConfig { run: cfg, models: vec![] });
+    let metrics = server.serve(20);
+    assert_eq!(metrics.n(), 20);
+    // everything lands on the only action
+    assert!((metrics.selections().rate("Edge(CPU FP32) w/DVFS") - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn requesting_absent_coprocessor_falls_back_to_cpu() {
+    // S10e has no DSP: a DSP action must still execute (CPU fallback).
+    let mut env = Environment::build(DeviceId::GalaxyS10e, EnvKind::S1NoVariance, 5);
+    let nn = autoscale::nn::zoo::by_name("mobilenet_v1").unwrap();
+    let m = env.sim.run(
+        nn,
+        Action::local(ProcKind::Dsp, Precision::Int8),
+        &RunContext::default(),
+    );
+    assert!(m.latency_s.is_finite() && m.energy_true_j > 0.0);
+}
+
+#[test]
+fn extreme_interference_is_survivable() {
+    let mut env = Environment::build(DeviceId::MotoXForce, EnvKind::S1NoVariance, 6);
+    let nn = autoscale::nn::zoo::by_name("inception_v3").unwrap();
+    let ctx = RunContext {
+        interference: autoscale::interference::Interference {
+            cpu_util: 100.0,
+            mem_pressure: 100.0,
+        },
+        thermal_cap: 0.5,
+        compute_factor: 4.0,
+    };
+    let m = env.sim.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
+    assert!(m.latency_s.is_finite() && m.latency_s > 0.0);
+    assert!(m.energy_true_j.is_finite());
+}

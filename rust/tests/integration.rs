@@ -1,0 +1,161 @@
+//! Cross-module integration tests: the full coordinator loop over the
+//! simulator, agent learning quality, baseline orderings, and config-driven
+//! runs — everything short of the PJRT runtime (covered in runtime_e2e.rs).
+
+use autoscale::agent::qlearn::AutoScaleAgent;
+use autoscale::configsys::runconfig::{EnvKind, Scenario};
+use autoscale::coordinator::policy::{action_catalogue, Policy};
+use autoscale::experiments::common::{run_episode, train_autoscale};
+use autoscale::types::DeviceId;
+
+/// Helper: evaluate a fresh fixed policy over one env.
+fn episode(policy: Policy, env: EnvKind, seed: u64) -> autoscale::coordinator::metrics::EpisodeMetrics {
+    run_episode(
+        DeviceId::Mi8Pro,
+        env,
+        Scenario::NonStreaming,
+        policy,
+        vec![],
+        150,
+        0.5,
+        seed,
+    )
+}
+
+#[test]
+fn serving_loop_produces_complete_outcomes() {
+    let m = episode(Policy::EdgeCpuFp32, EnvKind::S1NoVariance, 1);
+    assert_eq!(m.n(), 150);
+    for o in &m.outcomes {
+        assert!(o.measurement.latency_s > 0.0);
+        assert!(o.measurement.energy_true_j > 0.0);
+        assert!(o.measurement.accuracy > 0.0 && o.measurement.accuracy <= 1.0);
+        assert!(o.qos_target_s > 0.0);
+    }
+}
+
+#[test]
+fn identical_seeds_reproduce_identical_episodes() {
+    let a = episode(Policy::EdgeBest, EnvKind::D3RandomWlan, 42);
+    let b = episode(Policy::EdgeBest, EnvKind::D3RandomWlan, 42);
+    assert_eq!(a.n(), b.n());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.action, y.action);
+        assert!((x.measurement.latency_s - y.measurement.latency_s).abs() < 1e-15);
+        assert!((x.measurement.energy_true_j - y.measurement.energy_true_j).abs() < 1e-15);
+    }
+}
+
+#[test]
+fn different_seeds_differ_under_variance() {
+    // Cloud latency depends on the Gaussian RSSI walk, which is seeded.
+    let a = episode(Policy::CloudAlways, EnvKind::D3RandomWlan, 1);
+    let b = episode(Policy::CloudAlways, EnvKind::D3RandomWlan, 2);
+    let same = a
+        .outcomes
+        .iter()
+        .zip(&b.outcomes)
+        .all(|(x, y)| (x.measurement.latency_s - y.measurement.latency_s).abs() < 1e-15);
+    assert!(!same, "stochastic environments must vary across seeds");
+}
+
+#[test]
+fn opt_dominates_every_fixed_baseline() {
+    for env in [EnvKind::S1NoVariance, EnvKind::S3MemHog, EnvKind::S4WeakWlan] {
+        let opt = episode(Policy::Opt, env, 5).ppw();
+        for mk in [
+            || Policy::EdgeCpuFp32,
+            || Policy::EdgeBest,
+            || Policy::CloudAlways,
+            || Policy::ConnectedEdgeAlways,
+        ] {
+            let base = episode(mk(), env, 5).ppw();
+            assert!(
+                opt >= base * 0.98,
+                "{env:?}: Opt {opt} must dominate baseline {base}"
+            );
+        }
+    }
+}
+
+#[test]
+fn trained_autoscale_approaches_opt_in_s1() {
+    let agent = train_autoscale(
+        DeviceId::Mi8Pro,
+        &[EnvKind::S1NoVariance],
+        Scenario::NonStreaming,
+        0.5,
+        12,
+        9,
+    );
+    let mut frozen = AutoScaleAgent::with_transfer(agent.actions.clone(), agent.params, 9, &agent);
+    frozen.freeze();
+    let autoscale = episode(Policy::AutoScale(frozen), EnvKind::S1NoVariance, 6).ppw();
+    let opt = episode(Policy::Opt, EnvKind::S1NoVariance, 6).ppw();
+    let cpu = episode(Policy::EdgeCpuFp32, EnvKind::S1NoVariance, 6).ppw();
+    assert!(autoscale > cpu, "beats the CPU baseline");
+    assert!(autoscale > 0.6 * opt, "within striking distance of Opt: {autoscale} vs {opt}");
+    assert!(autoscale <= opt * 1.02, "cannot exceed the oracle");
+}
+
+#[test]
+fn qos_generally_respected_by_opt_in_quiet_env() {
+    let m = episode(Policy::Opt, EnvKind::S1NoVariance, 7);
+    assert!(
+        m.qos_violation_ratio() < 0.10,
+        "Opt violates QoS {:.1}% of the time in S1",
+        m.qos_violation_ratio() * 100.0
+    );
+}
+
+#[test]
+fn weak_wifi_forces_opt_off_the_cloud() {
+    let strong = episode(Policy::Opt, EnvKind::S1NoVariance, 8);
+    let weak = episode(Policy::Opt, EnvKind::S4WeakWlan, 8);
+    let cloud_rate = |m: &autoscale::coordinator::metrics::EpisodeMetrics| {
+        m.selections().rate("Cloud")
+    };
+    assert!(
+        cloud_rate(&weak) < cloud_rate(&strong) + 1e-9,
+        "weak Wi-Fi must not increase cloud selection"
+    );
+}
+
+#[test]
+fn catalogue_actions_all_executable() {
+    // Every action in the catalogue must produce a finite measurement.
+    let dev = DeviceId::Mi8Pro;
+    let catalogue = action_catalogue(&autoscale::device::presets::device(dev));
+    let mut env = autoscale::coordinator::envs::Environment::build(dev, EnvKind::S1NoVariance, 3);
+    let nn = autoscale::nn::zoo::by_name("resnet50").unwrap();
+    for a in catalogue {
+        let m = env.sim.run(nn, a, &autoscale::exec::latency::RunContext::default());
+        assert!(m.latency_s.is_finite() && m.latency_s > 0.0, "{a}");
+        assert!(m.energy_true_j.is_finite() && m.energy_true_j > 0.0, "{a}");
+    }
+}
+
+#[test]
+fn config_file_round_trip_drives_a_run() {
+    let dir = std::env::temp_dir().join("autoscale_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "device = \"GalaxyS10e\"\nenv = \"S3\"\nrequests = 60\nseed = 11\n[agent]\nepsilon = 0.2\n",
+    )
+    .unwrap();
+    let cfg = autoscale::configsys::runconfig::RunConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.device, DeviceId::GalaxyS10e);
+    let m = run_episode(
+        cfg.device,
+        cfg.env,
+        cfg.scenario,
+        Policy::EdgeBest,
+        vec![],
+        cfg.requests,
+        cfg.accuracy_target,
+        cfg.seed,
+    );
+    assert_eq!(m.n(), 60);
+}

@@ -1,0 +1,246 @@
+//! Property-based tests (via the from-scratch `util::ptest` harness) on the
+//! coordinator-level invariants: routing/action validity, energy-model
+//! monotonicities, reward shaping, state discretization stability, and the
+//! network model's physical sanity across randomized inputs.
+
+use autoscale::agent::reward::{reward, RewardParams};
+use autoscale::agent::state::{State, StateObs};
+use autoscale::configsys::runconfig::EnvKind;
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::policy::action_catalogue;
+use autoscale::exec::latency::RunContext;
+use autoscale::interference::Interference;
+use autoscale::net::{LinkKind, LinkParams};
+use autoscale::nn::zoo::ZOO;
+use autoscale::ptassert;
+use autoscale::types::{DeviceId, Measurement};
+use autoscale::util::ptest::Runner;
+
+#[test]
+fn prop_simulator_outputs_always_physical() {
+    Runner::new("simulator_physical", 150).run(|g| {
+        let dev = *g.choose(&DeviceId::PHONES);
+        let envs = [
+            EnvKind::S1NoVariance,
+            EnvKind::S2CpuHog,
+            EnvKind::S3MemHog,
+            EnvKind::S4WeakWlan,
+            EnvKind::S5WeakP2p,
+        ];
+        let env_kind = *g.choose(&envs);
+        let seed = g.usize_in(0, 10_000) as u64;
+        let mut env = Environment::build(dev, env_kind, seed);
+        let catalogue = action_catalogue(&env.sim.local);
+        let action = *g.choose(&catalogue);
+        let nn = g.choose(&ZOO);
+        let ctx = RunContext {
+            interference: Interference {
+                cpu_util: g.f64_in(0.0, 100.0),
+                mem_pressure: g.f64_in(0.0, 100.0),
+            },
+            thermal_cap: g.f64_in(0.5, 1.0),
+            compute_factor: g.f64_in(0.25, 4.0),
+        };
+        let m = env.sim.run(nn, action, &ctx);
+        ptassert!(m.latency_s.is_finite() && m.latency_s > 0.0, "latency {m:?}");
+        ptassert!(m.energy_true_j.is_finite() && m.energy_true_j > 0.0, "energy {m:?}");
+        ptassert!(m.energy_est_j > 0.0, "estimate {m:?}");
+        ptassert!((0.0..=1.0).contains(&m.accuracy), "accuracy {m:?}");
+        // estimate and truth within the bounded noise band
+        let ratio = m.energy_true_j / m.energy_est_j;
+        ptassert!((0.5..=2.0).contains(&ratio), "estimator off by {ratio}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_interference_never_speeds_up_local_cpu() {
+    Runner::new("interference_monotone", 120).run(|g| {
+        let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+        let nn = g.choose(&ZOO);
+        let cpu = env.sim.local.proc(autoscale::types::ProcKind::Cpu).unwrap().clone();
+        let lo = g.f64_in(0.0, 50.0);
+        let hi = lo + g.f64_in(0.0, 50.0);
+        let lat = |u: f64, env: &Environment| {
+            env.sim.compute_latency_s(
+                nn,
+                &cpu,
+                0,
+                autoscale::types::Precision::Fp32,
+                &RunContext {
+                    interference: Interference { cpu_util: u, mem_pressure: 0.0 },
+                    ..Default::default()
+                },
+                autoscale::types::Site::Local,
+            )
+        };
+        let l_lo = lat(lo, &env);
+        let l_hi = lat(hi, &env);
+        ptassert!(l_hi >= l_lo - 1e-12, "util {lo}->{hi} gave {l_lo}->{l_hi}");
+        let _ = &mut env;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weaker_signal_never_cheapens_remote() {
+    Runner::new("signal_monotone", 150).run(|g| {
+        let p = LinkParams::preset(if g.bool() { LinkKind::Wlan } else { LinkKind::P2p });
+        let strong = g.f64_in(-80.0, -40.0);
+        let weak = strong - g.f64_in(0.0, 15.0);
+        let kb = g.f64_in(1.0, 500.0);
+        ptassert!(
+            p.transfer_s(kb, weak) >= p.transfer_s(kb, strong) - 1e-12,
+            "transfer time must not shrink as signal weakens"
+        );
+        ptassert!(
+            p.tx_power(weak) >= p.tx_power(strong) - 1e-12,
+            "tx power must not shrink as signal weakens"
+        );
+        ptassert!(p.rate_mbps(weak) > 0.0, "rate must stay positive");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reward_prefers_dominating_measurements() {
+    Runner::new("reward_dominance", 200).run(|g| {
+        let p = RewardParams {
+            alpha: 0.1,
+            beta: 0.1,
+            qos_s: g.f64_in(0.01, 0.2),
+            accuracy_req: g.f64_in(0.3, 0.7),
+        };
+        let acc = g.f64_in(p.accuracy_req, 1.0);
+        let lat = g.f64_in(1e-4, p.qos_s * 0.99);
+        let energy = g.f64_in(1e-4, 2.0);
+        let better = Measurement {
+            latency_s: lat,
+            energy_est_j: energy,
+            energy_true_j: energy,
+            accuracy: acc,
+        };
+        // strictly worse on energy and latency, same accuracy
+        let worse = Measurement {
+            latency_s: lat + g.f64_in(1e-6, 0.05),
+            energy_est_j: energy + g.f64_in(1e-6, 1.0),
+            energy_true_j: energy,
+            accuracy: acc,
+        };
+        ptassert!(
+            reward(&better, &p) > reward(&worse, &p),
+            "dominating measurement must earn more reward"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_discretization_total_and_stable() {
+    Runner::new("state_total", 300).run(|g| {
+        let obs = StateObs {
+            s_conv: g.usize_in(0, 200) as u32,
+            s_fc: g.usize_in(0, 40) as u32,
+            s_rc: g.usize_in(0, 40) as u32,
+            s_mac_m: g.f64_in(0.0, 10_000.0),
+            co_cpu: g.f64_in(0.0, 100.0),
+            co_mem: g.f64_in(0.0, 100.0),
+            rssi_wlan: g.f64_in(-95.0, -30.0),
+            rssi_p2p: g.f64_in(-95.0, -30.0),
+        };
+        let s1 = State::discretize(&obs);
+        let s2 = State::discretize(&obs);
+        ptassert!(s1 == s2, "discretization must be deterministic");
+        ptassert!(
+            s1.index() < autoscale::agent::state::STATE_CARDINALITY,
+            "index {} out of range",
+            s1.index()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qtable_update_bounded_by_learning_rate() {
+    Runner::new("qtable_bounded", 200).run(|g| {
+        use autoscale::agent::qlearn::AutoScaleAgent;
+        use autoscale::types::{Action, Precision, ProcKind};
+        let mut params = autoscale::configsys::runconfig::AgentParams::default();
+        params.learning_rate = g.f64_in(0.05, 1.0);
+        params.discount = g.f64_in(0.0, 0.5);
+        let actions = vec![
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+            Action::cloud(),
+        ];
+        let mut agent = AutoScaleAgent::new(actions, params, g.usize_in(0, 1000) as u64);
+        let s = State {
+            conv: 0, fc: 0, rc: 0, mac: 0, co_cpu: 0, co_mem: 0, rssi_w: 0, rssi_p: 0,
+        };
+        let r = g.f64_in(-2.0, 2.0);
+        let old = agent.table.get(s, 0);
+        agent.update(s, 0, r, s);
+        let new = agent.table.get(s, 0);
+        let target = r + params.discount * agent.table.max_q(s).max(old);
+        // |new - old| <= lr * |target - old| + slack for max_q movement
+        ptassert!(
+            (new - old).abs() <= params.learning_rate * (target - old).abs() + 1e-6,
+            "update overshoot: {old} -> {new} (r={r})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_catalogue_respects_device_capabilities() {
+    Runner::new("catalogue_valid", 60).run(|g| {
+        let dev_id = *g.choose(&DeviceId::PHONES);
+        let dev = autoscale::device::presets::device(dev_id);
+        for a in action_catalogue(&dev) {
+            if a.site == autoscale::types::Site::Local {
+                let proc = dev.proc(a.proc);
+                ptassert!(proc.is_some(), "{dev_id}: catalogue references absent {}", a.proc);
+                let proc = proc.unwrap();
+                ptassert!(
+                    proc.supports(a.precision),
+                    "{dev_id}: {} does not support {}",
+                    a.proc,
+                    a.precision
+                );
+                ptassert!(
+                    (a.vf_step as usize) < proc.vf.len(),
+                    "{dev_id}: vf step {} out of range",
+                    a.vf_step
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_episode_metrics_consistent() {
+    Runner::new("metrics_consistent", 40).run(|g| {
+        use autoscale::coordinator::policy::Policy;
+        use autoscale::experiments::common::run_episode;
+        let n = g.usize_in(10, 60);
+        let m = run_episode(
+            DeviceId::Mi8Pro,
+            EnvKind::S1NoVariance,
+            autoscale::configsys::runconfig::Scenario::NonStreaming,
+            Policy::EdgeBest,
+            vec![],
+            n,
+            0.5,
+            g.usize_in(0, 100) as u64,
+        );
+        ptassert!(m.n() == n, "served {} of {n}", m.n());
+        ptassert!((0.0..=1.0).contains(&m.qos_violation_ratio()), "ratio");
+        let sel = m.selections();
+        let total: f64 = autoscale::coordinator::metrics::SelectionStats::BUCKETS
+            .iter()
+            .map(|b| sel.rate(b))
+            .sum();
+        ptassert!((total - 1.0).abs() < 1e-9, "selection rates sum to {total}");
+        Ok(())
+    });
+}

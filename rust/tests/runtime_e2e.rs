@@ -1,0 +1,91 @@
+//! End-to-end runtime integration: the AOT bridge (python artifacts → PJRT
+//! execution from Rust) plus real-compute-grounded serving. These tests
+//! require `make artifacts`; they skip gracefully when artifacts are absent
+//! so the pure-Rust suite still runs in a fresh checkout.
+
+use autoscale::nn::manifest::Manifest;
+use autoscale::runtime::Engine;
+use autoscale::types::Precision;
+
+fn engine() -> Option<Engine> {
+    Manifest::load_default().ok().and_then(|m| Engine::new(m).ok())
+}
+
+#[test]
+fn manifest_covers_full_zoo_times_precisions() {
+    let Ok(m) = Manifest::load_default() else { return };
+    assert_eq!(m.entries.len(), 30, "10 models x 3 precisions");
+    for nn in autoscale::nn::zoo::ZOO.iter() {
+        for prec in [Precision::Fp32, Precision::Fp16, Precision::Int8] {
+            let e = m.find(nn.name, prec);
+            assert!(e.is_some(), "missing artifact {}/{prec}", nn.name);
+            assert!(e.unwrap().artifact.exists(), "file missing for {}/{prec}", nn.name);
+        }
+    }
+}
+
+#[test]
+fn manifest_layer_counts_match_rust_zoo() {
+    // The python zoo and the rust descriptors must agree on Table 3.
+    let Ok(m) = Manifest::load_default() else { return };
+    for nn in autoscale::nn::zoo::ZOO.iter() {
+        let e = m.find(nn.name, Precision::Fp32).unwrap();
+        assert_eq!(
+            (e.s_conv, e.s_fc, e.s_rc),
+            (nn.s_conv, nn.s_fc, nn.s_rc),
+            "layer composition mismatch for {}",
+            nn.name
+        );
+    }
+}
+
+#[test]
+fn every_precision_variant_executes_finite() {
+    let Some(mut e) = engine() else { return };
+    for prec in [Precision::Fp32, Precision::Fp16, Precision::Int8] {
+        let t = e.execute("mobilenet_v2", prec, 5).unwrap();
+        assert!(!t.output.is_empty(), "{prec}");
+        assert!(t.output.iter().all(|v| v.is_finite()), "{prec}");
+        assert!(t.wall_s > 0.0);
+    }
+}
+
+#[test]
+fn sequence_model_executes() {
+    let Some(mut e) = engine() else { return };
+    let t = e.execute("mobilebert", Precision::Fp32, 3).unwrap();
+    assert!(t.output.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn serving_with_real_engine_grounds_compute() {
+    let Some(mut e) = engine() else { return };
+    use autoscale::configsys::runconfig::{EnvKind, RunConfig};
+    use autoscale::coordinator::envs::Environment;
+    use autoscale::coordinator::policy::Policy;
+    use autoscale::coordinator::serve::{ServeConfig, Server};
+    use autoscale::types::DeviceId;
+
+    let mut cfg = RunConfig::default();
+    cfg.device = DeviceId::Mi8Pro;
+    let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 3);
+    let mut server = Server::new(
+        env,
+        Policy::EdgeBest,
+        ServeConfig { run: cfg, models: vec!["mobilenet_v1"] },
+    )
+    .with_engine(&mut e);
+    let m = server.serve(10);
+    assert_eq!(m.n(), 10);
+    assert!(m.outcomes.iter().all(|o| o.measurement.latency_s > 0.0));
+}
+
+#[test]
+fn different_models_give_different_artifacts() {
+    let Some(mut e) = engine() else { return };
+    let a = e.execute("mobilenet_v1", Precision::Fp32, 1).unwrap();
+    let b = e.execute("inception_v1", Precision::Fp32, 1).unwrap();
+    // both are 10-class classifiers at tiny scale but distinct weights
+    assert_eq!(a.output.len(), b.output.len());
+    assert_ne!(a.output, b.output);
+}
