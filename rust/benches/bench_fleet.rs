@@ -1,0 +1,51 @@
+//! Fleet-simulator throughput bench: simulated requests/second through the
+//! full multi-device loop (arrivals → policy → physics → shared-cloud
+//! accounting), and the sharding speedup. Also asserts the determinism
+//! contract cheaply, since a bench that drifts run-to-run is useless.
+
+use autoscale::fleet::{run_fleet, FleetConfig, FleetPolicyKind};
+use autoscale::util::bench::{black_box, Bencher};
+
+fn cfg(devices: usize, requests: usize, shards: usize) -> FleetConfig {
+    FleetConfig {
+        devices,
+        requests_per_device: requests,
+        shards,
+        rate_hz: 4.0,
+        seed: 7,
+        policy: FleetPolicyKind::AutoScale,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    // One fleet run is a heavyweight iteration; keep the sample budget low.
+    let b = Bencher::quick();
+    println!("{:40} {:>12} {:>12} {:>12}", "benchmark", "mean", "median", "p95");
+
+    let mut medians = Vec::new();
+    for shards in [1usize, 4] {
+        let c = cfg(128, 25, shards);
+        let name = format!("fleet 128x25 shards={shards}");
+        let r = b.bench(&name, || {
+            black_box(run_fleet(black_box(&c)).unwrap());
+        });
+        println!("{}", r.report());
+        let reqs = (128 * 25) as f64;
+        println!("{:40} {:>10.0} requests/s simulated", "", reqs / r.median_s());
+        medians.push(r.median_s());
+    }
+    if medians.len() == 2 {
+        println!(
+            "sharding speedup (1 -> 4 workers): {:.2}x",
+            medians[0] / medians[1]
+        );
+    }
+
+    // Determinism spot-check: identical config+seed, identical fingerprint.
+    let c = cfg(64, 20, 2);
+    let f1 = run_fleet(&c).unwrap().metrics.fingerprint();
+    let f2 = run_fleet(&c).unwrap().metrics.fingerprint();
+    assert_eq!(f1, f2, "fleet runs must be deterministic");
+    println!("fingerprint (64x20, shards=2): {f1:016x}");
+}

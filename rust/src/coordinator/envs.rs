@@ -1,12 +1,15 @@
 //! Table-4 execution environments: device + wireless links + co-runner,
 //! assembled into a ready [`crate::exec::Simulator`].
 
+use crate::agent::state::StateObs;
 use crate::configsys::runconfig::EnvKind;
 use crate::device::presets::device;
 use crate::exec::latency::Simulator;
-use crate::interference::CoRunner;
+use crate::interference::{CoRunner, Interference};
 use crate::net::{Link, LinkKind, RssiProcess};
+use crate::nn::zoo::NnDesc;
 use crate::types::DeviceId;
+use crate::util::rng::Pcg64;
 
 /// A fully assembled execution environment.
 pub struct Environment {
@@ -48,6 +51,31 @@ impl Environment {
         );
         sim.seed(seed);
         Environment { kind, sim, co_runner: co }
+    }
+
+    /// Sample the observable state at virtual time `t_s`: the *sensor
+    /// reading* (with measurement noise — RSSI readings and /proc
+    /// utilization counters jitter on real devices) plus the ground-truth
+    /// interference the execution physics should see. Shared by the
+    /// single-device server, the fleet simulator and dataset collection so
+    /// the noise model cannot drift between them.
+    pub fn observe(
+        &mut self,
+        nn: &NnDesc,
+        t_s: f64,
+        rng: &mut Pcg64,
+    ) -> (StateObs, Interference) {
+        let true_inter = self.co_runner.at(t_s, rng);
+        let rssi_w = self.sim.wlan.rssi.step(rng) + rng.normal(0.0, 1.2);
+        let rssi_p = self.sim.p2p.rssi.step(rng) + rng.normal(0.0, 1.2);
+        let noisy = Interference {
+            // multiplicative jitter: idle counters read ~0, busy ones ±4%
+            cpu_util: (true_inter.cpu_util * (1.0 + rng.normal(0.0, 0.04)))
+                .clamp(0.0, 100.0),
+            mem_pressure: (true_inter.mem_pressure * (1.0 + rng.normal(0.0, 0.04)))
+                .clamp(0.0, 100.0),
+        };
+        (StateObs::from_parts(nn, noisy, rssi_w, rssi_p), true_inter)
     }
 }
 

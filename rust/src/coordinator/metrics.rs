@@ -110,6 +110,24 @@ impl SelectionStats {
         self.total += 1;
     }
 
+    /// Raw selection count of a bucket.
+    pub fn count(&self, bucket: &str) -> usize {
+        *self.counts.get(bucket).unwrap_or(&0)
+    }
+
+    /// Total selections recorded.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Fold another set of selections into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &SelectionStats) {
+        for (&bucket, &n) in &other.counts {
+            *self.counts.entry(bucket).or_insert(0) += n;
+        }
+        self.total += other.total;
+    }
+
     /// Selection rate of a bucket in [0,1].
     pub fn rate(&self, bucket: &str) -> f64 {
         if self.total == 0 {
@@ -194,6 +212,20 @@ mod tests {
             b.add(Action::local(ProcKind::Cpu, Precision::Int8));
         }
         assert!((a.overlap(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_totals() {
+        let mut a = SelectionStats::default();
+        let mut b = SelectionStats::default();
+        a.add(Action::cloud());
+        b.add(Action::cloud());
+        b.add(Action::connected_edge());
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.count("Cloud"), 2);
+        assert_eq!(a.count("Connected Edge"), 1);
+        assert!((a.rate("Cloud") - 2.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

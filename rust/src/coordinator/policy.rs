@@ -6,6 +6,8 @@ use crate::agent::qlearn::AutoScaleAgent;
 use crate::agent::state::{State, StateObs};
 use crate::baselines::{Knn, LinReg, LinearSvm, LinearSvr, Scaler};
 use crate::device::processor::Device;
+use crate::exec::latency::{RunContext, Simulator};
+use crate::nn::zoo::NnDesc;
 use crate::types::{Action, Precision, ProcKind, Site};
 
 /// Build the action catalogue for a device (§5.3 "Actions"): every local
@@ -21,6 +23,67 @@ pub fn action_catalogue(dev: &Device) -> Vec<Action> {
     out.push(Action::connected_edge());
     out.push(Action::cloud());
     out
+}
+
+/// Compact catalogue for fleet-scale learning: the max-frequency
+/// (processor, precision) pairs plus the two scale-out targets — every
+/// site/processor/precision choice, without the per-step DVFS sweep.
+/// One dense Q-table per device is what bounds fleet memory: dropping the
+/// DVFS axis shrinks each agent ~9x (63 -> 7 actions on the Mi8Pro), which
+/// is the difference between gigabytes and a few hundred MB at 1,000+
+/// devices. Single-device serving keeps the full [`action_catalogue`].
+pub fn compact_action_catalogue(dev: &Device) -> Vec<Action> {
+    let mut out: Vec<Action> = Vec::new();
+    for p in &dev.processors {
+        for &prec in &p.precisions {
+            out.push(Action::new(Site::Local, p.kind, 0, prec));
+        }
+    }
+    out.push(Action::connected_edge());
+    out.push(Action::cloud());
+    out
+}
+
+/// The Opt oracle's ranking loop, shared by the single-device server and
+/// the fleet simulator: evaluate every catalogue action on a shadow copy
+/// of the simulator (identical thermal/network state) and pick the best
+/// true outcome — accuracy-gated, QoS-feasible-first, then minimum true
+/// energy. `ctx_for` prices each action's runtime context (the fleet uses
+/// it to charge cloud actions the current congestion).
+pub fn oracle_best_action(
+    sim: &Simulator,
+    nn: &NnDesc,
+    catalogue: &[Action],
+    accuracy_target: f64,
+    qos_s: f64,
+    ctx_for: impl Fn(Action) -> RunContext,
+) -> Action {
+    let mut best: Option<(Action, f64, bool)> = None; // (action, energy, feasible)
+    for &a in catalogue {
+        // Shadow run: clone the simulator so thermal/noise state is not
+        // consumed by what-if evaluation.
+        let mut shadow = sim.clone();
+        let m = shadow.run(nn, a, &ctx_for(a));
+        if m.accuracy < accuracy_target {
+            continue;
+        }
+        let feasible = m.latency_s < qos_s;
+        let better = match &best {
+            None => true,
+            Some((_, be, bf)) => {
+                if feasible != *bf {
+                    feasible // feasible beats infeasible
+                } else {
+                    m.energy_true_j < *be
+                }
+            }
+        };
+        if better {
+            best = Some((a, m.energy_true_j, feasible));
+        }
+    }
+    best.map(|(a, _, _)| a)
+        .unwrap_or_else(|| Action::local(ProcKind::Cpu, Precision::Fp32))
 }
 
 /// Feature vector used by the prediction-based comparators: the eight
@@ -208,6 +271,20 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(dedup.len(), acts.len());
+    }
+
+    #[test]
+    fn compact_catalogue_covers_sites_without_dvfs() {
+        let dev = device(DeviceId::Mi8Pro);
+        let acts = compact_action_catalogue(&dev);
+        // 2 cpu precisions + 2 gpu + 1 dsp + 2 remote
+        assert_eq!(acts.len(), 7);
+        assert!(acts.iter().all(|a| a.vf_step == 0));
+        assert!(acts.iter().any(|a| a.site == Site::Cloud));
+        assert!(acts.iter().any(|a| a.site == Site::ConnectedEdge));
+        // strict subset of the full catalogue
+        let full = action_catalogue(&dev);
+        assert!(acts.iter().all(|a| full.contains(a)));
     }
 
     #[test]

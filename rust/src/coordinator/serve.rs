@@ -17,6 +17,18 @@ use crate::types::Action;
 use crate::util::clock::VirtualClock;
 use crate::util::rng::Pcg64;
 
+/// QoS target for one network under a scenario: vision networks follow
+/// the scenario; MobileBERT always uses the NLP budget. Shared by the
+/// single-device server and the fleet simulator so the violation rule
+/// cannot drift between them.
+pub fn qos_for(scenario: Scenario, nn: &NnDesc) -> f64 {
+    if nn.workload == Workload::Translation {
+        Scenario::Nlp.qos_target_s()
+    } else {
+        scenario.qos_target_s()
+    }
+}
+
 /// Server configuration beyond the RunConfig.
 pub struct ServeConfig {
     pub run: RunConfig,
@@ -55,14 +67,9 @@ impl<'a> Server<'a> {
         self
     }
 
-    /// QoS target for one network under the configured scenario: vision
-    /// networks follow the scenario; MobileBERT always uses the NLP budget.
+    /// QoS target for one network under the configured scenario.
     fn qos_for(&self, nn: &NnDesc) -> f64 {
-        if nn.workload == Workload::Translation {
-            Scenario::Nlp.qos_target_s()
-        } else {
-            self.cfg.run.scenario.qos_target_s()
-        }
+        qos_for(self.cfg.run.scenario, nn)
     }
 
     /// Serve `n` requests; returns the collected metrics.
@@ -98,6 +105,7 @@ impl<'a> Server<'a> {
             interference: true_inter,
             thermal_cap: 1.0, // simulator applies its own thermal state
             compute_factor: 1.0,
+            remote_queue_s: 0.0,
         };
         if let Some(engine) = self.engine.as_deref_mut() {
             if action.site == crate::types::Site::Local {
@@ -145,22 +153,11 @@ impl<'a> Server<'a> {
         outcome
     }
 
-    /// Sample the observable state right now. Returns the *sensor reading*
-    /// (with measurement noise — RSSI readings and /proc utilization
-    /// counters jitter on real devices) plus the ground-truth interference
-    /// that the execution physics should see.
+    /// Sample the observable state right now (the shared sensor-noise
+    /// model lives on [`Environment::observe`]).
     fn observe(&mut self, nn: &NnDesc) -> (StateObs, crate::interference::Interference) {
-        let true_inter = self.env.co_runner.at(self.clock.now(), &mut self.rng);
-        let rssi_w = self.env.sim.wlan.rssi.step(&mut self.rng) + self.rng.normal(0.0, 1.2);
-        let rssi_p = self.env.sim.p2p.rssi.step(&mut self.rng) + self.rng.normal(0.0, 1.2);
-        let noisy = crate::interference::Interference {
-            // multiplicative jitter: idle counters read ~0, busy ones ±4%
-            cpu_util: (true_inter.cpu_util * (1.0 + self.rng.normal(0.0, 0.04)))
-                .clamp(0.0, 100.0),
-            mem_pressure: (true_inter.mem_pressure * (1.0 + self.rng.normal(0.0, 0.04)))
-                .clamp(0.0, 100.0),
-        };
-        (StateObs::from_parts(nn, noisy, rssi_w, rssi_p), true_inter)
+        let t = self.clock.now();
+        self.env.observe(nn, t, &mut self.rng)
     }
 
     /// Policy dispatch for ② (the oracle needs simulator access, hence here
@@ -180,9 +177,9 @@ impl<'a> Server<'a> {
         }
     }
 
-    /// The Opt oracle: evaluate every catalogue action on a shadow copy of
-    /// the simulator (identical thermal/network state) and pick the best
-    /// true outcome — max PPW subject to accuracy then QoS feasibility.
+    /// The Opt oracle: the shared shadow-evaluation loop
+    /// ([`crate::coordinator::policy::oracle_best_action`]) with an
+    /// uncongested-cloud context.
     pub fn oracle_action(&mut self, nn: &NnDesc, obs: &StateObs, qos: f64) -> Action {
         let catalogue = action_catalogue(&self.env.sim.local);
         let ctx = RunContext {
@@ -192,32 +189,15 @@ impl<'a> Server<'a> {
             },
             thermal_cap: 1.0,
             compute_factor: 1.0,
+            remote_queue_s: 0.0,
         };
-        let mut best: Option<(Action, f64, bool)> = None; // (action, energy, feasible)
-        for a in catalogue {
-            // Shadow run: clone the simulator so thermal/noise state is not
-            // consumed by what-if evaluation.
-            let mut shadow = self.env.sim.clone();
-            let m = shadow.run(nn, a, &ctx);
-            if m.accuracy < self.cfg.run.accuracy_target {
-                continue;
-            }
-            let feasible = m.latency_s < qos;
-            let better = match &best {
-                None => true,
-                Some((_, be, bf)) => {
-                    if feasible != *bf {
-                        feasible // feasible beats infeasible
-                    } else {
-                        m.energy_true_j < *be
-                    }
-                }
-            };
-            if better {
-                best = Some((a, m.energy_true_j, feasible));
-            }
-        }
-        best.map(|(a, _, _)| a)
-            .unwrap_or_else(|| Action::local(crate::types::ProcKind::Cpu, crate::types::Precision::Fp32))
+        crate::coordinator::policy::oracle_best_action(
+            &self.env.sim,
+            nn,
+            &catalogue,
+            self.cfg.run.accuracy_target,
+            qos,
+            |_| ctx.clone(),
+        )
     }
 }

@@ -87,10 +87,16 @@ pub struct RunContext {
     pub interference: Interference,
     /// Thermal frequency cap currently in force for the CPU (1.0 = none).
     pub thermal_cap: f64,
-    /// Multiplicative factor from the *real* PJRT measurement of this
-    /// model's artifact (run-to-run compute variation; 1.0 = calibration
-    /// mean). Grounds the simulation in real executed compute.
+    /// Multiplicative factor on compute time. Two users: the runtime engine
+    /// feeds real per-execution wall-time variation for local runs
+    /// (1.0 = calibration mean), and the fleet simulator feeds
+    /// load-dependent service-time inflation for shared-cloud runs.
     pub compute_factor: f64,
+    /// Server-side queueing + batching delay for remote sites (seconds):
+    /// time the request waits at the shared backend before service. The
+    /// device radio is idle during this wait, so it extends latency and is
+    /// charged at idle power per Eq. (4). Ignored for local runs.
+    pub remote_queue_s: f64,
 }
 
 impl Default for RunContext {
@@ -99,6 +105,7 @@ impl Default for RunContext {
             interference: Interference::default(),
             thermal_cap: 1.0,
             compute_factor: 1.0,
+            remote_queue_s: 0.0,
         }
     }
 }
@@ -243,7 +250,8 @@ impl Simulator {
             Site::ConnectedEdge | Site::Cloud => {
                 let link = if action.site == Site::Cloud { &self.wlan } else { &self.p2p };
                 let rt = link.round_trip(nn.input_kb, nn.output_kb);
-                let latency = rt.tx_s + compute_s + rt.rx_s;
+                let queue_s = ctx.remote_queue_s.max(0.0);
+                let latency = rt.tx_s + queue_s + compute_s + rt.rx_s;
                 // Device-side energy: Eq. (4). The idle power is the local
                 // CPU's (device waits on the result).
                 let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
@@ -478,6 +486,26 @@ mod tests {
         }
         let mape = crate::util::stats::mape(&est, &truth);
         assert!(mape > 1.0 && mape < 15.0, "mape {mape}% (paper: 7.3%)");
+    }
+
+    #[test]
+    fn remote_queue_extends_latency_and_charges_idle_energy() {
+        let mut quiet_sim = sim(DeviceId::Mi8Pro);
+        let mut queued_sim = sim(DeviceId::Mi8Pro);
+        let nn = by_name("mobilenet_v1").unwrap();
+        let quiet = RunContext::default();
+        let queued = RunContext { remote_queue_s: 0.5, ..Default::default() };
+        let ma = quiet_sim.run(nn, Action::cloud(), &quiet);
+        let mb = queued_sim.run(nn, Action::cloud(), &queued);
+        assert!((mb.latency_s - ma.latency_s - 0.5).abs() < 1e-9, "queue adds its wait");
+        assert!(mb.energy_est_j > ma.energy_est_j, "waiting burns idle power");
+
+        // Local runs ignore the backend queue entirely.
+        let mut a = sim(DeviceId::Mi8Pro);
+        let mut b = sim(DeviceId::Mi8Pro);
+        let la = a.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &quiet);
+        let lb = b.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &queued);
+        assert!((la.latency_s - lb.latency_s).abs() < 1e-12);
     }
 
     #[test]

@@ -119,21 +119,15 @@ pub fn collect_dataset(
         let mut environment = Environment::build(dev, *env, seed + 100 + ei as u64);
         for i in 0..per_env {
             let nn = by_name(ZOO[i % ZOO.len()].name).unwrap();
-            let inter = environment.co_runner.at(i as f64 * 0.3, &mut rng);
-            // Sensor noise — same model as Server::observe: the predictors
-            // train and test on jittered readings, not ground truth.
-            let rssi_w = environment.sim.wlan.rssi.step(&mut rng) + rng.normal(0.0, 1.2);
-            let rssi_p = environment.sim.p2p.rssi.step(&mut rng) + rng.normal(0.0, 1.2);
-            let noisy = crate::interference::Interference {
-                cpu_util: (inter.cpu_util * (1.0 + rng.normal(0.0, 0.04))).clamp(0.0, 100.0),
-                mem_pressure: (inter.mem_pressure * (1.0 + rng.normal(0.0, 0.04)))
-                    .clamp(0.0, 100.0),
-            };
-            let obs = StateObs::from_parts(nn, noisy, rssi_w, rssi_p);
+            // Sensor noise — the shared Environment::observe model: the
+            // predictors train and test on jittered readings, not ground
+            // truth.
+            let (obs, inter) = environment.observe(nn, i as f64 * 0.3, &mut rng);
             let ctx = RunContext {
                 interference: inter,
                 thermal_cap: 1.0,
                 compute_factor: 1.0,
+                remote_queue_s: 0.0,
             };
             let mut energy = Vec::with_capacity(catalogue.len());
             let mut latency = Vec::with_capacity(catalogue.len());

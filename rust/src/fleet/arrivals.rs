@@ -1,0 +1,296 @@
+//! Per-device request arrival processes.
+//!
+//! Each device in the fleet draws its own inter-arrival times from a
+//! seeded, device-private RNG stream, so arrival traces are independent
+//! across devices and invariant to how devices are sharded across worker
+//! threads. Three generators cover the serving literature's standard
+//! shapes:
+//!
+//! * **Poisson** — memoryless constant-rate traffic (the M/·/· default);
+//! * **Diurnal** — a nonhomogeneous Poisson process whose rate follows a
+//!   sinusoid (day/night load swing), sampled by Lewis-Shedler thinning;
+//! * **Bursty** — an ON/OFF Markov-modulated Poisson process: dense
+//!   request bursts separated by near-idle gaps (camera sessions, page
+//!   visits).
+
+use crate::util::rng::Pcg64;
+
+/// A device's arrival-time generator.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    Poisson {
+        rate_hz: f64,
+    },
+    Diurnal {
+        base_rate_hz: f64,
+        /// Relative swing in [0, 0.95]: rate varies in base*(1 ± amplitude).
+        amplitude: f64,
+        period_s: f64,
+        /// Per-device phase offset (seconds) so the fleet's peaks spread.
+        phase_s: f64,
+    },
+    Bursty {
+        /// Request rate while a burst is on.
+        burst_rate_hz: f64,
+        /// Sparse background rate between bursts.
+        idle_rate_hz: f64,
+        mean_burst_s: f64,
+        mean_idle_s: f64,
+        /// Current phase state.
+        in_burst: bool,
+        /// Virtual time the current phase ends.
+        phase_end_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate_hz: f64) -> Self {
+        assert!(rate_hz > 0.0, "poisson rate must be positive");
+        ArrivalProcess::Poisson { rate_hz }
+    }
+
+    pub fn diurnal(base_rate_hz: f64, amplitude: f64, period_s: f64, phase_s: f64) -> Self {
+        assert!(base_rate_hz > 0.0 && period_s > 0.0);
+        ArrivalProcess::Diurnal {
+            base_rate_hz,
+            amplitude: amplitude.clamp(0.0, 0.95),
+            period_s,
+            phase_s,
+        }
+    }
+
+    pub fn bursty(
+        burst_rate_hz: f64,
+        idle_rate_hz: f64,
+        mean_burst_s: f64,
+        mean_idle_s: f64,
+    ) -> Self {
+        assert!(burst_rate_hz > 0.0 && idle_rate_hz > 0.0);
+        assert!(mean_burst_s > 0.0 && mean_idle_s > 0.0);
+        ArrivalProcess::Bursty {
+            burst_rate_hz,
+            idle_rate_hz,
+            mean_burst_s,
+            mean_idle_s,
+            in_burst: true,
+            phase_end_s: 0.0, // first phase drawn lazily on first call
+        }
+    }
+
+    /// Desynchronize the process start across a fleet: Bursty draws its
+    /// initial ON/OFF phase and remaining phase time from `rng` (the
+    /// chain's stationary distribution), so a thousand devices don't all
+    /// boot mid-burst at t=0 and slam the cloud with an artificial
+    /// synchronized spike. Poisson is memoryless and Diurnal is
+    /// phase-spread at construction; both are no-ops.
+    pub fn stagger_start(&mut self, rng: &mut Pcg64) {
+        if let ArrivalProcess::Bursty {
+            mean_burst_s,
+            mean_idle_s,
+            in_burst,
+            phase_end_s,
+            ..
+        } = self
+        {
+            let p_burst = *mean_burst_s / (*mean_burst_s + *mean_idle_s);
+            *in_burst = rng.chance(p_burst);
+            // exponential phase lengths are memoryless: the remaining time
+            // is exponential with the same mean
+            let mean = if *in_burst { *mean_burst_s } else { *mean_idle_s };
+            *phase_end_s = rng.exponential(1.0 / mean);
+        }
+    }
+
+    /// Long-run mean arrival rate (requests/second) — used only to bound
+    /// total simulated time, not by the generators themselves.
+    pub fn mean_rate_hz(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_hz } => *rate_hz,
+            ArrivalProcess::Diurnal { base_rate_hz, .. } => *base_rate_hz,
+            ArrivalProcess::Bursty {
+                burst_rate_hz,
+                idle_rate_hz,
+                mean_burst_s,
+                mean_idle_s,
+                ..
+            } => {
+                let cycle = mean_burst_s + mean_idle_s;
+                (burst_rate_hz * mean_burst_s + idle_rate_hz * mean_idle_s) / cycle
+            }
+        }
+    }
+
+    /// Draw the next arrival time strictly after virtual time `t_s`.
+    pub fn next_after(&mut self, t_s: f64, rng: &mut Pcg64) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_hz } => t_s + rng.exponential(*rate_hz),
+            ArrivalProcess::Diurnal { base_rate_hz, amplitude, period_s, phase_s } => {
+                // Lewis-Shedler thinning against the envelope rate.
+                let lambda_max = *base_rate_hz * (1.0 + *amplitude);
+                let mut t = t_s;
+                loop {
+                    t += rng.exponential(lambda_max);
+                    let angle = std::f64::consts::TAU * (t + *phase_s) / *period_s;
+                    let lambda = *base_rate_hz * (1.0 + *amplitude * angle.sin());
+                    if rng.f64() * lambda_max <= lambda {
+                        return t;
+                    }
+                }
+            }
+            ArrivalProcess::Bursty {
+                burst_rate_hz,
+                idle_rate_hz,
+                mean_burst_s,
+                mean_idle_s,
+                in_burst,
+                phase_end_s,
+            } => {
+                let mut t = t_s;
+                if *phase_end_s <= t {
+                    // Lazy first-phase draw (and re-anchor if called from
+                    // beyond the recorded boundary).
+                    let mean = if *in_burst { *mean_burst_s } else { *mean_idle_s };
+                    *phase_end_s = t + rng.exponential(1.0 / mean);
+                }
+                loop {
+                    let rate = if *in_burst { *burst_rate_hz } else { *idle_rate_hz };
+                    let cand = t + rng.exponential(rate);
+                    if cand <= *phase_end_s {
+                        return cand;
+                    }
+                    // Phase flip: resume drawing from the boundary.
+                    t = *phase_end_s;
+                    *in_burst = !*in_burst;
+                    let mean = if *in_burst { *mean_burst_s } else { *mean_idle_s };
+                    *phase_end_s = t + rng.exponential(1.0 / mean);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_gap(p: &mut ArrivalProcess, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::with_stream(seed, 99);
+        let mut t = 0.0;
+        for _ in 0..n {
+            t = p.next_after(t, &mut rng);
+        }
+        t / n as f64
+    }
+
+    #[test]
+    fn poisson_matches_rate() {
+        let mut p = ArrivalProcess::poisson(4.0);
+        let gap = mean_gap(&mut p, 20_000, 1);
+        assert!((gap - 0.25).abs() < 0.01, "mean gap {gap}");
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        for p in [
+            ArrivalProcess::poisson(2.0),
+            ArrivalProcess::diurnal(2.0, 0.8, 60.0, 7.0),
+            ArrivalProcess::bursty(10.0, 0.1, 2.0, 5.0),
+        ] {
+            let mut p = p;
+            let mut rng = Pcg64::new(3);
+            let mut t = 0.0;
+            for _ in 0..2000 {
+                let next = p.next_after(t, &mut rng);
+                assert!(next > t, "arrival time must advance: {t} -> {next}");
+                t = next;
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_long_run_rate_near_base() {
+        let mut p = ArrivalProcess::diurnal(5.0, 0.9, 30.0, 0.0);
+        let gap = mean_gap(&mut p, 30_000, 2);
+        assert!((gap - 0.2).abs() < 0.02, "mean gap {gap}");
+    }
+
+    #[test]
+    fn diurnal_peaks_denser_than_troughs() {
+        let mut p = ArrivalProcess::diurnal(5.0, 0.9, 100.0, 0.0);
+        let mut rng = Pcg64::new(4);
+        let mut t = 0.0;
+        let (mut peak, mut trough) = (0usize, 0usize);
+        while t < 2000.0 {
+            t = p.next_after(t, &mut rng);
+            // sin > 0 in the first half of each period (peak half).
+            if (t % 100.0) < 50.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak {peak} vs trough {trough}"
+        );
+    }
+
+    #[test]
+    fn bursty_alternates_density() {
+        let mut p = ArrivalProcess::bursty(50.0, 0.2, 1.0, 4.0);
+        let mut rng = Pcg64::new(5);
+        let mut t = 0.0;
+        let mut gaps = Vec::new();
+        for _ in 0..3000 {
+            let next = p.next_after(t, &mut rng);
+            gaps.push(next - t);
+            t = next;
+        }
+        let tiny = gaps.iter().filter(|g| **g < 0.1).count();
+        let long = gaps.iter().filter(|g| **g > 1.0).count();
+        assert!(tiny > 2000, "bursts dominate arrivals: {tiny}");
+        assert!(long > 20, "idle gaps appear: {long}");
+        // long-run rate sanity
+        let mean = p.mean_rate_hz();
+        assert!(mean > 5.0 && mean < 50.0, "mean rate {mean}");
+    }
+
+    #[test]
+    fn stagger_start_samples_the_stationary_phase_mix() {
+        let mut on = 0;
+        for i in 0..200u64 {
+            let mut p = ArrivalProcess::bursty(8.0, 0.1, 2.0, 14.0);
+            let mut rng = Pcg64::with_stream(42, i);
+            p.stagger_start(&mut rng);
+            if let ArrivalProcess::Bursty { in_burst, phase_end_s, .. } = &p {
+                if *in_burst {
+                    on += 1;
+                }
+                assert!(*phase_end_s > 0.0, "phase must be pre-drawn");
+            }
+        }
+        // stationary ON probability = 2/(2+14) = 12.5%; allow wide slack
+        assert!(on > 5 && on < 80, "on-phase count {on}");
+        // no-op for the memoryless/pre-phased generators
+        let mut p = ArrivalProcess::poisson(1.0);
+        p.stagger_start(&mut Pcg64::new(1));
+        assert!(matches!(p, ArrivalProcess::Poisson { .. }));
+    }
+
+    #[test]
+    fn deterministic_per_seed_stream() {
+        let run = |seed: u64| {
+            let mut p = ArrivalProcess::bursty(20.0, 0.5, 1.0, 2.0);
+            let mut rng = Pcg64::with_stream(seed, 7);
+            let mut t = 0.0;
+            (0..100)
+                .map(|_| {
+                    t = p.next_after(t, &mut rng);
+                    t
+                })
+                .collect::<Vec<f64>>()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12));
+    }
+}

@@ -1,0 +1,136 @@
+//! Discrete-event queue core for the fleet simulator.
+//!
+//! A deterministic min-heap over virtual time: events pop in `(t_s, seq)`
+//! order, where `seq` is the insertion sequence number.
+//!
+//! Today the per-shard driver's devices share no mutable state within an
+//! epoch, so fleet *results* do not depend on cross-device pop order —
+//! the queue's job is to execute a shard's requests in global
+//! chronological order, which is what keeps traces readable and is the
+//! prerequisite for any future intra-epoch cross-device coupling (P2P
+//! contention at the shared connected-edge tier, per-request cloud
+//! admission). The `(t_s, seq)` tie-break makes that order itself
+//! deterministic, so adding such coupling later cannot introduce
+//! run-to-run variance.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled event: payload + its virtual fire time.
+#[derive(Clone, Debug)]
+pub struct Scheduled<E> {
+    pub t_s: f64,
+    /// Insertion order, the deterministic tie-breaker.
+    pub seq: u64,
+    pub event: E,
+}
+
+// Ordered for a max-heap, so comparisons are REVERSED: the "greatest"
+// entry is the one with the smallest (t_s, seq).
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_s == other.t_s && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t_s
+            .total_cmp(&self.t_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue.
+#[derive(Clone, Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at virtual time `t_s` (must be finite).
+    pub fn push(&mut self, t_s: f64, event: E) {
+        assert!(t_s.is_finite(), "event time must be finite (got {t_s})");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { t_s, seq, event });
+    }
+
+    /// Pop the earliest event (ties broken by insertion order).
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        self.heap.pop()
+    }
+
+    /// Fire time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.t_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(1.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(5.0, ());
+        q.push(0.5, ());
+        assert_eq!(q.peek_time(), Some(0.5));
+        assert_eq!(q.pop().unwrap().t_s, 0.5);
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_times() {
+        EventQueue::new().push(f64::NAN, ());
+    }
+}

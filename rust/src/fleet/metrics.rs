@@ -1,0 +1,247 @@
+//! Fleet-level aggregate metrics.
+//!
+//! Per-device collectors are merged in device-id order at the end of a
+//! run, so every aggregate (including floating-point folds) is a pure
+//! function of the seed and configuration — independent of shard layout
+//! and thread scheduling. The `fingerprint` distils the run into one u64
+//! for cheap determinism assertions.
+
+use crate::coordinator::metrics::SelectionStats;
+use crate::types::Action;
+use crate::util::stats;
+
+/// One served fleet request (the fleet's compact analogue of
+/// [`crate::exec::ExecOutcome`] — end-to-end, including device queueing).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetRecord {
+    pub action: Action,
+    /// End-to-end latency seen by the user: device queue wait + execution.
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub qos_target_s: f64,
+    pub accuracy: f64,
+    pub accuracy_target: f64,
+}
+
+/// Aggregated metrics for a fleet run (or one device's slice of it).
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    latencies_s: Vec<f64>,
+    total_energy_j: f64,
+    qos_violations: usize,
+    accuracy_violations: usize,
+    selections: SelectionStats,
+}
+
+impl FleetMetrics {
+    pub fn push(&mut self, r: &FleetRecord) {
+        self.latencies_s.push(r.latency_s);
+        self.total_energy_j += r.energy_j;
+        if r.latency_s > r.qos_target_s {
+            self.qos_violations += 1;
+        }
+        if r.accuracy < r.accuracy_target {
+            self.accuracy_violations += 1;
+        }
+        self.selections.add(r.action);
+    }
+
+    /// Fold another collector into this one. Call in device-id order for
+    /// shard-invariant floating-point results.
+    pub fn merge(&mut self, other: &FleetMetrics) {
+        self.latencies_s.extend_from_slice(&other.latencies_s);
+        self.total_energy_j += other.total_energy_j;
+        self.qos_violations += other.qos_violations;
+        self.accuracy_violations += other.accuracy_violations;
+        self.selections.merge(&other.selections);
+    }
+
+    pub fn n(&self) -> usize {
+        self.latencies_s.len()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_energy_j
+    }
+
+    /// Fleet performance-per-watt: inferences per joule.
+    pub fn ppw(&self) -> f64 {
+        crate::power::ppw(self.total_energy_j, self.n())
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        stats::mean(&self.latencies_s)
+    }
+
+    pub fn latency_percentile_s(&self, p: f64) -> f64 {
+        stats::percentile(&self.latencies_s, p)
+    }
+
+    /// The reporting trio from one sort — at fleet scale (10^5..10^6
+    /// samples) three separate percentile calls would clone+sort the
+    /// vector three times.
+    pub fn latency_p50_p95_p99_s(&self) -> (f64, f64, f64) {
+        let v = stats::percentiles(&self.latencies_s, &[50.0, 95.0, 99.0]);
+        (v[0], v[1], v[2])
+    }
+
+    pub fn p50_latency_s(&self) -> f64 {
+        self.latency_percentile_s(50.0)
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        self.latency_percentile_s(95.0)
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        self.latency_percentile_s(99.0)
+    }
+
+    pub fn qos_violation_ratio(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.qos_violations as f64 / self.n() as f64
+        }
+    }
+
+    pub fn accuracy_violation_ratio(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.accuracy_violations as f64 / self.n() as f64
+        }
+    }
+
+    pub fn selections(&self) -> &SelectionStats {
+        &self.selections
+    }
+
+    /// Fraction of requests sent to the shared cloud.
+    pub fn cloud_rate(&self) -> f64 {
+        self.selections.rate("Cloud")
+    }
+
+    /// Fraction executed on-device (any local bucket).
+    pub fn local_rate(&self) -> f64 {
+        1.0 - self.selections.rate("Cloud") - self.selections.rate("Connected Edge")
+    }
+
+    /// Order-sensitive 64-bit digest of the aggregates — equal fingerprints
+    /// across runs/shard-counts is the determinism contract.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = crate::util::hash::FNV_OFFSET;
+        let mut fold = |v: u64| h = crate::util::hash::fnv1a_fold(h, v);
+        fold(self.n() as u64);
+        fold(self.qos_violations as u64);
+        fold(self.accuracy_violations as u64);
+        fold(self.total_energy_j.to_bits());
+        let lat_sum: f64 = self.latencies_s.iter().sum();
+        fold(lat_sum.to_bits());
+        for bucket in SelectionStats::BUCKETS {
+            fold(self.selections.count(bucket) as u64);
+        }
+        h
+    }
+}
+
+/// One epoch-boundary sample of the shared cloud's state.
+#[derive(Clone, Copy, Debug)]
+pub struct CloudTimelinePoint {
+    pub t_s: f64,
+    pub backlog_mmacs: f64,
+    pub queue_wait_s: f64,
+    pub load: f64,
+}
+
+/// Everything a fleet run returns.
+#[derive(Clone, Debug, Default)]
+pub struct FleetOutcome {
+    pub metrics: FleetMetrics,
+    pub cloud_timeline: Vec<CloudTimelinePoint>,
+    /// Virtual time the last request completed.
+    pub makespan_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Precision, ProcKind};
+
+    fn record(action: Action, latency: f64, energy: f64) -> FleetRecord {
+        FleetRecord {
+            action,
+            latency_s: latency,
+            energy_j: energy,
+            qos_target_s: 0.05,
+            accuracy: 0.7,
+            accuracy_target: 0.5,
+        }
+    }
+
+    #[test]
+    fn aggregates_and_percentiles() {
+        let mut m = FleetMetrics::default();
+        for i in 1..=100 {
+            m.push(&record(Action::cloud(), i as f64 * 1e-3, 0.01));
+        }
+        assert_eq!(m.n(), 100);
+        assert!((m.total_energy_j() - 1.0).abs() < 1e-9);
+        assert!((m.ppw() - 100.0).abs() < 1e-6);
+        assert!((m.p50_latency_s() - 0.0505).abs() < 1e-3);
+        assert!((m.p99_latency_s() - 0.099).abs() < 2e-3);
+        // 50 of 100 latencies exceed the 50 ms QoS target
+        assert!((m.qos_violation_ratio() - 0.5).abs() < 0.02);
+        assert_eq!(m.accuracy_violation_ratio(), 0.0);
+        assert!((m.cloud_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(m.local_rate(), 0.0);
+        // single-sort trio agrees with the per-percentile calls
+        let (p50, p95, p99) = m.latency_p50_p95_p99_s();
+        assert_eq!(p50, m.p50_latency_s());
+        assert_eq!(p95, m.p95_latency_s());
+        assert_eq!(p99, m.p99_latency_s());
+    }
+
+    #[test]
+    fn merge_matches_sequential_push() {
+        let recs: Vec<FleetRecord> = (0..40)
+            .map(|i| {
+                let a = if i % 3 == 0 {
+                    Action::cloud()
+                } else {
+                    Action::local(ProcKind::Cpu, Precision::Int8)
+                };
+                // energy is a dyadic rational so the split/merged energy
+                // folds sum exactly, matching the sequential fold bit-wise
+                record(a, 0.01 + i as f64 * 1e-3, 0.015625)
+            })
+            .collect();
+        let mut whole = FleetMetrics::default();
+        for r in &recs {
+            whole.push(r);
+        }
+        let mut left = FleetMetrics::default();
+        let mut right = FleetMetrics::default();
+        for (i, r) in recs.iter().enumerate() {
+            if i < 20 {
+                left.push(r);
+            } else {
+                right.push(r);
+            }
+        }
+        let mut merged = FleetMetrics::default();
+        merged.merge(&left);
+        merged.merge(&right);
+        assert_eq!(merged.fingerprint(), whole.fingerprint());
+        assert_eq!(merged.n(), whole.n());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_content() {
+        let mut a = FleetMetrics::default();
+        let mut b = FleetMetrics::default();
+        a.push(&record(Action::cloud(), 0.01, 0.1));
+        b.push(&record(Action::cloud(), 0.011, 0.1));
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

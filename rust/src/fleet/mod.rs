@@ -1,0 +1,44 @@
+//! Multi-device fleet simulation: the production-scale layer above the
+//! single-device coordinator.
+//!
+//! The paper evaluates AutoScale one device at a time against an
+//! infinitely-provisioned cloud. This subsystem simulates **N devices
+//! (hundreds to tens of thousands) sharing one cloud backend**, closing
+//! the feedback loop that single-device evaluation cannot express: every
+//! offload decision raises cloud queueing and service time for everyone
+//! else, which shifts the energy/latency optimum back toward local
+//! execution — and congestion-aware policies visibly adapt.
+//!
+//! Layout:
+//!
+//! * [`events`] — deterministic discrete-event queue (time + insertion-seq
+//!   ordering);
+//! * [`arrivals`] — per-device request processes: Poisson, diurnal
+//!   (thinned nonhomogeneous Poisson), bursty (ON/OFF MMPP);
+//! * [`cloud`] — the shared backend: backlog queue, batching window,
+//!   load-dependent service-time inflation;
+//! * [`sim`] — the sharded driver: epoch-frozen cloud snapshots make
+//!   device execution embarrassingly parallel within an epoch while
+//!   per-device RNG streams and device-ordered reductions keep results
+//!   bit-identical across `--shards` settings;
+//! * [`metrics`] — fleet aggregates: latency percentiles (p50/p95/p99),
+//!   total energy / PPW, QoS-violation rate, selection mix, cloud queue
+//!   timeline, and a determinism fingerprint.
+//!
+//! Per-request physics are the existing single-device models — `net` for
+//! the radio, `device`+`power` for the SoC, `exec` for latency/energy,
+//! `coordinator::envs` for Table-4 environments — not duplicates; the
+//! shared cloud only injects `remote_queue_s` and a service-time factor
+//! through [`crate::exec::latency::RunContext`].
+
+pub mod arrivals;
+pub mod cloud;
+pub mod events;
+pub mod metrics;
+pub mod sim;
+
+pub use arrivals::ArrivalProcess;
+pub use cloud::{CloudModel, CloudParams, CloudSnapshot};
+pub use events::EventQueue;
+pub use metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
+pub use sim::{run_fleet, ArrivalKind, FleetConfig, FleetPolicyKind};

@@ -1,0 +1,624 @@
+//! The sharded fleet driver: N devices, one shared cloud, deterministic
+//! parallel execution.
+//!
+//! ## Execution model
+//!
+//! Virtual time is cut into fixed **epochs**. At each epoch boundary the
+//! shared [`CloudModel`] publishes a frozen [`CloudSnapshot`]; within the
+//! epoch every device evolves independently against that snapshot —
+//! arrivals fire, policies pick targets, the per-request physics run on
+//! the device's own [`Environment`] (the same `net`/`device`/`exec`
+//! models the single-device coordinator uses). Cloud offloads are tallied
+//! per device and folded back into the cloud queue at the next boundary
+//! **in device-id order**, so the floating-point reduction is a pure
+//! function of (config, seed).
+//!
+//! Because intra-epoch coupling flows only through the frozen snapshot,
+//! devices can be partitioned across worker threads freely: `--shards 8`
+//! and `--shards 1` produce bit-identical aggregate metrics. Each shard
+//! runs a real discrete-event loop (an [`EventQueue`] interleaving its
+//! devices' arrivals in time order); each device owns private RNG streams
+//! derived from (seed, device-id), never from thread identity.
+//!
+//! The snapshot freeze is a fluid approximation: a request admitted
+//! mid-epoch sees the congestion measured at the epoch start (default
+//! epoch: 1 s). In exchange the fleet closes the loop the paper's
+//! single-device model cannot express — one device's offload decision
+//! degrades every other device's cloud latency one epoch later.
+
+use crate::agent::qlearn::AutoScaleAgent;
+use crate::agent::reward::{reward, RewardParams};
+use crate::agent::state::{State, StateObs};
+use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
+use crate::coordinator::envs::Environment;
+use crate::coordinator::policy::{
+    action_catalogue, compact_action_catalogue, edge_best_action, oracle_best_action, Policy,
+};
+use crate::coordinator::serve::qos_for;
+use crate::exec::latency::RunContext;
+use crate::interference::Interference;
+use crate::nn::zoo::{by_name, NnDesc, ZOO};
+use crate::types::{Action, DeviceId, Measurement, Site};
+use crate::util::rng::Pcg64;
+
+use super::arrivals::ArrivalProcess;
+use super::cloud::{CloudModel, CloudParams, CloudSnapshot};
+use super::events::EventQueue;
+use super::metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
+
+/// Which policy every device in the fleet runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetPolicyKind {
+    /// Per-device online Q-learning (the paper's agent, one per device).
+    AutoScale,
+    EdgeCpuFp32,
+    EdgeBest,
+    CloudAlways,
+    ConnectedEdgeAlways,
+    /// Per-request shadow-simulation oracle, congestion-aware.
+    Opt,
+}
+
+impl FleetPolicyKind {
+    pub fn from_name(s: &str) -> Option<FleetPolicyKind> {
+        Some(match s {
+            "autoscale" => FleetPolicyKind::AutoScale,
+            "cpu" => FleetPolicyKind::EdgeCpuFp32,
+            "best" => FleetPolicyKind::EdgeBest,
+            "cloud" => FleetPolicyKind::CloudAlways,
+            "connected" => FleetPolicyKind::ConnectedEdgeAlways,
+            "opt" => FleetPolicyKind::Opt,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetPolicyKind::AutoScale => "autoscale",
+            FleetPolicyKind::EdgeCpuFp32 => "cpu",
+            FleetPolicyKind::EdgeBest => "best",
+            FleetPolicyKind::CloudAlways => "cloud",
+            FleetPolicyKind::ConnectedEdgeAlways => "connected",
+            FleetPolicyKind::Opt => "opt",
+        }
+    }
+}
+
+/// Request arrival shape shared by the fleet (each device gets its own
+/// seeded instance; diurnal devices get spread phases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Diurnal,
+    Bursty,
+}
+
+impl ArrivalKind {
+    pub fn from_name(s: &str) -> Option<ArrivalKind> {
+        Some(match s {
+            "poisson" => ArrivalKind::Poisson,
+            "diurnal" => ArrivalKind::Diurnal,
+            "bursty" => ArrivalKind::Bursty,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::Bursty => "bursty",
+        }
+    }
+}
+
+/// Full fleet-run configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub devices: usize,
+    pub requests_per_device: usize,
+    /// Worker threads the devices are partitioned across. Any value
+    /// produces identical results; it only changes wall-clock time.
+    pub shards: usize,
+    pub seed: u64,
+    /// Table-4 environment every device is embedded in.
+    pub env: EnvKind,
+    pub scenario: Scenario,
+    pub accuracy_target: f64,
+    pub agent: AgentParams,
+    pub policy: FleetPolicyKind,
+    pub arrival: ArrivalKind,
+    /// Mean request rate per device (Hz).
+    pub rate_hz: f64,
+    /// Cloud-state refresh interval (virtual seconds).
+    pub epoch_s: f64,
+    pub cloud: CloudParams,
+    /// Networks served (round-robin per device); empty = all-zoo mix.
+    pub models: Vec<&'static str>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            devices: 100,
+            requests_per_device: 100,
+            shards: 1,
+            seed: 7,
+            env: EnvKind::S1NoVariance,
+            scenario: Scenario::NonStreaming,
+            accuracy_target: 0.5,
+            agent: AgentParams::default(),
+            policy: FleetPolicyKind::AutoScale,
+            arrival: ArrivalKind::Poisson,
+            rate_hz: 1.0,
+            epoch_s: 1.0,
+            cloud: CloudParams::default(),
+            models: Vec::new(),
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.devices > 0, "devices must be > 0");
+        anyhow::ensure!(self.requests_per_device > 0, "requests must be > 0");
+        anyhow::ensure!(self.shards > 0, "shards must be > 0");
+        anyhow::ensure!(self.rate_hz > 0.0, "rate must be > 0");
+        anyhow::ensure!(self.epoch_s > 0.0, "epoch must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.accuracy_target),
+            "accuracy_target out of [0,1]"
+        );
+        anyhow::ensure!(
+            self.cloud.capacity_mmacs_per_s > 0.0,
+            "cloud-capacity must be > 0"
+        );
+        anyhow::ensure!(self.cloud.batch_window_s >= 0.0, "batch-window must be >= 0");
+        anyhow::ensure!(self.cloud.max_batch >= 1, "cloud max_batch must be >= 1");
+        anyhow::ensure!(
+            self.cloud.single_stream_efficiency > 0.0
+                && self.cloud.single_stream_efficiency <= 1.0,
+            "cloud single_stream_efficiency out of (0,1]"
+        );
+        anyhow::ensure!(self.cloud.max_backlog_s >= 0.0, "cloud max_backlog_s must be >= 0");
+        for m in &self.models {
+            anyhow::ensure!(by_name(m).is_some(), "unknown model '{m}' in fleet config");
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64 — derives independent per-device seeds from the fleet seed.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic seed for device `i` under fleet seed `seed`.
+pub fn device_seed(seed: u64, i: usize) -> u64 {
+    splitmix64(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// One simulated device: environment + policy + arrival process + private
+/// RNG streams, all derived from (fleet seed, device id).
+struct DeviceSim {
+    env: Environment,
+    policy: Policy,
+    arrivals: ArrivalProcess,
+    rng: Pcg64,
+    /// Full action catalogue, built once — the Opt oracle what-ifs it on
+    /// every request.
+    catalogue: Vec<Action>,
+    models: Vec<&'static str>,
+    scenario: Scenario,
+    accuracy_target: f64,
+    agent: AgentParams,
+    next_arrival_s: f64,
+    /// Completion time of the previous request: requests are FIFO at the
+    /// device, so this is both when the device frees up and when idle
+    /// cooling started.
+    last_done_s: f64,
+    served: usize,
+    quota: usize,
+    metrics: FleetMetrics,
+    /// Cloud traffic submitted this epoch (drained at the barrier).
+    tally_jobs: u64,
+    tally_macs_m: f64,
+}
+
+impl DeviceSim {
+    fn build(cfg: &FleetConfig, i: usize, models: &[&'static str]) -> DeviceSim {
+        let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
+        let dseed = device_seed(cfg.seed, i);
+        let env = Environment::build(dev_id, cfg.env, dseed);
+        let policy = match cfg.policy {
+            FleetPolicyKind::AutoScale => {
+                // Compact catalogue: a dense Q-table per device at fleet
+                // scale must stay small (see compact_action_catalogue).
+                let catalogue = compact_action_catalogue(&env.sim.local);
+                Policy::AutoScale(AutoScaleAgent::new(catalogue, cfg.agent, dseed))
+            }
+            FleetPolicyKind::EdgeCpuFp32 => Policy::EdgeCpuFp32,
+            FleetPolicyKind::EdgeBest => Policy::EdgeBest,
+            FleetPolicyKind::CloudAlways => Policy::CloudAlways,
+            FleetPolicyKind::ConnectedEdgeAlways => Policy::ConnectedEdgeAlways,
+            FleetPolicyKind::Opt => Policy::Opt,
+        };
+        let r = cfg.rate_hz;
+        let arrivals = match cfg.arrival {
+            ArrivalKind::Poisson => ArrivalProcess::poisson(r),
+            ArrivalKind::Diurnal => {
+                // Golden-ratio phase spread so fleet peaks don't align.
+                let period = 240.0;
+                let phase = (i as f64 * 0.618_033_988_749_895).fract() * period;
+                ArrivalProcess::diurnal(r, 0.8, period, phase)
+            }
+            ArrivalKind::Bursty => {
+                // 8:0.1 ON/OFF rate ratio over 2 s bursts / 14 s lulls,
+                // normalized so the long-run mean is exactly rate_hz and
+                // arrival shapes stay comparable at the same --rate.
+                let k = (8.0 * 2.0 + 0.1 * 14.0) / 16.0;
+                ArrivalProcess::bursty(8.0 * r / k, 0.1 * r / k, 2.0, 14.0)
+            }
+        };
+        // Only the Opt oracle what-ifs the full DVFS catalogue; skip the
+        // per-device allocation for every other policy.
+        let catalogue = if matches!(cfg.policy, FleetPolicyKind::Opt) {
+            action_catalogue(&env.sim.local)
+        } else {
+            Vec::new()
+        };
+        let mut d = DeviceSim {
+            env,
+            policy,
+            arrivals,
+            rng: Pcg64::with_stream(dseed, 2001),
+            catalogue,
+            models: models.to_vec(),
+            scenario: cfg.scenario,
+            accuracy_target: cfg.accuracy_target,
+            agent: cfg.agent,
+            next_arrival_s: 0.0,
+            last_done_s: 0.0,
+            served: 0,
+            quota: cfg.requests_per_device,
+            metrics: FleetMetrics::default(),
+            tally_jobs: 0,
+            tally_macs_m: 0.0,
+        };
+        d.arrivals.stagger_start(&mut d.rng);
+        d.next_arrival_s = d.arrivals.next_after(0.0, &mut d.rng);
+        d
+    }
+
+    fn done(&self) -> bool {
+        self.served >= self.quota
+    }
+
+    /// When the next pending request would actually start service: its
+    /// arrival, or later if the device FIFO is still busy. Scheduling on
+    /// this (rather than on arrival) bounds cloud-snapshot staleness to one
+    /// epoch even when a device's queue backs up for tens of seconds.
+    fn next_service_s(&self) -> f64 {
+        self.next_arrival_s.max(self.last_done_s)
+    }
+
+    /// Sensor observation at virtual time `t` (the shared noise model on
+    /// [`Environment::observe`]).
+    fn observe(&mut self, nn: &NnDesc, t_s: f64) -> (StateObs, Interference) {
+        self.env.observe(nn, t_s, &mut self.rng)
+    }
+
+    /// Policy dispatch; the oracle variant is congestion-aware.
+    fn select(
+        &mut self,
+        obs: &StateObs,
+        s: State,
+        nn: &'static NnDesc,
+        qos: f64,
+        cloud: &CloudSnapshot,
+    ) -> (usize, Action) {
+        match &mut self.policy {
+            Policy::EdgeCpuFp32 => (
+                0,
+                Action::local(crate::types::ProcKind::Cpu, crate::types::Precision::Fp32),
+            ),
+            Policy::EdgeBest => (0, edge_best_action(&self.env.sim.local, nn)),
+            Policy::CloudAlways => (0, Action::cloud()),
+            Policy::ConnectedEdgeAlways => (0, Action::connected_edge()),
+            Policy::Opt => (0, self.oracle_action(nn, obs, qos, cloud)),
+            Policy::AutoScale(agent) => agent.select(s),
+            Policy::Regression(r) => r.select(obs, qos),
+            Policy::Classifier(c) => c.select(obs),
+        }
+    }
+
+    /// Congestion-aware oracle: the shared shadow-evaluation loop
+    /// ([`oracle_best_action`]), pricing cloud actions at the current
+    /// snapshot's queueing delay and service slowdown.
+    fn oracle_action(
+        &self,
+        nn: &'static NnDesc,
+        obs: &StateObs,
+        qos: f64,
+        cloud: &CloudSnapshot,
+    ) -> Action {
+        let sensed = Interference { cpu_util: obs.co_cpu, mem_pressure: obs.co_mem };
+        oracle_best_action(
+            &self.env.sim,
+            nn,
+            &self.catalogue,
+            self.accuracy_target,
+            qos,
+            |a| RunContext {
+                interference: sensed,
+                thermal_cap: 1.0,
+                compute_factor: if a.site == Site::Cloud { cloud.slowdown } else { 1.0 },
+                remote_queue_s: if a.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
+            },
+        )
+    }
+
+    /// Serve the request that arrived at `t_arrival` against the frozen
+    /// cloud snapshot. FIFO at the device: service starts when the previous
+    /// request finishes.
+    fn serve_request(&mut self, t_arrival: f64, cloud: &CloudSnapshot) {
+        let t_start = t_arrival.max(self.last_done_s);
+        let idle = t_start - self.last_done_s;
+        if idle > 0.0 {
+            // the SoC cools between requests
+            self.env.sim.thermal.advance(0.2, idle);
+        }
+
+        let nn = by_name(self.models[self.served % self.models.len()]).unwrap();
+        let qos = qos_for(self.scenario, nn);
+
+        let (obs, true_inter) = self.observe(nn, t_start);
+        let s = State::discretize(&obs);
+        let (idx, action) = self.select(&obs, s, nn, qos, cloud);
+
+        // Physics: true interference; shared-cloud congestion priced in.
+        let ctx = RunContext {
+            interference: true_inter,
+            thermal_cap: 1.0, // simulator applies its own thermal state
+            compute_factor: if action.site == Site::Cloud { cloud.slowdown } else { 1.0 },
+            remote_queue_s: if action.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
+        };
+        let m = self.env.sim.run(nn, action, &ctx);
+
+        if action.site == Site::Cloud {
+            self.tally_jobs += 1;
+            self.tally_macs_m += nn.macs_m;
+        }
+
+        // Reward on the END-TO-END latency (device queue wait included):
+        // that is what the user experiences and what the agent must learn
+        // to keep inside the QoS budget.
+        let wait_s = t_start - t_arrival;
+        let m_user = Measurement { latency_s: wait_s + m.latency_s, ..m };
+        let rp = RewardParams {
+            alpha: self.agent.alpha,
+            beta: self.agent.beta,
+            qos_s: qos,
+            accuracy_req: self.accuracy_target,
+        };
+        let r = reward(&m_user, &rp);
+        if self.policy.is_learning() {
+            let t_done = t_start + m.latency_s;
+            let (obs_next, _) = self.observe(nn, t_done);
+            let s_next = State::discretize(&obs_next);
+            self.policy.observe(s, idx, r, s_next);
+        }
+
+        self.last_done_s = t_start + m.latency_s;
+        self.metrics.push(&FleetRecord {
+            action,
+            latency_s: m_user.latency_s,
+            energy_j: m.energy_true_j,
+            qos_target_s: qos,
+            accuracy: m.accuracy,
+            accuracy_target: self.accuracy_target,
+        });
+    }
+}
+
+/// Run one epoch for a shard: a discrete-event loop interleaving the
+/// shard's devices in service-start order. Devices share no mutable state
+/// within an epoch, so this interleaving does not affect results (a
+/// per-device loop would be bit-identical) — it executes requests in
+/// chronological order, which any future intra-epoch cross-device
+/// coupling will require; see [`EventQueue`]. Requests whose service
+/// would start after `t_end` stay pending, so every request executes
+/// against a snapshot at most one epoch old — even when a device's FIFO
+/// is backed up far beyond its arrival epoch.
+fn run_epoch_shard(devices: &mut [DeviceSim], t_end: f64, cloud: &CloudSnapshot) {
+    let mut q: EventQueue<usize> = EventQueue::new();
+    for (slot, d) in devices.iter().enumerate() {
+        if !d.done() && d.next_service_s() < t_end {
+            q.push(d.next_service_s(), slot);
+        }
+    }
+    while let Some(ev) = q.pop() {
+        let d = &mut devices[ev.event];
+        let t_arrival = d.next_arrival_s;
+        d.serve_request(t_arrival, cloud);
+        d.served += 1;
+        d.next_arrival_s = d.arrivals.next_after(t_arrival, &mut d.rng);
+        if !d.done() && d.next_service_s() < t_end {
+            q.push(d.next_service_s(), ev.event);
+        }
+    }
+}
+
+/// Run the whole fleet to completion. Aggregate results are bit-identical
+/// for identical `(cfg, seed)` regardless of `cfg.shards`.
+pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
+    cfg.validate()?;
+    let models: Vec<&'static str> = if cfg.models.is_empty() {
+        ZOO.iter().map(|d| d.name).collect()
+    } else {
+        cfg.models.clone()
+    };
+    let mut devices: Vec<DeviceSim> =
+        (0..cfg.devices).map(|i| DeviceSim::build(cfg, i, &models)).collect();
+    let mut cloud = CloudModel::new(cfg.cloud);
+    let mut timeline = Vec::new();
+
+    // Runaway guard, not a deadline: bound virtual time by ~20x the
+    // arrival-limited makespan PLUS the service-limited one — a saturated
+    // cloud can legitimately hold every request for up to max_backlog_s,
+    // and device FIFOs serialize that wait.
+    let min_rate = devices
+        .iter()
+        .map(|d| d.arrivals.mean_rate_hz())
+        .fold(f64::INFINITY, f64::min);
+    let per_request_service_bound_s = cfg.cloud.max_backlog_s + 60.0;
+    let horizon_s = 20.0 * cfg.requests_per_device as f64 / min_rate
+        + cfg.requests_per_device as f64 * per_request_service_bound_s
+        + 100.0 * cfg.epoch_s;
+    let max_epochs = (horizon_s / cfg.epoch_s).ceil() as usize;
+
+    let shards = cfg.shards.min(devices.len());
+    let chunk = (devices.len() + shards - 1) / shards;
+
+    let mut epoch_start = 0.0;
+    for _ in 0..max_epochs {
+        if devices.iter().all(|d| d.done()) {
+            break;
+        }
+        let t_end = epoch_start + cfg.epoch_s;
+        let snapshot = cloud.snapshot();
+        if shards <= 1 {
+            run_epoch_shard(&mut devices, t_end, &snapshot);
+        } else {
+            std::thread::scope(|scope| {
+                for part in devices.chunks_mut(chunk) {
+                    scope.spawn(move || run_epoch_shard(part, t_end, &snapshot));
+                }
+            });
+        }
+        // Deterministic reduction: fold tallies in device-id order.
+        let mut jobs = 0u64;
+        let mut macs_m = 0.0;
+        for d in &mut devices {
+            jobs += d.tally_jobs;
+            macs_m += d.tally_macs_m;
+            d.tally_jobs = 0;
+            d.tally_macs_m = 0.0;
+        }
+        cloud.advance_epoch(jobs, macs_m, cfg.epoch_s);
+        let s = cloud.snapshot();
+        timeline.push(CloudTimelinePoint {
+            t_s: t_end,
+            backlog_mmacs: cloud.backlog_mmacs(),
+            queue_wait_s: s.queue_wait_s,
+            load: s.load,
+        });
+        epoch_start = t_end;
+    }
+    anyhow::ensure!(
+        devices.iter().all(|d| d.done()),
+        "fleet failed to progress: {max_epochs}-epoch runaway guard tripped \
+         before all devices finished"
+    );
+
+    let mut metrics = FleetMetrics::default();
+    let mut makespan_s = 0.0f64;
+    for d in &devices {
+        metrics.merge(&d.metrics);
+        makespan_s = makespan_s.max(d.last_done_s);
+    }
+    Ok(FleetOutcome { metrics, cloud_timeline: timeline, makespan_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig {
+            devices: 12,
+            requests_per_device: 8,
+            rate_hz: 2.0,
+            policy: FleetPolicyKind::EdgeBest,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_exactly_the_quota() {
+        let out = run_fleet(&small_cfg()).unwrap();
+        assert_eq!(out.metrics.n(), 12 * 8);
+        assert!(out.makespan_s > 0.0);
+        assert!(!out.cloud_timeline.is_empty());
+    }
+
+    #[test]
+    fn device_seeds_are_unique_and_stable() {
+        let a: Vec<u64> = (0..100).map(|i| device_seed(7, i)).collect();
+        let b: Vec<u64> = (0..100).map(|i| device_seed(7, i)).collect();
+        assert_eq!(a, b);
+        let mut dedup = a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "per-device seeds must not collide");
+        assert_ne!(device_seed(7, 0), device_seed(8, 0));
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        let mut cfg = small_cfg();
+        cfg.policy = FleetPolicyKind::AutoScale;
+        cfg.shards = 1;
+        let a = run_fleet(&cfg).unwrap();
+        cfg.shards = 5;
+        let b = run_fleet(&cfg).unwrap();
+        assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
+    }
+
+    #[test]
+    fn cloud_always_fleet_builds_cloud_load() {
+        let mut cfg = small_cfg();
+        cfg.policy = FleetPolicyKind::CloudAlways;
+        let out = run_fleet(&cfg).unwrap();
+        assert!((out.metrics.cloud_rate() - 1.0).abs() < 1e-12);
+        assert!(
+            out.cloud_timeline.iter().any(|p| p.load > 0.0),
+            "offloads must register as cloud load"
+        );
+    }
+
+    #[test]
+    fn all_requests_have_physical_outcomes() {
+        let out = run_fleet(&small_cfg()).unwrap();
+        assert!(out.metrics.total_energy_j() > 0.0);
+        assert!(out.metrics.mean_latency_s() > 0.0);
+        assert!(out.metrics.p99_latency_s() >= out.metrics.p50_latency_s());
+        assert!(out.metrics.qos_violation_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mutations: Vec<fn(&mut FleetConfig)> = vec![
+            |c| c.devices = 0,
+            |c| c.requests_per_device = 0,
+            |c| c.shards = 0,
+            |c| c.rate_hz = 0.0,
+            |c| c.epoch_s = 0.0,
+            |c| c.accuracy_target = 1.5,
+            |c| c.cloud.capacity_mmacs_per_s = 0.0,
+            |c| c.cloud.batch_window_s = -1.0,
+            |c| c.cloud.max_batch = 0,
+            |c| c.cloud.single_stream_efficiency = 0.0,
+            |c| c.models = vec!["resnet_50_typo"],
+        ];
+        for mutate in mutations {
+            let mut cfg = small_cfg();
+            mutate(&mut cfg);
+            assert!(run_fleet(&cfg).is_err());
+        }
+    }
+}

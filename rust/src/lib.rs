@@ -12,9 +12,20 @@
 //!   ([`interference`]), a per-layer latency model ([`exec`]), baseline and
 //!   prediction-based policies ([`baselines`]), and the experiment harness
 //!   regenerating every paper figure ([`experiments`]).
+//! * **Fleet layer** ([`fleet`]) — the production-scale step beyond the
+//!   paper: a seeded discrete-event simulator running hundreds to tens of
+//!   thousands of devices (each with its own environment, policy and
+//!   arrival process) against one **shared** cloud backend with a batching
+//!   window, a backlog queue and load-dependent service time. Devices are
+//!   sharded across worker threads with per-device RNG streams and
+//!   device-ordered reductions, so aggregate metrics are bit-identical for
+//!   any `--shards` setting. `autoscale fleet --devices 1000 ...` drives it
+//!   from the CLI.
 //! * **L2/L1 (build-time python)** — the 10-NN model zoo in JAX calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`; loaded and
-//!   executed on the request path through PJRT by [`runtime`].
+//!   executed on the request path through PJRT by [`runtime`] (cargo
+//!   feature `pjrt`; the default build substitutes an API-identical
+//!   deterministic simulation engine).
 //!
 //! Python never runs on the request path; the binary is self-contained once
 //! `make artifacts` has produced the HLO artifacts and manifest.
@@ -26,6 +37,7 @@ pub mod coordinator;
 pub mod device;
 pub mod exec;
 pub mod experiments;
+pub mod fleet;
 pub mod interference;
 pub mod net;
 pub mod nn;

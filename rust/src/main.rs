@@ -3,19 +3,30 @@
 //! Subcommands (hand-rolled parser; offline cache has no clap):
 //!   figure <id> [--seed N] [--full]   regenerate one paper figure/table
 //!   all [--seed N] [--full]           regenerate every figure/table
-//!   serve [--device D] [--env E] [--requests N] [--policy P] [--runtime]
-//!                                     run the serving loop once and report
-//!   train [--device D] [--save PATH]  train an agent, optionally save Q-table
+//!   serve [--device D] [--env E] [--requests N] [--policy P] [--seed N]
+//!         [--runtime]                 run the serving loop once and report
+//!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
+//!         [--policy P] [--arrival A] [--rate HZ] [--epoch S]
+//!         [--cloud-capacity MMACS] [--batch-window S]
+//!                                     multi-device shared-cloud simulation
+//!   train [--device D] [--save PATH] [--seed N] [--full]
+//!                                     train an agent, optionally save Q-table
 //!   runtime-check                     load + execute one artifact via PJRT
 //!   list                              list available experiments
+//!
+//! The parser is strict: unknown `--flags` and malformed numbers are
+//! errors, not silently ignored.
 
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
+use std::str::FromStr;
 
 use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::policy::Policy;
 use autoscale::coordinator::serve::{ServeConfig, Server};
 use autoscale::experiments;
+use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig, FleetPolicyKind};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
 
@@ -31,16 +42,79 @@ fn main() {
     std::process::exit(code);
 }
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
-fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
-    args.iter()
-        .position(|a| a == key)
-        .and_then(|i| args.get(i + 1))
-        .map(|s| s.as_str())
+/// Parsed command line: positionals + validated flags.
+struct Cli<'a> {
+    positional: Vec<&'a str>,
+    values: HashMap<&'a str, &'a str>,
+    switches: HashSet<&'a str>,
 }
 
-fn has_flag(args: &[String], key: &str) -> bool {
-    args.iter().any(|a| a == key)
+/// Strict flag parser: every `--flag` must be declared for the subcommand
+/// (either as a value flag or a switch), value flags must be followed by a
+/// value, and stray positionals are rejected.
+fn parse_cli<'a>(
+    cmd: &'a str,
+    rest: &'a [String],
+    value_flags: &[&'static str],
+    switch_flags: &[&'static str],
+    max_positional: usize,
+) -> anyhow::Result<Cli<'a>> {
+    let mut cli = Cli {
+        positional: Vec::new(),
+        values: HashMap::new(),
+        switches: HashSet::new(),
+    };
+    let mut i = 0;
+    while i < rest.len() {
+        let tok = rest[i].as_str();
+        if tok.starts_with("--") {
+            if switch_flags.iter().any(|f| *f == tok) {
+                cli.switches.insert(tok);
+            } else if value_flags.iter().any(|f| *f == tok) {
+                match rest.get(i + 1).map(|s| s.as_str()) {
+                    Some(v) if !v.starts_with("--") => {
+                        cli.values.insert(tok, v);
+                        i += 1;
+                    }
+                    _ => anyhow::bail!("flag '{tok}' expects a value"),
+                }
+            } else {
+                let mut known: Vec<&str> =
+                    value_flags.iter().chain(switch_flags.iter()).copied().collect();
+                known.sort_unstable();
+                anyhow::bail!(
+                    "unknown flag '{tok}' for '{cmd}' (known: {})",
+                    if known.is_empty() { "none".to_string() } else { known.join(" ") }
+                );
+            }
+        } else if cli.positional.len() < max_positional {
+            cli.positional.push(tok);
+        } else {
+            anyhow::bail!("unexpected argument '{tok}' for '{cmd}'");
+        }
+        i += 1;
+    }
+    Ok(cli)
+}
+
+impl<'a> Cli<'a> {
+    fn value(&self, key: &str) -> Option<&'a str> {
+        self.values.get(key).copied()
+    }
+
+    /// Parse a numeric flag with a clear error on malformed input.
+    fn num<T>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T: FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("{key}: invalid value '{v}' ({e})")),
+        }
+    }
 }
 
 fn parse_device(s: &str) -> anyhow::Result<DeviceId> {
@@ -52,13 +126,17 @@ fn parse_device(s: &str) -> anyhow::Result<DeviceId> {
     })
 }
 
+fn parse_env(s: &str) -> anyhow::Result<EnvKind> {
+    EnvKind::from_name(s).ok_or_else(|| anyhow::anyhow!("unknown env '{s}' (S1-S5|D1-D3)"))
+}
+
 fn run(args: &[String]) -> anyhow::Result<()> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
-    let seed: u64 = flag(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
-    let quick = !has_flag(args, "--full");
+    let rest = if args.is_empty() { args } else { &args[1..] };
 
     match cmd {
         "list" => {
+            parse_cli(cmd, rest, &[], &[], 0)?;
             println!("available experiments:");
             for e in experiments::registry() {
                 println!("  {:6}  {}", e.id, e.about);
@@ -66,7 +144,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "figure" => {
-            let id = args.get(1).map(|s| s.as_str()).unwrap_or("");
+            let cli = parse_cli(cmd, rest, &["--seed"], &["--full"], 1)?;
+            let seed: u64 = cli.num("--seed", 7)?;
+            let quick = !cli.switches.contains("--full");
+            let id = cli.positional.first().copied().unwrap_or("");
             let tables = experiments::run_by_id(id, seed, quick)
                 .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}' (try `autoscale list`)"))?;
             let dir = Path::new("reports");
@@ -83,6 +164,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "all" => {
+            let cli = parse_cli(cmd, rest, &["--seed"], &["--full"], 0)?;
+            let seed: u64 = cli.num("--seed", 7)?;
+            let quick = !cli.switches.contains("--full");
             for e in experiments::registry() {
                 println!("### running {} — {}", e.id, e.about);
                 let tables = (e.run)(seed, quick);
@@ -100,12 +184,18 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "serve" => {
-            let device = parse_device(flag(args, "--device").unwrap_or("Mi8Pro"))?;
-            let env = EnvKind::from_name(flag(args, "--env").unwrap_or("S1"))
-                .ok_or_else(|| anyhow::anyhow!("unknown env"))?;
-            let requests: usize =
-                flag(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
-            let policy = match flag(args, "--policy").unwrap_or("autoscale") {
+            let cli = parse_cli(
+                cmd,
+                rest,
+                &["--device", "--env", "--requests", "--policy", "--seed"],
+                &["--runtime"],
+                0,
+            )?;
+            let seed: u64 = cli.num("--seed", 7)?;
+            let device = parse_device(cli.value("--device").unwrap_or("Mi8Pro"))?;
+            let env = parse_env(cli.value("--env").unwrap_or("S1"))?;
+            let requests: usize = cli.num("--requests", 200)?;
+            let policy = match cli.value("--policy").unwrap_or("autoscale") {
                 "cpu" => Policy::EdgeCpuFp32,
                 "best" => Policy::EdgeBest,
                 "cloud" => Policy::CloudAlways,
@@ -121,7 +211,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         seed,
                     ))
                 }
-                other => anyhow::bail!("unknown policy '{other}'"),
+                other => anyhow::bail!(
+                    "unknown policy '{other}' (cpu|best|cloud|connected|opt|autoscale)"
+                ),
             };
             let mut run_cfg = RunConfig::default();
             run_cfg.device = device;
@@ -136,7 +228,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 policy,
                 ServeConfig { run: run_cfg, models: vec![] },
             );
-            if has_flag(args, "--runtime") {
+            if cli.switches.contains("--runtime") {
                 engine_store = Engine::from_default_manifest()?;
                 println!("PJRT platform: {}", engine_store.platform());
                 server = server.with_engine(&mut engine_store);
@@ -152,8 +244,117 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             println!("energy MAPE  : {:.1}%", metrics.energy_estimator_mape());
             Ok(())
         }
+        "fleet" => {
+            let cli = parse_cli(
+                cmd,
+                rest,
+                &[
+                    "--devices",
+                    "--requests",
+                    "--shards",
+                    "--seed",
+                    "--env",
+                    "--policy",
+                    "--arrival",
+                    "--rate",
+                    "--epoch",
+                    "--cloud-capacity",
+                    "--batch-window",
+                ],
+                &[],
+                0,
+            )?;
+            let default_shards = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8);
+            let cloud_defaults = CloudParams::default();
+            let policy_name = cli.value("--policy").unwrap_or("autoscale");
+            let arrival_name = cli.value("--arrival").unwrap_or("poisson");
+            let cfg = FleetConfig {
+                devices: cli.num("--devices", 1000)?,
+                requests_per_device: cli.num("--requests", 100)?,
+                shards: cli.num("--shards", default_shards)?,
+                seed: cli.num("--seed", 7)?,
+                env: parse_env(cli.value("--env").unwrap_or("S1"))?,
+                policy: FleetPolicyKind::from_name(policy_name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown policy '{policy_name}' (autoscale|cpu|best|cloud|connected|opt)"
+                    )
+                })?,
+                arrival: ArrivalKind::from_name(arrival_name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown arrival '{arrival_name}' (poisson|diurnal|bursty)")
+                })?,
+                rate_hz: cli.num("--rate", 1.0)?,
+                epoch_s: cli.num("--epoch", 1.0)?,
+                cloud: CloudParams {
+                    capacity_mmacs_per_s: cli
+                        .num("--cloud-capacity", cloud_defaults.capacity_mmacs_per_s)?,
+                    batch_window_s: cli.num("--batch-window", cloud_defaults.batch_window_s)?,
+                    ..cloud_defaults
+                },
+                ..Default::default()
+            };
+            let wall = std::time::Instant::now();
+            let out = run_fleet(&cfg)?;
+            let wall_s = wall.elapsed().as_secs_f64();
+            let m = &out.metrics;
+            let peak_wait = out
+                .cloud_timeline
+                .iter()
+                .map(|p| p.queue_wait_s)
+                .fold(0.0f64, f64::max);
+            let peak_load = out.cloud_timeline.iter().map(|p| p.load).fold(0.0f64, f64::max);
+            println!("== fleet simulation ==");
+            println!(
+                "fleet        : {} devices x {} requests ({} arrivals @ {:.2} Hz, env {})",
+                cfg.devices,
+                cfg.requests_per_device,
+                cfg.arrival.name(),
+                cfg.rate_hz,
+                cfg.env.name()
+            );
+            println!("policy       : {} (per device)", cfg.policy.name());
+            println!("shards       : {}", cfg.shards);
+            println!("served       : {} requests", m.n());
+            println!("virtual time : {:.1} s", out.makespan_s);
+            println!("total energy : {:.1} J", m.total_energy_j());
+            println!("fleet PPW    : {:.3} inf/J", m.ppw());
+            let (p50, p95, p99) = m.latency_p50_p95_p99_s();
+            println!(
+                "latency      : p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            );
+            println!("QoS misses   : {:.1}%", m.qos_violation_ratio() * 100.0);
+            println!("acc misses   : {:.1}%", m.accuracy_violation_ratio() * 100.0);
+            println!(
+                "cloud        : {:.1}% of requests; peak load {:.2}, peak queue wait {:.1} ms",
+                m.cloud_rate() * 100.0,
+                peak_load,
+                peak_wait * 1e3
+            );
+            println!("selection mix:");
+            for bucket in autoscale::coordinator::metrics::SelectionStats::BUCKETS {
+                let rate = m.selections().rate(bucket);
+                if rate > 0.0 {
+                    println!("  {bucket:24} {:5.1}%", rate * 100.0);
+                }
+            }
+            println!("fingerprint  : {:016x}", m.fingerprint());
+            println!(
+                "wall time    : {:.2} s ({:.0} requests/s simulated)",
+                wall_s,
+                m.n() as f64 / wall_s.max(1e-9)
+            );
+            Ok(())
+        }
         "train" => {
-            let device = parse_device(flag(args, "--device").unwrap_or("Mi8Pro"))?;
+            let cli = parse_cli(cmd, rest, &["--device", "--save", "--seed"], &["--full"], 0)?;
+            let seed: u64 = cli.num("--seed", 7)?;
+            let quick = !cli.switches.contains("--full");
+            let device = parse_device(cli.value("--device").unwrap_or("Mi8Pro"))?;
             let runs = if quick { 8 } else { 25 };
             let agent = autoscale::experiments::common::train_autoscale(
                 device,
@@ -166,13 +367,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             println!("trained {} updates on {device}", agent.updates());
             println!("q-table: {} actions, {} KB", agent.actions.len(),
                 agent.table.memory_bytes() / 1024);
-            if let Some(path) = flag(args, "--save") {
+            if let Some(path) = cli.value("--save") {
                 agent.table.save(Path::new(path))?;
                 println!("saved q-table to {path}");
             }
             Ok(())
         }
         "runtime-check" => {
+            parse_cli(cmd, rest, &[], &[], 0)?;
             let mut engine = Engine::from_default_manifest()?;
             println!("PJRT platform: {}", engine.platform());
             let models = engine.manifest().models();
@@ -189,8 +391,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "autoscale — edge-inference execution scaling (AutoScale reproduction)\n\
-                 usage: autoscale <figure|all|serve|train|runtime-check|list> [flags]\n\
-                 flags: --seed N --full --device D --env E --requests N --policy P --runtime"
+                 usage: autoscale <figure|all|serve|fleet|train|runtime-check|list> [flags]\n\
+                 common flags: --seed N --full --device D --env E --requests N --policy P\n\
+                 serve: --runtime\n\
+                 fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
+                 \x20       --epoch S --cloud-capacity MMACS --batch-window S"
             );
             Ok(())
         }

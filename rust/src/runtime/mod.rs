@@ -1,23 +1,30 @@
-//! PJRT runtime: loads the AOT HLO artifacts and executes them on the CPU
-//! PJRT client from the request path. Python is never involved here.
+//! Execution runtime for the AOT HLO artifacts.
 //!
-//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
-//! (text interchange — jax>=0.5 serialized protos are rejected by the
-//! bundled xla_extension 0.5.1) → `XlaComputation::from_proto` →
-//! `client.compile` → `executable.execute`.
+//! Two interchangeable engines sit behind one API:
 //!
-//! Compiled executables are cached per artifact so each (model, precision)
-//! pays XLA compilation exactly once per process; the hot path is execute()
-//! plus one literal→buffer upload.
+//! * **`pjrt`** (cargo feature `pjrt`) — the real thing: loads the
+//!   `artifacts/*.hlo.txt` files produced by `aot.py` and executes them on
+//!   the CPU PJRT client through the `xla` bindings. Python is never
+//!   involved on the request path. Enabling the feature requires the `xla`
+//!   crate, which the offline build environment does not ship.
+//! * **`sim`** (default) — an API-identical deterministic stand-in: it
+//!   validates artifacts against the same manifest, models per-artifact
+//!   wall time from the manifest's tiny-scale MAC counts with seeded
+//!   run-to-run jitter, and produces seed-deterministic pseudo-outputs.
+//!   Everything downstream (serving loop grounding via `compute_factor`,
+//!   failure-injection behaviour on missing artifacts, calibration) works
+//!   identically, so the coordinator and tests exercise the same code
+//!   paths in both builds.
 
-use std::collections::HashMap;
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod sim;
 
-use anyhow::{Context, Result};
-
-use crate::nn::manifest::{ArtifactEntry, Manifest};
-use crate::types::Precision;
-use crate::util::rng::Pcg64;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
+#[cfg(not(feature = "pjrt"))]
+pub use sim::Engine;
 
 /// A timed execution result.
 #[derive(Clone, Debug)]
@@ -28,97 +35,17 @@ pub struct ExecTiming {
     pub output: Vec<f32>,
 }
 
-/// The PJRT engine: client + compiled-executable cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<(String, Precision), xla::PjRtLoadedExecutable>,
-    /// Calibration mean wall time per artifact (seconds), filled lazily.
-    calibration: HashMap<(String, Precision), f64>,
-}
-
+/// Calibration-based compute grounding, shared by both engines — they
+/// differ only in how `execute` produces wall time.
 impl Engine {
-    /// Create a CPU PJRT engine over the given artifact manifest.
-    pub fn new(manifest: Manifest) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, manifest, cache: HashMap::new(), calibration: HashMap::new() })
-    }
-
-    /// Convenience: load the default manifest location.
-    pub fn from_default_manifest() -> Result<Engine> {
-        Engine::new(Manifest::load_default()?)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch cached) executable for a (model, precision).
-    pub fn load(&mut self, model: &str, precision: Precision) -> Result<()> {
-        let key = (model.to_string(), precision);
-        if self.cache.contains_key(&key) {
-            return Ok(());
-        }
-        let entry = self
-            .manifest
-            .find(model, precision)
-            .with_context(|| format!("artifact {model}/{precision} not in manifest"))?
-            .clone();
-        let exe = self.compile_artifact(&entry)?;
-        self.cache.insert(key, exe);
-        Ok(())
-    }
-
-    fn compile_artifact(&self, entry: &ArtifactEntry) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            entry
-                .artifact
-                .to_str()
-                .context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", entry.artifact))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of {:?}", entry.artifact))
-    }
-
-    /// Execute one inference with a deterministic pseudo-random input drawn
-    /// from `seed` (the models embed their weights; input is the image /
-    /// token embedding tensor).
-    pub fn execute(&mut self, model: &str, precision: Precision, seed: u64) -> Result<ExecTiming> {
-        self.load(model, precision)?;
-        let entry = self.manifest.find(model, precision).unwrap().clone();
-        let exe = self.cache.get(&(model.to_string(), precision)).unwrap();
-
-        let n: usize = entry.input_shape.iter().product();
-        let mut rng = Pcg64::new(seed);
-        let data: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
-        let dims: Vec<i64> = entry.input_shape.iter().map(|&d| d as i64).collect();
-
-        let t0 = Instant::now();
-        let input = xla::Literal::vec1(&data)
-            .reshape(&dims)
-            .context("reshaping input literal")?;
-        let result = exe
-            .execute::<xla::Literal>(&[input])
-            .context("PJRT execute")?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let wall_s = t0.elapsed().as_secs_f64();
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let output = out.to_vec::<f32>().unwrap_or_default();
-        Ok(ExecTiming { wall_s, output })
-    }
-
     /// Mean wall time over `n` runs — the calibration anchor for the
     /// compute_factor fed into the simulator.
-    pub fn calibrate(&mut self, model: &str, precision: Precision, n: usize) -> Result<f64> {
+    pub fn calibrate(
+        &mut self,
+        model: &str,
+        precision: crate::types::Precision,
+        n: usize,
+    ) -> anyhow::Result<f64> {
         let mut total = 0.0;
         for i in 0..n.max(1) {
             total += self.execute(model, precision, 1000 + i as u64)?.wall_s;
@@ -128,10 +55,15 @@ impl Engine {
         Ok(mean)
     }
 
-    /// Real-compute factor for one fresh execution: wall / calibration mean.
-    /// 1.0 when uncalibrated. This is how real PJRT execution perturbs the
-    /// simulated latency (run-to-run variance of actual tensor compute).
-    pub fn compute_factor(&mut self, model: &str, precision: Precision, seed: u64) -> Result<f64> {
+    /// Real-compute factor for one fresh execution: wall / calibration
+    /// mean; 1.0 when uncalibrated. This is how measured execution
+    /// variance perturbs the simulated latency.
+    pub fn compute_factor(
+        &mut self,
+        model: &str,
+        precision: crate::types::Precision,
+        seed: u64,
+    ) -> anyhow::Result<f64> {
         let key = (model.to_string(), precision);
         let cal = match self.calibration.get(&key) {
             Some(&c) => c,
@@ -140,18 +72,16 @@ impl Engine {
         let wall = self.execute(model, precision, seed)?.wall_s;
         Ok((wall / cal.max(1e-9)).clamp(0.25, 4.0))
     }
-
-    /// Number of compiled executables resident.
-    pub fn loaded_count(&self) -> usize {
-        self.cache.len()
-    }
 }
 
 #[cfg(test)]
 mod tests {
     //! These tests need `artifacts/` built (`make artifacts`); they are the
-    //! integration proof that the AOT bridge works end to end.
+    //! integration proof that the AOT bridge works end to end. They run
+    //! against whichever engine the build selected.
     use super::*;
+    use crate::nn::manifest::Manifest;
+    use crate::types::Precision;
 
     fn engine() -> Option<Engine> {
         match Manifest::load_default() {

@@ -1,0 +1,121 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the CPU
+//! PJRT client from the request path. Python is never involved here.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! (text interchange — jax>=0.5 serialized protos are rejected by the
+//! bundled xla_extension 0.5.1) → `XlaComputation::from_proto` →
+//! `client.compile` → `executable.execute`.
+//!
+//! Compiled executables are cached per artifact so each (model, precision)
+//! pays XLA compilation exactly once per process; the hot path is execute()
+//! plus one literal→buffer upload.
+//!
+//! Only built with the `pjrt` cargo feature (requires the `xla` bindings,
+//! absent from the offline crate cache); the default build uses the
+//! deterministic `sim` engine behind the same API.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::nn::manifest::{ArtifactEntry, Manifest};
+use crate::types::Precision;
+use crate::util::rng::Pcg64;
+
+use super::ExecTiming;
+
+/// The PJRT engine: client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, Precision), xla::PjRtLoadedExecutable>,
+    /// Calibration mean wall time per artifact (seconds), filled lazily by
+    /// the shared `calibrate`/`compute_factor` impl in `runtime::mod`.
+    pub(super) calibration: HashMap<(String, Precision), f64>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over the given artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), calibration: HashMap::new() })
+    }
+
+    /// Convenience: load the default manifest location.
+    pub fn from_default_manifest() -> Result<Engine> {
+        Engine::new(Manifest::load_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) executable for a (model, precision).
+    pub fn load(&mut self, model: &str, precision: Precision) -> Result<()> {
+        let key = (model.to_string(), precision);
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .find(model, precision)
+            .with_context(|| format!("artifact {model}/{precision} not in manifest"))?
+            .clone();
+        let exe = self.compile_artifact(&entry)?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    fn compile_artifact(&self, entry: &ArtifactEntry) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            entry
+                .artifact
+                .to_str()
+                .context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", entry.artifact))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {:?}", entry.artifact))
+    }
+
+    /// Execute one inference with a deterministic pseudo-random input drawn
+    /// from `seed` (the models embed their weights; input is the image /
+    /// token embedding tensor).
+    pub fn execute(&mut self, model: &str, precision: Precision, seed: u64) -> Result<ExecTiming> {
+        self.load(model, precision)?;
+        let entry = self.manifest.find(model, precision).unwrap().clone();
+        let exe = self.cache.get(&(model.to_string(), precision)).unwrap();
+
+        let n: usize = entry.input_shape.iter().product();
+        let mut rng = Pcg64::new(seed);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let dims: Vec<i64> = entry.input_shape.iter().map(|&d| d as i64).collect();
+
+        let t0 = Instant::now();
+        let input = xla::Literal::vec1(&data)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let output = out.to_vec::<f32>().unwrap_or_default();
+        Ok(ExecTiming { wall_s, output })
+    }
+
+    /// Number of compiled executables resident.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,102 @@
+//! Deterministic stand-in for the PJRT engine (default build).
+//!
+//! Mirrors `pjrt::Engine`'s API and observable behaviour exactly:
+//! artifacts are resolved through the same manifest and must exist on
+//! disk (so failure-injection paths behave identically), outputs are a
+//! pure function of the request seed, and per-execution wall time is
+//! modelled from the artifact's tiny-scale MAC count with seeded
+//! run-to-run jitter — which is what `compute_factor` feeds back into the
+//! latency simulator as "real" compute variance.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::nn::manifest::{ArtifactEntry, Manifest};
+use crate::types::Precision;
+use crate::util::rng::Pcg64;
+
+use super::ExecTiming;
+
+/// The simulated engine: manifest + "loaded" artifact cache.
+pub struct Engine {
+    manifest: Manifest,
+    cache: HashMap<(String, Precision), ArtifactEntry>,
+    /// Calibration mean wall time per artifact (seconds), filled lazily by
+    /// the shared `calibrate`/`compute_factor` impl in `runtime::mod`.
+    pub(super) calibration: HashMap<(String, Precision), f64>,
+}
+
+/// Stable per-artifact RNG stream id so different (model, precision)
+/// pairs draw independent jitter for the same request seed.
+fn stream_id(model: &str, precision: Precision) -> u64 {
+    crate::util::hash::fnv1a_bytes(model.as_bytes())
+        ^ match precision {
+            Precision::Fp32 => 1,
+            Precision::Fp16 => 2,
+            Precision::Int8 => 3,
+        }
+}
+
+impl Engine {
+    /// Create a simulated engine over the given artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        Ok(Engine { manifest, cache: HashMap::new(), calibration: HashMap::new() })
+    }
+
+    /// Convenience: load the default manifest location.
+    pub fn from_default_manifest() -> Result<Engine> {
+        Engine::new(Manifest::load_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        "sim-cpu (build without `pjrt` feature)".to_string()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Validate (or fetch cached) the artifact for a (model, precision).
+    /// Like the real engine's compile step, this fails when the manifest
+    /// has no entry or the artifact file is missing on disk.
+    pub fn load(&mut self, model: &str, precision: Precision) -> Result<()> {
+        let key = (model.to_string(), precision);
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .find(model, precision)
+            .with_context(|| format!("artifact {model}/{precision} not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            entry.artifact.exists(),
+            "artifact file missing: {:?} (run `make artifacts`)",
+            entry.artifact
+        );
+        self.cache.insert(key, entry);
+        Ok(())
+    }
+
+    /// Execute one inference with a deterministic pseudo-random input drawn
+    /// from `seed`. Output and wall time are pure functions of
+    /// (model, precision, seed).
+    pub fn execute(&mut self, model: &str, precision: Precision, seed: u64) -> Result<ExecTiming> {
+        self.load(model, precision)?;
+        let entry = self.cache.get(&(model.to_string(), precision)).unwrap();
+        let n: usize = entry.input_shape.iter().product::<usize>().max(1);
+        let mut rng = Pcg64::with_stream(seed, stream_id(model, precision));
+        // Base wall time from the artifact's own (tiny-scale) compute,
+        // plus bounded multiplicative run-to-run jitter.
+        let base_s = 2e-5 + entry.macs as f64 * 1e-9;
+        let wall_s = base_s * (1.0 + rng.normal(0.0, 0.08)).clamp(0.7, 1.5);
+        let output: Vec<f32> = (0..n.min(1024)).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        Ok(ExecTiming { wall_s, output })
+    }
+
+    /// Number of validated artifacts resident.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}

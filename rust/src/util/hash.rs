@@ -1,0 +1,37 @@
+//! Tiny FNV-1a (64-bit) fold, shared by deterministic fingerprints and
+//! stable per-name RNG stream ids. Deliberately not cryptographic — the
+//! point is a stable, dependency-free digest identical across runs,
+//! platforms and shard layouts.
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one u64 into the running FNV-1a state.
+#[inline]
+pub fn fnv1a_fold(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a over a byte string, starting from the standard offset basis.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(FNV_OFFSET, |h, &b| fnv1a_fold(h, b as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_input_sensitive() {
+        assert_eq!(fnv1a_bytes(b"mobilenet_v1"), fnv1a_bytes(b"mobilenet_v1"));
+        assert_ne!(fnv1a_bytes(b"mobilenet_v1"), fnv1a_bytes(b"mobilenet_v2"));
+        assert_ne!(fnv1a_fold(FNV_OFFSET, 1), fnv1a_fold(FNV_OFFSET, 2));
+    }
+
+    #[test]
+    fn matches_reference_vector() {
+        // FNV-1a 64 reference: fnv1a("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_bytes(b""), FNV_OFFSET);
+    }
+}

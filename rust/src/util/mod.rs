@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod clock;
+pub mod hash;
 pub mod ptest;
 pub mod report;
 pub mod rng;

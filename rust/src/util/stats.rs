@@ -33,21 +33,32 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// p-th percentile (0..=100) by linear interpolation; 0 for empty input.
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
+/// Several percentiles (each 0..=100) from ONE sorted copy, by linear
+/// interpolation; zeros for empty input. Prefer this over repeated
+/// [`percentile`] calls on large samples — each of those re-sorts.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
     if xs.is_empty() {
-        return 0.0;
+        return vec![0.0; ps.len()];
     }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
-    }
+    ps.iter()
+        .map(|&p| {
+            let rank = (p / 100.0) * (v.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                v[lo]
+            } else {
+                v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+            }
+        })
+        .collect()
+}
+
+/// p-th percentile (0..=100) by linear interpolation; 0 for empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    percentiles(xs, &[p])[0]
 }
 
 pub fn median(xs: &[f64]) -> f64 {
@@ -179,6 +190,16 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 40.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
         assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_single_calls() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let batch = percentiles(&xs, &[0.0, 50.0, 95.0, 100.0]);
+        for (i, p) in [0.0, 50.0, 95.0, 100.0].iter().enumerate() {
+            assert_eq!(batch[i], percentile(&xs, *p));
+        }
+        assert_eq!(percentiles(&[], &[50.0, 99.0]), vec![0.0, 0.0]);
     }
 
     #[test]

@@ -132,6 +132,7 @@ fn extreme_interference_is_survivable() {
         },
         thermal_cap: 0.5,
         compute_factor: 4.0,
+        remote_queue_s: 0.0,
     };
     let m = env.sim.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
     assert!(m.latency_s.is_finite() && m.latency_s > 0.0);

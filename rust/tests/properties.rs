@@ -10,7 +10,7 @@ use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::policy::action_catalogue;
 use autoscale::exec::latency::RunContext;
 use autoscale::interference::Interference;
-use autoscale::net::{LinkKind, LinkParams};
+use autoscale::net::{LinkKind, LinkParams, RssiProcess, WEAK_RSSI_DBM};
 use autoscale::nn::zoo::ZOO;
 use autoscale::ptassert;
 use autoscale::types::{DeviceId, Measurement};
@@ -40,6 +40,7 @@ fn prop_simulator_outputs_always_physical() {
             },
             thermal_cap: g.f64_in(0.5, 1.0),
             compute_factor: g.f64_in(0.25, 4.0),
+            remote_queue_s: g.f64_in(0.0, 0.5),
         };
         let m = env.sim.run(nn, action, &ctx);
         ptassert!(m.latency_s.is_finite() && m.latency_s > 0.0, "latency {m:?}");
@@ -98,6 +99,98 @@ fn prop_weaker_signal_never_cheapens_remote() {
             "tx power must not shrink as signal weakens"
         );
         ptassert!(p.rate_mbps(weak) > 0.0, "rate must stay positive");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_rate_monotone_nonincreasing_as_rssi_drops() {
+    // Table-1 / §3.2: goodput never improves as the signal weakens, across
+    // the full physical RSSI range and both link classes.
+    Runner::new("net_rate_monotone", 250).run(|g| {
+        let p = LinkParams::preset(if g.bool() { LinkKind::Wlan } else { LinkKind::P2p });
+        let hi = g.f64_in(-95.0, -30.0);
+        let lo = hi - g.f64_in(0.0, 40.0);
+        ptassert!(
+            p.rate_mbps(lo) <= p.rate_mbps(hi) + 1e-12,
+            "rate must not rise as RSSI drops: {} dBm -> {} Mbps, {} dBm -> {} Mbps",
+            hi,
+            p.rate_mbps(hi),
+            lo,
+            p.rate_mbps(lo)
+        );
+        ptassert!(p.rate_mbps(lo) > 0.0, "rate must stay positive at {lo} dBm");
+        ptassert!(
+            p.rate_mbps(hi) <= p.peak_mbps + 1e-12,
+            "rate can never exceed the peak"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_tx_power_nondecreasing_below_knee() {
+    // Power control: at/above the knee TX power is flat at the base level;
+    // below it, every extra dBm of deficit costs monotonically more power.
+    Runner::new("net_tx_power_monotone", 250).run(|g| {
+        let p = LinkParams::preset(if g.bool() { LinkKind::Wlan } else { LinkKind::P2p });
+        let above = g.f64_in(p.knee_dbm, -30.0);
+        ptassert!(
+            (p.tx_power(above) - p.tx_power_w).abs() < 1e-12,
+            "above the knee TX power is the base level"
+        );
+        let hi = g.f64_in(-95.0, p.knee_dbm);
+        let lo = hi - g.f64_in(0.0, 20.0);
+        ptassert!(
+            p.tx_power(lo) >= p.tx_power(hi) - 1e-12,
+            "below the knee, weaker signal must not cost less power: \
+             {hi} dBm -> {} W, {lo} dBm -> {} W",
+            p.tx_power(hi),
+            p.tx_power(lo)
+        );
+        ptassert!(p.tx_power(lo) >= p.tx_power_w, "never below the base level");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_weak_threshold_matches_table1() {
+    // The -80 dBm Regular/Weak boundary: the net layer's is_weak(), the
+    // exported constant, and the agent's state discretization must agree
+    // on every RSSI sample.
+    Runner::new("net_weak_threshold", 300).run(|g| {
+        ptassert!(WEAK_RSSI_DBM == -80.0, "Table-1 threshold is -80 dBm");
+        let dbm = if g.bool() {
+            g.f64_in(-95.0, -30.0)
+        } else {
+            // oversample the boundary region
+            g.f64_in(-81.0, -79.0)
+        };
+        let r = RssiProcess::pinned(dbm);
+        ptassert!(
+            r.is_weak() == (dbm <= WEAK_RSSI_DBM),
+            "is_weak() disagrees with the Table-1 threshold at {dbm} dBm"
+        );
+        let mut obs = StateObs {
+            s_conv: 10,
+            s_fc: 1,
+            s_rc: 0,
+            s_mac_m: 500.0,
+            co_cpu: 0.0,
+            co_mem: 0.0,
+            rssi_wlan: dbm,
+            rssi_p2p: dbm,
+        };
+        let s = State::discretize(&obs);
+        let weak_bin = u8::from(dbm <= WEAK_RSSI_DBM);
+        ptassert!(
+            s.rssi_w == weak_bin && s.rssi_p == weak_bin,
+            "state bins disagree with the net threshold at {dbm} dBm"
+        );
+        // exactly at the boundary both layers call it Weak
+        obs.rssi_wlan = WEAK_RSSI_DBM;
+        ptassert!(State::discretize(&obs).rssi_w == 1, "boundary itself is Weak");
+        ptassert!(RssiProcess::pinned(WEAK_RSSI_DBM).is_weak(), "boundary is Weak");
         Ok(())
     });
 }
