@@ -11,8 +11,8 @@
 use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, RunConfig};
 use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::policy::{action_catalogue, Policy};
 use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::policy::{action_catalogue, AutoScalePolicy, PolicySpec, ScalingPolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
 use autoscale::util::stats;
@@ -48,16 +48,13 @@ fn main() -> anyhow::Result<()> {
         let environment = Environment::build(device, *env, seed + i as u64);
         let mut server = Server::new(
             environment,
-            Policy::AutoScale(agent),
+            AutoScalePolicy::new(agent),
             ServeConfig { run: cfg, models: vec![] },
         )
         .with_engine(&mut engine);
         let m = server.serve(100);
         trained_requests += m.n();
-        agent = match server.policy {
-            Policy::AutoScale(a) => a,
-            _ => unreachable!(),
-        };
+        agent = server.policy.into_agent();
         println!(
             "train {}: {} reqs, PPW {:.2}, QoS misses {:.1}%",
             env.name(),
@@ -78,23 +75,6 @@ fn main() -> anyhow::Result<()> {
     println!("\n{:16} {:>9} {:>10} {:>10} {:>10} {:>9}", "policy", "PPW", "p50 ms", "p95 ms", "QoS miss", "vs CPU");
     let mut cpu_ppw = None;
     for name in ["cpu", "best", "cloud", "connected", "autoscale", "opt"] {
-        let policy = match name {
-            "cpu" => Policy::EdgeCpuFp32,
-            "best" => Policy::EdgeBest,
-            "cloud" => Policy::CloudAlways,
-            "connected" => Policy::ConnectedEdgeAlways,
-            "opt" => Policy::Opt,
-            _ => {
-                let mut a = AutoScaleAgent::with_transfer(
-                    agent.actions.clone(),
-                    agent.params,
-                    seed,
-                    &agent,
-                );
-                a.freeze();
-                Policy::AutoScale(a)
-            }
-        };
         let mut all_lat = Vec::new();
         let mut total_energy = 0.0;
         let mut total_n = 0usize;
@@ -108,14 +88,10 @@ fn main() -> anyhow::Result<()> {
             cfg.env = *env;
             cfg.seed = seed + 100 + i as u64;
             let environment = Environment::build(device, *env, seed + 100 + i as u64);
-            // policies are consumed per-episode: rebuild static ones
-            let p = match name {
-                "cpu" => Policy::EdgeCpuFp32,
-                "best" => Policy::EdgeBest,
-                "cloud" => Policy::CloudAlways,
-                "connected" => Policy::ConnectedEdgeAlways,
-                "opt" => Policy::Opt,
-                _ => {
+            // policies are consumed per-episode: rebuild each time, via the
+            // registry for everything except the locally trained agent
+            let p: Box<dyn ScalingPolicy> = match name {
+                "autoscale" => {
                     let mut a = AutoScaleAgent::with_transfer(
                         agent.actions.clone(),
                         agent.params,
@@ -123,8 +99,9 @@ fn main() -> anyhow::Result<()> {
                         &agent,
                     );
                     a.freeze();
-                    Policy::AutoScale(a)
+                    Box::new(AutoScalePolicy::new(a))
                 }
+                _ => autoscale::policy::build(name, &PolicySpec::new(device, seed))?,
             };
             let mut server = Server::new(environment, p, ServeConfig { run: cfg, models: vec![] })
                 .with_engine(&mut engine);
@@ -138,7 +115,6 @@ fn main() -> anyhow::Result<()> {
             total_energy += m.total_energy_j();
             total_n += m.n();
         }
-        let _ = policy;
         let ppw = total_n as f64 / total_energy;
         if name == "cpu" {
             cpu_ppw = Some(ppw);

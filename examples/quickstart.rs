@@ -7,8 +7,8 @@
 use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, RunConfig};
 use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::policy::{action_catalogue, Policy};
 use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::policy::{action_catalogue, AutoScalePolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::{DeviceId, Precision};
 
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let env = Environment::build(device, EnvKind::S1NoVariance, 7);
     let mut server = Server::new(
         env,
-        Policy::AutoScale(agent),
+        AutoScalePolicy::new(agent),
         ServeConfig { run: cfg, models: vec!["mobilenet_v1", "inception_v1"] },
     )
     .with_engine(&mut engine);

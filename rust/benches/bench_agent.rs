@@ -4,7 +4,7 @@
 
 use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::agent::state::{State, StateObs};
-use autoscale::coordinator::policy::action_catalogue;
+use autoscale::policy::action_catalogue;
 use autoscale::device::presets::device;
 use autoscale::interference::Interference;
 use autoscale::nn::zoo::by_name;

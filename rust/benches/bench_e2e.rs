@@ -6,8 +6,8 @@
 use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, RunConfig};
 use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::policy::{action_catalogue, Policy};
 use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::policy::{action_catalogue, AutoScalePolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
 
@@ -21,7 +21,7 @@ fn run_serving(n: usize, with_engine: bool) -> (f64, usize) {
     let mut engine_store;
     let mut server = Server::new(
         env,
-        Policy::AutoScale(agent),
+        AutoScalePolicy::new(agent),
         ServeConfig { run: cfg, models: vec!["mobilenet_v1", "mobilenet_v3"] },
     );
     if with_engine {

@@ -66,12 +66,50 @@ impl EpisodeMetrics {
         s
     }
 
+    /// Order-sensitive 64-bit digest of the full outcome stream: action,
+    /// latency/energy bit patterns, completion timestamp per request.
+    /// Equal fingerprints mean bit-identical episodes — the refactor-parity
+    /// tests pin policy behaviour with this.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::hash::{fnv1a_bytes, fnv1a_fold, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for o in &self.outcomes {
+            h = fnv1a_fold(h, fnv1a_bytes(o.nn.as_bytes()));
+            h = fnv1a_fold(h, action_code(o.action));
+            h = fnv1a_fold(h, o.measurement.latency_s.to_bits());
+            h = fnv1a_fold(h, o.measurement.energy_true_j.to_bits());
+            h = fnv1a_fold(h, o.measurement.accuracy.to_bits());
+            h = fnv1a_fold(h, o.t_s.to_bits());
+        }
+        h
+    }
+
     /// MAPE of the Eq.(1)-(4) energy estimator vs true energy (§4.1: 7.3%).
     pub fn energy_estimator_mape(&self) -> f64 {
         let est: Vec<f64> = self.outcomes.iter().map(|o| o.measurement.energy_est_j).collect();
         let tru: Vec<f64> = self.outcomes.iter().map(|o| o.measurement.energy_true_j).collect();
         crate::util::stats::mape(&est, &tru)
     }
+}
+
+/// Stable integer encoding of an action for fingerprinting.
+fn action_code(a: Action) -> u64 {
+    let site = match a.site {
+        Site::Local => 0u64,
+        Site::ConnectedEdge => 1,
+        Site::Cloud => 2,
+    };
+    let proc = match a.proc {
+        ProcKind::Cpu => 0u64,
+        ProcKind::Gpu => 1,
+        ProcKind::Dsp => 2,
+    };
+    let prec = match a.precision {
+        Precision::Fp32 => 0u64,
+        Precision::Fp16 => 1,
+        Precision::Int8 => 2,
+    };
+    site | (proc << 8) | ((a.vf_step as u64) << 16) | (prec << 24)
 }
 
 /// Fig. 13 selection-rate buckets.
@@ -226,6 +264,20 @@ mod tests {
         assert_eq!(a.count("Cloud"), 2);
         assert_eq!(a.count("Connected Edge"), 1);
         assert!((a.rate("Cloud") - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let mut a = EpisodeMetrics::default();
+        let mut b = EpisodeMetrics::default();
+        a.push(outcome(Action::cloud(), 0.04, 0.2));
+        b.push(outcome(Action::cloud(), 0.04, 0.2));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.push(outcome(Action::cloud(), 0.05, 0.2));
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = EpisodeMetrics::default();
+        c.push(outcome(Action::connected_edge(), 0.04, 0.2));
+        assert_ne!(a.fingerprint(), c.fingerprint(), "action must be digested");
     }
 
     #[test]

@@ -1,15 +1,14 @@
 //! The L3 serving coordinator: builds the execution environment (device +
 //! links + co-runners per Table 4), generates request streams per the §5.2
-//! use-case scenarios, runs the observe → select → execute → reward →
-//! update loop of Fig. 8, and collects the metrics every experiment
-//! consumes (PPW, QoS violation ratio, selection rates, convergence).
+//! use-case scenarios, runs the observe → decide → execute → reward →
+//! feedback loop of Fig. 8 against any [`crate::policy::ScalingPolicy`],
+//! and collects the metrics every experiment consumes (PPW, QoS violation
+//! ratio, selection rates, convergence).
 
 pub mod envs;
 pub mod metrics;
-pub mod policy;
 pub mod serve;
 
 pub use envs::Environment;
 pub use metrics::{EpisodeMetrics, SelectionStats};
-pub use policy::Policy;
 pub use serve::{ServeConfig, Server};

@@ -1,17 +1,21 @@
 //! The serving loop (paper Fig. 8): for every inference request —
-//! ① observe state, ② select an action via the active policy, ③ execute
-//! (simulated device/network physics around optional real PJRT compute),
-//! ④ compute the Eq.(5) reward, ⑤ feed it back to the learner.
+//! ① observe state, ② ask the active [`ScalingPolicy`] for a decision,
+//! ③ execute (simulated device/network physics around optional real PJRT
+//! compute), ④ compute the Eq.(5) reward, ⑤ feed it back to the learner.
+//!
+//! The server is generic over the policy: any [`ScalingPolicy`] —
+//! registry-built `Box<dyn ScalingPolicy>` or a concrete type an
+//! experiment constructed by hand — drives the same loop.
 
 use crate::agent::reward::{reward, RewardParams};
 use crate::agent::state::{State, StateObs};
 use crate::configsys::runconfig::{RunConfig, Scenario};
 use crate::coordinator::envs::Environment;
 use crate::coordinator::metrics::EpisodeMetrics;
-use crate::coordinator::policy::{action_catalogue, edge_best_action, Policy};
 use crate::exec::latency::RunContext;
 use crate::exec::outcome::ExecOutcome;
 use crate::nn::zoo::{by_name, NnDesc, Workload};
+use crate::policy::{CloudCtx, DecisionCtx, Feedback, ScalingPolicy};
 use crate::runtime::Engine;
 use crate::types::Action;
 use crate::util::clock::VirtualClock;
@@ -37,9 +41,18 @@ pub struct ServeConfig {
 }
 
 /// The coordinator server: one environment + one policy + request stream.
-pub struct Server<'a> {
+pub struct Server<'a, P: ScalingPolicy> {
     pub env: Environment,
-    pub policy: Policy,
+    /// The active policy. Public so training drivers can move a finished
+    /// learner back out (e.g. `server.policy.into_agent()`); replacing it
+    /// mid-flight with a policy whose catalogue differs from the one this
+    /// server was constructed with is unsupported — the server passes its
+    /// construction-time catalogue copy to every decision. Build a fresh
+    /// `Server` to switch policies.
+    pub policy: P,
+    /// Copy of the policy's action catalogue, passed back through every
+    /// [`DecisionCtx`].
+    catalogue: Vec<Action>,
     cfg: ServeConfig,
     clock: VirtualClock,
     rng: Pcg64,
@@ -47,12 +60,14 @@ pub struct Server<'a> {
     engine: Option<&'a mut Engine>,
 }
 
-impl<'a> Server<'a> {
-    pub fn new(env: Environment, policy: Policy, cfg: ServeConfig) -> Server<'a> {
+impl<'a, P: ScalingPolicy> Server<'a, P> {
+    pub fn new(env: Environment, policy: P, cfg: ServeConfig) -> Server<'a, P> {
         let seed = cfg.run.seed;
+        let catalogue = policy.catalogue().to_vec();
         Server {
             env,
             policy,
+            catalogue,
             cfg,
             clock: VirtualClock::new(),
             rng: Pcg64::with_stream(seed, 1001),
@@ -62,7 +77,7 @@ impl<'a> Server<'a> {
 
     /// Attach a PJRT engine: local executions then run the real artifact
     /// and fold its wall-time variation into the simulated latency.
-    pub fn with_engine(mut self, engine: &'a mut Engine) -> Server<'a> {
+    pub fn with_engine(mut self, engine: &'a mut Engine) -> Server<'a, P> {
         self.engine = Some(engine);
         self
     }
@@ -95,8 +110,22 @@ impl<'a> Server<'a> {
         let s = State::discretize(&obs);
         let qos = self.qos_for(nn);
 
-        // ② select action
-        let (idx, action) = self.select(&obs, s, nn, qos);
+        // ② decide: the policy sees the noisy sensor reading, the action
+        // catalogue and a shadow-simulator handle (Opt-style what-ifs).
+        let decision = {
+            let ctx = DecisionCtx {
+                obs: &obs,
+                state: s,
+                nn,
+                qos_s: qos,
+                accuracy_target: self.cfg.run.accuracy_target,
+                catalogue: &self.catalogue,
+                sim: &self.env.sim,
+                cloud: CloudCtx::default(),
+            };
+            self.policy.decide(&ctx)
+        };
+        let action = decision.action;
 
         // ③ execute (optionally grounding compute in a real PJRT run).
         // The physics see the TRUE interference; the policy saw the noisy
@@ -127,11 +156,17 @@ impl<'a> Server<'a> {
         let r = reward(&m, &rp);
 
         // ⑤ feedback: observe S' (same request context, post-execution
-        // variance sample) and update the learner.
+        // variance sample) and update the learner. Non-learning policies
+        // skip the extra observation, so they consume no additional RNG.
         if self.policy.is_learning() {
             let (obs_next, _) = self.observe(nn);
             let s_next = State::discretize(&obs_next);
-            self.policy.observe(s, idx, r, s_next);
+            self.policy.feedback(&Feedback {
+                state: s,
+                next_state: s_next,
+                catalogue_idx: decision.catalogue_idx,
+                reward: r,
+            });
         }
 
         let mut outcome = ExecOutcome {
@@ -158,46 +193,5 @@ impl<'a> Server<'a> {
     fn observe(&mut self, nn: &NnDesc) -> (StateObs, crate::interference::Interference) {
         let t = self.clock.now();
         self.env.observe(nn, t, &mut self.rng)
-    }
-
-    /// Policy dispatch for ② (the oracle needs simulator access, hence here
-    /// rather than on Policy).
-    fn select(&mut self, obs: &StateObs, s: State, nn: &NnDesc, qos: f64) -> (usize, Action) {
-        match &mut self.policy {
-            Policy::EdgeCpuFp32 => {
-                (0, Action::local(crate::types::ProcKind::Cpu, crate::types::Precision::Fp32))
-            }
-            Policy::EdgeBest => (0, edge_best_action(&self.env.sim.local, nn)),
-            Policy::CloudAlways => (0, Action::cloud()),
-            Policy::ConnectedEdgeAlways => (0, Action::connected_edge()),
-            Policy::Opt => (0, self.oracle_action(nn, obs, qos)),
-            Policy::AutoScale(agent) => agent.select(s),
-            Policy::Regression(r) => r.select(obs, qos),
-            Policy::Classifier(c) => c.select(obs),
-        }
-    }
-
-    /// The Opt oracle: the shared shadow-evaluation loop
-    /// ([`crate::coordinator::policy::oracle_best_action`]) with an
-    /// uncongested-cloud context.
-    pub fn oracle_action(&mut self, nn: &NnDesc, obs: &StateObs, qos: f64) -> Action {
-        let catalogue = action_catalogue(&self.env.sim.local);
-        let ctx = RunContext {
-            interference: crate::interference::Interference {
-                cpu_util: obs.co_cpu,
-                mem_pressure: obs.co_mem,
-            },
-            thermal_cap: 1.0,
-            compute_factor: 1.0,
-            remote_queue_s: 0.0,
-        };
-        crate::coordinator::policy::oracle_best_action(
-            &self.env.sim,
-            nn,
-            &catalogue,
-            self.cfg.run.accuracy_target,
-            qos,
-            |_| ctx.clone(),
-        )
     }
 }

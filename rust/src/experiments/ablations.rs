@@ -10,7 +10,7 @@
 use crate::agent::qlearn::AutoScaleAgent;
 use crate::agent::state::{State, StateObs};
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
-use crate::coordinator::policy::{action_catalogue, Policy};
+use crate::policy::{action_catalogue, AutoScalePolicy};
 use crate::types::DeviceId;
 use crate::util::report::{f, pct, Table};
 
@@ -31,7 +31,7 @@ fn eval_agent(agent: &AutoScaleAgent, n: usize, seed: u64) -> (f64, f64) {
             DeviceId::Mi8Pro,
             *env,
             Scenario::NonStreaming,
-            Policy::AutoScale(frozen),
+            AutoScalePolicy::new(frozen),
             vec![],
             n / EnvKind::STATIC.len(),
             0.5,
@@ -118,14 +118,11 @@ pub fn run_bins(seed: u64, quick: bool) -> Vec<Table> {
             run.seed = seed + ei as u64;
             let mut server = crate::coordinator::serve::Server::new(
                 environment,
-                Policy::AutoScale(agent),
+                AutoScalePolicy::new(agent),
                 crate::coordinator::serve::ServeConfig { run, models: vec![] },
             );
             server.serve(runs_per_nn * crate::nn::zoo::ZOO.len() / 4);
-            agent = match server.policy {
-                Policy::AutoScale(a) => a,
-                _ => unreachable!(),
-            };
+            agent = server.policy.into_agent();
         }
         agent
     };
@@ -264,7 +261,7 @@ pub fn run_split(seed: u64, quick: bool) -> Vec<Table> {
             dev,
             env,
             Scenario::NonStreaming,
-            Policy::AutoScale(frozen),
+            AutoScalePolicy::new(frozen),
             vec![],
             per,
             0.5,

@@ -1,30 +1,24 @@
 //! Shared experiment plumbing: run one (device, env, policy) episode,
-//! train AutoScale to convergence, build trained predictor policies from a
-//! collected dataset, and format ratios the way the figures report them.
+//! build policies by registry name, and train AutoScale to convergence.
+//! The §3.3 predictor trainers live in [`crate::policy::predictors`] now —
+//! the registry builds them for `--policy lr|svr|svm|knn`, and fig7
+//! imports the fitting functions directly for its error tables.
 
 use crate::agent::qlearn::AutoScaleAgent;
-use crate::agent::state::StateObs;
-use crate::baselines::{Knn, LinReg, LinearSvm, LinearSvr, Scaler};
-use crate::baselines::svm::SvmParams;
-use crate::baselines::svr::SvrParams;
 use crate::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use crate::coordinator::envs::Environment;
 use crate::coordinator::metrics::EpisodeMetrics;
-use crate::coordinator::policy::{
-    action_catalogue, features, ClassifierPolicy, ClsModel, Policy, RegModel, RegressionPolicy,
-};
 use crate::coordinator::serve::{ServeConfig, Server};
-use crate::exec::latency::RunContext;
-use crate::nn::zoo::{by_name, ZOO};
-use crate::types::{Action, DeviceId};
-use crate::util::rng::Pcg64;
+use crate::nn::zoo::ZOO;
+use crate::policy::{AutoScalePolicy, PolicySpec, ScalingPolicy};
+use crate::types::DeviceId;
 
 /// Serve one episode with a fresh environment.
-pub fn run_episode(
+pub fn run_episode<P: ScalingPolicy>(
     dev: DeviceId,
     env: EnvKind,
     scenario: Scenario,
-    policy: Policy,
+    policy: P,
     models: Vec<&'static str>,
     requests: usize,
     accuracy_target: f64,
@@ -42,6 +36,13 @@ pub fn run_episode(
     server.serve(requests)
 }
 
+/// Registry-built policy for experiment drivers: the same construction
+/// path as `serve --policy <name>` / `fleet --policy <name>`.
+pub fn named_policy(name: &str, dev: DeviceId, seed: u64) -> Box<dyn ScalingPolicy> {
+    crate::policy::build(name, &PolicySpec::new(dev, seed))
+        .expect("experiment drivers use registered policy names")
+}
+
 /// Train an AutoScale agent across all envs on one device, then return it
 /// frozen for evaluation (the paper trains with 100 runs per NN per
 /// variance state; `runs_per_nn` scales that down for quick mode).
@@ -53,7 +54,8 @@ pub fn train_autoscale(
     runs_per_nn: usize,
     seed: u64,
 ) -> AutoScaleAgent {
-    let catalogue = action_catalogue(&crate::device::presets::device(dev));
+    let catalogue =
+        crate::policy::action_catalogue(&crate::device::presets::device(dev));
     let mut agent = AutoScaleAgent::new(catalogue, Default::default(), seed);
     agent = train_existing(agent, dev, envs, scenario, accuracy_target, runs_per_nn, seed);
     agent
@@ -69,7 +71,7 @@ pub fn train_existing(
     runs_per_nn: usize,
     seed: u64,
 ) -> AutoScaleAgent {
-    let mut policy = Policy::AutoScale(agent);
+    let mut policy = AutoScalePolicy::new(agent);
     for (ei, env) in envs.iter().enumerate() {
         let environment = Environment::build(dev, *env, seed + ei as u64);
         let mut run = RunConfig::default();
@@ -82,115 +84,9 @@ pub fn train_existing(
         server.serve(runs_per_nn * ZOO.len());
         policy = server.policy;
     }
-    match policy {
-        Policy::AutoScale(mut agent) => {
-            agent.freeze();
-            agent
-        }
-        _ => unreachable!(),
-    }
-}
-
-/// One labeled sample for the §3.3 predictors.
-pub struct Sample {
-    pub obs: StateObs,
-    /// True energy and latency per catalogue action.
-    pub energy: Vec<f64>,
-    pub latency: Vec<f64>,
-    /// Index of the optimal action (label for classifiers).
-    pub best: usize,
-}
-
-/// Collect a training dataset by sweeping environments and what-if
-/// evaluating every action (the "offline profiling" the prediction-based
-/// works rely on).
-pub fn collect_dataset(
-    dev: DeviceId,
-    envs: &[EnvKind],
-    qos_s: f64,
-    accuracy_target: f64,
-    per_env: usize,
-    seed: u64,
-) -> (Vec<Sample>, Vec<Action>) {
-    let catalogue = action_catalogue(&crate::device::presets::device(dev));
-    let mut samples = Vec::new();
-    let mut rng = Pcg64::new(seed);
-    for (ei, env) in envs.iter().enumerate() {
-        let mut environment = Environment::build(dev, *env, seed + 100 + ei as u64);
-        for i in 0..per_env {
-            let nn = by_name(ZOO[i % ZOO.len()].name).unwrap();
-            // Sensor noise — the shared Environment::observe model: the
-            // predictors train and test on jittered readings, not ground
-            // truth.
-            let (obs, inter) = environment.observe(nn, i as f64 * 0.3, &mut rng);
-            let ctx = RunContext {
-                interference: inter,
-                thermal_cap: 1.0,
-                compute_factor: 1.0,
-                remote_queue_s: 0.0,
-            };
-            let mut energy = Vec::with_capacity(catalogue.len());
-            let mut latency = Vec::with_capacity(catalogue.len());
-            let mut best = 0usize;
-            let mut best_key = (false, f64::INFINITY);
-            for (ai, a) in catalogue.iter().enumerate() {
-                let mut shadow = environment.sim.clone();
-                let m = shadow.run(nn, *a, &ctx);
-                energy.push(m.energy_true_j);
-                latency.push(m.latency_s);
-                let feasible = m.latency_s < qos_s && m.accuracy >= accuracy_target;
-                let key = (feasible, m.energy_true_j);
-                let better = (key.0 && !best_key.0)
-                    || (key.0 == best_key.0 && key.1 < best_key.1);
-                if better {
-                    best = ai;
-                    best_key = key;
-                }
-            }
-            samples.push(Sample { obs, energy, latency, best });
-        }
-    }
-    (samples, catalogue)
-}
-
-/// Fit the regression comparator (LR or SVR) from a dataset.
-pub fn fit_regression(samples: &[Sample], actions: &[Action], svr: bool, seed: u64) -> Policy {
-    let xs: Vec<Vec<f64>> = samples.iter().map(|s| features(&s.obs)).collect();
-    let scaler = Scaler::fit(&xs);
-    let xt = scaler.transform_all(&xs);
-    let mut energy = Vec::new();
-    let mut latency = Vec::new();
-    for ai in 0..actions.len() {
-        let ey: Vec<f64> = samples.iter().map(|s| s.energy[ai]).collect();
-        let ly: Vec<f64> = samples.iter().map(|s| s.latency[ai]).collect();
-        if svr {
-            energy.push(RegModel::Svr(LinearSvr::fit(&xt, &ey, SvrParams::default(), seed)));
-            latency.push(RegModel::Svr(LinearSvr::fit(&xt, &ly, SvrParams::default(), seed + 1)));
-        } else {
-            energy.push(RegModel::Lr(LinReg::fit(&xt, &ey)));
-            latency.push(RegModel::Lr(LinReg::fit(&xt, &ly)));
-        }
-    }
-    Policy::Regression(RegressionPolicy {
-        scaler,
-        energy,
-        latency,
-        actions: actions.to_vec(),
-    })
-}
-
-/// Fit a classification comparator (SVM or KNN) from a dataset.
-pub fn fit_classifier(samples: &[Sample], actions: &[Action], knn: bool, seed: u64) -> Policy {
-    let xs: Vec<Vec<f64>> = samples.iter().map(|s| features(&s.obs)).collect();
-    let scaler = Scaler::fit(&xs);
-    let xt = scaler.transform_all(&xs);
-    let ys: Vec<usize> = samples.iter().map(|s| s.best).collect();
-    let model = if knn {
-        ClsModel::Knn(Knn::fit(xt, ys, 5))
-    } else {
-        ClsModel::Svm(LinearSvm::fit(&xt, &ys, actions.len(), SvmParams::default(), seed))
-    };
-    Policy::Classifier(ClassifierPolicy { scaler, model, actions: actions.to_vec() })
+    let mut agent = policy.into_agent();
+    agent.freeze();
+    agent
 }
 
 /// Number of requests per episode for (quick, full) experiment modes.

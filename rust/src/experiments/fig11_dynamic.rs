@@ -3,12 +3,12 @@
 
 use crate::agent::qlearn::AutoScaleAgent;
 use crate::configsys::runconfig::{EnvKind, Scenario};
-use crate::coordinator::policy::Policy;
+use crate::policy::{AutoScalePolicy, ScalingPolicy};
 use crate::types::DeviceId;
 use crate::util::report::{f, pct, Table};
 use crate::util::stats;
 
-use super::common::{episode_len, run_episode, train_autoscale};
+use super::common::{episode_len, named_policy, run_episode, train_autoscale};
 
 pub fn run(seed: u64, quick: bool) -> Vec<Table> {
     let n = episode_len(quick);
@@ -39,15 +39,16 @@ pub fn run(seed: u64, quick: bool) -> Vec<Table> {
                 &trained,
             );
             a.freeze();
-            Policy::AutoScale(a)
+            Box::new(AutoScalePolicy::new(a)) as Box<dyn ScalingPolicy>
         };
-        let policies: Vec<(&str, Box<dyn Fn() -> Policy>)> = vec![
-            ("Edge(CPU FP32)", Box::new(|| Policy::EdgeCpuFp32)),
-            ("Edge(Best)", Box::new(|| Policy::EdgeBest)),
-            ("Cloud", Box::new(|| Policy::CloudAlways)),
-            ("Connected Edge", Box::new(|| Policy::ConnectedEdgeAlways)),
+        type Maker<'a> = Box<dyn Fn() -> Box<dyn ScalingPolicy> + 'a>;
+        let policies: Vec<(&str, Maker<'_>)> = vec![
+            ("Edge(CPU FP32)", Box::new(move || named_policy("cpu", dev, seed))),
+            ("Edge(Best)", Box::new(move || named_policy("best", dev, seed))),
+            ("Cloud", Box::new(move || named_policy("cloud", dev, seed))),
+            ("Connected Edge", Box::new(move || named_policy("connected", dev, seed))),
             ("AutoScale", Box::new(mk_frozen)),
-            ("Opt", Box::new(|| Policy::Opt)),
+            ("Opt", Box::new(move || named_policy("opt", dev, seed))),
         ];
         let mut cpu_ppw = None;
         for (name, mk) in policies {

@@ -4,11 +4,11 @@
 
 use crate::configsys::runconfig::{EnvKind, Scenario};
 use crate::coordinator::metrics::SelectionStats;
-use crate::coordinator::policy::Policy;
+use crate::policy::AutoScalePolicy;
 use crate::types::DeviceId;
 use crate::util::report::{f, pct, Table};
 
-use super::common::{episode_len, run_episode, train_autoscale};
+use super::common::{episode_len, named_policy, run_episode, train_autoscale};
 
 pub fn run(seed: u64, quick: bool) -> Vec<Table> {
     let n = episode_len(quick);
@@ -32,13 +32,20 @@ pub fn run(seed: u64, quick: bool) -> Vec<Table> {
         );
         frozen.freeze();
         let cpu = run_episode(
-            dev, EnvKind::S1NoVariance, scenario, Policy::EdgeCpuFp32, vec![], n, target, seed,
+            dev,
+            EnvKind::S1NoVariance,
+            scenario,
+            named_policy("cpu", dev, seed),
+            vec![],
+            n,
+            target,
+            seed,
         );
         let m = run_episode(
             dev,
             EnvKind::S1NoVariance,
             scenario,
-            Policy::AutoScale(frozen),
+            AutoScalePolicy::new(frozen),
             vec![],
             n,
             target,

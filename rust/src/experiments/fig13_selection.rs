@@ -6,11 +6,11 @@
 use crate::agent::qlearn::AutoScaleAgent;
 use crate::configsys::runconfig::{EnvKind, Scenario};
 use crate::coordinator::metrics::SelectionStats;
-use crate::coordinator::policy::Policy;
+use crate::policy::AutoScalePolicy;
 use crate::types::DeviceId;
 use crate::util::report::{pct, Table};
 
-use super::common::{episode_len, run_episode, train_autoscale};
+use super::common::{episode_len, named_policy, run_episode, train_autoscale};
 
 pub fn run(seed: u64, quick: bool) -> Vec<Table> {
     let n = episode_len(quick);
@@ -33,7 +33,7 @@ pub fn run(seed: u64, quick: bool) -> Vec<Table> {
         let mut as_sel = SelectionStats::default();
         for (i, env) in EnvKind::STATIC.iter().enumerate() {
             let m_opt = run_episode(
-                dev, *env, scenario, Policy::Opt, vec![],
+                dev, *env, scenario, named_policy("opt", dev, seed), vec![],
                 n / EnvKind::STATIC.len(), 0.5, seed + i as u64,
             );
             for o in &m_opt.outcomes {
@@ -47,7 +47,7 @@ pub fn run(seed: u64, quick: bool) -> Vec<Table> {
             );
             frozen.freeze();
             let m_as = run_episode(
-                dev, *env, scenario, Policy::AutoScale(frozen), vec![],
+                dev, *env, scenario, AutoScalePolicy::new(frozen), vec![],
                 n / EnvKind::STATIC.len(), 0.5, seed + i as u64,
             );
             for o in &m_as.outcomes {

@@ -7,8 +7,8 @@ use crate::agent::reward::{reward, RewardParams};
 use crate::agent::state::State;
 use crate::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use crate::coordinator::envs::Environment;
-use crate::coordinator::policy::{action_catalogue, Policy};
 use crate::coordinator::serve::{ServeConfig, Server};
+use crate::policy::{action_catalogue, AutoScalePolicy};
 use crate::types::DeviceId;
 use crate::util::report::{f, Table};
 use crate::util::stats::Ema;
@@ -35,7 +35,7 @@ fn training_curve(
     };
     let mut server = Server::new(
         env,
-        Policy::AutoScale(agent),
+        AutoScalePolicy::new(agent),
         ServeConfig { run, models: vec!["mobilenet_v2"] },
     );
     let mut ema = Ema::new(0.2);

@@ -3,14 +3,14 @@
 //! and the regression MAPE / classifier miss rates reported in §3.3.
 
 use crate::configsys::runconfig::{EnvKind, Scenario};
-use crate::coordinator::policy::{features, ClsModel, Policy};
+use crate::policy::{
+    collect_dataset, features, fit_classifier, fit_regression, ClsModel, Sample, ScalingPolicy,
+};
 use crate::types::{Action, DeviceId};
 use crate::util::report::{f, pct, Table};
 use crate::util::stats;
 
-use super::common::{
-    collect_dataset, episode_len, fit_classifier, fit_regression, run_episode, Sample,
-};
+use super::common::{episode_len, named_policy, run_episode};
 
 /// Environments with stochastic variance (the regime where prediction-based
 /// approaches struggle).
@@ -20,7 +20,7 @@ const VARIANCE_ENVS: [EnvKind; 4] =
 /// Evaluate one policy (rebuilt per env via `mk`) across the variance
 /// environments; returns (mean ppw, mean violation ratio).
 fn evaluate(
-    mk: &dyn Fn() -> Policy,
+    mk: &dyn Fn() -> Box<dyn ScalingPolicy>,
     dev: DeviceId,
     n: usize,
     seed: u64,
@@ -56,22 +56,25 @@ pub fn run(seed: u64, quick: bool) -> Vec<Table> {
         &["policy", "ppw_norm_to_cpu", "qos_violation"],
     );
 
-    let (cpu_ppw, cpu_viol) = evaluate(&|| Policy::EdgeCpuFp32, dev, n, seed + 10);
+    let (cpu_ppw, cpu_viol) = evaluate(&|| named_policy("cpu", dev, seed), dev, n, seed + 10);
     main.row(vec!["Edge(CPU)".into(), f(1.0, 2), pct(cpu_viol)]);
 
-    type Maker<'a> = (&'static str, Box<dyn Fn() -> Policy + 'a>);
+    type Maker<'a> = (&'static str, Box<dyn Fn() -> Box<dyn ScalingPolicy> + 'a>);
+    fn boxed<P: ScalingPolicy + 'static>(p: P) -> Box<dyn ScalingPolicy> {
+        Box::new(p)
+    }
     let makers: Vec<Maker> = vec![
-        ("LR", Box::new(|| fit_regression(&samples, &actions, false, seed))),
-        ("SVR", Box::new(|| fit_regression(&samples, &actions, true, seed))),
-        ("SVM", Box::new(|| fit_classifier(&samples, &actions, false, seed))),
-        ("KNN", Box::new(|| fit_classifier(&samples, &actions, true, seed))),
+        ("LR", Box::new(|| boxed(fit_regression(&samples, &actions, false, seed)))),
+        ("SVR", Box::new(|| boxed(fit_regression(&samples, &actions, true, seed)))),
+        ("SVM", Box::new(|| boxed(fit_classifier(&samples, &actions, false, seed)))),
+        ("KNN", Box::new(|| boxed(fit_classifier(&samples, &actions, true, seed)))),
     ];
     for (idx, (name, mk)) in makers.iter().enumerate() {
         let (ppw, viol) = evaluate(mk.as_ref(), dev, n, seed + 30 + idx as u64 * 7);
         main.row(vec![(*name).into(), f(ppw / cpu_ppw, 2), pct(viol)]);
     }
 
-    let (opt_ppw, opt_viol) = evaluate(&|| Policy::Opt, dev, n, seed + 20);
+    let (opt_ppw, opt_viol) = evaluate(&|| named_policy("opt", dev, seed), dev, n, seed + 20);
     main.row(vec!["Opt".into(), f(opt_ppw / cpu_ppw, 2), pct(opt_viol)]);
 
     vec![main, error_table(&samples, &actions, dev, qos, per_env, seed)]
@@ -94,39 +97,37 @@ fn error_table(
         &["model", "metric", "value"],
     );
     for (svr, name) in [(false, "LR"), (true, "SVR")] {
-        if let Policy::Regression(rp) = fit_regression(samples, actions, svr, seed) {
-            let mut preds = Vec::new();
-            let mut actuals = Vec::new();
-            for s in &test {
-                let x = rp.scaler.transform(&features(&s.obs));
-                for (ai, model) in rp.energy.iter().enumerate() {
-                    preds.push(model.predict(&x).max(1e-9));
-                    actuals.push(s.energy[ai]);
-                }
+        let rp = fit_regression(samples, actions, svr, seed);
+        let mut preds = Vec::new();
+        let mut actuals = Vec::new();
+        for s in &test {
+            let x = rp.scaler.transform(&features(&s.obs));
+            for (ai, model) in rp.energy.iter().enumerate() {
+                preds.push(model.predict(&x).max(1e-9));
+                actuals.push(s.energy[ai]);
             }
-            errs.row(vec![
-                name.into(),
-                "energy MAPE".into(),
-                pct(stats::mape(&preds, &actuals) / 100.0),
-            ]);
         }
+        errs.row(vec![
+            name.into(),
+            "energy MAPE".into(),
+            pct(stats::mape(&preds, &actuals) / 100.0),
+        ]);
     }
     for (knn, name) in [(false, "SVM"), (true, "KNN")] {
-        if let Policy::Classifier(cp) = fit_classifier(samples, actions, knn, seed) {
-            let miss = test
-                .iter()
-                .filter(|s| {
-                    let x = cp.scaler.transform(&features(&s.obs));
-                    let pred = match &cp.model {
-                        ClsModel::Svm(m) => m.predict(&x),
-                        ClsModel::Knn(m) => m.predict(&x),
-                    };
-                    pred != s.best
-                })
-                .count() as f64
-                / test.len() as f64;
-            errs.row(vec![name.into(), "miss-classification".into(), pct(miss)]);
-        }
+        let cp = fit_classifier(samples, actions, knn, seed);
+        let miss = test
+            .iter()
+            .filter(|s| {
+                let x = cp.scaler.transform(&features(&s.obs));
+                let pred = match &cp.model {
+                    ClsModel::Svm(m) => m.predict(&x),
+                    ClsModel::Knn(m) => m.predict(&x),
+                };
+                pred != s.best
+            })
+            .count() as f64
+            / test.len() as f64;
+        errs.row(vec![name.into(), "miss-classification".into(), pct(miss)]);
     }
     errs
 }

@@ -6,16 +6,16 @@
 //! over Edge(CPU) / Edge(Best) / Cloud / Connected-Edge, within ~3% of Opt.
 
 use crate::configsys::runconfig::{EnvKind, Scenario};
-use crate::coordinator::policy::Policy;
+use crate::policy::{AutoScalePolicy, ScalingPolicy};
 use crate::types::DeviceId;
 use crate::util::report::{f, pct, times, Table};
 use crate::util::stats;
 
-use super::common::{episode_len, run_episode, train_autoscale};
+use super::common::{episode_len, named_policy, run_episode, train_autoscale};
 
 /// Evaluate one policy across devices x static envs.
 fn evaluate(
-    mk: &mut dyn FnMut(DeviceId) -> Policy,
+    mk: &mut dyn FnMut(DeviceId) -> Box<dyn ScalingPolicy>,
     scenario: Scenario,
     accuracy_target: f64,
     n: usize,
@@ -53,14 +53,15 @@ pub fn run_scenario(scenario: Scenario, seed: u64, quick: bool, title: &str) -> 
     );
 
     let (cpu_ppw, cpu_viol) =
-        evaluate(&mut |_| Policy::EdgeCpuFp32, scenario, 0.5, n, seed + 1);
+        evaluate(&mut |dev| named_policy("cpu", dev, seed), scenario, 0.5, n, seed + 1);
     let (best_ppw, best_viol) =
-        evaluate(&mut |_| Policy::EdgeBest, scenario, 0.5, n, seed + 2);
+        evaluate(&mut |dev| named_policy("best", dev, seed), scenario, 0.5, n, seed + 2);
     let (cloud_ppw, cloud_viol) =
-        evaluate(&mut |_| Policy::CloudAlways, scenario, 0.5, n, seed + 3);
+        evaluate(&mut |dev| named_policy("cloud", dev, seed), scenario, 0.5, n, seed + 3);
     let (conn_ppw, conn_viol) =
-        evaluate(&mut |_| Policy::ConnectedEdgeAlways, scenario, 0.5, n, seed + 4);
-    let (opt_ppw, opt_viol) = evaluate(&mut |_| Policy::Opt, scenario, 0.5, n, seed + 5);
+        evaluate(&mut |dev| named_policy("connected", dev, seed), scenario, 0.5, n, seed + 4);
+    let (opt_ppw, opt_viol) =
+        evaluate(&mut |dev| named_policy("opt", dev, seed), scenario, 0.5, n, seed + 5);
 
     // AutoScale: trained per device (the paper trains per phone), then
     // evaluated frozen across the same envs.
@@ -83,7 +84,7 @@ pub fn run_scenario(scenario: Scenario, seed: u64, quick: bool, title: &str) -> 
                 src,
             );
             a.freeze();
-            Policy::AutoScale(a)
+            Box::new(AutoScalePolicy::new(a)) as Box<dyn ScalingPolicy>
         },
         scenario,
         0.5,

@@ -41,4 +41,4 @@ pub use arrivals::ArrivalProcess;
 pub use cloud::{CloudModel, CloudParams, CloudSnapshot};
 pub use events::EventQueue;
 pub use metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
-pub use sim::{run_fleet, ArrivalKind, FleetConfig, FleetPolicyKind};
+pub use sim::{run_fleet, ArrivalKind, FleetConfig};

@@ -25,19 +25,26 @@
 //! epoch: 1 s). In exchange the fleet closes the loop the paper's
 //! single-device model cannot express — one device's offload decision
 //! degrades every other device's cloud latency one epoch later.
+//!
+//! ## Policies
+//!
+//! Every device runs its own [`ScalingPolicy`] instance, built from the
+//! [`crate::policy::registry`] by name with a per-device seed — the same
+//! construction path the CLI and the experiments use. The shared-cloud
+//! congestion snapshot reaches congestion-aware policies (Opt, and any
+//! future ones) through [`DecisionCtx::cloud`].
 
-use crate::agent::qlearn::AutoScaleAgent;
+use std::collections::HashMap;
+
 use crate::agent::reward::{reward, RewardParams};
 use crate::agent::state::{State, StateObs};
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
 use crate::coordinator::envs::Environment;
-use crate::coordinator::policy::{
-    action_catalogue, compact_action_catalogue, edge_best_action, oracle_best_action, Policy,
-};
 use crate::coordinator::serve::qos_for;
 use crate::exec::latency::RunContext;
 use crate::interference::Interference;
 use crate::nn::zoo::{by_name, NnDesc, ZOO};
+use crate::policy::{CatalogueScope, CloudCtx, DecisionCtx, Feedback, PolicySpec, ScalingPolicy};
 use crate::types::{Action, DeviceId, Measurement, Site};
 use crate::util::rng::Pcg64;
 
@@ -45,44 +52,6 @@ use super::arrivals::ArrivalProcess;
 use super::cloud::{CloudModel, CloudParams, CloudSnapshot};
 use super::events::EventQueue;
 use super::metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
-
-/// Which policy every device in the fleet runs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FleetPolicyKind {
-    /// Per-device online Q-learning (the paper's agent, one per device).
-    AutoScale,
-    EdgeCpuFp32,
-    EdgeBest,
-    CloudAlways,
-    ConnectedEdgeAlways,
-    /// Per-request shadow-simulation oracle, congestion-aware.
-    Opt,
-}
-
-impl FleetPolicyKind {
-    pub fn from_name(s: &str) -> Option<FleetPolicyKind> {
-        Some(match s {
-            "autoscale" => FleetPolicyKind::AutoScale,
-            "cpu" => FleetPolicyKind::EdgeCpuFp32,
-            "best" => FleetPolicyKind::EdgeBest,
-            "cloud" => FleetPolicyKind::CloudAlways,
-            "connected" => FleetPolicyKind::ConnectedEdgeAlways,
-            "opt" => FleetPolicyKind::Opt,
-            _ => return None,
-        })
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            FleetPolicyKind::AutoScale => "autoscale",
-            FleetPolicyKind::EdgeCpuFp32 => "cpu",
-            FleetPolicyKind::EdgeBest => "best",
-            FleetPolicyKind::CloudAlways => "cloud",
-            FleetPolicyKind::ConnectedEdgeAlways => "connected",
-            FleetPolicyKind::Opt => "opt",
-        }
-    }
-}
 
 /// Request arrival shape shared by the fleet (each device gets its own
 /// seeded instance; diurnal devices get spread phases).
@@ -126,7 +95,9 @@ pub struct FleetConfig {
     pub scenario: Scenario,
     pub accuracy_target: f64,
     pub agent: AgentParams,
-    pub policy: FleetPolicyKind,
+    /// Registry key of the policy every device runs
+    /// (see [`crate::policy::registry::REGISTRY`]).
+    pub policy: String,
     pub arrival: ArrivalKind,
     /// Mean request rate per device (Hz).
     pub rate_hz: f64,
@@ -148,7 +119,7 @@ impl Default for FleetConfig {
             scenario: Scenario::NonStreaming,
             accuracy_target: 0.5,
             agent: AgentParams::default(),
-            policy: FleetPolicyKind::AutoScale,
+            policy: "autoscale".to_string(),
             arrival: ArrivalKind::Poisson,
             rate_hz: 1.0,
             epoch_s: 1.0,
@@ -168,6 +139,12 @@ impl FleetConfig {
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.accuracy_target),
             "accuracy_target out of [0,1]"
+        );
+        anyhow::ensure!(
+            crate::policy::is_known(&self.policy),
+            "unknown policy '{}' (known: {})",
+            self.policy,
+            crate::policy::names().join("|")
         );
         anyhow::ensure!(
             self.cloud.capacity_mmacs_per_s > 0.0,
@@ -206,11 +183,11 @@ pub fn device_seed(seed: u64, i: usize) -> u64 {
 /// RNG streams, all derived from (fleet seed, device id).
 struct DeviceSim {
     env: Environment,
-    policy: Policy,
+    policy: Box<dyn ScalingPolicy>,
     arrivals: ArrivalProcess,
     rng: Pcg64,
-    /// Full action catalogue, built once — the Opt oracle what-ifs it on
-    /// every request.
+    /// Copy of the policy's action catalogue, passed back through every
+    /// [`DecisionCtx`].
     catalogue: Vec<Action>,
     models: Vec<&'static str>,
     scenario: Scenario,
@@ -230,23 +207,47 @@ struct DeviceSim {
 }
 
 impl DeviceSim {
-    fn build(cfg: &FleetConfig, i: usize, models: &[&'static str]) -> DeviceSim {
+    fn build(
+        cfg: &FleetConfig,
+        i: usize,
+        models: &[&'static str],
+        prototypes: &mut HashMap<DeviceId, Box<dyn ScalingPolicy>>,
+    ) -> DeviceSim {
         let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
         let dseed = device_seed(cfg.seed, i);
         let env = Environment::build(dev_id, cfg.env, dseed);
-        let policy = match cfg.policy {
-            FleetPolicyKind::AutoScale => {
-                // Compact catalogue: a dense Q-table per device at fleet
-                // scale must stay small (see compact_action_catalogue).
-                let catalogue = compact_action_catalogue(&env.sim.local);
-                Policy::AutoScale(AutoScaleAgent::new(catalogue, cfg.agent, dseed))
+        // Per-device policy through the shared registry. Compact catalogue
+        // scope: a dense learner per device at fleet scale must stay small
+        // (see compact_action_catalogue); the Opt builder overrides it with
+        // the full DVFS sweep it what-ifs.
+        //
+        // Expensive-but-stateless policies (the offline-trained predictors)
+        // advertise `clone_box`: the first device of each preset trains
+        // one instance, later devices of the same preset take a clone —
+        // still a pure function of (config, seed), so determinism and
+        // shard-invariance hold, without ~13k profiling runs per device.
+        let policy = match prototypes.get(&dev_id).and_then(|p| p.clone_box()) {
+            Some(clone) => clone,
+            None => {
+                let mut spec = PolicySpec::new(dev_id, dseed);
+                spec.agent = cfg.agent;
+                spec.scope = CatalogueScope::Compact;
+                spec.scenario = cfg.scenario;
+                spec.accuracy_target = cfg.accuracy_target;
+                // Predictor training keeps the PolicySpec defaults (the
+                // STATIC envs, 40 samples each) deliberately: offline
+                // profiling happens under controlled conditions, not in
+                // the deployment env — mirroring how the §3.3 comparators
+                // are trained in the paper.
+                let built = crate::policy::build(&cfg.policy, &spec)
+                    .expect("policy name is checked by FleetConfig::validate");
+                if let Some(proto) = built.clone_box() {
+                    prototypes.insert(dev_id, proto);
+                }
+                built
             }
-            FleetPolicyKind::EdgeCpuFp32 => Policy::EdgeCpuFp32,
-            FleetPolicyKind::EdgeBest => Policy::EdgeBest,
-            FleetPolicyKind::CloudAlways => Policy::CloudAlways,
-            FleetPolicyKind::ConnectedEdgeAlways => Policy::ConnectedEdgeAlways,
-            FleetPolicyKind::Opt => Policy::Opt,
         };
+        let catalogue = policy.catalogue().to_vec();
         let r = cfg.rate_hz;
         let arrivals = match cfg.arrival {
             ArrivalKind::Poisson => ArrivalProcess::poisson(r),
@@ -263,13 +264,6 @@ impl DeviceSim {
                 let k = (8.0 * 2.0 + 0.1 * 14.0) / 16.0;
                 ArrivalProcess::bursty(8.0 * r / k, 0.1 * r / k, 2.0, 14.0)
             }
-        };
-        // Only the Opt oracle what-ifs the full DVFS catalogue; skip the
-        // per-device allocation for every other policy.
-        let catalogue = if matches!(cfg.policy, FleetPolicyKind::Opt) {
-            action_catalogue(&env.sim.local)
-        } else {
-            Vec::new()
         };
         let mut d = DeviceSim {
             env,
@@ -312,56 +306,6 @@ impl DeviceSim {
         self.env.observe(nn, t_s, &mut self.rng)
     }
 
-    /// Policy dispatch; the oracle variant is congestion-aware.
-    fn select(
-        &mut self,
-        obs: &StateObs,
-        s: State,
-        nn: &'static NnDesc,
-        qos: f64,
-        cloud: &CloudSnapshot,
-    ) -> (usize, Action) {
-        match &mut self.policy {
-            Policy::EdgeCpuFp32 => (
-                0,
-                Action::local(crate::types::ProcKind::Cpu, crate::types::Precision::Fp32),
-            ),
-            Policy::EdgeBest => (0, edge_best_action(&self.env.sim.local, nn)),
-            Policy::CloudAlways => (0, Action::cloud()),
-            Policy::ConnectedEdgeAlways => (0, Action::connected_edge()),
-            Policy::Opt => (0, self.oracle_action(nn, obs, qos, cloud)),
-            Policy::AutoScale(agent) => agent.select(s),
-            Policy::Regression(r) => r.select(obs, qos),
-            Policy::Classifier(c) => c.select(obs),
-        }
-    }
-
-    /// Congestion-aware oracle: the shared shadow-evaluation loop
-    /// ([`oracle_best_action`]), pricing cloud actions at the current
-    /// snapshot's queueing delay and service slowdown.
-    fn oracle_action(
-        &self,
-        nn: &'static NnDesc,
-        obs: &StateObs,
-        qos: f64,
-        cloud: &CloudSnapshot,
-    ) -> Action {
-        let sensed = Interference { cpu_util: obs.co_cpu, mem_pressure: obs.co_mem };
-        oracle_best_action(
-            &self.env.sim,
-            nn,
-            &self.catalogue,
-            self.accuracy_target,
-            qos,
-            |a| RunContext {
-                interference: sensed,
-                thermal_cap: 1.0,
-                compute_factor: if a.site == Site::Cloud { cloud.slowdown } else { 1.0 },
-                remote_queue_s: if a.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
-            },
-        )
-    }
-
     /// Serve the request that arrived at `t_arrival` against the frozen
     /// cloud snapshot. FIFO at the device: service starts when the previous
     /// request finishes.
@@ -378,7 +322,23 @@ impl DeviceSim {
 
         let (obs, true_inter) = self.observe(nn, t_start);
         let s = State::discretize(&obs);
-        let (idx, action) = self.select(&obs, s, nn, qos, cloud);
+        // Decide against the frozen congestion snapshot: congestion-aware
+        // policies price cloud actions at the epoch's queueing delay and
+        // service slowdown through `DecisionCtx::cloud`.
+        let decision = {
+            let dctx = DecisionCtx {
+                obs: &obs,
+                state: s,
+                nn,
+                qos_s: qos,
+                accuracy_target: self.accuracy_target,
+                catalogue: &self.catalogue,
+                sim: &self.env.sim,
+                cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
+            };
+            self.policy.decide(&dctx)
+        };
+        let action = decision.action;
 
         // Physics: true interference; shared-cloud congestion priced in.
         let ctx = RunContext {
@@ -410,7 +370,12 @@ impl DeviceSim {
             let t_done = t_start + m.latency_s;
             let (obs_next, _) = self.observe(nn, t_done);
             let s_next = State::discretize(&obs_next);
-            self.policy.observe(s, idx, r, s_next);
+            self.policy.feedback(&Feedback {
+                state: s,
+                next_state: s_next,
+                catalogue_idx: decision.catalogue_idx,
+                reward: r,
+            });
         }
 
         self.last_done_s = t_start + m.latency_s;
@@ -462,8 +427,12 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     } else {
         cfg.models.clone()
     };
-    let mut devices: Vec<DeviceSim> =
-        (0..cfg.devices).map(|i| DeviceSim::build(cfg, i, &models)).collect();
+    // Single-threaded, device-id-order construction: prototype reuse for
+    // clonable policies stays deterministic and shard-independent.
+    let mut prototypes: HashMap<DeviceId, Box<dyn ScalingPolicy>> = HashMap::new();
+    let mut devices: Vec<DeviceSim> = (0..cfg.devices)
+        .map(|i| DeviceSim::build(cfg, i, &models, &mut prototypes))
+        .collect();
     let mut cloud = CloudModel::new(cfg.cloud);
     let mut timeline = Vec::new();
 
@@ -543,7 +512,7 @@ mod tests {
             devices: 12,
             requests_per_device: 8,
             rate_hz: 2.0,
-            policy: FleetPolicyKind::EdgeBest,
+            policy: "best".to_string(),
             ..Default::default()
         }
     }
@@ -571,7 +540,7 @@ mod tests {
     #[test]
     fn shard_count_does_not_change_results() {
         let mut cfg = small_cfg();
-        cfg.policy = FleetPolicyKind::AutoScale;
+        cfg.policy = "autoscale".to_string();
         cfg.shards = 1;
         let a = run_fleet(&cfg).unwrap();
         cfg.shards = 5;
@@ -582,7 +551,7 @@ mod tests {
     #[test]
     fn cloud_always_fleet_builds_cloud_load() {
         let mut cfg = small_cfg();
-        cfg.policy = FleetPolicyKind::CloudAlways;
+        cfg.policy = "cloud".to_string();
         let out = run_fleet(&cfg).unwrap();
         assert!((out.metrics.cloud_rate() - 1.0).abs() < 1e-12);
         assert!(
@@ -601,6 +570,23 @@ mod tests {
     }
 
     #[test]
+    fn every_registry_policy_runs_at_fleet_scale() {
+        // The open API's fleet contract: any registry key drives the fleet.
+        // Tiny quota; predictors train once per device preset (clone_box).
+        for key in crate::policy::names() {
+            let cfg = FleetConfig {
+                devices: 3,
+                requests_per_device: 4,
+                rate_hz: 2.0,
+                policy: key.to_string(),
+                ..Default::default()
+            };
+            let out = run_fleet(&cfg).unwrap();
+            assert_eq!(out.metrics.n(), 3 * 4, "policy {key}");
+        }
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let mutations: Vec<fn(&mut FleetConfig)> = vec![
             |c| c.devices = 0,
@@ -609,6 +595,7 @@ mod tests {
             |c| c.rate_hz = 0.0,
             |c| c.epoch_s = 0.0,
             |c| c.accuracy_target = 1.5,
+            |c| c.policy = "not-a-policy".to_string(),
             |c| c.cloud.capacity_mmacs_per_s = 0.0,
             |c| c.cloud.batch_window_s = -1.0,
             |c| c.cloud.max_batch = 0,

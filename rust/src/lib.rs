@@ -29,6 +29,31 @@
 //!
 //! Python never runs on the request path; the binary is self-contained once
 //! `make artifacts` has produced the HLO artifacts and manifest.
+//!
+//! ## Policy architecture
+//!
+//! Scaling decisions live behind one open API ([`policy`]): the
+//! [`policy::ScalingPolicy`] trait (`decide(&DecisionCtx) -> Decision`,
+//! `feedback(&Feedback)`) and a string-keyed registry
+//! ([`policy::build`]). The single-device [`coordinator::serve::Server`],
+//! the fleet's per-device loop and every experiment drive policies through
+//! the same two calls, so baselines, the Opt oracle, the §3.3 predictors,
+//! the Q-learning agent, a hysteresis controller and a contextual bandit
+//! are interchangeable by name: `serve --policy knn`, `fleet --policy
+//! bandit`. To add a policy, implement the trait and register a builder —
+//! see the [`policy`] module docs for the two-step recipe.
+
+// Style-lint allowances (kept deliberately small): the codebase favours
+// explicit index loops and field-by-field config setup for readability in
+// physics/metrics code, and several public constructors take the full
+// parameter list by design.
+#![allow(
+    clippy::collapsible_if,
+    clippy::field_reassign_with_default,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::too_many_arguments
+)]
 
 pub mod agent;
 pub mod baselines;
@@ -41,6 +66,7 @@ pub mod fleet;
 pub mod interference;
 pub mod net;
 pub mod nn;
+pub mod policy;
 pub mod power;
 pub mod runtime;
 pub mod types;

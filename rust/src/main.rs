@@ -15,7 +15,12 @@
 //!   list                              list available experiments
 //!
 //! The parser is strict: unknown `--flags` and malformed numbers are
-//! errors, not silently ignored.
+//! errors, not silently ignored. `--policy` accepts any key from the
+//! policy registry; the error and help text enumerate the registry so
+//! they can never go stale.
+
+// Config structs are built field-by-field from parsed flags.
+#![allow(clippy::field_reassign_with_default)]
 
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
@@ -23,10 +28,10 @@ use std::str::FromStr;
 
 use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::policy::Policy;
 use autoscale::coordinator::serve::{ServeConfig, Server};
 use autoscale::experiments;
-use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig, FleetPolicyKind};
+use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig};
+use autoscale::policy::{PolicySpec, ScalingPolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
 
@@ -195,31 +200,19 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let device = parse_device(cli.value("--device").unwrap_or("Mi8Pro"))?;
             let env = parse_env(cli.value("--env").unwrap_or("S1"))?;
             let requests: usize = cli.num("--requests", 200)?;
-            let policy = match cli.value("--policy").unwrap_or("autoscale") {
-                "cpu" => Policy::EdgeCpuFp32,
-                "best" => Policy::EdgeBest,
-                "cloud" => Policy::CloudAlways,
-                "connected" => Policy::ConnectedEdgeAlways,
-                "opt" => Policy::Opt,
-                "autoscale" => {
-                    let catalogue = autoscale::coordinator::policy::action_catalogue(
-                        &autoscale::device::presets::device(device),
-                    );
-                    Policy::AutoScale(autoscale::agent::qlearn::AutoScaleAgent::new(
-                        catalogue,
-                        Default::default(),
-                        seed,
-                    ))
-                }
-                other => anyhow::bail!(
-                    "unknown policy '{other}' (cpu|best|cloud|connected|opt|autoscale)"
-                ),
-            };
             let mut run_cfg = RunConfig::default();
             run_cfg.device = device;
             run_cfg.env = env;
             run_cfg.seed = seed;
             run_cfg.scenario = Scenario::NonStreaming;
+
+            // Any registry key works here; unknown names error with the
+            // key list straight from the registry.
+            let mut spec = PolicySpec::new(device, seed);
+            spec.scenario = run_cfg.scenario;
+            spec.accuracy_target = run_cfg.accuracy_target;
+            let policy =
+                autoscale::policy::build(cli.value("--policy").unwrap_or("autoscale"), &spec)?;
 
             let environment = Environment::build(device, env, seed);
             let mut engine_store;
@@ -269,7 +262,6 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .unwrap_or(1)
                 .min(8);
             let cloud_defaults = CloudParams::default();
-            let policy_name = cli.value("--policy").unwrap_or("autoscale");
             let arrival_name = cli.value("--arrival").unwrap_or("poisson");
             let cfg = FleetConfig {
                 devices: cli.num("--devices", 1000)?,
@@ -277,11 +269,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 shards: cli.num("--shards", default_shards)?,
                 seed: cli.num("--seed", 7)?,
                 env: parse_env(cli.value("--env").unwrap_or("S1"))?,
-                policy: FleetPolicyKind::from_name(policy_name).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown policy '{policy_name}' (autoscale|cpu|best|cloud|connected|opt)"
-                    )
-                })?,
+                // Any registry key; FleetConfig::validate rejects unknown
+                // names with the key list straight from the registry.
+                policy: cli.value("--policy").unwrap_or("autoscale").to_string(),
                 arrival: ArrivalKind::from_name(arrival_name).ok_or_else(|| {
                     anyhow::anyhow!("unknown arrival '{arrival_name}' (poisson|diurnal|bursty)")
                 })?,
@@ -314,7 +304,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 cfg.rate_hz,
                 cfg.env.name()
             );
-            println!("policy       : {} (per device)", cfg.policy.name());
+            println!("policy       : {} (per device)", cfg.policy);
             println!("shards       : {}", cfg.shards);
             println!("served       : {} requests", m.n());
             println!("virtual time : {:.1} s", out.makespan_s);
@@ -395,8 +385,12 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
                  serve: --runtime\n\
                  fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
-                 \x20       --epoch S --cloud-capacity MMACS --batch-window S"
+                 \x20       --epoch S --cloud-capacity MMACS --batch-window S\n\
+                 policies (--policy, serve & fleet):"
             );
+            for e in autoscale::policy::REGISTRY {
+                println!("  {:10}  {}", e.key, e.about);
+            }
             Ok(())
         }
         other => anyhow::bail!("unknown command '{other}' (try `autoscale help`)"),

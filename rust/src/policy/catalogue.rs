@@ -1,0 +1,83 @@
+//! Action-catalogue construction: the action spaces policies decide over.
+
+use crate::device::processor::Device;
+use crate::types::{Action, Site};
+
+/// Build the action catalogue for a device (§5.3 "Actions"): every local
+/// (processor, V/F step, supported precision) plus the two scale-out
+/// targets. Precisions below the accuracy floor are kept — the reward's
+/// accuracy gate teaches the agent to avoid them when the target is high.
+pub fn action_catalogue(dev: &Device) -> Vec<Action> {
+    let mut out: Vec<Action> = dev
+        .local_actions()
+        .into_iter()
+        .map(|(proc, vf, prec)| Action::new(Site::Local, proc, vf, prec))
+        .collect();
+    out.push(Action::connected_edge());
+    out.push(Action::cloud());
+    out
+}
+
+/// Compact catalogue for fleet-scale learning: the max-frequency
+/// (processor, precision) pairs plus the two scale-out targets — every
+/// site/processor/precision choice, without the per-step DVFS sweep.
+/// One dense Q-table per device is what bounds fleet memory: dropping the
+/// DVFS axis shrinks each agent ~9x (63 -> 7 actions on the Mi8Pro), which
+/// is the difference between gigabytes and a few hundred MB at 1,000+
+/// devices. Single-device serving keeps the full [`action_catalogue`].
+pub fn compact_action_catalogue(dev: &Device) -> Vec<Action> {
+    let mut out: Vec<Action> = Vec::new();
+    for p in &dev.processors {
+        for &prec in &p.precisions {
+            out.push(Action::new(Site::Local, p.kind, 0, prec));
+        }
+    }
+    out.push(Action::connected_edge());
+    out.push(Action::cloud());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets::device;
+    use crate::types::{DeviceId, ProcKind};
+
+    #[test]
+    fn catalogue_covers_local_and_remote() {
+        let dev = device(DeviceId::Mi8Pro);
+        let acts = action_catalogue(&dev);
+        // 23 cpu steps x 2 precisions + 7 gpu steps x 2 + 1 dsp + 2 remote
+        assert_eq!(acts.len(), 23 * 2 + 7 * 2 + 1 + 2);
+        assert!(acts.iter().any(|a| a.site == Site::Cloud));
+        assert!(acts.iter().any(|a| a.site == Site::ConnectedEdge));
+        // all unique
+        let mut dedup = acts.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), acts.len());
+    }
+
+    #[test]
+    fn compact_catalogue_covers_sites_without_dvfs() {
+        let dev = device(DeviceId::Mi8Pro);
+        let acts = compact_action_catalogue(&dev);
+        // 2 cpu precisions + 2 gpu + 1 dsp + 2 remote
+        assert_eq!(acts.len(), 7);
+        assert!(acts.iter().all(|a| a.vf_step == 0));
+        assert!(acts.iter().any(|a| a.site == Site::Cloud));
+        assert!(acts.iter().any(|a| a.site == Site::ConnectedEdge));
+        // strict subset of the full catalogue
+        let full = action_catalogue(&dev);
+        assert!(acts.iter().all(|a| full.contains(a)));
+    }
+
+    #[test]
+    fn s10e_catalogue_has_no_dsp() {
+        let dev = device(DeviceId::GalaxyS10e);
+        let acts = action_catalogue(&dev);
+        assert!(acts
+            .iter()
+            .all(|a| !(a.site == Site::Local && a.proc == ProcKind::Dsp)));
+    }
+}

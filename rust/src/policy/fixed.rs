@@ -1,0 +1,144 @@
+//! The paper's fixed baselines (§5.2): always-CPU, per-NN best local
+//! processor, always-cloud, always-connected-edge. One struct with a
+//! per-request chooser function keeps them data, not dispatch.
+
+use crate::device::processor::Device;
+use crate::nn::zoo::NnDesc;
+use crate::types::{Action, Precision, ProcKind};
+
+use super::{Decision, DecisionCtx, ScalingPolicy};
+
+/// A baseline that maps each request to a fixed execution target (fixed
+/// per request — Edge(Best) still adapts to the NN's layer composition).
+pub struct FixedTargetPolicy {
+    name: &'static str,
+    catalogue: Vec<Action>,
+    choose: fn(&DecisionCtx) -> Action,
+}
+
+impl FixedTargetPolicy {
+    /// Baseline 1: always the local CPU at max frequency, fp32.
+    pub fn edge_cpu_fp32(catalogue: Vec<Action>) -> FixedTargetPolicy {
+        FixedTargetPolicy {
+            name: "Edge(CPU FP32)",
+            catalogue,
+            choose: |_| Action::local(ProcKind::Cpu, Precision::Fp32),
+        }
+    }
+
+    /// Baseline 2: the most energy-efficient local processor (per-NN best,
+    /// chosen by one-off offline measurement like the paper's setup).
+    pub fn edge_best(catalogue: Vec<Action>) -> FixedTargetPolicy {
+        FixedTargetPolicy {
+            name: "Edge(Best)",
+            catalogue,
+            choose: |ctx| edge_best_action(&ctx.sim.local, ctx.nn),
+        }
+    }
+
+    /// Baseline 3: always offload to the cloud.
+    pub fn cloud_always(catalogue: Vec<Action>) -> FixedTargetPolicy {
+        FixedTargetPolicy { name: "Cloud", catalogue, choose: |_| Action::cloud() }
+    }
+
+    /// Baseline 4: always the locally connected edge device.
+    pub fn connected_edge_always(catalogue: Vec<Action>) -> FixedTargetPolicy {
+        FixedTargetPolicy {
+            name: "Connected Edge",
+            catalogue,
+            choose: |_| Action::connected_edge(),
+        }
+    }
+}
+
+impl ScalingPolicy for FixedTargetPolicy {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        Decision::from_catalogue(ctx.catalogue, (self.choose)(ctx))
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.catalogue
+    }
+}
+
+/// Per-NN fixed choice used by Edge(Best): most efficient local processor
+/// at max frequency with its best-precision executable.
+pub fn edge_best_action(dev: &Device, nn: &NnDesc) -> Action {
+    // FC/RC-heavy networks run best on the CPU (Fig. 3); conv towers on the
+    // fastest co-processor present. Mirrors the paper's per-NN offline pick.
+    let fc_heavy = nn.s_fc >= 10 || nn.s_rc >= 10;
+    if fc_heavy || !dev.has(ProcKind::Gpu) {
+        let prec =
+            if dev.proc(ProcKind::Cpu).unwrap().supports(Precision::Int8) {
+                Precision::Int8
+            } else {
+                Precision::Fp32
+            };
+        return Action::local(ProcKind::Cpu, prec);
+    }
+    if dev.has(ProcKind::Dsp) {
+        Action::local(ProcKind::Dsp, Precision::Int8)
+    } else {
+        Action::local(ProcKind::Gpu, Precision::Fp16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets::device;
+    use crate::nn::zoo::by_name;
+    use crate::types::DeviceId;
+
+    #[test]
+    fn edge_best_respects_layer_composition() {
+        let dev = device(DeviceId::Mi8Pro);
+        // FC-heavy MobilenetV3 -> CPU
+        let a = edge_best_action(&dev, by_name("mobilenet_v3").unwrap());
+        assert_eq!(a.proc, ProcKind::Cpu);
+        // conv tower InceptionV1 -> DSP on Mi8Pro
+        let a = edge_best_action(&dev, by_name("inception_v1").unwrap());
+        assert_eq!(a.proc, ProcKind::Dsp);
+        // ... but GPU on S10e (no DSP)
+        let s10 = device(DeviceId::GalaxyS10e);
+        let a = edge_best_action(&s10, by_name("inception_v1").unwrap());
+        assert_eq!(a.proc, ProcKind::Gpu);
+    }
+
+    #[test]
+    fn baselines_return_real_catalogue_indices() {
+        use crate::agent::state::{State, StateObs};
+        use crate::coordinator::envs::Environment;
+        use crate::configsys::runconfig::EnvKind;
+
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+        let catalogue = super::super::action_catalogue(&env.sim.local);
+        let nn = by_name("inception_v1").unwrap();
+        let obs = StateObs::from_parts(nn, Default::default(), -60.0, -55.0);
+        let ctx = DecisionCtx {
+            obs: &obs,
+            state: State::discretize(&obs),
+            nn,
+            qos_s: 0.05,
+            accuracy_target: 0.5,
+            catalogue: &catalogue,
+            sim: &env.sim,
+            cloud: Default::default(),
+        };
+        let makers: [fn(Vec<Action>) -> FixedTargetPolicy; 4] = [
+            FixedTargetPolicy::edge_cpu_fp32,
+            FixedTargetPolicy::edge_best,
+            FixedTargetPolicy::cloud_always,
+            FixedTargetPolicy::connected_edge_always,
+        ];
+        for mk in makers {
+            let mut p = mk(catalogue.clone());
+            let d = p.decide(&ctx);
+            assert_eq!(catalogue[d.catalogue_idx], d.action, "{}", p.name());
+        }
+    }
+}

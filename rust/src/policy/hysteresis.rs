@@ -1,0 +1,172 @@
+//! RSSI-triggered offload with a hysteresis dwell band — the classic
+//! telecom answer to the paper's §3 motivation: under stochastic signal
+//! variance a single threshold flaps between local and remote on every
+//! noise excursion, so the policy (a) separates the enter/exit thresholds
+//! by a dead band and (b) holds each mode for a minimum dwell after a
+//! switch. Landed as proof that the [`super::ScalingPolicy`] API admits
+//! stateful non-learning policies the original enum could not express.
+
+use crate::types::Action;
+
+use super::fixed::edge_best_action;
+use super::{Decision, DecisionCtx, ScalingPolicy};
+
+/// Two-mode (local / cloud-offload) controller keyed on the sensed WLAN
+/// RSSI. Offloads when the signal is strong (`enter_dbm` or better),
+/// returns local when it degrades past `exit_dbm`; readings inside the
+/// dead band keep the current mode, and every switch is held for
+/// `min_dwell` decisions.
+pub struct HysteresisPolicy {
+    catalogue: Vec<Action>,
+    /// Offload when sensed RSSI rises to this or above (dBm).
+    enter_dbm: f64,
+    /// Return local when sensed RSSI falls to this or below (dBm).
+    exit_dbm: f64,
+    /// Decisions a fresh mode is held regardless of RSSI.
+    min_dwell: u32,
+    offloading: bool,
+    hold: u32,
+}
+
+impl HysteresisPolicy {
+    /// Default band: offload at ≥ -70 dBm, come home at ≤ -80 dBm (the
+    /// link model's weak-signal knee), hold each mode for 3 decisions.
+    pub fn new(catalogue: Vec<Action>) -> HysteresisPolicy {
+        HysteresisPolicy::with_band(catalogue, -70.0, -80.0, 3)
+    }
+
+    pub fn with_band(
+        catalogue: Vec<Action>,
+        enter_dbm: f64,
+        exit_dbm: f64,
+        min_dwell: u32,
+    ) -> HysteresisPolicy {
+        assert!(
+            exit_dbm < enter_dbm,
+            "hysteresis needs exit ({exit_dbm}) below enter ({enter_dbm})"
+        );
+        HysteresisPolicy {
+            catalogue,
+            enter_dbm,
+            exit_dbm,
+            min_dwell,
+            offloading: false,
+            hold: 0,
+        }
+    }
+
+    /// Is the policy currently in offload mode?
+    pub fn offloading(&self) -> bool {
+        self.offloading
+    }
+}
+
+impl ScalingPolicy for HysteresisPolicy {
+    fn name(&self) -> &'static str {
+        "Hysteresis(RSSI)"
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        let rssi = ctx.obs.rssi_wlan;
+        if self.hold > 0 {
+            self.hold -= 1;
+        } else if self.offloading && rssi <= self.exit_dbm {
+            self.offloading = false;
+            self.hold = self.min_dwell;
+        } else if !self.offloading && rssi >= self.enter_dbm {
+            self.offloading = true;
+            self.hold = self.min_dwell;
+        }
+        let action = if self.offloading {
+            Action::cloud()
+        } else {
+            edge_best_action(&ctx.sim.local, ctx.nn)
+        };
+        Decision::from_catalogue(ctx.catalogue, action)
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.catalogue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::state::{State, StateObs};
+    use crate::configsys::runconfig::EnvKind;
+    use crate::coordinator::envs::Environment;
+    use crate::nn::zoo::by_name;
+    use crate::policy::action_catalogue;
+    use crate::types::{DeviceId, Site};
+
+    /// Drive one decision at a given sensed WLAN RSSI.
+    fn decide_at(p: &mut HysteresisPolicy, env: &Environment, rssi: f64) -> Decision {
+        let nn = by_name("mobilenet_v1").unwrap();
+        let obs = StateObs::from_parts(nn, Default::default(), rssi, -50.0);
+        let catalogue = p.catalogue().to_vec();
+        let ctx = DecisionCtx {
+            obs: &obs,
+            state: State::discretize(&obs),
+            nn,
+            qos_s: 0.05,
+            accuracy_target: 0.5,
+            catalogue: &catalogue,
+            sim: &env.sim,
+            cloud: Default::default(),
+        };
+        p.decide(&ctx)
+    }
+
+    fn setup() -> (HysteresisPolicy, Environment) {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+        let catalogue = action_catalogue(&env.sim.local);
+        (HysteresisPolicy::with_band(catalogue, -70.0, -80.0, 2), env)
+    }
+
+    #[test]
+    fn dead_band_holds_the_mode() {
+        let (mut p, env) = setup();
+        // Start local; readings wandering inside (-80, -70) never offload.
+        for rssi in [-75.0, -72.0, -78.0, -71.0, -79.0] {
+            let d = decide_at(&mut p, &env, rssi);
+            assert_ne!(d.action.site, Site::Cloud, "dead band must hold local at {rssi}");
+        }
+        // Strong signal crosses the enter threshold: offload.
+        assert_eq!(decide_at(&mut p, &env, -65.0).action.site, Site::Cloud);
+        // Band-interior readings now hold the offload mode.
+        for rssi in [-75.0, -79.0, -71.0] {
+            let d = decide_at(&mut p, &env, rssi);
+            assert_eq!(d.action.site, Site::Cloud, "dead band must hold offload at {rssi}");
+        }
+    }
+
+    #[test]
+    fn min_dwell_suppresses_flapping() {
+        let (mut p, env) = setup();
+        assert_eq!(decide_at(&mut p, &env, -60.0).action.site, Site::Cloud);
+        // Immediately degraded signal: the 2-decision dwell holds offload...
+        assert_eq!(decide_at(&mut p, &env, -90.0).action.site, Site::Cloud);
+        assert_eq!(decide_at(&mut p, &env, -90.0).action.site, Site::Cloud);
+        // ...then the exit threshold finally takes effect.
+        assert_ne!(decide_at(&mut p, &env, -90.0).action.site, Site::Cloud);
+    }
+
+    #[test]
+    fn exit_threshold_returns_local_and_indexes_catalogue() {
+        let (mut p, env) = setup();
+        decide_at(&mut p, &env, -60.0); // offload, dwell=2
+        decide_at(&mut p, &env, -60.0);
+        decide_at(&mut p, &env, -60.0); // dwell exhausted
+        let d = decide_at(&mut p, &env, -85.0);
+        assert_eq!(d.action.site, Site::Local);
+        assert_eq!(p.catalogue()[d.catalogue_idx], d.action);
+        assert!(!p.offloading());
+    }
+
+    #[test]
+    #[should_panic(expected = "below enter")]
+    fn inverted_band_is_rejected() {
+        HysteresisPolicy::with_band(vec![Action::cloud()], -80.0, -70.0, 1);
+    }
+}

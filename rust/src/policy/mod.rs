@@ -1,0 +1,238 @@
+//! The open execution-scaling decision API.
+//!
+//! The paper's core claim is that the *scaling decision* is swappable: five
+//! baselines, four prediction-based comparators, the Opt oracle and the
+//! Q-learning agent all compete behind the same ① observe → ② select →
+//! ③ execute → ④ reward loop. This module makes that swappability a
+//! first-class API instead of a closed enum:
+//!
+//! * [`ScalingPolicy`] — the trait every decision-maker implements:
+//!   [`ScalingPolicy::decide`] maps a [`DecisionCtx`] (observed state,
+//!   discretized state, NN descriptor, QoS bound, action catalogue, shadow
+//!   simulator, cloud-congestion view) to a [`Decision`];
+//!   [`ScalingPolicy::feedback`] closes the loop for online learners.
+//! * [`registry`] — a string-keyed factory ([`build`]) so the CLI `serve`
+//!   and `fleet` subcommands, the fleet simulator and every experiment
+//!   construct policies uniformly by name.
+//!
+//! The single-device [`crate::coordinator::serve::Server`] and the fleet's
+//! per-device loop drive any `ScalingPolicy` identically; Opt-style
+//! policies what-if the catalogue on the ctx's shadow simulator instead of
+//! forcing dispatch logic to live inside the hosts.
+//!
+//! ## Adding a policy
+//!
+//! 1. Implement [`ScalingPolicy`] (see [`hysteresis`] or [`bandit`] for a
+//!    compact template — state machine and learner respectively).
+//! 2. Register a builder in [`registry::REGISTRY`] under a new key.
+//!
+//! Nothing else changes: `serve --policy <key>`, `fleet --policy <key>`
+//! and `policy::build("<key>", &spec)` pick it up, and the CLI error
+//! message enumerates the new key automatically.
+
+pub mod bandit;
+pub mod catalogue;
+pub mod fixed;
+pub mod hysteresis;
+pub mod oracle;
+pub mod predictors;
+pub mod registry;
+pub mod rl;
+
+use crate::agent::state::{State, StateObs};
+use crate::exec::latency::Simulator;
+use crate::nn::zoo::NnDesc;
+use crate::types::Action;
+
+pub use bandit::BanditPolicy;
+pub use catalogue::{action_catalogue, compact_action_catalogue};
+pub use fixed::{edge_best_action, FixedTargetPolicy};
+pub use hysteresis::HysteresisPolicy;
+pub use oracle::{oracle_best_action, OptPolicy};
+pub use predictors::{
+    collect_dataset, features, fit_classifier, fit_regression, ClassifierPolicy, ClsModel,
+    RegModel, RegressionPolicy, Sample,
+};
+pub use registry::{build, is_known, names, CatalogueScope, PolicySpec, REGISTRY};
+pub use rl::AutoScalePolicy;
+
+/// Everything a policy may consult for one decision. The hosts (server,
+/// fleet device loop, experiments) build this identically, so a policy
+/// behaves the same wherever it is plugged in.
+pub struct DecisionCtx<'a> {
+    /// Noisy sensor reading of the Table-1 observables.
+    pub obs: &'a StateObs,
+    /// The same observation, discretized into the Table-1 bins.
+    pub state: State,
+    /// The network being served.
+    pub nn: &'a NnDesc,
+    /// QoS latency bound for this request (seconds).
+    pub qos_s: f64,
+    /// Minimum acceptable inference accuracy.
+    pub accuracy_target: f64,
+    /// The action catalogue the decision indexes into. Hosts copy this
+    /// from [`ScalingPolicy::catalogue`] at construction, so it always
+    /// matches the policy's own action space.
+    pub catalogue: &'a [Action],
+    /// Shadow-simulator handle: Opt-style policies clone it to what-if
+    /// evaluate actions without consuming live thermal/noise state.
+    pub sim: &'a Simulator,
+    /// Shared-cloud congestion view (identity values when serving a single
+    /// device against an unloaded cloud).
+    pub cloud: CloudCtx,
+}
+
+/// The congestion a cloud-bound request would currently experience.
+/// The fleet simulator fills this from its epoch snapshot; the
+/// single-device server uses the identity default.
+#[derive(Clone, Copy, Debug)]
+pub struct CloudCtx {
+    /// Multiplicative service-time inflation (1.0 = unloaded).
+    pub slowdown: f64,
+    /// Queueing + batching wait at the shared backend (seconds).
+    pub queue_wait_s: f64,
+}
+
+impl Default for CloudCtx {
+    fn default() -> Self {
+        CloudCtx { slowdown: 1.0, queue_wait_s: 0.0 }
+    }
+}
+
+/// One scaling decision: the chosen action plus its index in the
+/// catalogue the decision was made over, so feedback and logging can
+/// never mis-attribute the arm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub action: Action,
+    pub catalogue_idx: usize,
+}
+
+impl Decision {
+    /// Build a decision by locating `action` in `catalogue`. Panics if the
+    /// action is not in the catalogue — a policy bug that must not be
+    /// silently mapped to arm 0.
+    pub fn from_catalogue(catalogue: &[Action], action: Action) -> Decision {
+        let catalogue_idx = catalogue
+            .iter()
+            .position(|a| *a == action)
+            .expect("policy chose an action outside its catalogue");
+        Decision { action, catalogue_idx }
+    }
+}
+
+/// Post-execution feedback for online learners (Eq. 5 reward plus the
+/// state transition observed around the executed request).
+#[derive(Clone, Copy, Debug)]
+pub struct Feedback {
+    /// State the decision was taken in.
+    pub state: State,
+    /// State observed after execution (same request context, fresh
+    /// variance sample).
+    pub next_state: State,
+    /// The arm that was executed ([`Decision::catalogue_idx`]).
+    pub catalogue_idx: usize,
+    /// Eq. (5) reward of the executed request.
+    pub reward: f64,
+}
+
+/// An execution-scaling decision-maker. `Send` so fleet shards can move
+/// per-device policies across worker threads.
+pub trait ScalingPolicy: Send {
+    /// Display name (figure label), e.g. `"AutoScale"` or `"Edge(Best)"`.
+    fn name(&self) -> &'static str;
+
+    /// Pick an action for one request.
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision;
+
+    /// Reward feedback after execution. Default: ignore (fixed policies).
+    ///
+    /// Contract: hosts call `feedback` for the most recent `decide` before
+    /// issuing the next `decide` on the same policy instance — learners
+    /// (e.g. the contextual bandit) may associate the reward with
+    /// internally stored decision context. Pipelining hosts must use one
+    /// policy instance per in-flight request.
+    fn feedback(&mut self, _fb: &Feedback) {}
+
+    /// Does this policy learn online? Hosts only sample the post-execution
+    /// state S′ (an extra sensor observation) for learning policies, so
+    /// non-learning policies consume no additional RNG.
+    fn is_learning(&self) -> bool {
+        false
+    }
+
+    /// The action catalogue this policy decides over. Hosts pass a copy
+    /// back through [`DecisionCtx::catalogue`] on every decision.
+    fn catalogue(&self) -> &[Action];
+
+    /// A fresh boxed copy, for policies whose construction is expensive
+    /// but deterministic and holds no per-instance exploration state
+    /// (the offline-trained predictors). The fleet uses this to train one
+    /// instance per device preset and clone it across the fleet instead
+    /// of re-running offline profiling per device. Learners and seeded
+    /// policies must return `None` (the default): cloning them would
+    /// duplicate RNG streams across devices.
+    fn clone_box(&self) -> Option<Box<dyn ScalingPolicy>> {
+        None
+    }
+}
+
+/// Boxed policies forward transparently, so hosts can be generic over
+/// `P: ScalingPolicy` and still accept registry-built `Box<dyn _>`.
+impl<P: ScalingPolicy + ?Sized> ScalingPolicy for Box<P> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        (**self).decide(ctx)
+    }
+
+    fn feedback(&mut self, fb: &Feedback) {
+        (**self).feedback(fb)
+    }
+
+    fn is_learning(&self) -> bool {
+        (**self).is_learning()
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        (**self).catalogue()
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn ScalingPolicy>> {
+        (**self).clone_box()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Precision, ProcKind};
+
+    #[test]
+    fn decision_from_catalogue_finds_the_real_index() {
+        let catalogue = vec![
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+            Action::local(ProcKind::Gpu, Precision::Fp16),
+            Action::cloud(),
+        ];
+        let d = Decision::from_catalogue(&catalogue, Action::cloud());
+        assert_eq!(d.catalogue_idx, 2);
+        assert_eq!(d.action, Action::cloud());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside its catalogue")]
+    fn decision_outside_catalogue_panics() {
+        let catalogue = vec![Action::cloud()];
+        Decision::from_catalogue(&catalogue, Action::connected_edge());
+    }
+
+    #[test]
+    fn cloud_ctx_default_is_unloaded() {
+        let c = CloudCtx::default();
+        assert_eq!(c.slowdown, 1.0);
+        assert_eq!(c.queue_wait_s, 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! The Opt oracle: shadow-evaluate every catalogue action and pick the
+//! best true outcome. Congestion-aware through [`super::CloudCtx`], so the
+//! same policy serves the single-device server (unloaded cloud) and the
+//! fleet simulator (epoch-frozen congestion snapshot).
+
+use crate::exec::latency::{RunContext, Simulator};
+use crate::interference::Interference;
+use crate::nn::zoo::NnDesc;
+use crate::types::{Action, Precision, ProcKind, Site};
+
+use super::{Decision, DecisionCtx, ScalingPolicy};
+
+/// The Opt oracle's ranking loop, shared by the policy below and any
+/// experiment that wants a best-true-outcome label: evaluate every
+/// catalogue action on a shadow copy of the simulator (identical
+/// thermal/network state) and pick the best true outcome —
+/// accuracy-gated, QoS-feasible-first, then minimum true energy.
+/// `ctx_for` prices each action's runtime context (the fleet uses it to
+/// charge cloud actions the current congestion).
+pub fn oracle_best_action(
+    sim: &Simulator,
+    nn: &NnDesc,
+    catalogue: &[Action],
+    accuracy_target: f64,
+    qos_s: f64,
+    ctx_for: impl Fn(Action) -> RunContext,
+) -> Action {
+    let mut best: Option<(Action, f64, bool)> = None; // (action, energy, feasible)
+    for &a in catalogue {
+        // Shadow run: clone the simulator so thermal/noise state is not
+        // consumed by what-if evaluation.
+        let mut shadow = sim.clone();
+        let m = shadow.run(nn, a, &ctx_for(a));
+        if m.accuracy < accuracy_target {
+            continue;
+        }
+        let feasible = m.latency_s < qos_s;
+        let better = match &best {
+            None => true,
+            Some((_, be, bf)) => {
+                if feasible != *bf {
+                    feasible // feasible beats infeasible
+                } else {
+                    m.energy_true_j < *be
+                }
+            }
+        };
+        if better {
+            best = Some((a, m.energy_true_j, feasible));
+        }
+    }
+    best.map(|(a, _, _)| a)
+        .unwrap_or_else(|| Action::local(ProcKind::Cpu, Precision::Fp32))
+}
+
+/// Per-request shadow-simulation oracle. Sees the *sensed* interference
+/// (not the ground truth — the sensing gap is part of the stochastic
+/// variance) and prices cloud actions at the ctx's congestion view.
+pub struct OptPolicy {
+    catalogue: Vec<Action>,
+}
+
+impl OptPolicy {
+    /// The oracle always what-ifs the full DVFS catalogue, wherever it is
+    /// plugged in.
+    pub fn new(catalogue: Vec<Action>) -> OptPolicy {
+        OptPolicy { catalogue }
+    }
+}
+
+impl ScalingPolicy for OptPolicy {
+    fn name(&self) -> &'static str {
+        "Opt"
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        let sensed = Interference {
+            cpu_util: ctx.obs.co_cpu,
+            mem_pressure: ctx.obs.co_mem,
+        };
+        let action = oracle_best_action(
+            ctx.sim,
+            ctx.nn,
+            ctx.catalogue,
+            ctx.accuracy_target,
+            ctx.qos_s,
+            |a| RunContext {
+                interference: sensed,
+                thermal_cap: 1.0,
+                compute_factor: if a.site == Site::Cloud { ctx.cloud.slowdown } else { 1.0 },
+                remote_queue_s: if a.site == Site::Cloud {
+                    ctx.cloud.queue_wait_s
+                } else {
+                    0.0
+                },
+            },
+        );
+        Decision::from_catalogue(ctx.catalogue, action)
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.catalogue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::state::{State, StateObs};
+    use crate::configsys::runconfig::EnvKind;
+    use crate::coordinator::envs::Environment;
+    use crate::policy::action_catalogue;
+    use crate::types::DeviceId;
+
+    #[test]
+    fn congestion_prices_the_cloud_out() {
+        // Binary choice (cloud vs local CPU) on a heavy conv model: the
+        // unloaded cloud wins, a melted cloud (30 s queue) must lose.
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 3);
+        let catalogue = vec![
+            Action::cloud(),
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+        ];
+        let nn = crate::nn::zoo::by_name("resnet50").unwrap();
+        let obs = StateObs::from_parts(nn, Default::default(), -55.0, -50.0);
+        let mut p = OptPolicy::new(catalogue.clone());
+        let mk_ctx = |cloud: super::super::CloudCtx| DecisionCtx {
+            obs: &obs,
+            state: State::discretize(&obs),
+            nn,
+            qos_s: 0.05,
+            accuracy_target: 0.5,
+            catalogue: &catalogue,
+            sim: &env.sim,
+            cloud,
+        };
+        let unloaded = p.decide(&mk_ctx(Default::default()));
+        let melted = p.decide(&mk_ctx(super::super::CloudCtx {
+            slowdown: 4.0,
+            queue_wait_s: 30.0,
+        }));
+        assert_eq!(unloaded.action.site, Site::Cloud, "resnet50 favours an unloaded cloud");
+        assert_ne!(melted.action.site, Site::Cloud, "a melted cloud must be avoided");
+        assert_eq!(catalogue[melted.catalogue_idx], melted.action);
+    }
+
+    #[test]
+    fn full_catalogue_decision_indexes_correctly() {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 4);
+        let catalogue = action_catalogue(&env.sim.local);
+        let nn = crate::nn::zoo::by_name("mobilenet_v1").unwrap();
+        let obs = StateObs::from_parts(nn, Default::default(), -55.0, -50.0);
+        let mut p = OptPolicy::new(catalogue.clone());
+        let ctx = DecisionCtx {
+            obs: &obs,
+            state: State::discretize(&obs),
+            nn,
+            qos_s: 0.05,
+            accuracy_target: 0.5,
+            catalogue: &catalogue,
+            sim: &env.sim,
+            cloud: Default::default(),
+        };
+        let d = p.decide(&ctx);
+        assert_eq!(catalogue[d.catalogue_idx], d.action);
+    }
+}

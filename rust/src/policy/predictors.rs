@@ -1,0 +1,302 @@
+//! §3.3 prediction-based comparators behind the open API: regression
+//! (LR/SVR — per-action energy+latency models, pick the cheapest
+//! QoS-feasible action) and classification (SVM/KNN — predict the optimal
+//! action label directly), plus the offline-profiling dataset collection
+//! and fitting the registry uses to train them.
+
+use crate::agent::state::StateObs;
+use crate::baselines::svm::SvmParams;
+use crate::baselines::svr::SvrParams;
+use crate::baselines::{Knn, LinReg, LinearSvm, LinearSvr, Scaler};
+use crate::configsys::runconfig::EnvKind;
+use crate::coordinator::envs::Environment;
+use crate::exec::latency::RunContext;
+use crate::nn::zoo::{by_name, ZOO};
+use crate::types::{Action, DeviceId};
+use crate::util::rng::Pcg64;
+
+use super::{Decision, DecisionCtx, ScalingPolicy};
+
+/// Feature vector used by the prediction-based comparators: the eight
+/// Table-1 observables (continuous form).
+pub fn features(o: &StateObs) -> Vec<f64> {
+    vec![
+        o.s_conv as f64,
+        o.s_fc as f64,
+        o.s_rc as f64,
+        o.s_mac_m,
+        o.co_cpu,
+        o.co_mem,
+        o.rssi_wlan,
+        o.rssi_p2p,
+    ]
+}
+
+/// Regression comparator: one energy model and one latency model per
+/// action (LR or SVR), pick the action with the lowest predicted energy
+/// whose predicted latency clears the QoS bound.
+#[derive(Clone)]
+pub struct RegressionPolicy {
+    pub scaler: Scaler,
+    /// Per-action (energy, latency) predictors.
+    pub energy: Vec<RegModel>,
+    pub latency: Vec<RegModel>,
+    pub actions: Vec<Action>,
+}
+
+/// Either regression flavour.
+#[derive(Clone)]
+pub enum RegModel {
+    Lr(LinReg),
+    Svr(LinearSvr),
+}
+
+impl RegModel {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        match self {
+            RegModel::Lr(m) => m.predict(x),
+            RegModel::Svr(m) => m.predict(x),
+        }
+    }
+}
+
+impl RegressionPolicy {
+    pub fn select(&self, o: &StateObs, qos_s: f64) -> (usize, Action) {
+        let x = self.scaler.transform(&features(o));
+        let mut best: Option<(usize, f64)> = None;
+        let mut fallback: Option<(usize, f64)> = None;
+        for i in 0..self.actions.len() {
+            let e = self.energy[i].predict(&x);
+            let l = self.latency[i].predict(&x);
+            if l < qos_s {
+                if best.map(|(_, be)| e < be).unwrap_or(true) {
+                    best = Some((i, e));
+                }
+            }
+            // fallback: minimal predicted latency if nothing clears QoS
+            if fallback.map(|(_, bl)| l < bl).unwrap_or(true) {
+                fallback = Some((i, l));
+            }
+        }
+        let idx = best.or(fallback).map(|(i, _)| i).unwrap_or(0);
+        (idx, self.actions[idx])
+    }
+}
+
+impl ScalingPolicy for RegressionPolicy {
+    fn name(&self) -> &'static str {
+        match self.energy.first() {
+            Some(RegModel::Lr(_)) => "LR",
+            Some(RegModel::Svr(_)) => "SVR",
+            None => "Regression",
+        }
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        let (catalogue_idx, action) = self.select(ctx.obs, ctx.qos_s);
+        Decision { action, catalogue_idx }
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.actions
+    }
+
+    /// Offline-trained and stateless at serve time: safe to clone across
+    /// a fleet instead of retraining per device.
+    fn clone_box(&self) -> Option<Box<dyn ScalingPolicy>> {
+        Some(Box::new(self.clone()))
+    }
+}
+
+/// Classification comparator: predict the optimal action label directly.
+#[derive(Clone)]
+pub struct ClassifierPolicy {
+    pub scaler: Scaler,
+    pub model: ClsModel,
+    pub actions: Vec<Action>,
+}
+
+#[derive(Clone)]
+pub enum ClsModel {
+    Svm(LinearSvm),
+    Knn(Knn),
+}
+
+impl ClassifierPolicy {
+    pub fn select(&self, o: &StateObs) -> (usize, Action) {
+        let x = self.scaler.transform(&features(o));
+        let idx = match &self.model {
+            ClsModel::Svm(m) => m.predict(&x),
+            ClsModel::Knn(m) => m.predict(&x),
+        }
+        .min(self.actions.len() - 1);
+        (idx, self.actions[idx])
+    }
+}
+
+impl ScalingPolicy for ClassifierPolicy {
+    fn name(&self) -> &'static str {
+        match self.model {
+            ClsModel::Svm(_) => "SVM",
+            ClsModel::Knn(_) => "KNN",
+        }
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        let (catalogue_idx, action) = self.select(ctx.obs);
+        Decision { action, catalogue_idx }
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.actions
+    }
+
+    /// Offline-trained and stateless at serve time: safe to clone across
+    /// a fleet instead of retraining per device.
+    fn clone_box(&self) -> Option<Box<dyn ScalingPolicy>> {
+        Some(Box::new(self.clone()))
+    }
+}
+
+/// One labeled sample for the §3.3 predictors.
+pub struct Sample {
+    pub obs: StateObs,
+    /// True energy and latency per catalogue action.
+    pub energy: Vec<f64>,
+    pub latency: Vec<f64>,
+    /// Index of the optimal action (label for classifiers).
+    pub best: usize,
+}
+
+/// Collect a training dataset by sweeping environments and what-if
+/// evaluating every action (the "offline profiling" the prediction-based
+/// works rely on).
+pub fn collect_dataset(
+    dev: DeviceId,
+    envs: &[EnvKind],
+    qos_s: f64,
+    accuracy_target: f64,
+    per_env: usize,
+    seed: u64,
+) -> (Vec<Sample>, Vec<Action>) {
+    let catalogue = super::action_catalogue(&crate::device::presets::device(dev));
+    let mut samples = Vec::new();
+    let mut rng = Pcg64::new(seed);
+    for (ei, env) in envs.iter().enumerate() {
+        let mut environment = Environment::build(dev, *env, seed + 100 + ei as u64);
+        for i in 0..per_env {
+            let nn = by_name(ZOO[i % ZOO.len()].name).unwrap();
+            // Sensor noise — the shared Environment::observe model: the
+            // predictors train and test on jittered readings, not ground
+            // truth.
+            let (obs, inter) = environment.observe(nn, i as f64 * 0.3, &mut rng);
+            let ctx = RunContext {
+                interference: inter,
+                thermal_cap: 1.0,
+                compute_factor: 1.0,
+                remote_queue_s: 0.0,
+            };
+            let mut energy = Vec::with_capacity(catalogue.len());
+            let mut latency = Vec::with_capacity(catalogue.len());
+            let mut best = 0usize;
+            let mut best_key = (false, f64::INFINITY);
+            for (ai, a) in catalogue.iter().enumerate() {
+                let mut shadow = environment.sim.clone();
+                let m = shadow.run(nn, *a, &ctx);
+                energy.push(m.energy_true_j);
+                latency.push(m.latency_s);
+                let feasible = m.latency_s < qos_s && m.accuracy >= accuracy_target;
+                let key = (feasible, m.energy_true_j);
+                let better = (key.0 && !best_key.0)
+                    || (key.0 == best_key.0 && key.1 < best_key.1);
+                if better {
+                    best = ai;
+                    best_key = key;
+                }
+            }
+            samples.push(Sample { obs, energy, latency, best });
+        }
+    }
+    (samples, catalogue)
+}
+
+/// Fit the regression comparator (LR or SVR) from a dataset.
+pub fn fit_regression(
+    samples: &[Sample],
+    actions: &[Action],
+    svr: bool,
+    seed: u64,
+) -> RegressionPolicy {
+    let xs: Vec<Vec<f64>> = samples.iter().map(|s| features(&s.obs)).collect();
+    let scaler = Scaler::fit(&xs);
+    let xt = scaler.transform_all(&xs);
+    let mut energy = Vec::new();
+    let mut latency = Vec::new();
+    for ai in 0..actions.len() {
+        let ey: Vec<f64> = samples.iter().map(|s| s.energy[ai]).collect();
+        let ly: Vec<f64> = samples.iter().map(|s| s.latency[ai]).collect();
+        if svr {
+            energy.push(RegModel::Svr(LinearSvr::fit(&xt, &ey, SvrParams::default(), seed)));
+            latency.push(RegModel::Svr(LinearSvr::fit(&xt, &ly, SvrParams::default(), seed + 1)));
+        } else {
+            energy.push(RegModel::Lr(LinReg::fit(&xt, &ey)));
+            latency.push(RegModel::Lr(LinReg::fit(&xt, &ly)));
+        }
+    }
+    RegressionPolicy { scaler, energy, latency, actions: actions.to_vec() }
+}
+
+/// Fit a classification comparator (SVM or KNN) from a dataset.
+pub fn fit_classifier(
+    samples: &[Sample],
+    actions: &[Action],
+    knn: bool,
+    seed: u64,
+) -> ClassifierPolicy {
+    let xs: Vec<Vec<f64>> = samples.iter().map(|s| features(&s.obs)).collect();
+    let scaler = Scaler::fit(&xs);
+    let xt = scaler.transform_all(&xs);
+    let ys: Vec<usize> = samples.iter().map(|s| s.best).collect();
+    let model = if knn {
+        ClsModel::Knn(Knn::fit(xt, ys, 5))
+    } else {
+        ClsModel::Svm(LinearSvm::fit(&xt, &ys, actions.len(), SvmParams::default(), seed))
+    };
+    ClassifierPolicy { scaler, model, actions: actions.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_are_eight_dims() {
+        let o = StateObs::from_parts(
+            by_name("resnet50").unwrap(),
+            crate::interference::Interference::default(),
+            -60.0,
+            -55.0,
+        );
+        assert_eq!(features(&o).len(), 8);
+    }
+
+    #[test]
+    fn fitted_predictors_return_catalogue_indices() {
+        let (samples, actions) = collect_dataset(
+            DeviceId::Mi8Pro,
+            &[EnvKind::S1NoVariance],
+            0.05,
+            0.5,
+            12,
+            3,
+        );
+        let reg = fit_regression(&samples, &actions, false, 3);
+        let cls = fit_classifier(&samples, &actions, true, 3);
+        assert_eq!(reg.name(), "LR");
+        assert_eq!(cls.name(), "KNN");
+        let (i, a) = reg.select(&samples[0].obs, 0.05);
+        assert_eq!(actions[i], a);
+        let (i, a) = cls.select(&samples[0].obs);
+        assert_eq!(actions[i], a);
+    }
+}

@@ -1,0 +1,269 @@
+//! String-keyed policy factory: one construction path for the CLI, the
+//! fleet simulator and every experiment. `policy::build("autoscale",
+//! &spec)` returns a ready [`ScalingPolicy`]; unknown keys produce an
+//! error that enumerates the registry, so the help text can never go
+//! stale.
+
+use crate::agent::qlearn::AutoScaleAgent;
+use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
+use crate::device::presets::device;
+use crate::types::{Action, DeviceId};
+
+use super::bandit::BanditPolicy;
+use super::catalogue::{action_catalogue, compact_action_catalogue};
+use super::fixed::FixedTargetPolicy;
+use super::hysteresis::HysteresisPolicy;
+use super::oracle::OptPolicy;
+use super::predictors::{collect_dataset, fit_classifier, fit_regression};
+use super::rl::AutoScalePolicy;
+use super::ScalingPolicy;
+
+/// Which action space a built policy decides over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CatalogueScope {
+    /// Every (processor, V/F step, precision) plus the scale-out targets —
+    /// the single-device serving default.
+    Full,
+    /// Max-frequency (processor, precision) pairs plus scale-out — the
+    /// fleet default, bounding per-device learner memory.
+    Compact,
+}
+
+/// Everything a registry builder may need. `PolicySpec::new` fills
+/// sensible defaults; hosts override the fields they care about.
+#[derive(Clone, Debug)]
+pub struct PolicySpec {
+    /// Device whose action catalogue the policy decides over.
+    pub device: DeviceId,
+    /// Seed for any policy-internal randomness (table init, exploration).
+    pub seed: u64,
+    /// Q-learning hyper-parameters (AutoScale).
+    pub agent: AgentParams,
+    /// Catalogue flavour ([`CatalogueScope::Full`] for single-device
+    /// serving, [`CatalogueScope::Compact`] at fleet scale).
+    pub scope: CatalogueScope,
+    /// Scenario whose QoS bound predictor training labels against.
+    pub scenario: Scenario,
+    /// Accuracy target predictor training labels against.
+    pub accuracy_target: f64,
+    /// Environments the predictor policies collect their offline
+    /// profiling dataset from.
+    pub train_envs: Vec<EnvKind>,
+    /// Profiling samples per training environment.
+    pub train_per_env: usize,
+}
+
+impl PolicySpec {
+    pub fn new(device: DeviceId, seed: u64) -> PolicySpec {
+        PolicySpec {
+            device,
+            seed,
+            agent: AgentParams::default(),
+            scope: CatalogueScope::Full,
+            scenario: Scenario::NonStreaming,
+            accuracy_target: 0.5,
+            train_envs: EnvKind::STATIC.to_vec(),
+            train_per_env: 40,
+        }
+    }
+
+    /// The catalogue this spec's scope selects.
+    pub fn catalogue(&self) -> Vec<Action> {
+        match self.scope {
+            CatalogueScope::Full => action_catalogue(&device(self.device)),
+            CatalogueScope::Compact => compact_action_catalogue(&device(self.device)),
+        }
+    }
+}
+
+/// One registry row: CLI key, one-line description, builder.
+pub struct PolicyEntry {
+    pub key: &'static str,
+    pub about: &'static str,
+    pub build: fn(&PolicySpec) -> Box<dyn ScalingPolicy>,
+}
+
+/// Every selectable policy, in help-text order.
+pub const REGISTRY: &[PolicyEntry] = &[
+    PolicyEntry {
+        key: "cpu",
+        about: "baseline: local CPU at max frequency, fp32",
+        build: |spec| Box::new(FixedTargetPolicy::edge_cpu_fp32(spec.catalogue())),
+    },
+    PolicyEntry {
+        key: "best",
+        about: "baseline: per-NN most efficient local processor",
+        build: |spec| Box::new(FixedTargetPolicy::edge_best(spec.catalogue())),
+    },
+    PolicyEntry {
+        key: "cloud",
+        about: "baseline: always offload to the cloud",
+        build: |spec| Box::new(FixedTargetPolicy::cloud_always(spec.catalogue())),
+    },
+    PolicyEntry {
+        key: "connected",
+        about: "baseline: always the connected edge device",
+        build: |spec| Box::new(FixedTargetPolicy::connected_edge_always(spec.catalogue())),
+    },
+    PolicyEntry {
+        key: "opt",
+        about: "oracle: shadow-simulate every action, pick the true optimum",
+        build: |spec| {
+            // The oracle always what-ifs the full DVFS catalogue.
+            Box::new(OptPolicy::new(action_catalogue(&device(spec.device))))
+        },
+    },
+    PolicyEntry {
+        key: "autoscale",
+        about: "the paper's Q-learning agent",
+        build: |spec| {
+            Box::new(AutoScalePolicy::new(AutoScaleAgent::new(
+                spec.catalogue(),
+                spec.agent,
+                spec.seed,
+            )))
+        },
+    },
+    PolicyEntry {
+        key: "lr",
+        about: "predictor: per-action linear regression (energy+latency)",
+        build: |spec| Box::new(fit_regression_spec(spec, false)),
+    },
+    PolicyEntry {
+        key: "svr",
+        about: "predictor: per-action linear SVR (energy+latency)",
+        build: |spec| Box::new(fit_regression_spec(spec, true)),
+    },
+    PolicyEntry {
+        key: "svm",
+        about: "predictor: linear SVM action classifier",
+        build: |spec| Box::new(fit_classifier_spec(spec, false)),
+    },
+    PolicyEntry {
+        key: "knn",
+        about: "predictor: k-nearest-neighbour action classifier",
+        build: |spec| Box::new(fit_classifier_spec(spec, true)),
+    },
+    PolicyEntry {
+        key: "hysteresis",
+        about: "RSSI-triggered offload with a dwell band",
+        build: |spec| Box::new(HysteresisPolicy::new(spec.catalogue())),
+    },
+    PolicyEntry {
+        key: "bandit",
+        about: "eps-greedy linear contextual bandit (fleet-scale learner)",
+        build: |spec| Box::new(BanditPolicy::new(spec.catalogue(), spec.seed)),
+    },
+];
+
+fn fit_regression_spec(spec: &PolicySpec, svr: bool) -> super::predictors::RegressionPolicy {
+    let (samples, actions) = profile(spec);
+    fit_regression(&samples, &actions, svr, spec.seed)
+}
+
+fn fit_classifier_spec(spec: &PolicySpec, knn: bool) -> super::predictors::ClassifierPolicy {
+    let (samples, actions) = profile(spec);
+    fit_classifier(&samples, &actions, knn, spec.seed)
+}
+
+/// Offline-profiling dataset for the predictor builders. Like the Opt
+/// oracle, the predictors ignore [`PolicySpec::scope`]: they are trained
+/// over (and decide over) the full profiling catalogue, because their
+/// per-action models are labeled by what-if evaluating every DVFS step.
+/// Fleet memory stays bounded via [`ScalingPolicy::clone_box`] — one
+/// trained instance per device preset — not via the compact catalogue.
+fn profile(spec: &PolicySpec) -> (Vec<super::predictors::Sample>, Vec<Action>) {
+    collect_dataset(
+        spec.device,
+        &spec.train_envs,
+        spec.scenario.qos_target_s(),
+        spec.accuracy_target,
+        spec.train_per_env,
+        spec.seed,
+    )
+}
+
+/// Build a policy by registry key.
+pub fn build(key: &str, spec: &PolicySpec) -> anyhow::Result<Box<dyn ScalingPolicy>> {
+    match REGISTRY.iter().find(|e| e.key == key) {
+        Some(e) => Ok((e.build)(spec)),
+        None => anyhow::bail!("unknown policy '{key}' (known: {})", names().join("|")),
+    }
+}
+
+/// All registry keys, in help-text order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.key).collect()
+}
+
+/// Is `key` a registered policy?
+pub fn is_known(key: &str) -> bool {
+    REGISTRY.iter().any(|e| e.key == key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_key_builds_and_reports_a_catalogue() {
+        // Predictor training is the slow part: shrink it for the test.
+        let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        spec.train_envs = vec![EnvKind::S1NoVariance];
+        spec.train_per_env = 6;
+        for e in REGISTRY {
+            let p = build(e.key, &spec).unwrap();
+            assert!(!p.catalogue().is_empty(), "{}", e.key);
+            assert!(!p.name().is_empty(), "{}", e.key);
+        }
+    }
+
+    #[test]
+    fn unknown_key_error_enumerates_the_registry() {
+        let spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        let err = build("warp-drive", &spec).unwrap_err().to_string();
+        for e in REGISTRY {
+            assert!(err.contains(e.key), "error must list '{}': {err}", e.key);
+        }
+    }
+
+    #[test]
+    fn scope_selects_the_catalogue_flavour() {
+        let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        let full = build("autoscale", &spec).unwrap().catalogue().len();
+        spec.scope = CatalogueScope::Compact;
+        let compact = build("autoscale", &spec).unwrap().catalogue().len();
+        assert!(full > compact, "{full} vs {compact}");
+        assert_eq!(compact, 7);
+        // The oracle ignores scope: it always needs the full DVFS sweep.
+        assert_eq!(build("opt", &spec).unwrap().catalogue().len(), full);
+    }
+
+    #[test]
+    fn clone_box_only_for_stateless_predictors() {
+        let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        spec.train_envs = vec![EnvKind::S1NoVariance];
+        spec.train_per_env = 6;
+        for (key, clonable) in [
+            ("lr", true),
+            ("knn", true),
+            ("autoscale", false),
+            ("bandit", false),
+            ("cpu", false),
+        ] {
+            let p = build(key, &spec).unwrap();
+            assert_eq!(p.clone_box().is_some(), clonable, "{key}");
+        }
+    }
+
+    #[test]
+    fn required_keys_are_registered() {
+        for key in [
+            "cpu", "best", "cloud", "connected", "opt", "autoscale", "lr", "svr", "svm",
+            "knn", "hysteresis", "bandit",
+        ] {
+            assert!(is_known(key), "missing registry key '{key}'");
+        }
+        assert!(!is_known("nope"));
+    }
+}

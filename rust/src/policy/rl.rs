@@ -1,0 +1,94 @@
+//! The paper's agent behind the open API: a thin [`ScalingPolicy`] shell
+//! around [`AutoScaleAgent`] (Q-table, ε-greedy selection, TD update).
+
+use crate::agent::qlearn::AutoScaleAgent;
+use crate::types::Action;
+
+use super::{Decision, DecisionCtx, Feedback, ScalingPolicy};
+
+/// Q-learning policy (paper Algorithm 1). Owns the agent; experiments that
+/// train/transfer/freeze agents wrap them with [`AutoScalePolicy::new`]
+/// and take them back with [`AutoScalePolicy::into_agent`].
+pub struct AutoScalePolicy {
+    pub agent: AutoScaleAgent,
+}
+
+impl AutoScalePolicy {
+    pub fn new(agent: AutoScaleAgent) -> AutoScalePolicy {
+        AutoScalePolicy { agent }
+    }
+
+    /// Unwrap the trained agent (e.g. to freeze or transfer its Q-table).
+    pub fn into_agent(self) -> AutoScaleAgent {
+        self.agent
+    }
+}
+
+impl ScalingPolicy for AutoScalePolicy {
+    fn name(&self) -> &'static str {
+        "AutoScale"
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        let (catalogue_idx, action) = self.agent.select(ctx.state);
+        Decision { action, catalogue_idx }
+    }
+
+    fn feedback(&mut self, fb: &Feedback) {
+        self.agent.update(fb.state, fb.catalogue_idx, fb.reward, fb.next_state);
+    }
+
+    /// Always true — a frozen agent stops exploring but keeps absorbing
+    /// TD updates, matching the serving loop's historical behaviour.
+    fn is_learning(&self) -> bool {
+        true
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.agent.actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::state::{State, StateObs};
+    use crate::configsys::runconfig::EnvKind;
+    use crate::coordinator::envs::Environment;
+    use crate::policy::action_catalogue;
+    use crate::types::DeviceId;
+
+    #[test]
+    fn decide_and_feedback_drive_the_q_table() {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+        let catalogue = action_catalogue(&env.sim.local);
+        let mut p = AutoScalePolicy::new(AutoScaleAgent::new(
+            catalogue.clone(),
+            Default::default(),
+            1,
+        ));
+        assert!(p.is_learning());
+        let nn = crate::nn::zoo::by_name("mobilenet_v1").unwrap();
+        let obs = StateObs::from_parts(nn, Default::default(), -60.0, -55.0);
+        let s = State::discretize(&obs);
+        let ctx = DecisionCtx {
+            obs: &obs,
+            state: s,
+            nn,
+            qos_s: 0.05,
+            accuracy_target: 0.5,
+            catalogue: &catalogue,
+            sim: &env.sim,
+            cloud: Default::default(),
+        };
+        let d = p.decide(&ctx);
+        assert_eq!(catalogue[d.catalogue_idx], d.action);
+        p.feedback(&Feedback {
+            state: s,
+            next_state: s,
+            catalogue_idx: d.catalogue_idx,
+            reward: 0.5,
+        });
+        assert_eq!(p.agent.updates(), 1);
+    }
+}

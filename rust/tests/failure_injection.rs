@@ -5,8 +5,8 @@
 use autoscale::agent::qlearn::{AutoScaleAgent, QTable};
 use autoscale::configsys::runconfig::{EnvKind, RunConfig};
 use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::policy::Policy;
 use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::policy::{AutoScalePolicy, PolicySpec};
 use autoscale::exec::latency::RunContext;
 use autoscale::net::{Link, LinkKind, RssiProcess};
 use autoscale::nn::manifest::Manifest;
@@ -35,7 +35,7 @@ fn radio_blackout_keeps_remote_costs_finite_and_oracle_local() {
     cfg.seed = 2;
     let mut server = Server::new(
         env,
-        Policy::Opt,
+        autoscale::policy::build("opt", &PolicySpec::new(DeviceId::Mi8Pro, 2)).unwrap(),
         ServeConfig {
             run: cfg,
             models: vec!["inception_v1", "resnet50", "ssd_mobilenet_v2"],
@@ -69,7 +69,7 @@ fn serving_survives_missing_engine_artifacts() {
     cfg.seed = 3;
     let mut server = Server::new(
         env,
-        Policy::EdgeBest,
+        autoscale::policy::build("best", &PolicySpec::new(DeviceId::Mi8Pro, 3)).unwrap(),
         ServeConfig { run: cfg, models: vec!["mobilenet_v1"] },
     )
     .with_engine(&mut engine);
@@ -101,7 +101,7 @@ fn single_action_catalogue_still_serves() {
     let mut cfg = RunConfig::default();
     cfg.seed = 4;
     let mut server =
-        Server::new(env, Policy::AutoScale(agent), ServeConfig { run: cfg, models: vec![] });
+        Server::new(env, AutoScalePolicy::new(agent), ServeConfig { run: cfg, models: vec![] });
     let metrics = server.serve(20);
     assert_eq!(metrics.n(), 20);
     // everything lands on the only action

@@ -4,7 +4,7 @@
 //! congestion-aware agents back toward local execution).
 
 use autoscale::configsys::runconfig::EnvKind;
-use autoscale::fleet::{run_fleet, CloudParams, FleetConfig, FleetPolicyKind};
+use autoscale::fleet::{run_fleet, CloudParams, FleetConfig};
 
 #[test]
 fn thousand_device_fleet_is_deterministic_across_shards() {
@@ -15,7 +15,7 @@ fn thousand_device_fleet_is_deterministic_across_shards() {
         requests_per_device: 10,
         rate_hz: 2.0,
         seed: 42,
-        policy: FleetPolicyKind::AutoScale,
+        policy: "autoscale".to_string(),
         env: EnvKind::D3RandomWlan, // stochastic signal: the hard case
         ..Default::default()
     };
@@ -56,7 +56,7 @@ fn identical_seeds_reproduce_identical_fleets() {
         rate_hz: 2.0,
         seed: 9,
         shards: 4,
-        policy: FleetPolicyKind::AutoScale,
+        policy: "autoscale".to_string(),
         ..Default::default()
     };
     let a = run_fleet(&cfg).unwrap();
@@ -82,7 +82,7 @@ fn rising_cloud_load_shifts_opt_agents_back_to_local() {
         requests_per_device: 30,
         rate_hz: 2.0,
         seed: 11,
-        policy: FleetPolicyKind::Opt,
+        policy: "opt".to_string(),
         env: EnvKind::S5WeakP2p,
         models: vec!["resnet50", "inception_v3", "mobilebert"],
         ..Default::default()
@@ -136,7 +136,7 @@ fn autoscale_fleet_learns_away_from_a_melted_cloud() {
         requests_per_device: 60,
         rate_hz: 4.0,
         seed: 5,
-        policy: FleetPolicyKind::AutoScale,
+        policy: "autoscale".to_string(),
         env: EnvKind::S5WeakP2p,
         models: vec!["resnet50", "mobilebert"],
         cloud: CloudParams {

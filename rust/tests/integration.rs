@@ -4,12 +4,21 @@
 
 use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, Scenario};
-use autoscale::coordinator::policy::{action_catalogue, Policy};
 use autoscale::experiments::common::{run_episode, train_autoscale};
+use autoscale::policy::{action_catalogue, AutoScalePolicy, PolicySpec, ScalingPolicy};
 use autoscale::types::DeviceId;
 
-/// Helper: evaluate a fresh fixed policy over one env.
-fn episode(policy: Policy, env: EnvKind, seed: u64) -> autoscale::coordinator::metrics::EpisodeMetrics {
+/// Registry-built policy on the default single-device spec.
+fn named(name: &str, seed: u64) -> Box<dyn ScalingPolicy> {
+    autoscale::policy::build(name, &PolicySpec::new(DeviceId::Mi8Pro, seed)).unwrap()
+}
+
+/// Helper: evaluate a policy over one env.
+fn episode<P: ScalingPolicy>(
+    policy: P,
+    env: EnvKind,
+    seed: u64,
+) -> autoscale::coordinator::metrics::EpisodeMetrics {
     run_episode(
         DeviceId::Mi8Pro,
         env,
@@ -24,7 +33,7 @@ fn episode(policy: Policy, env: EnvKind, seed: u64) -> autoscale::coordinator::m
 
 #[test]
 fn serving_loop_produces_complete_outcomes() {
-    let m = episode(Policy::EdgeCpuFp32, EnvKind::S1NoVariance, 1);
+    let m = episode(named("cpu", 1), EnvKind::S1NoVariance, 1);
     assert_eq!(m.n(), 150);
     for o in &m.outcomes {
         assert!(o.measurement.latency_s > 0.0);
@@ -36,21 +45,22 @@ fn serving_loop_produces_complete_outcomes() {
 
 #[test]
 fn identical_seeds_reproduce_identical_episodes() {
-    let a = episode(Policy::EdgeBest, EnvKind::D3RandomWlan, 42);
-    let b = episode(Policy::EdgeBest, EnvKind::D3RandomWlan, 42);
+    let a = episode(named("best", 42), EnvKind::D3RandomWlan, 42);
+    let b = episode(named("best", 42), EnvKind::D3RandomWlan, 42);
     assert_eq!(a.n(), b.n());
     for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
         assert_eq!(x.action, y.action);
         assert!((x.measurement.latency_s - y.measurement.latency_s).abs() < 1e-15);
         assert!((x.measurement.energy_true_j - y.measurement.energy_true_j).abs() < 1e-15);
     }
+    assert_eq!(a.fingerprint(), b.fingerprint());
 }
 
 #[test]
 fn different_seeds_differ_under_variance() {
     // Cloud latency depends on the Gaussian RSSI walk, which is seeded.
-    let a = episode(Policy::CloudAlways, EnvKind::D3RandomWlan, 1);
-    let b = episode(Policy::CloudAlways, EnvKind::D3RandomWlan, 2);
+    let a = episode(named("cloud", 1), EnvKind::D3RandomWlan, 1);
+    let b = episode(named("cloud", 2), EnvKind::D3RandomWlan, 2);
     let same = a
         .outcomes
         .iter()
@@ -62,14 +72,9 @@ fn different_seeds_differ_under_variance() {
 #[test]
 fn opt_dominates_every_fixed_baseline() {
     for env in [EnvKind::S1NoVariance, EnvKind::S3MemHog, EnvKind::S4WeakWlan] {
-        let opt = episode(Policy::Opt, env, 5).ppw();
-        for mk in [
-            || Policy::EdgeCpuFp32,
-            || Policy::EdgeBest,
-            || Policy::CloudAlways,
-            || Policy::ConnectedEdgeAlways,
-        ] {
-            let base = episode(mk(), env, 5).ppw();
+        let opt = episode(named("opt", 5), env, 5).ppw();
+        for name in ["cpu", "best", "cloud", "connected"] {
+            let base = episode(named(name, 5), env, 5).ppw();
             assert!(
                 opt >= base * 0.98,
                 "{env:?}: Opt {opt} must dominate baseline {base}"
@@ -90,9 +95,9 @@ fn trained_autoscale_approaches_opt_in_s1() {
     );
     let mut frozen = AutoScaleAgent::with_transfer(agent.actions.clone(), agent.params, 9, &agent);
     frozen.freeze();
-    let autoscale = episode(Policy::AutoScale(frozen), EnvKind::S1NoVariance, 6).ppw();
-    let opt = episode(Policy::Opt, EnvKind::S1NoVariance, 6).ppw();
-    let cpu = episode(Policy::EdgeCpuFp32, EnvKind::S1NoVariance, 6).ppw();
+    let autoscale = episode(AutoScalePolicy::new(frozen), EnvKind::S1NoVariance, 6).ppw();
+    let opt = episode(named("opt", 6), EnvKind::S1NoVariance, 6).ppw();
+    let cpu = episode(named("cpu", 6), EnvKind::S1NoVariance, 6).ppw();
     assert!(autoscale > cpu, "beats the CPU baseline");
     assert!(autoscale > 0.6 * opt, "within striking distance of Opt: {autoscale} vs {opt}");
     assert!(autoscale <= opt * 1.02, "cannot exceed the oracle");
@@ -100,7 +105,7 @@ fn trained_autoscale_approaches_opt_in_s1() {
 
 #[test]
 fn qos_generally_respected_by_opt_in_quiet_env() {
-    let m = episode(Policy::Opt, EnvKind::S1NoVariance, 7);
+    let m = episode(named("opt", 7), EnvKind::S1NoVariance, 7);
     assert!(
         m.qos_violation_ratio() < 0.10,
         "Opt violates QoS {:.1}% of the time in S1",
@@ -110,8 +115,8 @@ fn qos_generally_respected_by_opt_in_quiet_env() {
 
 #[test]
 fn weak_wifi_forces_opt_off_the_cloud() {
-    let strong = episode(Policy::Opt, EnvKind::S1NoVariance, 8);
-    let weak = episode(Policy::Opt, EnvKind::S4WeakWlan, 8);
+    let strong = episode(named("opt", 8), EnvKind::S1NoVariance, 8);
+    let weak = episode(named("opt", 8), EnvKind::S4WeakWlan, 8);
     let cloud_rate = |m: &autoscale::coordinator::metrics::EpisodeMetrics| {
         m.selections().rate("Cloud")
     };
@@ -119,6 +124,16 @@ fn weak_wifi_forces_opt_off_the_cloud() {
         cloud_rate(&weak) < cloud_rate(&strong) + 1e-9,
         "weak Wi-Fi must not increase cloud selection"
     );
+}
+
+#[test]
+fn new_policies_serve_complete_episodes() {
+    // The two API-proof policies drive the same loop end to end.
+    for name in ["hysteresis", "bandit"] {
+        let m = episode(named(name, 3), EnvKind::D3RandomWlan, 3);
+        assert_eq!(m.n(), 150, "{name}");
+        assert!(m.total_energy_j() > 0.0, "{name}");
+    }
 }
 
 #[test]
@@ -151,7 +166,7 @@ fn config_file_round_trip_drives_a_run() {
         cfg.device,
         cfg.env,
         cfg.scenario,
-        Policy::EdgeBest,
+        autoscale::policy::build("best", &PolicySpec::new(cfg.device, cfg.seed)).unwrap(),
         vec![],
         cfg.requests,
         cfg.accuracy_target,

@@ -1,0 +1,284 @@
+//! Refactor-parity pins for the `ScalingPolicy` migration.
+//!
+//! The `reference` module below is a line-for-line re-implementation of
+//! the PRE-TRAIT serving loop: the Fig. 8 cycle exactly as the old
+//! `Server` ran it, with the old closed-enum dispatch inlined as a match
+//! on the policy name (hard-coded `idx 0` for the baseline/oracle arms
+//! and all). Every test drives the reference and the new trait-based
+//! `Server` + registry on the same fixed seed and asserts **bit-identical
+//! episode fingerprints** — actions, latency/energy bit patterns and
+//! virtual timestamps per request — for every pre-existing policy.
+//!
+//! If a change to the serving loop, the decision API or the registry
+//! shifts a single RNG draw or context parameter, these pins fail.
+
+use autoscale::agent::qlearn::AutoScaleAgent;
+use autoscale::agent::reward::{reward, RewardParams};
+use autoscale::agent::state::State;
+use autoscale::configsys::runconfig::{AgentParams, EnvKind, Scenario};
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::metrics::EpisodeMetrics;
+use autoscale::coordinator::serve::qos_for;
+use autoscale::exec::latency::RunContext;
+use autoscale::exec::outcome::ExecOutcome;
+use autoscale::experiments::common::run_episode;
+use autoscale::interference::Interference;
+use autoscale::policy::{
+    action_catalogue, collect_dataset, edge_best_action, fit_classifier, fit_regression,
+    oracle_best_action, ClassifierPolicy, PolicySpec, RegressionPolicy,
+};
+use autoscale::types::{Action, DeviceId, Precision, ProcKind};
+use autoscale::util::clock::VirtualClock;
+use autoscale::util::rng::Pcg64;
+
+const DEV: DeviceId = DeviceId::Mi8Pro;
+const SCENARIO: Scenario = Scenario::NonStreaming;
+const ACCURACY: f64 = 0.5;
+const REQUESTS: usize = 50;
+
+/// The pre-refactor serving loop, reproduced verbatim.
+mod reference {
+    use super::*;
+
+    /// Old-enum policy state: exactly the variants `enum Policy` had.
+    pub enum OldPolicy {
+        EdgeCpuFp32,
+        EdgeBest,
+        CloudAlways,
+        ConnectedEdgeAlways,
+        Opt,
+        AutoScale(AutoScaleAgent),
+        Regression(RegressionPolicy),
+        Classifier(ClassifierPolicy),
+    }
+
+    impl OldPolicy {
+        fn is_learning(&self) -> bool {
+            matches!(self, OldPolicy::AutoScale(_))
+        }
+    }
+
+    /// One episode through the OLD loop; returns the outcome fingerprint.
+    pub fn episode(mut policy: OldPolicy, env_kind: EnvKind, seed: u64) -> u64 {
+        let mut env = Environment::build(DEV, env_kind, seed);
+        let mut clock = VirtualClock::new();
+        let mut rng = Pcg64::with_stream(seed, 1001);
+        let agent_params = AgentParams::default();
+        let models: Vec<&'static str> =
+            autoscale::nn::zoo::ZOO.iter().map(|d| d.name).collect();
+        let mut metrics = EpisodeMetrics::default();
+
+        for i in 0..REQUESTS {
+            let nn = autoscale::nn::zoo::by_name(models[i % models.len()]).unwrap();
+            // ① observe
+            let (obs, true_inter) = env.observe(nn, clock.now(), &mut rng);
+            let s = State::discretize(&obs);
+            let qos = qos_for(SCENARIO, nn);
+
+            // ② select — the old match dispatch, hard-coded idx 0 included
+            let (idx, action) = match &mut policy {
+                OldPolicy::EdgeCpuFp32 => {
+                    (0, Action::local(ProcKind::Cpu, Precision::Fp32))
+                }
+                OldPolicy::EdgeBest => (0, edge_best_action(&env.sim.local, nn)),
+                OldPolicy::CloudAlways => (0, Action::cloud()),
+                OldPolicy::ConnectedEdgeAlways => (0, Action::connected_edge()),
+                OldPolicy::Opt => {
+                    let catalogue = action_catalogue(&env.sim.local);
+                    let ctx = RunContext {
+                        interference: Interference {
+                            cpu_util: obs.co_cpu,
+                            mem_pressure: obs.co_mem,
+                        },
+                        thermal_cap: 1.0,
+                        compute_factor: 1.0,
+                        remote_queue_s: 0.0,
+                    };
+                    let a = oracle_best_action(
+                        &env.sim,
+                        nn,
+                        &catalogue,
+                        ACCURACY,
+                        qos,
+                        |_| ctx.clone(),
+                    );
+                    (0, a)
+                }
+                OldPolicy::AutoScale(agent) => agent.select(s),
+                OldPolicy::Regression(r) => r.select(&obs, qos),
+                OldPolicy::Classifier(c) => c.select(&obs),
+            };
+
+            // ③ execute
+            let ctx = RunContext {
+                interference: true_inter,
+                thermal_cap: 1.0,
+                compute_factor: 1.0,
+                remote_queue_s: 0.0,
+            };
+            let m = env.sim.run(nn, action, &ctx);
+            clock.advance(m.latency_s.max(1e-6));
+
+            // ④ reward
+            let rp = RewardParams {
+                alpha: agent_params.alpha,
+                beta: agent_params.beta,
+                qos_s: qos,
+                accuracy_req: ACCURACY,
+            };
+            let r = reward(&m, &rp);
+
+            // ⑤ feedback (AutoScale only; consumes a second observation)
+            if policy.is_learning() {
+                let (obs_next, _) = env.observe(nn, clock.now(), &mut rng);
+                let s_next = State::discretize(&obs_next);
+                if let OldPolicy::AutoScale(agent) = &mut policy {
+                    agent.update(s, idx, r, s_next);
+                }
+            }
+
+            let mut outcome = ExecOutcome {
+                nn: nn.name,
+                action,
+                measurement: m,
+                qos_target_s: qos,
+                accuracy_target: ACCURACY,
+                t_s: clock.now(),
+            };
+            // non-streaming idle gap (thermal cooling + clock advance)
+            if SCENARIO != Scenario::Streaming {
+                let idle = rng.exponential(4.0);
+                env.sim.thermal.advance(0.2, idle);
+                clock.advance(idle);
+                outcome.t_s = clock.now();
+            }
+            metrics.push(outcome);
+        }
+        metrics.fingerprint()
+    }
+}
+
+/// The new path: registry-built policy through the trait-based Server.
+fn new_path(name: &str, env_kind: EnvKind, seed: u64) -> u64 {
+    let policy = autoscale::policy::build(name, &PolicySpec::new(DEV, seed)).unwrap();
+    run_episode(DEV, env_kind, SCENARIO, policy, vec![], REQUESTS, ACCURACY, seed).fingerprint()
+}
+
+/// Offline dataset with the registry's default predictor-training spec
+/// (STATIC envs, 40 samples/env, NonStreaming QoS, 0.5 accuracy).
+fn reference_dataset(
+    seed: u64,
+) -> (Vec<autoscale::policy::Sample>, Vec<Action>) {
+    collect_dataset(
+        DEV,
+        &EnvKind::STATIC,
+        SCENARIO.qos_target_s(),
+        ACCURACY,
+        40,
+        seed,
+    )
+}
+
+#[test]
+fn parity_fixed_baselines() {
+    for (name, mk) in [
+        ("cpu", reference::OldPolicy::EdgeCpuFp32),
+        ("best", reference::OldPolicy::EdgeBest),
+        ("cloud", reference::OldPolicy::CloudAlways),
+        ("connected", reference::OldPolicy::ConnectedEdgeAlways),
+    ] {
+        let want = reference::episode(mk, EnvKind::D3RandomWlan, 7);
+        let got = new_path(name, EnvKind::D3RandomWlan, 7);
+        assert_eq!(got, want, "serve parity broken for '{name}'");
+    }
+}
+
+#[test]
+fn parity_opt_oracle() {
+    let want = reference::episode(reference::OldPolicy::Opt, EnvKind::S2CpuHog, 11);
+    let got = new_path("opt", EnvKind::S2CpuHog, 11);
+    assert_eq!(got, want, "serve parity broken for 'opt'");
+}
+
+#[test]
+fn parity_autoscale_learning_online() {
+    // Fresh unfrozen agent, exactly as `serve --policy autoscale` built it:
+    // full catalogue, default params, CLI seed.
+    let seed = 13;
+    let agent = AutoScaleAgent::new(
+        action_catalogue(&autoscale::device::presets::device(DEV)),
+        AgentParams::default(),
+        seed,
+    );
+    let want =
+        reference::episode(reference::OldPolicy::AutoScale(agent), EnvKind::D3RandomWlan, seed);
+    let got = new_path("autoscale", EnvKind::D3RandomWlan, seed);
+    assert_eq!(got, want, "serve parity broken for 'autoscale'");
+}
+
+#[test]
+fn parity_regression_predictors() {
+    let seed = 17;
+    let (samples, actions) = reference_dataset(seed);
+    for (name, svr) in [("lr", false), ("svr", true)] {
+        let rp = fit_regression(&samples, &actions, svr, seed);
+        let want = reference::episode(
+            reference::OldPolicy::Regression(rp),
+            EnvKind::D3RandomWlan,
+            seed,
+        );
+        let got = new_path(name, EnvKind::D3RandomWlan, seed);
+        assert_eq!(got, want, "serve parity broken for '{name}'");
+    }
+}
+
+#[test]
+fn parity_classifier_predictors() {
+    let seed = 19;
+    let (samples, actions) = reference_dataset(seed);
+    for (name, knn) in [("svm", false), ("knn", true)] {
+        let cp = fit_classifier(&samples, &actions, knn, seed);
+        let want = reference::episode(
+            reference::OldPolicy::Classifier(cp),
+            EnvKind::D3RandomWlan,
+            seed,
+        );
+        let got = new_path(name, EnvKind::D3RandomWlan, seed);
+        assert_eq!(got, want, "serve parity broken for '{name}'");
+    }
+}
+
+#[test]
+fn fleet_fingerprints_stable_across_shards_for_every_policy() {
+    // Fleet-side pin: for each pre-existing policy (plus the two new
+    // ones), the fleet aggregate is a pure function of (config, seed) —
+    // invariant under shard layout and re-runs.
+    use autoscale::fleet::{run_fleet, FleetConfig};
+    for name in ["cpu", "best", "cloud", "connected", "opt", "autoscale", "hysteresis", "bandit"]
+    {
+        let mut cfg = FleetConfig {
+            devices: 6,
+            requests_per_device: 5,
+            rate_hz: 2.0,
+            seed: 23,
+            policy: name.to_string(),
+            env: EnvKind::D3RandomWlan,
+            ..Default::default()
+        };
+        cfg.shards = 1;
+        let a = run_fleet(&cfg).unwrap();
+        cfg.shards = 3;
+        let b = run_fleet(&cfg).unwrap();
+        let c = run_fleet(&cfg).unwrap();
+        assert_eq!(
+            a.metrics.fingerprint(),
+            b.metrics.fingerprint(),
+            "'{name}' fleet must be shard-invariant"
+        );
+        assert_eq!(
+            b.metrics.fingerprint(),
+            c.metrics.fingerprint(),
+            "'{name}' fleet must be rerun-stable"
+        );
+    }
+}

@@ -7,7 +7,7 @@ use autoscale::agent::reward::{reward, RewardParams};
 use autoscale::agent::state::{State, StateObs};
 use autoscale::configsys::runconfig::EnvKind;
 use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::policy::action_catalogue;
+use autoscale::policy::action_catalogue;
 use autoscale::exec::latency::RunContext;
 use autoscale::interference::Interference;
 use autoscale::net::{LinkKind, LinkParams, RssiProcess, WEAK_RSSI_DBM};
@@ -313,18 +313,19 @@ fn prop_catalogue_respects_device_capabilities() {
 #[test]
 fn prop_episode_metrics_consistent() {
     Runner::new("metrics_consistent", 40).run(|g| {
-        use autoscale::coordinator::policy::Policy;
         use autoscale::experiments::common::run_episode;
+        use autoscale::policy::PolicySpec;
         let n = g.usize_in(10, 60);
+        let seed = g.usize_in(0, 100) as u64;
         let m = run_episode(
             DeviceId::Mi8Pro,
             EnvKind::S1NoVariance,
             autoscale::configsys::runconfig::Scenario::NonStreaming,
-            Policy::EdgeBest,
+            autoscale::policy::build("best", &PolicySpec::new(DeviceId::Mi8Pro, seed)).unwrap(),
             vec![],
             n,
             0.5,
-            g.usize_in(0, 100) as u64,
+            seed,
         );
         ptassert!(m.n() == n, "served {} of {n}", m.n());
         ptassert!((0.0..=1.0).contains(&m.qos_violation_ratio()), "ratio");

@@ -62,8 +62,8 @@ fn serving_with_real_engine_grounds_compute() {
     let Some(mut e) = engine() else { return };
     use autoscale::configsys::runconfig::{EnvKind, RunConfig};
     use autoscale::coordinator::envs::Environment;
-    use autoscale::coordinator::policy::Policy;
     use autoscale::coordinator::serve::{ServeConfig, Server};
+    use autoscale::policy::PolicySpec;
     use autoscale::types::DeviceId;
 
     let mut cfg = RunConfig::default();
@@ -71,7 +71,7 @@ fn serving_with_real_engine_grounds_compute() {
     let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 3);
     let mut server = Server::new(
         env,
-        Policy::EdgeBest,
+        autoscale::policy::build("best", &PolicySpec::new(DeviceId::Mi8Pro, 3)).unwrap(),
         ServeConfig { run: cfg, models: vec!["mobilenet_v1"] },
     )
     .with_engine(&mut e);
