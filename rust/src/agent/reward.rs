@@ -25,6 +25,12 @@ pub struct RewardParams {
     pub accuracy_req: f64,
 }
 
+/// Reward assigned to a failed remote attempt (the link was in a dead
+/// zone and the request timed out): far below any achievable
+/// energy-dominated score, so learners visibly retreat to local execution
+/// after a handful of failures instead of slowly averaging the loss away.
+pub const REMOTE_FAILURE_PENALTY: f64 = 10.0;
+
 /// Eq. (5), with one documented refinement: on a QoS miss the energy term
 /// is inflated by the relative overshoot, `-E·(1 + overshoot/α)`. The
 /// paper's formula merely *withholds* the latency bonus on a miss; with a
@@ -35,6 +41,12 @@ pub struct RewardParams {
 /// measurement's own energy makes it unit-free and reproduces that
 /// behaviour while keeping α as the knob (see DESIGN.md §5).
 pub fn reward(m: &Measurement, p: &RewardParams) -> f64 {
+    if m.remote_failed {
+        // Disconnection: energy was burned, latency was spent, and nothing
+        // came back. Heavily penalized so the failure dominates the usual
+        // joule-scale reward differences.
+        return -REMOTE_FAILURE_PENALTY - m.energy_est_j;
+    }
     if m.accuracy < p.accuracy_req {
         return -m.accuracy;
     }
@@ -58,6 +70,7 @@ mod tests {
             energy_est_j: energy,
             energy_true_j: energy,
             accuracy: acc,
+            remote_failed: false,
         }
     }
 
@@ -106,5 +119,18 @@ mod tests {
         let a = reward(&m(0.08, 0.1, 0.7), &P);
         let b = reward(&m(0.08, 0.4, 0.7), &P);
         assert!(a > b);
+    }
+
+    #[test]
+    fn remote_failure_dominates_every_other_outcome() {
+        let mut failed = m(1.0, 0.5, 0.0);
+        failed.remote_failed = true;
+        let r_fail = reward(&failed, &P);
+        assert!(r_fail <= -REMOTE_FAILURE_PENALTY);
+        // Worse than an accuracy miss, a mild QoS miss and an expensive
+        // success.
+        assert!(r_fail < reward(&m(0.001, 1e-6, 0.5), &P));
+        assert!(r_fail < reward(&m(0.06, 0.3, 0.7), &P));
+        assert!(r_fail < reward(&m(0.04, 5.0, 0.7), &P));
     }
 }

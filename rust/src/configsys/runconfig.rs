@@ -123,6 +123,11 @@ impl Default for AgentParams {
 pub struct RunConfig {
     pub device: DeviceId,
     pub env: EnvKind,
+    /// Scenario-registry key overriding `env` when set (any
+    /// `crate::scenario` key, including `trace:<path>` playback). `env`
+    /// remains for the legacy Table-4 enum; [`RunConfig::scenario_key`]
+    /// resolves the effective key.
+    pub scenario_env: Option<String>,
     pub scenario: Scenario,
     pub agent: AgentParams,
     /// Inference accuracy requirement (paper evaluates 0.5 and 0.65).
@@ -141,6 +146,7 @@ impl Default for RunConfig {
         RunConfig {
             device: DeviceId::Mi8Pro,
             env: EnvKind::S1NoVariance,
+            scenario_env: None,
             scenario: Scenario::NonStreaming,
             agent: AgentParams::default(),
             accuracy_target: 0.5,
@@ -173,6 +179,9 @@ impl RunConfig {
             if let Some(v) = root.get("env").and_then(|v| v.as_str()) {
                 cfg.env = EnvKind::from_name(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown env '{v}'"))?;
+            }
+            if let Some(v) = root.get("scenario_env").and_then(|v| v.as_str()) {
+                cfg.scenario_env = Some(v.to_string());
             }
             if let Some(v) = root.get("scenario").and_then(|v| v.as_str()) {
                 cfg.scenario = match v {
@@ -218,8 +227,21 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// The effective scenario-registry key: `scenario_env` when set, else
+    /// the legacy `env` name (every `EnvKind` is a scenario key).
+    pub fn scenario_key(&self) -> String {
+        self.scenario_env.clone().unwrap_or_else(|| self.env.name().to_string())
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         let p = &self.agent;
+        if let Some(key) = &self.scenario_env {
+            anyhow::ensure!(
+                crate::scenario::is_valid_key(key),
+                "unknown scenario_env '{key}' (known: {} | trace:<path>)",
+                crate::scenario::names().join("|")
+            );
+        }
         anyhow::ensure!((0.0..=1.0).contains(&p.learning_rate), "learning_rate out of [0,1]");
         anyhow::ensure!((0.0..=1.0).contains(&p.discount), "discount out of [0,1]");
         anyhow::ensure!((0.0..=1.0).contains(&p.epsilon), "epsilon out of [0,1]");
@@ -298,5 +320,20 @@ learning_rate = 0.5
         assert!(RunConfig::from_doc(&doc).is_err());
         let doc = parse_toml("requests = 0\n").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = parse_toml("scenario_env = \"warp-zone\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn scenario_env_resolves_the_effective_key() {
+        let mut cfg = RunConfig::default();
+        cfg.env = EnvKind::D2WebBrowser;
+        assert_eq!(cfg.scenario_key(), "D2");
+        cfg.scenario_env = Some("deadzone".to_string());
+        assert_eq!(cfg.scenario_key(), "deadzone");
+        assert!(cfg.validate().is_ok());
+        let doc = parse_toml("scenario_env = \"commute\"\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.scenario_key(), "commute");
     }
 }

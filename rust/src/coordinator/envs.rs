@@ -1,5 +1,11 @@
-//! Table-4 execution environments: device + wireless links + co-runner,
-//! assembled into a ready [`crate::exec::Simulator`].
+//! Execution environments assembled into a ready
+//! [`crate::exec::Simulator`]: device + wireless links + co-runner.
+//!
+//! Environment *contents* come from the scenario engine
+//! ([`crate::scenario`]): the Table-4 presets (`EnvKind`) are scenario
+//! keys like any other, so `Environment::build` (legacy enum entry point)
+//! and [`Environment::build_keyed`] (string-keyed entry point, including
+//! `trace:<path>` playback) construct through the same path.
 
 use crate::agent::state::StateObs;
 use crate::configsys::runconfig::EnvKind;
@@ -8,49 +14,46 @@ use crate::exec::latency::Simulator;
 use crate::interference::{CoRunner, Interference};
 use crate::net::{Link, LinkKind, RssiProcess};
 use crate::nn::zoo::NnDesc;
+use crate::scenario::ScenarioEnv;
 use crate::types::DeviceId;
 use crate::util::rng::Pcg64;
 
 /// A fully assembled execution environment.
 pub struct Environment {
-    pub kind: EnvKind,
+    /// Scenario key this environment was built from (legacy `EnvKind`
+    /// names are scenario keys too).
+    pub scenario: String,
     pub sim: Simulator,
     pub co_runner: CoRunner,
 }
 
 impl Environment {
-    /// Build environment `kind` anchored on `dev` (paper: experiments rerun
-    /// per phone).
+    /// Build the Table-4 environment `kind` anchored on `dev` (paper:
+    /// experiments rerun per phone). Delegates to the scenario registry —
+    /// every `EnvKind` is a registered scenario key.
     pub fn build(dev: DeviceId, kind: EnvKind, seed: u64) -> Environment {
-        let strong_wlan = RssiProcess::pinned(-55.0);
-        let strong_p2p = RssiProcess::pinned(-50.0);
-        let weak_wlan = RssiProcess::pinned(-86.0);
-        let weak_p2p = RssiProcess::pinned(-85.0);
+        let sc = crate::scenario::build(kind.name())
+            .expect("every EnvKind is a registered scenario key");
+        Environment::from_scenario(dev, sc, seed)
+    }
 
-        let (wlan_rssi, p2p_rssi, co): (RssiProcess, RssiProcess, CoRunner) = match kind {
-            EnvKind::S1NoVariance => (strong_wlan, strong_p2p, CoRunner::None),
-            EnvKind::S2CpuHog => (strong_wlan, strong_p2p, CoRunner::cpu_hog()),
-            EnvKind::S3MemHog => (strong_wlan, strong_p2p, CoRunner::mem_hog()),
-            EnvKind::S4WeakWlan => (weak_wlan, strong_p2p, CoRunner::None),
-            EnvKind::S5WeakP2p => (strong_wlan, weak_p2p, CoRunner::None),
-            EnvKind::D1MusicPlayer => (strong_wlan, strong_p2p, CoRunner::music_player()),
-            EnvKind::D2WebBrowser => (strong_wlan, strong_p2p, CoRunner::web_browser()),
-            EnvKind::D3RandomWlan => (
-                RssiProcess::gaussian(-72.0, 9.0),
-                strong_p2p,
-                CoRunner::None,
-            ),
-        };
+    /// Build any registered scenario (or a `trace:<path>` playback) by
+    /// key. Errors enumerate the registry.
+    pub fn build_keyed(dev: DeviceId, key: &str, seed: u64) -> anyhow::Result<Environment> {
+        Ok(Environment::from_scenario(dev, crate::scenario::build(key)?, seed))
+    }
 
+    /// Assemble an environment from already-built scenario parts.
+    pub fn from_scenario(dev: DeviceId, sc: ScenarioEnv, seed: u64) -> Environment {
         let mut sim = Simulator::new(
             device(dev),
             device(DeviceId::TabS6),
             device(DeviceId::CloudServer),
-            Link::new(LinkKind::Wlan, wlan_rssi),
-            Link::new(LinkKind::P2p, p2p_rssi),
+            Link::new(LinkKind::Wlan, RssiProcess::from_model(sc.wlan)),
+            Link::new(LinkKind::P2p, RssiProcess::from_model(sc.p2p)),
         );
         sim.seed(seed);
-        Environment { kind, sim, co_runner: co }
+        Environment { scenario: sc.key, sim, co_runner: sc.co_runner }
     }
 
     /// Sample the observable state at virtual time `t_s`: the *sensor
@@ -66,8 +69,8 @@ impl Environment {
         rng: &mut Pcg64,
     ) -> (StateObs, Interference) {
         let true_inter = self.co_runner.at(t_s, rng);
-        let rssi_w = self.sim.wlan.rssi.step(rng) + rng.normal(0.0, 1.2);
-        let rssi_p = self.sim.p2p.rssi.step(rng) + rng.normal(0.0, 1.2);
+        let rssi_w = self.sim.wlan.rssi.step(t_s, rng) + rng.normal(0.0, 1.2);
+        let rssi_p = self.sim.p2p.rssi.step(t_s, rng) + rng.normal(0.0, 1.2);
         let noisy = Interference {
             // multiplicative jitter: idle counters read ~0, busy ones ±4%
             cpu_util: (true_inter.cpu_util * (1.0 + rng.normal(0.0, 0.04)))
@@ -87,6 +90,7 @@ mod tests {
     #[test]
     fn s1_has_no_variance_sources() {
         let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+        assert_eq!(env.scenario, "S1");
         let mut rng = Pcg64::new(0);
         let i = env.co_runner.at(1.0, &mut rng);
         assert_eq!(i.cpu_util, 0.0);
@@ -112,13 +116,40 @@ mod tests {
     fn d3_wanders() {
         let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::D3RandomWlan, 1);
         let mut rng = Pcg64::new(1);
-        let a = env.sim.wlan.rssi.step(&mut rng);
+        let a = env.sim.wlan.rssi.step(0.0, &mut rng);
         let mut moved = false;
-        for _ in 0..20 {
-            if (env.sim.wlan.rssi.step(&mut rng) - a).abs() > 0.5 {
+        for i in 1..21 {
+            if (env.sim.wlan.rssi.step(i as f64, &mut rng) - a).abs() > 0.5 {
                 moved = true;
             }
         }
         assert!(moved);
+    }
+
+    #[test]
+    fn keyed_build_matches_legacy_enum_build() {
+        // The registry path and the legacy enum path are the same path.
+        let a = Environment::build(DeviceId::Mi8Pro, EnvKind::S2CpuHog, 3);
+        let b = Environment::build_keyed(DeviceId::Mi8Pro, "S2", 3).unwrap();
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.sim.wlan.rssi.current(), b.sim.wlan.rssi.current());
+        let mut rng = Pcg64::new(0);
+        assert_eq!(a.co_runner.at(0.5, &mut rng).cpu_util, 100.0);
+        assert!(Environment::build_keyed(DeviceId::Mi8Pro, "nope", 3).is_err());
+    }
+
+    #[test]
+    fn deadzone_scenario_disconnects_the_wlan_eventually() {
+        let mut env = Environment::build_keyed(DeviceId::Mi8Pro, "deadzone", 5).unwrap();
+        let mut rng = Pcg64::new(5);
+        let mut saw_dead = false;
+        for i in 0..400 {
+            env.sim.wlan.rssi.step(i as f64, &mut rng);
+            if !env.sim.wlan.rssi.is_connected() {
+                saw_dead = true;
+                break;
+            }
+        }
+        assert!(saw_dead, "the tunnel regime must eventually disconnect the link");
     }
 }

@@ -28,9 +28,14 @@ impl EpisodeMetrics {
         self.outcomes.iter().map(|o| o.measurement.energy_true_j).sum()
     }
 
-    /// Performance-per-watt: inferences per joule.
+    /// Performance-per-watt: inferences per joule. Timed-out remote
+    /// attempts produced no inference, so they add energy to the
+    /// denominator without counting in the numerator — failing policies
+    /// cannot inflate their own efficiency.
     pub fn ppw(&self) -> f64 {
-        crate::power::ppw(self.total_energy_j(), self.n())
+        let completed =
+            self.outcomes.iter().filter(|o| !o.remote_failed()).count();
+        crate::power::ppw(self.total_energy_j(), completed)
     }
 
     /// Fraction of requests that missed their QoS latency target.
@@ -48,6 +53,16 @@ impl EpisodeMetrics {
             return 0.0;
         }
         self.outcomes.iter().filter(|o| o.accuracy_violated()).count() as f64
+            / self.outcomes.len() as f64
+    }
+
+    /// Fraction of requests whose remote attempt timed out over a
+    /// disconnected link (dead-zone scenarios).
+    pub fn remote_failure_ratio(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|o| o.remote_failed()).count() as f64
             / self.outcomes.len() as f64
     }
 
@@ -79,6 +94,7 @@ impl EpisodeMetrics {
             h = fnv1a_fold(h, o.measurement.latency_s.to_bits());
             h = fnv1a_fold(h, o.measurement.energy_true_j.to_bits());
             h = fnv1a_fold(h, o.measurement.accuracy.to_bits());
+            h = fnv1a_fold(h, o.measurement.remote_failed as u64);
             h = fnv1a_fold(h, o.t_s.to_bits());
         }
         h
@@ -198,6 +214,7 @@ mod tests {
                 energy_est_j: energy * 1.05,
                 energy_true_j: energy,
                 accuracy: 0.7,
+                remote_failed: false,
             },
             qos_target_s: 0.05,
             accuracy_target: 0.5,

@@ -9,6 +9,16 @@ use crate::power::{self, NetTransaction, Residency};
 use crate::types::{Action, Measurement, Precision, ProcKind, Site};
 use crate::util::rng::Pcg64;
 
+/// How long the device waits on an unanswered remote request before giving
+/// up (association + retransmission backoff budget). During the window the
+/// radio duty-cycles retries at TX power, then the request fails — the
+/// latency and the wasted energy are both charged to the device.
+pub const DISCONNECT_TIMEOUT_S: f64 = 1.0;
+
+/// Fraction of the timeout window the radio spends actively
+/// re-transmitting (the rest idles between backoffs).
+pub const DISCONNECT_RETRY_DUTY: f64 = 0.3;
+
 /// The three Table-1 layer classes the paper found most correlated with
 /// energy/latency (§4.1 ρ² test).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -242,28 +252,39 @@ impl Simulator {
         let compute_s =
             self.compute_latency_s(nn, &proc, action.vf_step, precision, &ctx_eff, action.site);
 
-        let (latency_s, energy_est, power_for_thermal) = match action.site {
+        let (latency_s, energy_est, power_for_thermal, remote_failed) = match action.site {
             Site::Local => {
                 let energy = self.local_energy_j(&proc, action.vf_step, compute_s);
-                (compute_s, energy, energy / compute_s.max(1e-9))
+                (compute_s, energy, energy / compute_s.max(1e-9), false)
             }
             Site::ConnectedEdge | Site::Cloud => {
                 let link = if action.site == Site::Cloud { &self.wlan } else { &self.p2p };
-                let rt = link.round_trip(nn.input_kb, nn.output_kb);
-                let queue_s = ctx.remote_queue_s.max(0.0);
-                let latency = rt.tx_s + queue_s + compute_s + rt.rx_s;
-                // Device-side energy: Eq. (4). The idle power is the local
-                // CPU's (device waits on the result).
-                let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
-                let energy = power::network_energy_j(&NetTransaction {
-                    tx_s: rt.tx_s,
-                    tx_power_w: rt.tx_power_w,
-                    rx_s: rt.rx_s,
-                    rx_power_w: rt.rx_power_w,
-                    idle_power_w: idle,
-                    total_latency_s: latency,
-                }) + rt.tail_energy_j;
-                (latency, energy, rt.tx_power_w * 0.3)
+                if !link.rssi.is_connected() {
+                    // Dead zone: the request is transmitted into silence
+                    // and times out. The radio duty-cycles retries at TX
+                    // power for the window, the CPU idles waiting, no
+                    // result ever arrives — the wasted energy and the full
+                    // timeout latency are charged to the device, and the
+                    // failure is surfaced through `remote_failed`.
+                    let (latency, energy, heat) = self.disconnect_outcome(link);
+                    (latency, energy, heat, true)
+                } else {
+                    let rt = link.round_trip(nn.input_kb, nn.output_kb);
+                    let queue_s = ctx.remote_queue_s.max(0.0);
+                    let latency = rt.tx_s + queue_s + compute_s + rt.rx_s;
+                    // Device-side energy: Eq. (4). The idle power is the
+                    // local CPU's (device waits on the result).
+                    let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
+                    let energy = power::network_energy_j(&NetTransaction {
+                        tx_s: rt.tx_s,
+                        tx_power_w: rt.tx_power_w,
+                        rx_s: rt.rx_s,
+                        rx_power_w: rt.rx_power_w,
+                        idle_power_w: idle,
+                        total_latency_s: latency,
+                    }) + rt.tail_energy_j;
+                    (latency, energy, rt.tx_power_w * 0.3, false)
+                }
             }
         };
 
@@ -271,8 +292,11 @@ impl Simulator {
         let noise = 1.0 + self.rng.normal(0.0, self.truth_noise).clamp(-0.25, 0.25);
         let energy_true = energy_est * noise;
 
-        // Thermal integration for local runs (a remote run lets it cool).
-        if action.site == Site::Local && self.local.is_mobile {
+        // Thermal integration. Local runs heat by their own dissipated
+        // power; remote runs heat by the radio's duty-cycled TX power
+        // (regression fix: this used to be a hard-coded 0.2 W, so radio TX
+        // heat never reached the thermal model).
+        if self.local.is_mobile {
             self.thermal.advance(power_for_thermal, latency_s);
         } else {
             self.thermal.advance(0.2, latency_s);
@@ -282,8 +306,22 @@ impl Simulator {
             latency_s,
             energy_est_j: energy_est,
             energy_true_j: energy_true,
-            accuracy: nn.accuracy(precision),
+            accuracy: if remote_failed { 0.0 } else { nn.accuracy(precision) },
+            remote_failed,
         }
+    }
+
+    /// (latency, device energy, thermal power) of a timed-out attempt over
+    /// a dead `link` — shared by [`Simulator::run`] and the split-execution
+    /// path so the disconnection contract cannot diverge between them.
+    pub(crate) fn disconnect_outcome(&self, link: &Link) -> (f64, f64, f64) {
+        let tx_power = link.params.tx_power(link.rssi.current());
+        let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
+        let tx_s = DISCONNECT_TIMEOUT_S * DISCONNECT_RETRY_DUTY;
+        let energy = tx_power * tx_s
+            + idle * (DISCONNECT_TIMEOUT_S - tx_s)
+            + link.params.tail_s * link.params.tail_power_w;
+        (DISCONNECT_TIMEOUT_S, energy, tx_power * DISCONNECT_RETRY_DUTY)
     }
 
     /// Eq.(1)/(2)/(3) energy for a local run.
@@ -506,6 +544,51 @@ mod tests {
         let la = a.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &quiet);
         let lb = b.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &queued);
         assert!((la.latency_s - lb.latency_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remote_runs_heat_by_radio_tx_power() {
+        // Regression: the computed TX-derived thermal power used to be
+        // discarded in favour of a hard-coded 0.2 W for every non-local
+        // execution. Under weak signal the radio runs hot — that heat must
+        // reach the thermal model.
+        let mut s = sim(DeviceId::Mi8Pro);
+        s.wlan = Link::new(LinkKind::Wlan, RssiProcess::pinned(-88.0));
+        let nn = by_name("resnet50").unwrap();
+        let m = s.run(nn, Action::cloud(), &RunContext::default());
+        let tx_power = s.wlan.params.tx_power(-88.0);
+        assert!(tx_power * 0.3 > 0.2, "weak-signal TX heat exceeds the old constant");
+        let mut expect = crate::device::thermal::ThermalState::default();
+        expect.advance(tx_power * 0.3, m.latency_s);
+        assert_eq!(
+            s.thermal.temperature_k().to_bits(),
+            expect.temperature_k().to_bits(),
+            "remote thermal advance must use the radio TX power"
+        );
+    }
+
+    #[test]
+    fn disconnected_link_fails_remote_and_charges_wasted_energy() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let dead = crate::net::SignalModel::Markov(crate::net::MarkovChannel::cycle(vec![
+            crate::net::Regime::dead_zone("tunnel", 10.0),
+        ]));
+        s.wlan = Link::new(LinkKind::Wlan, RssiProcess::from_model(dead));
+        let nn = by_name("mobilenet_v1").unwrap();
+        let m = s.run(nn, Action::cloud(), &RunContext::default());
+        assert!(m.remote_failed, "dead WLAN must fail the cloud action");
+        assert_eq!(m.latency_s, DISCONNECT_TIMEOUT_S, "latency is the timeout");
+        assert_eq!(m.accuracy, 0.0, "no result was produced");
+        assert!(m.energy_est_j > 0.0, "the wasted TX energy is still charged");
+
+        // The P2P link is alive: connected-edge actions still succeed.
+        let m2 = s.run(nn, Action::connected_edge(), &RunContext::default());
+        assert!(!m2.remote_failed);
+        assert!(m2.accuracy > 0.0);
+
+        // Local execution is unaffected by connectivity.
+        let m3 = s.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &RunContext::default());
+        assert!(!m3.remote_failed);
     }
 
     #[test]

@@ -23,6 +23,11 @@ impl ExecOutcome {
         self.measurement.latency_s > self.qos_target_s
     }
 
+    /// The remote attempt timed out over a disconnected link.
+    pub fn remote_failed(&self) -> bool {
+        self.measurement.remote_failed
+    }
+
     pub fn accuracy_violated(&self) -> bool {
         self.measurement.accuracy < self.accuracy_target
     }
@@ -42,6 +47,7 @@ mod tests {
                 energy_est_j: 0.1,
                 energy_true_j: 0.1,
                 accuracy: acc,
+                remote_failed: false,
             },
             qos_target_s: 0.05,
             accuracy_target: 0.65,

@@ -49,6 +49,19 @@ impl Simulator {
         ctx: &RunContext,
     ) -> Measurement {
         let frac = frac.clamp(0.0, 1.0);
+        // Any split below 1.0 has a WLAN leg: the same disconnection
+        // semantics as Simulator::run apply — a dead link times the
+        // request out and charges the wasted TX energy.
+        if frac < 1.0 && !self.wlan.rssi.is_connected() {
+            let (latency_s, energy, _) = self.disconnect_outcome(&self.wlan);
+            return Measurement {
+                latency_s,
+                energy_est_j: energy,
+                energy_true_j: energy,
+                accuracy: 0.0,
+                remote_failed: true,
+            };
+        }
         let proc = self
             .local
             .proc(proc_kind)
@@ -140,6 +153,7 @@ impl Simulator {
             energy_est_j: energy_est,
             energy_true_j: energy_est,
             accuracy: nn.accuracy(if frac > 0.0 { precision } else { Precision::Fp32 }),
+            remote_failed: false,
         }
     }
 }
@@ -204,6 +218,26 @@ mod tests {
         );
         // late split ships less data than raw input offload
         assert!(activation_kb(nn, 0.75) < nn.input_kb);
+    }
+
+    #[test]
+    fn dead_wlan_fails_any_remote_share_but_not_pure_local() {
+        let mut s = sim(EnvKind::S1NoVariance);
+        let dead = crate::net::SignalModel::Markov(crate::net::MarkovChannel::cycle(vec![
+            crate::net::Regime::dead_zone("tunnel", 10.0),
+        ]));
+        s.wlan = crate::net::Link::new(
+            crate::net::LinkKind::Wlan,
+            crate::net::RssiProcess::from_model(dead),
+        );
+        let nn = by_name("resnet50").unwrap();
+        let ctx = RunContext::default();
+        let m = s.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, &ctx);
+        assert!(m.remote_failed, "a split with a WLAN leg fails over a dead link");
+        assert_eq!(m.accuracy, 0.0);
+        assert!(m.energy_est_j > 0.0, "wasted TX energy is charged");
+        let local = s.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, &ctx);
+        assert!(!local.remote_failed, "pure on-device split has no network leg");
     }
 
     #[test]

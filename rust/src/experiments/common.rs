@@ -13,7 +13,9 @@ use crate::nn::zoo::ZOO;
 use crate::policy::{AutoScalePolicy, PolicySpec, ScalingPolicy};
 use crate::types::DeviceId;
 
-/// Serve one episode with a fresh environment.
+/// Serve one episode with a fresh environment. Every `EnvKind` is a
+/// registered scenario key, so this is a thin shim over
+/// [`run_episode_keyed`].
 pub fn run_episode<P: ScalingPolicy>(
     dev: DeviceId,
     env: EnvKind,
@@ -24,16 +26,41 @@ pub fn run_episode<P: ScalingPolicy>(
     accuracy_target: f64,
     seed: u64,
 ) -> EpisodeMetrics {
-    let environment = Environment::build(dev, env, seed);
+    run_episode_keyed(
+        dev,
+        env.name(),
+        scenario,
+        policy,
+        models,
+        requests,
+        accuracy_target,
+        seed,
+    )
+    .expect("every EnvKind is a registered scenario key")
+}
+
+/// Serve one episode in a scenario-registry environment (the string-keyed
+/// analogue of [`run_episode`], for `--scenario-env`-driven experiments).
+pub fn run_episode_keyed<P: ScalingPolicy>(
+    dev: DeviceId,
+    scenario_key: &str,
+    scenario: Scenario,
+    policy: P,
+    models: Vec<&'static str>,
+    requests: usize,
+    accuracy_target: f64,
+    seed: u64,
+) -> anyhow::Result<EpisodeMetrics> {
+    let environment = Environment::build_keyed(dev, scenario_key, seed)?;
     let mut run = RunConfig::default();
     run.device = dev;
-    run.env = env;
+    run.scenario_env = Some(scenario_key.to_string());
     run.scenario = scenario;
     run.accuracy_target = accuracy_target;
     run.requests = requests;
     run.seed = seed;
     let mut server = Server::new(environment, policy, ServeConfig { run, models });
-    server.serve(requests)
+    Ok(server.serve(requests))
 }
 
 /// Registry-built policy for experiment drivers: the same construction

@@ -17,6 +17,7 @@ pub mod fig5_interference;
 pub mod fig6_signal;
 pub mod fig7_predictors;
 pub mod fig9_main;
+pub mod scenarios;
 pub mod tables;
 
 use crate::util::report::Table;
@@ -46,6 +47,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "tab2", about: "Device specifications (Table 2)", run: tables::run_tab2 },
         Experiment { id: "tab3", about: "NN workloads (Table 3)", run: tables::run_tab3 },
         Experiment { id: "tab4", about: "Execution environments (Table 4)", run: tables::run_tab4 },
+        Experiment { id: "scen", about: "Scenario sweep: every registry key (Markov/trace/dead zones)", run: scenarios::run },
         Experiment { id: "ablation_hparams", about: "Hyperparameter sensitivity (§5.3)", run: ablations::run_hparams },
         Experiment { id: "ablation_bins", about: "DBSCAN bins vs coarse binning", run: ablations::run_bins },
         Experiment { id: "ablation_split", about: "Static split-computing vs AutoScale (§7)", run: ablations::run_split },

@@ -1,0 +1,103 @@
+//! Scenario sweep (beyond the paper): every registered scenario key served
+//! by a learning AutoScale agent and the fixed baselines — PPW, QoS
+//! misses and remote-failure rate per scenario. Shows the scenario
+//! engine's point in one table: the learner holds its efficiency across
+//! Markov regime chains, phased co-runners, trace playback and dead zones,
+//! while fixed remote policies pay for every disconnection.
+
+use crate::configsys::runconfig::Scenario;
+use crate::types::DeviceId;
+use crate::util::report::{f, pct, Table};
+
+use super::common::{episode_len, named_policy, run_episode_keyed};
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    sweep(&keys_owned(), seed, quick).expect("registry keys build")
+}
+
+/// The sweep restricted to one key — `figure scen --scenario-env <key>`
+/// (accepts `trace:<path>` playback too).
+pub fn run_single(key: &str, seed: u64, quick: bool) -> anyhow::Result<Vec<Table>> {
+    sweep(&[key.to_string()], seed, quick)
+}
+
+fn keys_owned() -> Vec<String> {
+    crate::scenario::names().iter().map(|k| k.to_string()).collect()
+}
+
+fn sweep(keys: &[String], seed: u64, quick: bool) -> anyhow::Result<Vec<Table>> {
+    let n = episode_len(quick) / 2;
+    let dev = DeviceId::Mi8Pro;
+    let mut table = Table::new(
+        "Scenario sweep (Mi8Pro): per-scenario PPW, QoS misses, remote failures",
+        &["scenario", "policy", "ppw", "qos_violation", "net_failures"],
+    );
+    for key in keys {
+        for policy in ["best", "cloud", "autoscale"] {
+            let m = run_episode_keyed(
+                dev,
+                key,
+                Scenario::NonStreaming,
+                named_policy(policy, dev, seed),
+                vec![],
+                n,
+                0.5,
+                seed,
+            )?;
+            table.row(vec![
+                key.to_string(),
+                policy.to_string(),
+                f(m.ppw(), 3),
+                pct(m.qos_violation_ratio()),
+                pct(m.remote_failure_ratio()),
+            ]);
+        }
+    }
+    Ok(vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_every_registered_scenario() {
+        let t = run(11, true);
+        let rows = &t[0].rows;
+        for key in crate::scenario::names() {
+            assert!(rows.iter().any(|r| r[0] == key), "missing scenario '{key}'");
+        }
+        // The local-only baseline never touches a link, so it can never
+        // fail — in any scenario.
+        for key in crate::scenario::names() {
+            let failures = rows
+                .iter()
+                .find(|r| r[0] == key && r[1] == "best")
+                .map(|r| r[4].clone())
+                .unwrap();
+            assert_eq!(failures, "0.0%", "local-only never fails ({key})");
+        }
+    }
+
+    #[test]
+    fn always_cloud_fails_visibly_in_the_dead_zone() {
+        // Long enough to ride through several street/tunnel cycles, so the
+        // dead regime is hit regardless of where the dwell draws fall.
+        let m = run_episode_keyed(
+            DeviceId::Mi8Pro,
+            "deadzone",
+            Scenario::NonStreaming,
+            named_policy("cloud", DeviceId::Mi8Pro, 3),
+            vec![],
+            400,
+            0.5,
+            3,
+        )
+        .unwrap();
+        assert!(
+            m.remote_failure_ratio() > 0.005,
+            "always-cloud must hit the tunnel: {:.1}%",
+            m.remote_failure_ratio() * 100.0
+        );
+    }
+}

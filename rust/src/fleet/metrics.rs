@@ -21,6 +21,8 @@ pub struct FleetRecord {
     pub qos_target_s: f64,
     pub accuracy: f64,
     pub accuracy_target: f64,
+    /// The remote attempt timed out over a disconnected link.
+    pub remote_failed: bool,
 }
 
 /// Aggregated metrics for a fleet run (or one device's slice of it).
@@ -30,6 +32,7 @@ pub struct FleetMetrics {
     total_energy_j: f64,
     qos_violations: usize,
     accuracy_violations: usize,
+    remote_failures: usize,
     selections: SelectionStats,
 }
 
@@ -43,6 +46,9 @@ impl FleetMetrics {
         if r.accuracy < r.accuracy_target {
             self.accuracy_violations += 1;
         }
+        if r.remote_failed {
+            self.remote_failures += 1;
+        }
         self.selections.add(r.action);
     }
 
@@ -53,6 +59,7 @@ impl FleetMetrics {
         self.total_energy_j += other.total_energy_j;
         self.qos_violations += other.qos_violations;
         self.accuracy_violations += other.accuracy_violations;
+        self.remote_failures += other.remote_failures;
         self.selections.merge(&other.selections);
     }
 
@@ -64,9 +71,11 @@ impl FleetMetrics {
         self.total_energy_j
     }
 
-    /// Fleet performance-per-watt: inferences per joule.
+    /// Fleet performance-per-watt: inferences per joule. Timed-out remote
+    /// attempts produced no inference, so they burn energy without
+    /// counting in the numerator.
     pub fn ppw(&self) -> f64 {
-        crate::power::ppw(self.total_energy_j, self.n())
+        crate::power::ppw(self.total_energy_j, self.n() - self.remote_failures)
     }
 
     pub fn mean_latency_s(&self) -> f64 {
@@ -113,6 +122,16 @@ impl FleetMetrics {
         }
     }
 
+    /// Fraction of requests whose remote attempt timed out over a
+    /// disconnected link (dead-zone scenarios).
+    pub fn remote_failure_ratio(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.remote_failures as f64 / self.n() as f64
+        }
+    }
+
     pub fn selections(&self) -> &SelectionStats {
         &self.selections
     }
@@ -135,6 +154,7 @@ impl FleetMetrics {
         fold(self.n() as u64);
         fold(self.qos_violations as u64);
         fold(self.accuracy_violations as u64);
+        fold(self.remote_failures as u64);
         fold(self.total_energy_j.to_bits());
         let lat_sum: f64 = self.latencies_s.iter().sum();
         fold(lat_sum.to_bits());
@@ -176,6 +196,7 @@ mod tests {
             qos_target_s: 0.05,
             accuracy: 0.7,
             accuracy_target: 0.5,
+            remote_failed: false,
         }
     }
 

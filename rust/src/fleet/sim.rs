@@ -90,8 +90,15 @@ pub struct FleetConfig {
     /// produces identical results; it only changes wall-clock time.
     pub shards: usize,
     pub seed: u64,
-    /// Table-4 environment every device is embedded in.
+    /// Table-4 environment every device is embedded in (legacy enum; see
+    /// `scenario_env`).
     pub env: EnvKind,
+    /// Scenario-registry key overriding `env` when set: any
+    /// `crate::scenario` key, `trace:<path>` playback, or the special
+    /// `"mix"` — a seeded heterogeneous assignment drawing each device's
+    /// scenario from the full registry as a pure function of
+    /// (fleet seed, device id), so shard invariance holds.
+    pub scenario_env: Option<String>,
     pub scenario: Scenario,
     pub accuracy_target: f64,
     pub agent: AgentParams,
@@ -116,6 +123,7 @@ impl Default for FleetConfig {
             shards: 1,
             seed: 7,
             env: EnvKind::S1NoVariance,
+            scenario_env: None,
             scenario: Scenario::NonStreaming,
             accuracy_target: 0.5,
             agent: AgentParams::default(),
@@ -146,6 +154,18 @@ impl FleetConfig {
             self.policy,
             crate::policy::names().join("|")
         );
+        if let Some(key) = &self.scenario_env {
+            anyhow::ensure!(
+                key == "mix" || crate::scenario::is_valid_key(key),
+                "unknown scenario '{key}' (known: {} | trace:<path> | mix)",
+                crate::scenario::names().join("|")
+            );
+            if key != "mix" && key.starts_with("trace:") {
+                // Surface an unreadable/invalid trace file as a config
+                // error here instead of a panic mid-construction.
+                crate::scenario::build(key)?;
+            }
+        }
         anyhow::ensure!(
             self.cloud.capacity_mmacs_per_s > 0.0,
             "cloud-capacity must be > 0"
@@ -162,6 +182,22 @@ impl FleetConfig {
             anyhow::ensure!(by_name(m).is_some(), "unknown model '{m}' in fleet config");
         }
         Ok(())
+    }
+
+    /// The scenario key device `i` is embedded in: the configured key, the
+    /// legacy `env` name when none is set, or — for `"mix"` — a seeded
+    /// draw from the full scenario registry. A pure function of
+    /// (config, seed, device id), never of shard layout.
+    pub fn device_scenario_key(&self, i: usize) -> String {
+        match &self.scenario_env {
+            None => self.env.name().to_string(),
+            Some(key) if key == "mix" => {
+                let keys = crate::scenario::names();
+                let mut rng = Pcg64::with_stream(device_seed(self.seed, i), 3001);
+                keys[rng.below(keys.len())].to_string()
+            }
+            Some(key) => key.clone(),
+        }
     }
 }
 
@@ -210,12 +246,13 @@ impl DeviceSim {
     fn build(
         cfg: &FleetConfig,
         i: usize,
+        scenario: crate::scenario::ScenarioEnv,
         models: &[&'static str],
         prototypes: &mut HashMap<DeviceId, Box<dyn ScalingPolicy>>,
     ) -> DeviceSim {
         let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
         let dseed = device_seed(cfg.seed, i);
-        let env = Environment::build(dev_id, cfg.env, dseed);
+        let env = Environment::from_scenario(dev_id, scenario, dseed);
         // Per-device policy through the shared registry. Compact catalogue
         // scope: a dense learner per device at fleet scale must stay small
         // (see compact_action_catalogue); the Opt builder overrides it with
@@ -349,7 +386,9 @@ impl DeviceSim {
         };
         let m = self.env.sim.run(nn, action, &ctx);
 
-        if action.site == Site::Cloud {
+        // A request that timed out over a dead link never reached the
+        // backend, so it adds no cloud load.
+        if action.site == Site::Cloud && !m.remote_failed {
             self.tally_jobs += 1;
             self.tally_macs_m += nn.macs_m;
         }
@@ -386,6 +425,7 @@ impl DeviceSim {
             qos_target_s: qos,
             accuracy: m.accuracy,
             accuracy_target: self.accuracy_target,
+            remote_failed: m.remote_failed,
         });
     }
 }
@@ -429,10 +469,24 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     };
     // Single-threaded, device-id-order construction: prototype reuse for
     // clonable policies stays deterministic and shard-independent.
+    // Scenarios are built once per key and cloned per device — a
+    // trace:<path> fleet reads its file once, and an unreadable file is a
+    // config error here rather than a panic mid-construction.
     let mut prototypes: HashMap<DeviceId, Box<dyn ScalingPolicy>> = HashMap::new();
-    let mut devices: Vec<DeviceSim> = (0..cfg.devices)
-        .map(|i| DeviceSim::build(cfg, i, &models, &mut prototypes))
-        .collect();
+    let mut scenarios: HashMap<String, crate::scenario::ScenarioEnv> = HashMap::new();
+    let mut devices: Vec<DeviceSim> = Vec::with_capacity(cfg.devices);
+    for i in 0..cfg.devices {
+        let key = cfg.device_scenario_key(i);
+        let sc = match scenarios.get(&key) {
+            Some(sc) => sc.clone(),
+            None => {
+                let sc = crate::scenario::build(&key)?;
+                scenarios.insert(key, sc.clone());
+                sc
+            }
+        };
+        devices.push(DeviceSim::build(cfg, i, sc, &models, &mut prototypes));
+    }
     let mut cloud = CloudModel::new(cfg.cloud);
     let mut timeline = Vec::new();
 
@@ -587,6 +641,29 @@ mod tests {
     }
 
     #[test]
+    fn mix_assigns_heterogeneous_scenarios_deterministically() {
+        let mut cfg = small_cfg();
+        cfg.scenario_env = Some("mix".to_string());
+        cfg.validate().unwrap();
+        let keys: std::collections::HashSet<String> =
+            (0..40).map(|i| cfg.device_scenario_key(i)).collect();
+        assert!(keys.len() >= 4, "a 40-device mix should draw several scenarios");
+        for key in &keys {
+            assert!(crate::scenario::is_known(key), "mix drew unknown key '{key}'");
+        }
+        // pure function of (seed, device id)
+        assert_eq!(cfg.device_scenario_key(7), cfg.device_scenario_key(7));
+        let mut other_seed = cfg.clone();
+        other_seed.seed = 1234;
+        let moved = (0..40)
+            .any(|i| cfg.device_scenario_key(i) != other_seed.device_scenario_key(i));
+        assert!(moved, "the mix must depend on the fleet seed");
+        // without scenario_env the legacy env name is the key
+        let legacy = small_cfg();
+        assert_eq!(legacy.device_scenario_key(0), "S1");
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let mutations: Vec<fn(&mut FleetConfig)> = vec![
             |c| c.devices = 0,
@@ -601,6 +678,7 @@ mod tests {
             |c| c.cloud.max_batch = 0,
             |c| c.cloud.single_stream_efficiency = 0.0,
             |c| c.models = vec!["resnet_50_typo"],
+            |c| c.scenario_env = Some("not-a-scenario".to_string()),
         ];
         for mutate in mutations {
             let mut cfg = small_cfg();

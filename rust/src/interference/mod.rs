@@ -26,6 +26,17 @@ pub enum CoRunner {
     Synthetic { cpu_util: f64, mem_pressure: f64 },
     /// Trace replay: piecewise-constant utilization segments, looped.
     Trace { name: &'static str, segments: Vec<TraceSeg>, period_s: f64 },
+    /// Time-varying phase schedule: each phase runs its own co-runner for
+    /// a duration, the whole schedule loops (a user listens to music, then
+    /// browses, then idles — the scenario engine's composition primitive).
+    Phased { phases: Vec<CoPhase> },
+}
+
+/// One phase of a [`CoRunner::Phased`] schedule.
+#[derive(Clone, Debug)]
+pub struct CoPhase {
+    pub dur_s: f64,
+    pub runner: Box<CoRunner>,
 }
 
 /// One trace segment: values hold from `t_s` until the next segment.
@@ -81,6 +92,20 @@ impl CoRunner {
         }
     }
 
+    /// Compose a looping phase schedule from (duration, co-runner) pairs.
+    /// Panics on an empty schedule or non-positive durations — schedules
+    /// are static scenario data, so that is a programming error.
+    pub fn phased(phases: Vec<(f64, CoRunner)>) -> Self {
+        assert!(!phases.is_empty(), "phase schedule must not be empty");
+        assert!(phases.iter().all(|(d, _)| *d > 0.0), "phase durations must be > 0");
+        CoRunner::Phased {
+            phases: phases
+                .into_iter()
+                .map(|(dur_s, runner)| CoPhase { dur_s, runner: Box::new(runner) })
+                .collect(),
+        }
+    }
+
     /// Interference at virtual time `t_s`. `rng` adds small sampling jitter
     /// for trace replays (utilization counters are noisy in practice).
     pub fn at(&self, t_s: f64, rng: &mut Pcg64) -> Interference {
@@ -107,6 +132,20 @@ impl CoRunner {
                     cpu_util: jitter(cur.cpu_util, rng),
                     mem_pressure: jitter(cur.mem_pressure, rng),
                 }
+            }
+            CoRunner::Phased { phases } => {
+                let total: f64 = phases.iter().map(|p| p.dur_s).sum();
+                let mut t = t_s.rem_euclid(total);
+                for p in phases {
+                    if t < p.dur_s {
+                        // phase-local time, so inner traces restart with
+                        // their phase
+                        return p.runner.at(t, rng);
+                    }
+                    t -= p.dur_s;
+                }
+                // floating-point edge (t == total): wrap to the first phase
+                phases[0].runner.at(0.0, rng)
             }
         }
     }
@@ -154,6 +193,28 @@ mod tests {
         let music = avg(&CoRunner::music_player(), &mut rng);
         let web = avg(&CoRunner::web_browser(), &mut rng);
         assert!(music < web, "music {music} should be lighter than web {web}");
+    }
+
+    #[test]
+    fn phased_schedule_switches_and_loops() {
+        let mut rng = Pcg64::new(4);
+        let sched = CoRunner::phased(vec![
+            (10.0, CoRunner::cpu_hog()),
+            (5.0, CoRunner::None),
+        ]);
+        // inside phase 1: the hog
+        assert_eq!(sched.at(3.0, &mut rng).cpu_util, 100.0);
+        // inside phase 2: silence
+        assert_eq!(sched.at(12.0, &mut rng), Interference::default());
+        // loops: t = 16 is t = 1 of the next cycle
+        assert_eq!(sched.at(16.0, &mut rng).cpu_util, 100.0);
+        // nested trace runners see phase-local time
+        let nested = CoRunner::phased(vec![
+            (30.0, CoRunner::web_browser()),
+            (30.0, CoRunner::music_player()),
+        ]);
+        let burst = nested.at(30.5, &mut rng); // music at local t = 0.5
+        assert!(burst.cpu_util < 40.0, "music phase is light: {}", burst.cpu_util);
     }
 
     #[test]

@@ -42,6 +42,24 @@
 //! are interchangeable by name: `serve --policy knn`, `fleet --policy
 //! bandit`. To add a policy, implement the trait and register a builder —
 //! see the [`policy`] module docs for the two-step recipe.
+//!
+//! ## Scenario engine
+//!
+//! Execution environments live behind the same open pattern ([`scenario`]):
+//! a scenario composes pluggable RSSI [`net::SignalModel`]s (pinned,
+//! corrected AR(1), Markov-modulated regime chains with dwell-time
+//! distributions and connectivity dead zones, recorded-trace playback) with
+//! a co-runner schedule (including time-varying
+//! [`interference::CoRunner::Phased`] phases), registered under string keys
+//! ([`scenario::build`]). The paper's Table-4 environments are scenario
+//! keys with pinned parity; `serve --scenario-env deadzone`,
+//! `fleet --scenario-env mix` (seeded heterogeneous per-device assignment)
+//! and `trace:<path>` playback all construct through the registry. Dead
+//! zones carry end-to-end disconnection semantics: remote actions fail
+//! after a timeout, the wasted TX energy and latency are charged to the
+//! device, and the policy sees a heavily penalized reward
+//! ([`agent::reward::REMOTE_FAILURE_PENALTY`]). The trace interchange
+//! format (CSV/JSONL, record/replay) is documented in [`scenario::trace`].
 
 // Style-lint allowances (kept deliberately small): the codebase favours
 // explicit index loops and field-by-field config setup for readability in
@@ -69,6 +87,7 @@ pub mod nn;
 pub mod policy;
 pub mod power;
 pub mod runtime;
+pub mod scenario;
 pub mod types;
 pub mod util;
 

@@ -3,21 +3,25 @@
 //! Subcommands (hand-rolled parser; offline cache has no clap):
 //!   figure <id> [--seed N] [--full]   regenerate one paper figure/table
 //!   all [--seed N] [--full]           regenerate every figure/table
-//!   serve [--device D] [--env E] [--requests N] [--policy P] [--seed N]
-//!         [--runtime]                 run the serving loop once and report
+//!   serve [--device D] [--env E] [--scenario-env K] [--requests N]
+//!         [--policy P] [--seed N] [--runtime]
+//!                                     run the serving loop once and report
 //!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
-//!         [--policy P] [--arrival A] [--rate HZ] [--epoch S]
-//!         [--cloud-capacity MMACS] [--batch-window S]
+//!         [--scenario-env K|mix] [--policy P] [--arrival A] [--rate HZ]
+//!         [--epoch S] [--cloud-capacity MMACS] [--batch-window S]
 //!                                     multi-device shared-cloud simulation
 //!   train [--device D] [--save PATH] [--seed N] [--full]
 //!                                     train an agent, optionally save Q-table
+//!   scenarios [--keys]               list the scenario registry
 //!   runtime-check                     load + execute one artifact via PJRT
 //!   list                              list available experiments
 //!
 //! The parser is strict: unknown `--flags` and malformed numbers are
 //! errors, not silently ignored. `--policy` accepts any key from the
-//! policy registry; the error and help text enumerate the registry so
-//! they can never go stale.
+//! policy registry and `--scenario-env` any key from the scenario
+//! registry (plus `trace:<path>` playback, and `mix` for fleet-level
+//! heterogeneous assignment); errors and help text enumerate the
+//! registries so they can never go stale.
 
 // Config structs are built field-by-field from parsed flags.
 #![allow(clippy::field_reassign_with_default)]
@@ -149,12 +153,24 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "figure" => {
-            let cli = parse_cli(cmd, rest, &["--seed"], &["--full"], 1)?;
+            let cli = parse_cli(cmd, rest, &["--seed", "--scenario-env"], &["--full"], 1)?;
             let seed: u64 = cli.num("--seed", 7)?;
             let quick = !cli.switches.contains("--full");
             let id = cli.positional.first().copied().unwrap_or("");
-            let tables = experiments::run_by_id(id, seed, quick)
-                .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}' (try `autoscale list`)"))?;
+            // Experiment drivers accept --scenario-env through the `scen`
+            // sweep: restrict it to one registry key (or trace:<path>).
+            let tables = match cli.value("--scenario-env") {
+                Some(key) => {
+                    anyhow::ensure!(
+                        id == "scen",
+                        "--scenario-env applies to the 'scen' experiment (got '{id}')"
+                    );
+                    experiments::scenarios::run_single(key, seed, quick)?
+                }
+                None => experiments::run_by_id(id, seed, quick).ok_or_else(|| {
+                    anyhow::anyhow!("unknown figure '{id}' (try `autoscale list`)")
+                })?,
+            };
             let dir = Path::new("reports");
             for (i, t) in tables.iter().enumerate() {
                 println!("{}", t.render());
@@ -192,7 +208,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let cli = parse_cli(
                 cmd,
                 rest,
-                &["--device", "--env", "--requests", "--policy", "--seed"],
+                &["--device", "--env", "--scenario-env", "--requests", "--policy", "--seed"],
                 &["--runtime"],
                 0,
             )?;
@@ -203,6 +219,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let mut run_cfg = RunConfig::default();
             run_cfg.device = device;
             run_cfg.env = env;
+            run_cfg.scenario_env = cli.value("--scenario-env").map(str::to_string);
             run_cfg.seed = seed;
             run_cfg.scenario = Scenario::NonStreaming;
 
@@ -214,7 +231,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let policy =
                 autoscale::policy::build(cli.value("--policy").unwrap_or("autoscale"), &spec)?;
 
-            let environment = Environment::build(device, env, seed);
+            // `--scenario-env` (any scenario-registry key, or
+            // `trace:<path>`) overrides the legacy `--env` enum; both
+            // construct through the scenario registry.
+            let scenario_key = run_cfg.scenario_key();
+            let environment = Environment::build_keyed(device, &scenario_key, seed)?;
             let mut engine_store;
             let mut server = Server::new(
                 environment,
@@ -228,13 +249,31 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             }
             let metrics = server.serve(requests);
             println!("policy       : {}", server.policy.name());
-            println!("device/env   : {device} / {}", env.name());
+            println!("device/env   : {device} / {scenario_key}");
             println!("requests     : {}", metrics.n());
             println!("PPW          : {:.3} inf/J", metrics.ppw());
             println!("mean latency : {:.2} ms", metrics.mean_latency_s() * 1e3);
             println!("QoS misses   : {:.1}%", metrics.qos_violation_ratio() * 100.0);
             println!("acc misses   : {:.1}%", metrics.accuracy_violation_ratio() * 100.0);
+            println!("net failures : {:.1}%", metrics.remote_failure_ratio() * 100.0);
             println!("energy MAPE  : {:.1}%", metrics.energy_estimator_mape());
+            Ok(())
+        }
+        "scenarios" => {
+            let cli = parse_cli(cmd, rest, &[], &["--keys"], 0)?;
+            if cli.switches.contains("--keys") {
+                // bare keys, one per line (CI smoke jobs iterate this)
+                for e in autoscale::scenario::REGISTRY {
+                    println!("{}", e.key);
+                }
+            } else {
+                println!("registered scenarios (--scenario-env, serve & fleet):");
+                for e in autoscale::scenario::REGISTRY {
+                    println!("  {:12}  {}", e.key, e.about);
+                }
+                println!("  {:12}  play back a recorded CSV/JSONL signal trace", "trace:<path>");
+                println!("  {:12}  fleet only: seeded heterogeneous per-device mix", "mix");
+            }
             Ok(())
         }
         "fleet" => {
@@ -247,6 +286,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--shards",
                     "--seed",
                     "--env",
+                    "--scenario-env",
                     "--policy",
                     "--arrival",
                     "--rate",
@@ -269,6 +309,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 shards: cli.num("--shards", default_shards)?,
                 seed: cli.num("--seed", 7)?,
                 env: parse_env(cli.value("--env").unwrap_or("S1"))?,
+                // Any scenario-registry key, trace:<path>, or "mix";
+                // FleetConfig::validate rejects unknown keys with the key
+                // list straight from the registry.
+                scenario_env: cli.value("--scenario-env").map(str::to_string),
                 // Any registry key; FleetConfig::validate rejects unknown
                 // names with the key list straight from the registry.
                 policy: cli.value("--policy").unwrap_or("autoscale").to_string(),
@@ -302,7 +346,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 cfg.requests_per_device,
                 cfg.arrival.name(),
                 cfg.rate_hz,
-                cfg.env.name()
+                cfg.scenario_env.as_deref().unwrap_or(cfg.env.name())
             );
             println!("policy       : {} (per device)", cfg.policy);
             println!("shards       : {}", cfg.shards);
@@ -319,6 +363,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             );
             println!("QoS misses   : {:.1}%", m.qos_violation_ratio() * 100.0);
             println!("acc misses   : {:.1}%", m.accuracy_violation_ratio() * 100.0);
+            println!("net failures : {:.1}%", m.remote_failure_ratio() * 100.0);
             println!(
                 "cloud        : {:.1}% of requests; peak load {:.2}, peak queue wait {:.1} ms",
                 m.cloud_rate() * 100.0,
@@ -381,15 +426,20 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "autoscale — edge-inference execution scaling (AutoScale reproduction)\n\
-                 usage: autoscale <figure|all|serve|fleet|train|runtime-check|list> [flags]\n\
+                 usage: autoscale <figure|all|serve|fleet|train|scenarios|runtime-check|list> [flags]\n\
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
+                 \x20             --scenario-env K (see `autoscale scenarios`)\n\
                  serve: --runtime\n\
                  fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
-                 \x20       --epoch S --cloud-capacity MMACS --batch-window S\n\
+                 \x20       --epoch S --cloud-capacity MMACS --batch-window S --scenario-env K|mix\n\
                  policies (--policy, serve & fleet):"
             );
             for e in autoscale::policy::REGISTRY {
                 println!("  {:10}  {}", e.key, e.about);
+            }
+            println!("scenarios (--scenario-env, serve & fleet):");
+            for e in autoscale::scenario::REGISTRY {
+                println!("  {:12}  {}", e.key, e.about);
             }
             Ok(())
         }

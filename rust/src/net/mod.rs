@@ -8,6 +8,18 @@
 //! * the radio transmits at higher power when the signal is weak;
 //! * RSSI wanders as a Gaussian process (env D3 emulates signal variation
 //!   with a Gaussian distribution).
+//!
+//! Signal evolution is delegated to the pluggable [`SignalModel`] family
+//! ([`signal`]): pinned levels, corrected AR(1) wander, Markov-modulated
+//! regime chains with dead zones, and recorded-trace playback. The
+//! scenario registry (`crate::scenario`) composes these into named
+//! execution environments.
+
+pub mod signal;
+
+pub use signal::{
+    MarkovChannel, Regime, SignalModel, SignalTrace, TraceSample, RSSI_FLOOR_DBM,
+};
 
 use crate::util::rng::Pcg64;
 
@@ -106,42 +118,58 @@ impl LinkParams {
     }
 }
 
-/// RSSI process: a mean level plus bounded Gaussian wander (env D3) or a
-/// pinned level (static environments S1/S4/S5).
+/// RSSI process: a [`SignalModel`] plus its current level and
+/// connectivity. Static environments pin the level; dynamic ones wander
+/// (AR(1)), hop regimes (Markov) or replay traces.
 #[derive(Clone, Debug)]
 pub struct RssiProcess {
-    pub mean_dbm: f64,
-    pub sigma_dbm: f64,
+    model: SignalModel,
     current: f64,
+    connected: bool,
 }
 
 impl RssiProcess {
     /// Static environment: pinned RSSI, zero variance.
     pub fn pinned(dbm: f64) -> Self {
-        RssiProcess { mean_dbm: dbm, sigma_dbm: 0.0, current: dbm }
+        RssiProcess::from_model(SignalModel::pinned(dbm))
     }
 
-    /// Dynamic environment: Gaussian wander around the mean.
+    /// Dynamic environment: mean-reverting Gaussian wander whose
+    /// stationary std equals `sigma_dbm` (AR(1) with 0.7 memory so
+    /// consecutive requests see correlated signal — users move smoothly,
+    /// not i.i.d.).
     pub fn gaussian(mean_dbm: f64, sigma_dbm: f64) -> Self {
-        RssiProcess { mean_dbm, sigma_dbm, current: mean_dbm }
+        RssiProcess::from_model(SignalModel::ar1(mean_dbm, sigma_dbm))
     }
 
-    /// Advance one observation interval; returns the fresh RSSI sample.
-    /// AR(1) with 0.7 memory so consecutive requests see correlated signal
-    /// (users move smoothly, not i.i.d.).
-    pub fn step(&mut self, rng: &mut Pcg64) -> f64 {
-        if self.sigma_dbm == 0.0 {
-            return self.current;
-        }
-        let innovation = rng.normal(0.0, self.sigma_dbm);
-        self.current = self.mean_dbm + 0.7 * (self.current - self.mean_dbm) + 0.3 * innovation;
-        // physical clamp
-        self.current = self.current.clamp(-95.0, -30.0);
+    /// Any scenario-engine signal model.
+    pub fn from_model(model: SignalModel) -> Self {
+        let current = model.initial_dbm();
+        let connected = model.initially_connected();
+        RssiProcess { model, current, connected }
+    }
+
+    /// Advance to virtual time `t_s`; returns the fresh RSSI sample.
+    pub fn step(&mut self, t_s: f64, rng: &mut Pcg64) -> f64 {
+        let (dbm, connected) = self.model.step(self.current, t_s, rng);
+        self.current = dbm;
+        self.connected = connected;
         self.current
     }
 
     pub fn current(&self) -> f64 {
         self.current
+    }
+
+    /// Is the link usable at all? `false` while a Markov dead zone or a
+    /// disconnected trace sample is in force — remote actions then fail
+    /// after a timeout instead of completing (see `exec`).
+    pub fn is_connected(&self) -> bool {
+        self.connected
+    }
+
+    pub fn model(&self) -> &SignalModel {
+        &self.model
     }
 
     /// Table-1 discretization: Regular (> -80 dBm) vs Weak (<= -80 dBm).
@@ -236,10 +264,11 @@ mod tests {
     fn pinned_rssi_never_moves() {
         let mut r = RssiProcess::pinned(-70.0);
         let mut rng = Pcg64::new(1);
-        for _ in 0..10 {
-            assert_eq!(r.step(&mut rng), -70.0);
+        for i in 0..10 {
+            assert_eq!(r.step(i as f64, &mut rng), -70.0);
         }
         assert!(!r.is_weak());
+        assert!(r.is_connected());
         assert!(RssiProcess::pinned(-80.0).is_weak());
     }
 
@@ -248,8 +277,8 @@ mod tests {
         let mut r = RssiProcess::gaussian(-70.0, 8.0);
         let mut rng = Pcg64::new(2);
         let mut distinct = std::collections::HashSet::new();
-        for _ in 0..200 {
-            let v = r.step(&mut rng);
+        for i in 0..200 {
+            let v = r.step(i as f64, &mut rng);
             assert!((-95.0..=-30.0).contains(&v));
             distinct.insert((v * 1000.0) as i64);
         }

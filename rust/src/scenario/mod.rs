@@ -1,0 +1,50 @@
+//! The stochastic scenario engine: named, composable execution
+//! environments.
+//!
+//! AutoScale's central claim is adaptation to *stochastic runtime
+//! variance*, so the variance sources themselves must be first-class. A
+//! scenario composes three ingredients:
+//!
+//! * a WLAN RSSI [`SignalModel`] (pinned / corrected AR(1) /
+//!   Markov-modulated regime chain / trace playback — see
+//!   [`crate::net::signal`]);
+//! * a P2P RSSI [`SignalModel`];
+//! * a [`CoRunner`] interference generator, including time-varying
+//!   [`CoRunner::Phased`] schedules.
+//!
+//! Scenarios are string-keyed through [`registry`] — mirroring the policy
+//! registry — so `serve --scenario-env <key>`, `fleet --scenario-env
+//! <key>` and the experiment drivers all construct environments the same
+//! way, and the CLI help/error text enumerates the registry and can never
+//! go stale. Every legacy Table-4 `EnvKind` (`S1`–`S5`, `D1`–`D3`) is
+//! itself a scenario key with pinned behavioural parity; new keys add
+//! Markov commute chains, connectivity dead zones and recorded traces.
+//! `trace:<path>` plays back a signal trace from a CSV/JSONL file (format
+//! in [`trace`]).
+//!
+//! Dead zones give the system end-to-end *disconnection semantics*: while
+//! a dead regime (or a disconnected trace sample) is in force, remote
+//! actions fail after a timeout, `exec` charges the wasted TX energy and
+//! latency, and the serving loops surface the failure to the policy as a
+//! heavily penalized reward (`agent::reward::REMOTE_FAILURE_PENALTY`) so
+//! learners visibly retreat to local execution.
+
+pub mod registry;
+pub mod trace;
+
+use crate::interference::CoRunner;
+use crate::net::SignalModel;
+
+pub use registry::{build, is_known, is_valid_key, names, ScenarioEntry, REGISTRY};
+
+/// One assembled scenario: everything environment construction needs
+/// beyond the device preset and the seed.
+#[derive(Clone, Debug)]
+pub struct ScenarioEnv {
+    /// The key this scenario was built from (a registry key, or a dynamic
+    /// `trace:<path>` reference).
+    pub key: String,
+    pub wlan: SignalModel,
+    pub p2p: SignalModel,
+    pub co_runner: CoRunner,
+}

@@ -1,0 +1,280 @@
+//! String-keyed scenario factory: one construction path for the CLI, the
+//! fleet simulator and the experiment drivers — mirroring the policy
+//! registry. `scenario::build("deadzone")` returns a ready
+//! [`ScenarioEnv`]; unknown keys produce an error that enumerates the
+//! registry, so the help text can never go stale.
+//!
+//! Legacy Table-4 environments are themselves registry keys (`S1`–`S5`,
+//! `D1`–`D3`, matched case-insensitively) with pinned behavioural parity;
+//! `trace:<path>` builds a playback scenario from a trace file at run
+//! time.
+
+use crate::interference::CoRunner;
+use crate::net::{MarkovChannel, Regime, SignalModel};
+
+use super::trace;
+use super::ScenarioEnv;
+
+/// One registry row: CLI key, one-line description, builder.
+pub struct ScenarioEntry {
+    pub key: &'static str,
+    pub about: &'static str,
+    pub build: fn() -> (SignalModel, SignalModel, CoRunner),
+}
+
+/// Pinned signal levels shared by the Table-4 environments.
+const STRONG_WLAN: f64 = -55.0;
+const STRONG_P2P: f64 = -50.0;
+const WEAK_WLAN: f64 = -86.0;
+const WEAK_P2P: f64 = -85.0;
+
+fn strong() -> (SignalModel, SignalModel) {
+    (SignalModel::pinned(STRONG_WLAN), SignalModel::pinned(STRONG_P2P))
+}
+
+/// Every selectable scenario, in help-text order. The first eight rows are
+/// the paper's Table-4 environments re-expressed as scenario keys (their
+/// parity with the legacy `EnvKind` construction is pinned by
+/// `tests/scenario.rs`).
+pub const REGISTRY: &[ScenarioEntry] = &[
+    ScenarioEntry {
+        key: "S1",
+        about: "Table 4: no runtime variance (strong signal, no co-runner)",
+        build: || {
+            let (w, p) = strong();
+            (w, p, CoRunner::None)
+        },
+    },
+    ScenarioEntry {
+        key: "S2",
+        about: "Table 4: CPU-intensive co-running app",
+        build: || {
+            let (w, p) = strong();
+            (w, p, CoRunner::cpu_hog())
+        },
+    },
+    ScenarioEntry {
+        key: "S3",
+        about: "Table 4: memory-intensive co-running app",
+        build: || {
+            let (w, p) = strong();
+            (w, p, CoRunner::mem_hog())
+        },
+    },
+    ScenarioEntry {
+        key: "S4",
+        about: "Table 4: weak Wi-Fi (WLAN) signal",
+        build: || {
+            (
+                SignalModel::pinned(WEAK_WLAN),
+                SignalModel::pinned(STRONG_P2P),
+                CoRunner::None,
+            )
+        },
+    },
+    ScenarioEntry {
+        key: "S5",
+        about: "Table 4: weak Wi-Fi Direct (P2P) signal",
+        build: || {
+            (
+                SignalModel::pinned(STRONG_WLAN),
+                SignalModel::pinned(WEAK_P2P),
+                CoRunner::None,
+            )
+        },
+    },
+    ScenarioEntry {
+        key: "D1",
+        about: "Table 4: music-player co-runner trace",
+        build: || {
+            let (w, p) = strong();
+            (w, p, CoRunner::music_player())
+        },
+    },
+    ScenarioEntry {
+        key: "D2",
+        about: "Table 4: web-browser co-runner trace",
+        build: || {
+            let (w, p) = strong();
+            (w, p, CoRunner::web_browser())
+        },
+    },
+    ScenarioEntry {
+        key: "D3",
+        about: "Table 4: Gaussian-random WLAN signal (9 dB stationary std)",
+        build: || {
+            (
+                SignalModel::ar1(-72.0, 9.0),
+                SignalModel::pinned(STRONG_P2P),
+                CoRunner::None,
+            )
+        },
+    },
+    ScenarioEntry {
+        key: "commute",
+        about: "Markov channel: indoor/outdoor/transit regimes + phased co-apps",
+        build: || {
+            let wlan = SignalModel::Markov(MarkovChannel::cycle(vec![
+                Regime::new("indoor", -58.0, 3.0, 45.0),
+                Regime::new("outdoor", -72.0, 6.0, 30.0),
+                Regime::new("transit", -84.0, 5.0, 20.0),
+            ]));
+            let p2p = SignalModel::ar1(-55.0, 4.0);
+            // the commuter listens to music, browses, then pockets the phone
+            let co = CoRunner::phased(vec![
+                (60.0, CoRunner::music_player()),
+                (45.0, CoRunner::web_browser()),
+                (30.0, CoRunner::None),
+            ]);
+            (wlan, p2p, co)
+        },
+    },
+    ScenarioEntry {
+        key: "deadzone",
+        about: "Markov channel with a connectivity dead zone (remote actions fail)",
+        build: || {
+            let wlan = SignalModel::Markov(MarkovChannel::cycle(vec![
+                Regime::new("street", -70.0, 5.0, 35.0),
+                Regime::dead_zone("tunnel", 8.0),
+            ]));
+            // P2P peer is far: alive but weak, so local execution is the
+            // only reliable refuge while the WLAN is down.
+            (wlan, SignalModel::pinned(WEAK_P2P), CoRunner::None)
+        },
+    },
+    ScenarioEntry {
+        key: "trace-demo",
+        about: "embedded trace playback: office -> stairwell -> parking garage",
+        build: || {
+            let wlan = SignalModel::Trace(
+                trace::parse_csv(DEMO_TRACE_CSV).expect("embedded demo trace is valid"),
+            );
+            (wlan, SignalModel::pinned(STRONG_P2P), CoRunner::music_player())
+        },
+    },
+];
+
+/// The embedded demo trace: a 60 s walk from a desk (strong AP) through a
+/// stairwell (weak) into a parking garage (disconnected) and back.
+pub const DEMO_TRACE_CSV: &str = "\
+t_s,rssi_dbm,connected
+0,-52,1
+10,-64,1
+18,-79,1
+24,-88,1
+30,-95,0
+42,-87,1
+50,-71,1
+56,-56,1
+";
+
+/// Build a scenario by key: a registry key (case-insensitive) or a dynamic
+/// `trace:<path>` playback reference.
+pub fn build(key: &str) -> anyhow::Result<ScenarioEnv> {
+    if let Some(path) = key.strip_prefix("trace:") {
+        let wlan = SignalModel::Trace(trace::load(std::path::Path::new(path))?);
+        return Ok(ScenarioEnv {
+            key: key.to_string(),
+            wlan,
+            p2p: SignalModel::pinned(STRONG_P2P),
+            co_runner: CoRunner::None,
+        });
+    }
+    match REGISTRY.iter().find(|e| e.key.eq_ignore_ascii_case(key)) {
+        Some(e) => {
+            let (wlan, p2p, co_runner) = (e.build)();
+            Ok(ScenarioEnv { key: e.key.to_string(), wlan, p2p, co_runner })
+        }
+        None => anyhow::bail!(
+            "unknown scenario '{key}' (known: {} | trace:<path>)",
+            names().join("|")
+        ),
+    }
+}
+
+/// All registry keys, in help-text order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.key).collect()
+}
+
+/// Is `key` a registered scenario (case-insensitive)?
+pub fn is_known(key: &str) -> bool {
+    REGISTRY.iter().any(|e| e.key.eq_ignore_ascii_case(key))
+}
+
+/// Is `key` acceptable to [`build`] without touching the filesystem —
+/// registered, or a `trace:<path>` reference (validated at build time)?
+pub fn is_valid_key(key: &str) -> bool {
+    is_known(key) || key.strip_prefix("trace:").is_some_and(|p| !p.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configsys::runconfig::EnvKind;
+
+    #[test]
+    fn every_key_builds() {
+        for e in REGISTRY {
+            let sc = build(e.key).unwrap();
+            assert_eq!(sc.key, e.key);
+            assert!(!e.about.is_empty());
+        }
+    }
+
+    #[test]
+    fn keys_match_case_insensitively() {
+        assert!(build("s1").is_ok());
+        assert!(build("d3").is_ok());
+        assert!(build("COMMUTE").is_ok());
+    }
+
+    #[test]
+    fn every_legacy_env_kind_is_a_scenario_key() {
+        for kind in EnvKind::STATIC.iter().chain(EnvKind::DYNAMIC.iter()) {
+            assert!(is_known(kind.name()), "EnvKind {} missing from registry", kind.name());
+        }
+    }
+
+    #[test]
+    fn unknown_key_error_enumerates_the_registry() {
+        let err = build("warp-zone").unwrap_err().to_string();
+        for e in REGISTRY {
+            assert!(err.contains(e.key), "error must list '{}': {err}", e.key);
+        }
+        assert!(err.contains("trace:<path>"));
+    }
+
+    #[test]
+    fn trace_key_loads_files_and_validates() {
+        assert!(is_valid_key("trace:/tmp/whatever.csv"));
+        assert!(!is_valid_key("trace:"));
+        assert!(build("trace:/nonexistent/file.csv").is_err());
+        let dir = std::env::temp_dir().join("autoscale_scenario_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("walk.csv");
+        std::fs::write(&path, DEMO_TRACE_CSV).unwrap();
+        let sc = build(&format!("trace:{}", path.display())).unwrap();
+        match sc.wlan {
+            SignalModel::Trace(t) => assert_eq!(t.samples().len(), 8),
+            other => panic!("expected trace playback, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadzone_scenario_contains_a_dead_regime() {
+        let sc = build("deadzone").unwrap();
+        match sc.wlan {
+            SignalModel::Markov(_) => {}
+            other => panic!("expected markov wlan, got {other:?}"),
+        }
+        // the demo trace really disconnects mid-walk
+        let demo = build("trace-demo").unwrap();
+        match demo.wlan {
+            SignalModel::Trace(t) => {
+                assert!(t.samples().iter().any(|s| !s.connected));
+            }
+            other => panic!("expected trace wlan, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Signal-trace record/replay: a simple CSV/JSONL interchange format for
+//! RSSI traces, so measured (or synthesized) channel conditions can be
+//! replayed bit-identically through `--scenario-env trace:<path>`.
+//!
+//! ## CSV
+//!
+//! ```text
+//! t_s,rssi_dbm,connected
+//! 0.0,-55.0,1
+//! 12.5,-82.0,1
+//! 20.0,-95.0,0
+//! ```
+//!
+//! The header line and the `connected` column (1/0/true/false/yes/no) are
+//! optional; `#` starts a comment line. Timestamps must be non-decreasing.
+//!
+//! ## JSONL
+//!
+//! One object per line with the same fields:
+//!
+//! ```text
+//! {"t_s": 0.0, "rssi_dbm": -55.0, "connected": true}
+//! ```
+//!
+//! Playback holds each sample until the next timestamp and loops after the
+//! last one (one mean inter-sample gap after the final sample — see
+//! [`SignalTrace::looped`]). [`record`] samples any [`SignalModel`] into a
+//! trace; [`to_csv`]'s float formatting round-trips exactly, so
+//! record → save → replay reproduces the recorded samples bit-identically.
+
+use std::path::Path;
+
+use crate::net::{SignalModel, SignalTrace, TraceSample};
+use crate::util::rng::Pcg64;
+
+/// Parse the CSV trace format (see module docs).
+pub fn parse_csv(text: &str) -> anyhow::Result<SignalTrace> {
+    let mut samples = Vec::new();
+    let mut first_data_line = true;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            (2..=3).contains(&cols.len()),
+            "line {}: expected 2-3 columns, got {}",
+            ln + 1,
+            cols.len()
+        );
+        if first_data_line && cols[0].eq_ignore_ascii_case("t_s") {
+            // optional header row — only the documented header is skipped,
+            // so a malformed first data line errors instead of vanishing
+            first_data_line = false;
+            continue;
+        }
+        first_data_line = false;
+        let t_s: f64 = cols[0]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad t_s '{}' ({e})", ln + 1, cols[0]))?;
+        let rssi_dbm: f64 = cols[1]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad rssi_dbm '{}' ({e})", ln + 1, cols[1]))?;
+        let connected = match cols.get(2) {
+            None => true,
+            Some(v) => parse_bool(v)
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad connected '{v}'", ln + 1))?,
+        };
+        samples.push(TraceSample { t_s, rssi_dbm, connected });
+    }
+    SignalTrace::looped(samples)
+}
+
+/// Parse the JSONL trace format (see module docs). Hand-rolled field
+/// extraction — the offline crate cache has no serde, and the format is a
+/// flat object per line.
+pub fn parse_jsonl(text: &str) -> anyhow::Result<SignalTrace> {
+    let mut samples = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        anyhow::ensure!(
+            line.starts_with('{') && line.ends_with('}'),
+            "line {}: expected one JSON object per line",
+            ln + 1
+        );
+        let t_s = json_f64(line, "t_s")
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing numeric 't_s'", ln + 1))?;
+        let rssi_dbm = json_f64(line, "rssi_dbm")
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing numeric 'rssi_dbm'", ln + 1))?;
+        let connected = match json_raw(line, "connected") {
+            None => true,
+            Some(v) => parse_bool(v)
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad 'connected' value '{v}'", ln + 1))?,
+        };
+        samples.push(TraceSample { t_s, rssi_dbm, connected });
+    }
+    SignalTrace::looped(samples)
+}
+
+/// Load a trace file, dispatching on extension (`.csv` vs `.jsonl`/`.json`).
+pub fn load(path: &Path) -> anyhow::Result<SignalTrace> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace '{}': {e}", path.display()))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("jsonl") | Some("json") => parse_jsonl(&text),
+        _ => parse_csv(&text),
+    }
+}
+
+/// Record a signal model into a trace: `n = floor(duration/dt)` samples at
+/// `t = 0, dt, 2dt, …`, period `n·dt`. Replaying the result reproduces
+/// the recorded levels exactly at the sampled times.
+pub fn record(
+    model: &mut SignalModel,
+    duration_s: f64,
+    dt_s: f64,
+    seed: u64,
+) -> anyhow::Result<SignalTrace> {
+    anyhow::ensure!(dt_s > 0.0, "record dt must be > 0");
+    anyhow::ensure!(duration_s >= dt_s, "record duration must cover at least one sample");
+    let mut rng = Pcg64::new(seed);
+    let mut prev = model.initial_dbm();
+    let n = (duration_s / dt_s).floor() as usize;
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let t_s = i as f64 * dt_s;
+        let (rssi_dbm, connected) = model.step(prev, t_s, &mut rng);
+        prev = rssi_dbm;
+        samples.push(TraceSample { t_s, rssi_dbm, connected });
+    }
+    SignalTrace::new(samples, n as f64 * dt_s)
+}
+
+/// Serialize to the CSV format. Float formatting is Rust's
+/// shortest-round-trip `Display`, so `parse_csv(to_csv(t))` reproduces the
+/// samples bit-identically.
+pub fn to_csv(trace: &SignalTrace) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("t_s,rssi_dbm,connected\n");
+    for s in trace.samples() {
+        writeln!(out, "{},{},{}", s.t_s, s.rssi_dbm, u8::from(s.connected)).unwrap();
+    }
+    out
+}
+
+/// Serialize to the JSONL format (same round-trip guarantee as
+/// [`to_csv`]).
+pub fn to_jsonl(trace: &SignalTrace) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for s in trace.samples() {
+        writeln!(
+            out,
+            "{{\"t_s\": {}, \"rssi_dbm\": {}, \"connected\": {}}}",
+            s.t_s, s.rssi_dbm, s.connected
+        )
+        .unwrap();
+    }
+    out
+}
+
+fn parse_bool(v: &str) -> Option<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" => Some(true),
+        "0" | "false" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Extract the raw text of `"key": <value>` from a flat one-line JSON
+/// object (up to the next `,` or the closing `}`).
+fn json_raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\"");
+    let start = line.find(&needle)? + needle.len();
+    let rest = line[start..].trim_start();
+    let rest = rest.strip_prefix(':')?.trim_start();
+    let end = rest.find(|c| c == ',' || c == '}').unwrap_or(rest.len());
+    let v = rest[..end].trim();
+    if v.is_empty() {
+        None
+    } else {
+        Some(v)
+    }
+}
+
+fn json_f64(line: &str, key: &str) -> Option<f64> {
+    json_raw(line, key)?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_parses_header_comments_and_connected_flags() {
+        let t = parse_csv(
+            "# a walk out of the office\n\
+             t_s,rssi_dbm,connected\n\
+             0.0,-55.0,1\n\
+             10.0,-82.5\n\
+             20.0,-95.0,false\n",
+        )
+        .unwrap();
+        assert_eq!(t.samples().len(), 3);
+        assert_eq!(t.at(0.0).rssi_dbm, -55.0);
+        assert!(t.at(12.0).connected, "missing flag defaults to connected");
+        assert_eq!(t.at(12.0).rssi_dbm, -82.5);
+        assert!(!t.at(25.0).connected);
+    }
+
+    #[test]
+    fn csv_rejects_malformed_lines() {
+        assert!(parse_csv("").is_err(), "empty trace");
+        assert!(parse_csv("0.0\n").is_err(), "too few columns");
+        assert!(parse_csv("0.0,-55.0,maybe\n").is_err(), "bad connected");
+        assert!(parse_csv("0.0,-55.0\nnot-a-number,-60.0\n").is_err(), "bad t_s");
+        assert!(parse_csv("5.0,-55.0\n1.0,-60.0\n").is_err(), "non-monotonic t_s");
+        assert!(
+            parse_csv("O.0,-55.0,1\n1.0,-60.0,1\n").is_err(),
+            "a typo'd first data line must error, not pass as a header"
+        );
+        assert!(parse_csv("0.0,nan,1\n").is_err(), "non-finite rssi rejected");
+    }
+
+    #[test]
+    fn jsonl_parses_and_matches_csv() {
+        let j = parse_jsonl(
+            "{\"t_s\": 0.0, \"rssi_dbm\": -55.0, \"connected\": true}\n\
+             {\"t_s\": 10.0, \"rssi_dbm\": -82.5}\n\
+             {\"t_s\": 20.0, \"rssi_dbm\": -95.0, \"connected\": false}\n",
+        )
+        .unwrap();
+        let c = parse_csv("0.0,-55.0,1\n10.0,-82.5,1\n20.0,-95.0,0\n").unwrap();
+        assert_eq!(j.samples(), c.samples());
+        assert!(parse_jsonl("{\"rssi_dbm\": -55.0}\n").is_err(), "missing t_s");
+    }
+
+    #[test]
+    fn record_then_replay_reproduces_the_recorded_signal() {
+        // Record a stochastic model, serialize, re-parse, and replay: the
+        // sampled levels and connectivity must match bit-identically.
+        let mut model = SignalModel::ar1(-70.0, 6.0);
+        let recorded = record(&mut model, 20.0, 0.5, 77).unwrap();
+        let replayed_csv = parse_csv(&to_csv(&recorded)).unwrap();
+        assert_eq!(recorded.samples(), replayed_csv.samples());
+        assert_eq!(recorded.period_s().to_bits(), replayed_csv.period_s().to_bits());
+        let replayed_jsonl = parse_jsonl(&to_jsonl(&recorded)).unwrap();
+        assert_eq!(recorded.samples(), replayed_jsonl.samples());
+
+        // Replay through a SignalModel yields the recorded levels at the
+        // recorded times, consuming no RNG.
+        let mut playback = SignalModel::Trace(replayed_csv);
+        let mut rng = Pcg64::new(0);
+        for s in recorded.samples() {
+            let (dbm, connected) = playback.step(0.0, s.t_s, &mut rng);
+            assert_eq!(dbm.to_bits(), s.rssi_dbm.to_bits());
+            assert_eq!(connected, s.connected);
+        }
+    }
+}

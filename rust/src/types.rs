@@ -177,6 +177,10 @@ pub struct Measurement {
     pub energy_true_j: f64,
     /// Top-1 accuracy of the deployed (NN, precision, site) combination.
     pub accuracy: f64,
+    /// A remote action was attempted over a disconnected link and timed
+    /// out: no result was produced, yet the TX energy and the timeout
+    /// latency were still charged to the device.
+    pub remote_failed: bool,
 }
 
 impl Measurement {
@@ -215,6 +219,7 @@ mod tests {
             energy_est_j: 0.5,
             energy_true_j: 0.5,
             accuracy: 0.7,
+            remote_failed: false,
         };
         assert!((m.ppw() - 2.0).abs() < 1e-12);
     }
@@ -226,6 +231,7 @@ mod tests {
             energy_est_j: 0.0,
             energy_true_j: 0.0,
             accuracy: 0.0,
+            remote_failed: false,
         };
         assert_eq!(m.ppw(), 0.0);
     }

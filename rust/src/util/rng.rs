@@ -28,9 +28,14 @@ impl Pcg64 {
     }
 
     /// Independent substream: deterministic function of (seed, stream id).
+    ///
+    /// PCG requires an **odd** increment. XOR-ing two odd values clears the
+    /// low bit, so the mix below forces it back on: the increment reduces
+    /// to `((stream ^ K) << 1) | 1`, odd for every stream id and distinct
+    /// across stream ids.
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let mut rng = Pcg64::new(seed);
-        rng.inc = (((stream as u128) << 1) | 1) ^ (0x5851_f42d_4c95_7f2d << 1 | 1);
+        rng.inc = ((((stream as u128) << 1) | 1) ^ (0x5851_f42d_4c95_7f2d << 1 | 1)) | 1;
         rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
         rng
     }
@@ -137,6 +142,36 @@ mod tests {
         let mut a = Pcg64::with_stream(7, 0);
         let mut b = Pcg64::with_stream(7, 1);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn stream_increments_are_odd_and_distinct() {
+        // PCG's period/quality guarantees hold only for odd `inc`; the
+        // stream mix must never clear the low bit (regression: an XOR of
+        // two odd constants used to produce an even increment).
+        let mut incs = std::collections::HashSet::new();
+        let ids: Vec<u64> =
+            (0..256).chain([1001, 2001, u64::MAX - 1, u64::MAX]).collect();
+        for stream in ids {
+            let rng = Pcg64::with_stream(7, stream);
+            assert_eq!(rng.inc & 1, 1, "stream {stream} must have an odd inc");
+            assert!(incs.insert(rng.inc), "stream {stream} collides on inc");
+        }
+    }
+
+    #[test]
+    fn streams_produce_pairwise_distinct_sequences() {
+        let seqs: Vec<Vec<u64>> = (0..24)
+            .map(|s| {
+                let mut rng = Pcg64::with_stream(42, s);
+                (0..16).map(|_| rng.next_u64()).collect()
+            })
+            .collect();
+        for i in 0..seqs.len() {
+            for j in (i + 1)..seqs.len() {
+                assert_ne!(seqs[i], seqs[j], "streams {i} and {j} coincide");
+            }
+        }
     }
 
     #[test]

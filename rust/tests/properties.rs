@@ -212,6 +212,7 @@ fn prop_reward_prefers_dominating_measurements() {
             energy_est_j: energy,
             energy_true_j: energy,
             accuracy: acc,
+            remote_failed: false,
         };
         // strictly worse on energy and latency, same accuracy
         let worse = Measurement {
@@ -219,6 +220,7 @@ fn prop_reward_prefers_dominating_measurements() {
             energy_est_j: energy + g.f64_in(1e-6, 1.0),
             energy_true_j: energy,
             accuracy: acc,
+            remote_failed: false,
         };
         ptassert!(
             reward(&better, &p) > reward(&worse, &p),
