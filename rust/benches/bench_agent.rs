@@ -1,61 +1,20 @@
-//! Agent micro-benchmarks — the §6.3 runtime-overhead claims:
-//! Q-table training step ~10.6 µs, trained-table selection ~7.3 µs,
-//! Q-table memory ~0.4 MB.
+//! Agent micro-benchmarks — the §6.3 runtime-overhead claims: Q-table
+//! training step ~10.6 µs, trained-table selection ~7.3 µs, Q-table
+//! memory ~0.4 MB. A thin wrapper over
+//! [`autoscale::benchsuite::run_agent_suite`] (shared with the `bench`
+//! CLI subcommand).
 
-use autoscale::agent::qlearn::AutoScaleAgent;
-use autoscale::agent::state::{State, StateObs};
-use autoscale::policy::action_catalogue;
-use autoscale::device::presets::device;
-use autoscale::interference::Interference;
-use autoscale::nn::zoo::by_name;
-use autoscale::types::DeviceId;
-use autoscale::util::bench::{black_box, Bencher};
+use autoscale::benchsuite::{print_report, qtable_footprint, run_agent_suite};
+use autoscale::util::bench::Bencher;
 
 fn main() {
-    let b = Bencher::default();
-    let catalogue = action_catalogue(&device(DeviceId::Mi8Pro));
+    let (actions, kb) = qtable_footprint();
+    println!("action catalogue: {actions} actions; q-table {kb} KB (paper: ~0.4 MB)");
+    let (report, select_us, train_us) = run_agent_suite(&Bencher::default());
+    print_report(&report);
     println!(
-        "action catalogue: {} actions; q-table {} KB (paper: ~0.4 MB)",
-        catalogue.len(),
-        catalogue.len() * autoscale::agent::state::STATE_CARDINALITY * 8 / 1024
-    );
-    let mut agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
-    let nn = by_name("mobilenet_v3").unwrap();
-    let obs = StateObs::from_parts(nn, Interference::default(), -60.0, -55.0);
-    let s = State::discretize(&obs);
-
-    println!("{:40} {:>12} {:>12} {:>12}", "benchmark", "mean", "median", "p95");
-
-    // ① state observation + discretization
-    let r = b.bench("state_discretize", || {
-        black_box(State::discretize(black_box(&obs)));
-    });
-    println!("{}", r.report());
-
-    // ② selection from a trained table (paper: 7.3 µs)
-    let r = b.bench("select_greedy (trained-table lookup)", || {
-        black_box(agent.select_greedy(black_box(s)));
-    });
-    println!("{}", r.report());
-    let select_us = r.median_s() * 1e6;
-
-    // ③ full training step: select + TD update (paper: 10.6 µs)
-    let r = b.bench("select+update (training step)", || {
-        let (a, _) = agent.select(black_box(s));
-        agent.update(s, a, black_box(0.5), s);
-    });
-    println!("{}", r.report());
-    let train_us = r.median_s() * 1e6;
-
-    // ④ q-table save/load round trip
-    let path = std::env::temp_dir().join("bench_qtable.txt");
-    let r = b.bench("qtable_save", || {
-        agent.table.save(&path).unwrap();
-    });
-    println!("{}", r.report());
-
-    println!(
-        "\nsummary: select {select_us:.2} us (paper 7.3 us), train step {train_us:.2} us (paper 10.6 us)"
+        "\nsummary: select {select_us:.2} us (paper 7.3 us), \
+         train step {train_us:.2} us (paper 10.6 us)"
     );
     assert!(select_us < 50.0, "selection should stay in the paper's us band");
     assert!(train_us < 100.0, "training step should stay in the us band");

@@ -1,60 +1,31 @@
-//! End-to-end serving throughput bench: requests/second through the full
-//! coordinator loop (observe → select → simulate-execute → reward →
-//! update), with and without the real PJRT engine attached. L3 must not be
-//! the bottleneck: the coordinator overhead is reported separately.
+//! End-to-end serving throughput bench — a thin wrapper over
+//! [`autoscale::benchsuite::run_e2e_suite`] (shared with the `bench` CLI
+//! subcommand): requests/second through the full coordinator loop
+//! (observe → select → simulate-execute → reward → update), with and
+//! without the real runtime engine attached. L3 must not be the
+//! bottleneck. Writes `BENCH_e2e.json` into the working directory.
 
-use autoscale::agent::qlearn::AutoScaleAgent;
-use autoscale::configsys::runconfig::{EnvKind, RunConfig};
-use autoscale::coordinator::envs::Environment;
-use autoscale::coordinator::serve::{ServeConfig, Server};
-use autoscale::policy::{action_catalogue, AutoScalePolicy};
-use autoscale::runtime::Engine;
-use autoscale::types::DeviceId;
+use std::path::Path;
 
-fn run_serving(n: usize, with_engine: bool) -> (f64, usize) {
-    let device = DeviceId::Mi8Pro;
-    let catalogue = action_catalogue(&autoscale::device::presets::device(device));
-    let agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
-    let mut cfg = RunConfig::default();
-    cfg.device = device;
-    let env = Environment::build(device, EnvKind::D3RandomWlan, 7);
-    let mut engine_store;
-    let mut server = Server::new(
-        env,
-        AutoScalePolicy::new(agent),
-        ServeConfig { run: cfg, models: vec!["mobilenet_v1", "mobilenet_v3"] },
-    );
-    if with_engine {
-        engine_store = match Engine::from_default_manifest() {
-            Ok(e) => e,
-            Err(_) => return (0.0, 0),
-        };
-        server = server.with_engine(&mut engine_store);
-    }
-    let t0 = std::time::Instant::now();
-    let m = server.serve(n);
-    (t0.elapsed().as_secs_f64(), m.n())
-}
+use autoscale::benchsuite::{print_report, run_e2e_suite};
 
 fn main() {
-    // Pure-simulation loop: this is the coordinator-side cost.
-    let (dt, n) = run_serving(3000, false);
-    println!(
-        "coordinator loop (simulated exec): {n} reqs in {dt:.2}s = {:.0} req/s ({:.1} us/req)",
-        n as f64 / dt,
-        dt / n as f64 * 1e6
+    let report = run_e2e_suite();
+    print_report(&report);
+    let sim = report
+        .entries
+        .iter()
+        .find(|e| e.name.contains("coordinator sim"))
+        .expect("the simulated-serving row always runs");
+    assert!(
+        sim.throughput_per_s.unwrap_or(0.0) > 1000.0,
+        "L3 must not be a bottleneck"
     );
-    assert!(n as f64 / dt > 1000.0, "L3 must not be a bottleneck");
-
-    // With real PJRT execution on the request path.
-    let (dt, n) = run_serving(200, true);
-    if n > 0 {
-        println!(
-            "serving with real PJRT compute:    {n} reqs in {dt:.2}s = {:.0} req/s ({:.2} ms/req)",
-            n as f64 / dt,
-            dt / n as f64 * 1e3
-        );
-    } else {
+    if report.entries.len() == 1 {
         println!("(artifacts not built; PJRT serving bench skipped)");
+    }
+    match report.write(Path::new(".")) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", report.file_name()),
     }
 }

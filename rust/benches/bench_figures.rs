@@ -1,22 +1,14 @@
-//! Figure-regeneration benchmark: runs every registered experiment in
-//! quick mode and times it — one bench row per paper table/figure, proving
-//! each regenerates end to end from a cold start.
+//! Figure-regeneration benchmark — a thin wrapper over
+//! [`autoscale::benchsuite::run_figures_suite`] (shared with the `bench`
+//! CLI subcommand): runs every registered experiment in quick mode and
+//! times it — one row per paper table/figure, proving each regenerates
+//! end to end from a cold start.
 
-use std::time::Instant;
-
-use autoscale::experiments;
+use autoscale::benchsuite::{print_report, run_figures_suite};
 
 fn main() {
-    println!("{:8} {:>10}  rows  experiment", "figure", "time");
-    let mut total = 0.0;
-    for e in experiments::registry() {
-        let t0 = Instant::now();
-        let tables = (e.run)(7, true);
-        let dt = t0.elapsed().as_secs_f64();
-        total += dt;
-        let rows: usize = tables.iter().map(|t| t.rows.len()).sum();
-        println!("{:8} {:>9.2}s {:>5}  {}", e.id, dt, rows, e.about);
-        assert!(rows > 0, "{} produced no rows", e.id);
-    }
-    println!("total: {total:.1}s for {} experiments", experiments::registry().len());
+    let report = run_figures_suite();
+    print_report(&report);
+    let total: f64 = report.entries.iter().map(|e| e.mean_s).sum();
+    println!("total: {total:.1}s for {} experiments", report.entries.len());
 }

@@ -1,102 +1,24 @@
-//! Fleet-simulator throughput bench: simulated requests/second through the
-//! full multi-device loop (arrivals → policy → physics → shared-cloud
-//! accounting), and the sharding speedup. Also asserts the determinism
-//! contract cheaply, since a bench that drifts run-to-run is useless.
-//!
-//! Besides the human-readable report, writes `BENCH_fleet.json` so the
-//! perf trajectory is machine-trackable PR over PR.
+//! Fleet-simulator throughput bench — a thin wrapper over
+//! [`autoscale::benchsuite::run_fleet_suite`], the same suite the `bench`
+//! CLI subcommand and the CI `bench-regression` job run, so this target
+//! can never drift from what CI measures. Reports simulated
+//! requests/second through the full multi-device loop plus the sharding
+//! speedup, asserts determinism, and writes `BENCH_fleet.json` (the
+//! machine-tracked perf trajectory) into the working directory.
 
-use autoscale::fleet::{run_fleet, FleetConfig};
-use autoscale::util::bench::{black_box, Bencher};
+use std::path::Path;
 
-fn cfg(devices: usize, requests: usize, shards: usize) -> FleetConfig {
-    FleetConfig {
-        devices,
-        requests_per_device: requests,
-        shards,
-        rate_hz: 4.0,
-        seed: 7,
-        policy: "autoscale".to_string(),
-        ..Default::default()
-    }
-}
-
-/// One measured configuration, destined for BENCH_fleet.json.
-struct JsonEntry {
-    name: String,
-    shards: usize,
-    mean_s: f64,
-    median_s: f64,
-    p95_s: f64,
-    requests_per_s: f64,
-}
-
-fn write_json(
-    entries: &[JsonEntry],
-    speedup: Option<f64>,
-    fingerprint: u64,
-) -> std::io::Result<()> {
-    let mut rows = String::new();
-    for (i, e) in entries.iter().enumerate() {
-        let sep = if i + 1 < entries.len() { "," } else { "" };
-        rows.push_str(&format!(
-            "    {{\"name\": \"{}\", \"shards\": {}, \"mean_s\": {:.6}, \
-             \"median_s\": {:.6}, \"p95_s\": {:.6}, \"requests_per_s\": {:.1}}}{}\n",
-            e.name, e.shards, e.mean_s, e.median_s, e.p95_s, e.requests_per_s, sep
-        ));
-    }
-    let speedup_field = match speedup {
-        Some(s) => format!("{s:.3}"),
-        None => "null".to_string(),
-    };
-    let json = format!(
-        "{{\n  \"bench\": \"fleet\",\n  \"entries\": [\n{rows}  ],\n  \
-         \"sharding_speedup\": {speedup_field},\n  \
-         \"fingerprint\": \"{fingerprint:016x}\"\n}}\n"
-    );
-    std::fs::write("BENCH_fleet.json", json)
-}
+use autoscale::benchsuite::{print_report, run_fleet_suite, sharding_speedup};
+use autoscale::util::bench::Bencher;
 
 fn main() {
-    // One fleet run is a heavyweight iteration; keep the sample budget low.
-    let b = Bencher::quick();
-    println!("{:40} {:>12} {:>12} {:>12}", "benchmark", "mean", "median", "p95");
-
-    let mut entries = Vec::new();
-    let mut medians = Vec::new();
-    for shards in [1usize, 4] {
-        let c = cfg(128, 25, shards);
-        let name = format!("fleet 128x25 shards={shards}");
-        let r = b.bench(&name, || {
-            black_box(run_fleet(black_box(&c)).unwrap());
-        });
-        println!("{}", r.report());
-        let reqs = (128 * 25) as f64;
-        println!("{:40} {:>10.0} requests/s simulated", "", reqs / r.median_s());
-        entries.push(JsonEntry {
-            name,
-            shards,
-            mean_s: r.mean_s(),
-            median_s: r.median_s(),
-            p95_s: r.p95_s(),
-            requests_per_s: reqs / r.median_s(),
-        });
-        medians.push(r.median_s());
-    }
-    let speedup = (medians.len() == 2).then(|| medians[0] / medians[1]);
-    if let Some(s) = speedup {
+    let report = run_fleet_suite(&Bencher::quick(), false);
+    print_report(&report);
+    if let Some(s) = sharding_speedup(&report) {
         println!("sharding speedup (1 -> 4 workers): {s:.2}x");
     }
-
-    // Determinism spot-check: identical config+seed, identical fingerprint.
-    let c = cfg(64, 20, 2);
-    let f1 = run_fleet(&c).unwrap().metrics.fingerprint();
-    let f2 = run_fleet(&c).unwrap().metrics.fingerprint();
-    assert_eq!(f1, f2, "fleet runs must be deterministic");
-    println!("fingerprint (64x20, shards=2): {f1:016x}");
-
-    match write_json(&entries, speedup, f1) {
-        Ok(()) => println!("wrote BENCH_fleet.json"),
-        Err(e) => eprintln!("could not write BENCH_fleet.json: {e}"),
+    match report.write(Path::new(".")) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", report.file_name()),
     }
 }

@@ -1,51 +1,16 @@
-//! Runtime benchmarks: PJRT artifact execution latency per model/precision
-//! (the real-compute anchor), XLA compile cost, and the simulator's
-//! per-inference step cost.
-//!
-//! Requires `make artifacts`.
+//! Runtime benchmarks — a thin wrapper over
+//! [`autoscale::benchsuite::run_models_suite`] (shared with the `bench`
+//! CLI subcommand): the simulator's per-inference step cost, plus PJRT
+//! artifact execution latency per model/precision when `make artifacts`
+//! has been run (those rows are optional).
 
-use autoscale::configsys::runconfig::EnvKind;
-use autoscale::coordinator::envs::Environment;
-use autoscale::exec::latency::RunContext;
-use autoscale::nn::zoo::by_name;
-use autoscale::runtime::Engine;
-use autoscale::types::{Action, DeviceId, Precision, ProcKind};
-use autoscale::util::bench::{black_box, fmt_time, Bencher};
+use autoscale::benchsuite::{print_report, run_models_suite};
+use autoscale::util::bench::Bencher;
 
 fn main() {
-    let b = Bencher::quick();
-    println!("{:40} {:>12} {:>12} {:>12}", "benchmark", "mean", "median", "p95");
-
-    // Simulator step cost (pure L3 path, no PJRT).
-    let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
-    let nn = by_name("mobilenet_v2").unwrap();
-    let ctx = RunContext::default();
-    let r = b.bench("simulator_run (mobilenet_v2)", || {
-        black_box(env.sim.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx));
-    });
-    println!("{}", r.report());
-
-    // Real PJRT execution per model class.
-    let Ok(mut engine) = Engine::from_default_manifest() else {
-        println!("(artifacts not built; skipping PJRT benches — run `make artifacts`)");
-        return;
-    };
-    for (model, prec) in [
-        ("mobilenet_v1", Precision::Fp32),
-        ("mobilenet_v1", Precision::Int8),
-        ("mobilenet_v3", Precision::Fp32),
-        ("inception_v1", Precision::Fp32),
-        ("mobilebert", Precision::Fp32),
-    ] {
-        // compile cost (first load) measured separately
-        let t0 = std::time::Instant::now();
-        engine.load(model, prec).unwrap();
-        let compile_s = t0.elapsed().as_secs_f64();
-        let mut seed = 0u64;
-        let r = b.bench(&format!("pjrt_execute {model}/{prec}"), || {
-            seed += 1;
-            black_box(engine.execute(model, prec, seed).unwrap());
-        });
-        println!("{}  (compile {})", r.report(), fmt_time(compile_s));
+    let report = run_models_suite(&Bencher::quick());
+    print_report(&report);
+    if report.entries.len() == 1 {
+        println!("(artifacts not built; PJRT benches skipped — run `make artifacts`)");
     }
 }

@@ -1,0 +1,310 @@
+//! The benchmark suites behind both `cargo bench` and the `bench` CLI
+//! subcommand.
+//!
+//! Each suite measures one layer through [`crate::util::bench`] and
+//! returns a [`SuiteReport`]; the `fleet` and `e2e` suites are the
+//! machine-tracked perf trajectory (`BENCH_fleet.json`,
+//! `BENCH_e2e.json` at the repo root — see the schema on
+//! [`SuiteReport::to_json`]) and gate CI through
+//! [`crate::util::bench::check_against`]. The five `cargo bench` targets
+//! (`harness = false`) are thin wrappers over these functions, so the
+//! suites can never drift from what CI builds and runs.
+//!
+//! Entry **names are the trajectory join keys**: keep them stable across
+//! PRs, and mark environment-dependent rows (PJRT artifacts) optional so
+//! their absence never fails the gate. Workload shapes are identical in
+//! quick and full mode — only sampling effort and the optional
+//! 100k-device scale point differ — so quick CI runs compare cleanly
+//! against any committed baseline.
+
+use crate::agent::qlearn::AutoScaleAgent;
+use crate::agent::state::{State, StateObs, STATE_CARDINALITY};
+use crate::configsys::runconfig::{EnvKind, RunConfig};
+use crate::coordinator::envs::Environment;
+use crate::coordinator::serve::{ServeConfig, Server};
+use crate::device::presets::device as preset;
+use crate::exec::latency::RunContext;
+use crate::experiments;
+use crate::fleet::{run_fleet, FleetConfig};
+use crate::interference::Interference;
+use crate::nn::zoo::by_name;
+use crate::policy::{action_catalogue, AutoScalePolicy};
+use crate::runtime::Engine;
+use crate::types::{Action, DeviceId, Precision, ProcKind};
+use crate::util::bench::{black_box, Bencher, SuiteEntry, SuiteReport};
+
+/// The fleet configuration every fleet bench row runs (seed 7, 4 Hz).
+fn fleet_cfg(devices: usize, requests: usize, shards: usize, policy: &str) -> FleetConfig {
+    FleetConfig {
+        devices,
+        requests_per_device: requests,
+        shards,
+        rate_hz: 4.0,
+        seed: 7,
+        policy: policy.to_string(),
+        ..Default::default()
+    }
+}
+
+/// Fleet-simulator throughput: simulated requests/second through the full
+/// multi-device loop (arrivals → policy → physics → shared-cloud
+/// accounting), the sharding speedup, and scale points at 1k and 10k
+/// devices (plus 100k in `full` mode). Also asserts the determinism
+/// contract cheaply — a bench that drifts run-to-run is useless — and
+/// records the digest in the report's `fingerprint`.
+pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
+    let mut report = SuiteReport::new("fleet");
+
+    for shards in [1usize, 4] {
+        let cfg = fleet_cfg(128, 25, shards, "autoscale");
+        let name = format!("fleet 128x25 shards={shards}");
+        let r = b.bench(&name, || {
+            black_box(run_fleet(black_box(&cfg)).unwrap());
+        });
+        report.entries.push(SuiteEntry::from_result(&r, Some((128 * 25) as f64)));
+    }
+
+    // Scale points are one-shot: an iteration is a whole fleet episode.
+    let cfg = fleet_cfg(1_000, 10, 8, "autoscale");
+    let r = Bencher::once("fleet 1k x10 autoscale shards=8", || {
+        black_box(run_fleet(&cfg).unwrap());
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some(10_000.0)));
+
+    // 10k devices run the dispatch-light fixed policy: the row measures
+    // the driver (scheduler, snapshots, physics), not 10k Q-tables.
+    let cfg = fleet_cfg(10_000, 5, 8, "best");
+    let r = Bencher::once("fleet 10k x5 best shards=8", || {
+        black_box(run_fleet(&cfg).unwrap());
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)));
+
+    if full {
+        let cfg = fleet_cfg(100_000, 2, 8, "best");
+        let r = Bencher::once("fleet 100k x2 best shards=8", || {
+            black_box(run_fleet(&cfg).unwrap());
+        });
+        report.entries.push(SuiteEntry::from_result(&r, Some(200_000.0)).optional());
+    }
+
+    // Determinism spot-check: identical config+seed, identical digest.
+    let cfg = fleet_cfg(64, 20, 2, "autoscale");
+    let f1 = run_fleet(&cfg).unwrap().metrics.fingerprint();
+    let f2 = run_fleet(&cfg).unwrap().metrics.fingerprint();
+    assert_eq!(f1, f2, "fleet runs must be deterministic");
+    report.fingerprint = Some(f1);
+    report
+}
+
+/// The 1 → 4 worker speedup implied by a fleet report's sampled pair
+/// (None until both rows exist).
+pub fn sharding_speedup(report: &SuiteReport) -> Option<f64> {
+    let m = |name: &str| {
+        report
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| e.median_s)
+    };
+    Some(m("fleet 128x25 shards=1")? / m("fleet 128x25 shards=4")?)
+}
+
+fn run_serving(n: usize, with_engine: bool) -> Option<usize> {
+    let dev = DeviceId::Mi8Pro;
+    let catalogue = action_catalogue(&preset(dev));
+    let agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
+    let mut cfg = RunConfig::default();
+    cfg.device = dev;
+    let env = Environment::build(dev, EnvKind::D3RandomWlan, 7);
+    let mut engine_store;
+    let mut server = Server::new(
+        env,
+        AutoScalePolicy::new(agent),
+        ServeConfig { run: cfg, models: vec!["mobilenet_v1", "mobilenet_v3"] },
+    );
+    if with_engine {
+        engine_store = match Engine::from_default_manifest() {
+            Ok(e) => e,
+            Err(_) => return None,
+        };
+        server = server.with_engine(&mut engine_store);
+    }
+    Some(server.serve(n).n())
+}
+
+/// End-to-end serving throughput: requests/second through the full
+/// coordinator loop (observe → select → simulate-execute → reward →
+/// update), with and without the runtime engine attached. The engine row
+/// is optional: it needs `make artifacts`.
+pub fn run_e2e_suite() -> SuiteReport {
+    let mut report = SuiteReport::new("e2e");
+
+    let n = 3000;
+    let r = Bencher::once("serve 3000 coordinator sim", || {
+        assert_eq!(run_serving(n, false), Some(n));
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some(n as f64)));
+
+    let n = 200;
+    let mut served = None;
+    let r = Bencher::once("serve 200 with runtime engine", || {
+        served = run_serving(n, true);
+    });
+    if served.is_some() {
+        report.entries.push(SuiteEntry::from_result(&r, Some(n as f64)).optional());
+    }
+    report
+}
+
+/// Agent micro-benchmarks — the §6.3 runtime-overhead claims: Q-table
+/// training step ~10.6 µs, trained-table selection ~7.3 µs, Q-table
+/// memory ~0.4 MB. Returns (report, selection µs, training-step µs) so
+/// callers can assert the paper bands.
+pub fn run_agent_suite(b: &Bencher) -> (SuiteReport, f64, f64) {
+    let mut report = SuiteReport::new("agent");
+    let catalogue = action_catalogue(&preset(DeviceId::Mi8Pro));
+    let mut agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
+    let nn = by_name("mobilenet_v3").unwrap();
+    let obs = StateObs::from_parts(nn, Interference::default(), -60.0, -55.0);
+    let s = State::discretize(&obs);
+
+    let r = b.bench("state_discretize", || {
+        black_box(State::discretize(black_box(&obs)));
+    });
+    report.entries.push(SuiteEntry::from_result(&r, None));
+
+    let r = b.bench("select_greedy (trained-table lookup)", || {
+        black_box(agent.select_greedy(black_box(s)));
+    });
+    let select_us = r.median_s() * 1e6;
+    report.entries.push(SuiteEntry::from_result(&r, None));
+
+    let r = b.bench("select+update (training step)", || {
+        let (a, _) = agent.select(black_box(s));
+        agent.update(s, a, black_box(0.5), s);
+    });
+    let train_us = r.median_s() * 1e6;
+    report.entries.push(SuiteEntry::from_result(&r, None));
+
+    let path = std::env::temp_dir().join("bench_qtable.txt");
+    let r = b.bench("qtable_save", || {
+        agent.table.save(&path).unwrap();
+    });
+    report.entries.push(SuiteEntry::from_result(&r, None));
+
+    (report, select_us, train_us)
+}
+
+/// The agent suite's memory headline: (catalogue size, Q-table KB).
+pub fn qtable_footprint() -> (usize, usize) {
+    let catalogue = action_catalogue(&preset(DeviceId::Mi8Pro));
+    let kb = catalogue.len() * STATE_CARDINALITY * 8 / 1024;
+    (catalogue.len(), kb)
+}
+
+/// Runtime benchmarks: the simulator's per-inference step cost, plus PJRT
+/// artifact execution latency per model/precision when artifacts are
+/// built (optional rows — they need `make artifacts`).
+pub fn run_models_suite(b: &Bencher) -> SuiteReport {
+    let mut report = SuiteReport::new("models");
+
+    let mut env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
+    let nn = by_name("mobilenet_v2").unwrap();
+    let ctx = RunContext::default();
+    let r = b.bench("simulator_run (mobilenet_v2)", || {
+        black_box(env.sim.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx));
+    });
+    report.entries.push(SuiteEntry::from_result(&r, None));
+
+    let Ok(mut engine) = Engine::from_default_manifest() else {
+        return report;
+    };
+    for (model, prec) in [
+        ("mobilenet_v1", Precision::Fp32),
+        ("mobilenet_v1", Precision::Int8),
+        ("mobilenet_v3", Precision::Fp32),
+        ("inception_v1", Precision::Fp32),
+        ("mobilebert", Precision::Fp32),
+    ] {
+        if engine.load(model, prec).is_err() {
+            continue;
+        }
+        let mut seed = 0u64;
+        let r = b.bench(&format!("pjrt_execute {model}/{prec}"), || {
+            seed += 1;
+            black_box(engine.execute(model, prec, seed).unwrap());
+        });
+        report.entries.push(SuiteEntry::from_result(&r, None).optional());
+    }
+    report
+}
+
+/// Figure-regeneration timings: every registered experiment in quick
+/// mode, one row per paper table/figure — proving each still regenerates
+/// end to end from a cold start (the row asserts non-empty output).
+pub fn run_figures_suite() -> SuiteReport {
+    let mut report = SuiteReport::new("figures");
+    for e in experiments::registry() {
+        let mut rows = 0usize;
+        let r = Bencher::once(&format!("figure {}", e.id), || {
+            let tables = (e.run)(7, true);
+            rows = tables.iter().map(|t| t.rows.len()).sum();
+        });
+        assert!(rows > 0, "{} produced no rows", e.id);
+        report.entries.push(SuiteEntry::from_result(&r, None));
+    }
+    report
+}
+
+/// Print a suite report in the standard bench layout.
+pub fn print_report(report: &SuiteReport) {
+    println!("== suite: {} ==", report.suite);
+    println!("{:44} {:>12} {:>12} {:>12}", "benchmark", "mean", "median", "p95");
+    for e in &report.entries {
+        println!("{}", e.report());
+    }
+    if let Some(fp) = report.fingerprint {
+        println!("fingerprint: {fp:016x}");
+    }
+    println!("calibration: {:.3} ms", report.calibration_s * 1e3);
+}
+
+/// A minimal-budget report used by tests: the fleet suite at any scale
+/// takes seconds, so tests exercise the report plumbing through the agent
+/// suite with a millisecond sampling budget.
+pub fn smoke_report() -> SuiteReport {
+    let b = Bencher { warmup_s: 0.01, measure_s: 0.02, max_samples: 3 };
+    run_agent_suite(&b).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agent_suite_produces_stable_row_names() {
+        let report = smoke_report();
+        assert_eq!(report.suite, "agent");
+        let names: Vec<&str> = report.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "state_discretize",
+                "select_greedy (trained-table lookup)",
+                "select+update (training step)",
+                "qtable_save",
+            ]
+        );
+        assert!(report.entries.iter().all(|e| e.mean_s > 0.0));
+        let json = report.to_json();
+        crate::util::json::Json::parse(&json).unwrap();
+    }
+
+    #[test]
+    fn qtable_footprint_is_in_the_paper_band() {
+        let (actions, kb) = qtable_footprint();
+        assert!(actions > 0);
+        // paper: ~0.4 MB for the full catalogue
+        assert!(kb > 16 && kb < 4096, "q-table {kb} KB");
+    }
+}

@@ -45,15 +45,29 @@ impl Environment {
 
     /// Assemble an environment from already-built scenario parts.
     pub fn from_scenario(dev: DeviceId, sc: ScenarioEnv, seed: u64) -> Environment {
+        Environment::from_scenario_shared(dev, &sc, seed)
+    }
+
+    /// Assemble an environment from a shared scenario handle without
+    /// consuming it — the fleet builds one [`ScenarioEnv`] per distinct
+    /// key (see [`crate::scenario::ScenarioCache`]) and instantiates every
+    /// device from it. Only the per-device mutable channel state is
+    /// copied; regime tables and trace recordings stay shared via `Arc`
+    /// inside the signal models.
+    pub fn from_scenario_shared(dev: DeviceId, sc: &ScenarioEnv, seed: u64) -> Environment {
         let mut sim = Simulator::new(
             device(dev),
             device(DeviceId::TabS6),
             device(DeviceId::CloudServer),
-            Link::new(LinkKind::Wlan, RssiProcess::from_model(sc.wlan)),
-            Link::new(LinkKind::P2p, RssiProcess::from_model(sc.p2p)),
+            Link::new(LinkKind::Wlan, RssiProcess::from_model(sc.wlan.clone())),
+            Link::new(LinkKind::P2p, RssiProcess::from_model(sc.p2p.clone())),
         );
         sim.seed(seed);
-        Environment { scenario: sc.key, sim, co_runner: sc.co_runner }
+        Environment {
+            scenario: sc.key.clone(),
+            sim,
+            co_runner: sc.co_runner.clone(),
+        }
     }
 
     /// Sample the observable state at virtual time `t_s`: the *sensor

@@ -69,6 +69,8 @@ pub struct CloudSnapshot {
 
 impl CloudSnapshot {
     /// Total pre-service delay a cloud request experiences right now.
+    /// Inlined: the fleet's request loop reads this twice per decision.
+    #[inline]
     pub fn wait_s(&self) -> f64 {
         self.queue_wait_s + self.batch_wait_s
     }
@@ -102,10 +104,12 @@ impl CloudModel {
     }
 
     /// The congestion state to expose for the coming epoch.
+    #[inline]
     pub fn snapshot(&self) -> CloudSnapshot {
         self.snapshot
     }
 
+    #[inline]
     pub fn backlog_mmacs(&self) -> f64 {
         self.backlog_mmacs
     }

@@ -37,6 +37,16 @@ pub struct FleetMetrics {
 }
 
 impl FleetMetrics {
+    /// A collector preallocated for `n` requests. The fleet sizes each
+    /// per-device collector at the device's quota, so steady-state pushes
+    /// never reallocate.
+    pub fn with_capacity(n: usize) -> FleetMetrics {
+        FleetMetrics {
+            latencies_s: Vec::with_capacity(n),
+            ..FleetMetrics::default()
+        }
+    }
+
     pub fn push(&mut self, r: &FleetRecord) {
         self.latencies_s.push(r.latency_s);
         self.total_energy_j += r.energy_j;

@@ -11,8 +11,9 @@
 //!
 //! Layout:
 //!
-//! * [`events`] — deterministic discrete-event queue (time + insertion-seq
-//!   ordering);
+//! * [`events`] — deterministic discrete-event queues (time +
+//!   insertion-seq ordering): a binary-heap reference and the bucketed,
+//!   reusable calendar queue the driver's hot path runs on;
 //! * [`arrivals`] — per-device request processes: Poisson, diurnal
 //!   (thinned nonhomogeneous Poisson), bursty (ON/OFF MMPP);
 //! * [`cloud`] — the shared backend: backlog queue, batching window,
@@ -39,6 +40,6 @@ pub mod sim;
 
 pub use arrivals::ArrivalProcess;
 pub use cloud::{CloudModel, CloudParams, CloudSnapshot};
-pub use events::EventQueue;
+pub use events::{CalendarQueue, EventQueue};
 pub use metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
 pub use sim::{run_fleet, ArrivalKind, FleetConfig};

@@ -1,5 +1,5 @@
 //! The sharded fleet driver: N devices, one shared cloud, deterministic
-//! parallel execution.
+//! parallel execution at 100k+ device scale.
 //!
 //! ## Execution model
 //!
@@ -16,15 +16,30 @@
 //! Because intra-epoch coupling flows only through the frozen snapshot,
 //! devices can be partitioned across worker threads freely: `--shards 8`
 //! and `--shards 1` produce bit-identical aggregate metrics. Each shard
-//! runs a real discrete-event loop (an [`EventQueue`] interleaving its
-//! devices' arrivals in time order); each device owns private RNG streams
-//! derived from (seed, device-id), never from thread identity.
+//! runs a real discrete-event loop (a reusable [`CalendarQueue`]
+//! interleaving its devices' arrivals in time order); each device owns
+//! private RNG streams derived from (seed, device-id), never from thread
+//! identity.
 //!
 //! The snapshot freeze is a fluid approximation: a request admitted
 //! mid-epoch sees the congestion measured at the epoch start (default
 //! epoch: 1 s). In exchange the fleet closes the loop the paper's
 //! single-device model cannot express — one device's offload decision
 //! degrades every other device's cloud latency one epoch later.
+//!
+//! ## Hot-path layout
+//!
+//! Device state is struct-of-arrays ([`FleetState`]): the scheduler walks
+//! a contiguous array of [`DeviceClock`]s (a few cache lines per device)
+//! instead of chasing per-device heap objects; policies live in an arena
+//! of instances built through [`PrototypeArena`] (clone-from-prototype
+//! once per preset, index thereafter); scenario data and per-preset
+//! action catalogues are shared via `Arc` handles instead of per-device
+//! clones ([`crate::scenario::ScenarioCache`]); model descriptors are
+//! resolved to `&'static NnDesc` once at construction, eliminating the
+//! per-request by-name lookup; and each shard worker reuses one
+//! preallocated [`CalendarQueue`] plus quota-sized measurement buffers,
+//! so the steady-state request loop performs no allocation.
 //!
 //! ## Policies
 //!
@@ -35,22 +50,25 @@
 //! future ones) through [`DecisionCtx::cloud`].
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::agent::reward::{reward, RewardParams};
-use crate::agent::state::{State, StateObs};
+use crate::agent::state::State;
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
 use crate::coordinator::envs::Environment;
 use crate::coordinator::serve::qos_for;
 use crate::exec::latency::RunContext;
-use crate::interference::Interference;
 use crate::nn::zoo::{by_name, NnDesc, ZOO};
-use crate::policy::{CatalogueScope, CloudCtx, DecisionCtx, Feedback, PolicySpec, ScalingPolicy};
+use crate::policy::{
+    CatalogueScope, CloudCtx, DecisionCtx, Feedback, PolicySpec, PrototypeArena, ScalingPolicy,
+};
+use crate::scenario::ScenarioCache;
 use crate::types::{Action, DeviceId, Measurement, Site};
 use crate::util::rng::Pcg64;
 
 use super::arrivals::ArrivalProcess;
 use super::cloud::{CloudModel, CloudParams, CloudSnapshot};
-use super::events::EventQueue;
+use super::events::CalendarQueue;
 use super::metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
 
 /// Request arrival shape shared by the fleet (each device gets its own
@@ -215,116 +233,45 @@ pub fn device_seed(seed: u64, i: usize) -> u64 {
     splitmix64(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
-/// One simulated device: environment + policy + arrival process + private
-/// RNG streams, all derived from (fleet seed, device id).
-struct DeviceSim {
-    env: Environment,
-    policy: Box<dyn ScalingPolicy>,
-    arrivals: ArrivalProcess,
-    rng: Pcg64,
-    /// Copy of the policy's action catalogue, passed back through every
-    /// [`DecisionCtx`].
-    catalogue: Vec<Action>,
-    models: Vec<&'static str>,
-    scenario: Scenario,
-    accuracy_target: f64,
-    agent: AgentParams,
+/// The arrival process device `i` runs — a pure function of (config, id).
+fn build_arrivals(cfg: &FleetConfig, i: usize) -> ArrivalProcess {
+    let r = cfg.rate_hz;
+    match cfg.arrival {
+        ArrivalKind::Poisson => ArrivalProcess::poisson(r),
+        ArrivalKind::Diurnal => {
+            // Golden-ratio phase spread so fleet peaks don't align.
+            let period = 240.0;
+            let phase = (i as f64 * 0.618_033_988_749_895).fract() * period;
+            ArrivalProcess::diurnal(r, 0.8, period, phase)
+        }
+        ArrivalKind::Bursty => {
+            // 8:0.1 ON/OFF rate ratio over 2 s bursts / 14 s lulls,
+            // normalized so the long-run mean is exactly rate_hz and
+            // arrival shapes stay comparable at the same --rate.
+            let k = (8.0 * 2.0 + 0.1 * 14.0) / 16.0;
+            ArrivalProcess::bursty(8.0 * r / k, 0.1 * r / k, 2.0, 14.0)
+        }
+    }
+}
+
+/// Per-device scheduling/accounting state — plain copyable data packed
+/// into one contiguous array, so the epoch scheduler reads a few cache
+/// lines per device instead of walking heap objects.
+#[derive(Clone, Copy, Debug)]
+struct DeviceClock {
     next_arrival_s: f64,
     /// Completion time of the previous request: requests are FIFO at the
     /// device, so this is both when the device frees up and when idle
     /// cooling started.
     last_done_s: f64,
-    served: usize,
-    quota: usize,
-    metrics: FleetMetrics,
+    served: u32,
+    quota: u32,
     /// Cloud traffic submitted this epoch (drained at the barrier).
     tally_jobs: u64,
     tally_macs_m: f64,
 }
 
-impl DeviceSim {
-    fn build(
-        cfg: &FleetConfig,
-        i: usize,
-        scenario: crate::scenario::ScenarioEnv,
-        models: &[&'static str],
-        prototypes: &mut HashMap<DeviceId, Box<dyn ScalingPolicy>>,
-    ) -> DeviceSim {
-        let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
-        let dseed = device_seed(cfg.seed, i);
-        let env = Environment::from_scenario(dev_id, scenario, dseed);
-        // Per-device policy through the shared registry. Compact catalogue
-        // scope: a dense learner per device at fleet scale must stay small
-        // (see compact_action_catalogue); the Opt builder overrides it with
-        // the full DVFS sweep it what-ifs.
-        //
-        // Expensive-but-stateless policies (the offline-trained predictors)
-        // advertise `clone_box`: the first device of each preset trains
-        // one instance, later devices of the same preset take a clone —
-        // still a pure function of (config, seed), so determinism and
-        // shard-invariance hold, without ~13k profiling runs per device.
-        let policy = match prototypes.get(&dev_id).and_then(|p| p.clone_box()) {
-            Some(clone) => clone,
-            None => {
-                let mut spec = PolicySpec::new(dev_id, dseed);
-                spec.agent = cfg.agent;
-                spec.scope = CatalogueScope::Compact;
-                spec.scenario = cfg.scenario;
-                spec.accuracy_target = cfg.accuracy_target;
-                // Predictor training keeps the PolicySpec defaults (the
-                // STATIC envs, 40 samples each) deliberately: offline
-                // profiling happens under controlled conditions, not in
-                // the deployment env — mirroring how the §3.3 comparators
-                // are trained in the paper.
-                let built = crate::policy::build(&cfg.policy, &spec)
-                    .expect("policy name is checked by FleetConfig::validate");
-                if let Some(proto) = built.clone_box() {
-                    prototypes.insert(dev_id, proto);
-                }
-                built
-            }
-        };
-        let catalogue = policy.catalogue().to_vec();
-        let r = cfg.rate_hz;
-        let arrivals = match cfg.arrival {
-            ArrivalKind::Poisson => ArrivalProcess::poisson(r),
-            ArrivalKind::Diurnal => {
-                // Golden-ratio phase spread so fleet peaks don't align.
-                let period = 240.0;
-                let phase = (i as f64 * 0.618_033_988_749_895).fract() * period;
-                ArrivalProcess::diurnal(r, 0.8, period, phase)
-            }
-            ArrivalKind::Bursty => {
-                // 8:0.1 ON/OFF rate ratio over 2 s bursts / 14 s lulls,
-                // normalized so the long-run mean is exactly rate_hz and
-                // arrival shapes stay comparable at the same --rate.
-                let k = (8.0 * 2.0 + 0.1 * 14.0) / 16.0;
-                ArrivalProcess::bursty(8.0 * r / k, 0.1 * r / k, 2.0, 14.0)
-            }
-        };
-        let mut d = DeviceSim {
-            env,
-            policy,
-            arrivals,
-            rng: Pcg64::with_stream(dseed, 2001),
-            catalogue,
-            models: models.to_vec(),
-            scenario: cfg.scenario,
-            accuracy_target: cfg.accuracy_target,
-            agent: cfg.agent,
-            next_arrival_s: 0.0,
-            last_done_s: 0.0,
-            served: 0,
-            quota: cfg.requests_per_device,
-            metrics: FleetMetrics::default(),
-            tally_jobs: 0,
-            tally_macs_m: 0.0,
-        };
-        d.arrivals.stagger_start(&mut d.rng);
-        d.next_arrival_s = d.arrivals.next_after(0.0, &mut d.rng);
-        d
-    }
-
+impl DeviceClock {
     fn done(&self) -> bool {
         self.served >= self.quota
     }
@@ -336,124 +283,218 @@ impl DeviceSim {
     fn next_service_s(&self) -> f64 {
         self.next_arrival_s.max(self.last_done_s)
     }
+}
 
-    /// Sensor observation at virtual time `t` (the shared noise model on
-    /// [`Environment::observe`]).
-    fn observe(&mut self, nn: &NnDesc, t_s: f64) -> (StateObs, Interference) {
-        self.env.observe(nn, t_s, &mut self.rng)
-    }
+/// Struct-of-arrays device state: one parallel array per concern, all
+/// indexed by device slot. `policies` is the arena of per-device policy
+/// instances (filled through [`PrototypeArena`]); `catalogues` holds one
+/// `Arc` handle per device onto a per-preset shared allocation.
+struct FleetState {
+    clocks: Vec<DeviceClock>,
+    envs: Vec<Environment>,
+    policies: Vec<Box<dyn ScalingPolicy>>,
+    arrivals: Vec<ArrivalProcess>,
+    rngs: Vec<Pcg64>,
+    catalogues: Vec<Arc<[Action]>>,
+    metrics: Vec<FleetMetrics>,
+}
 
-    /// Serve the request that arrived at `t_arrival` against the frozen
-    /// cloud snapshot. FIFO at the device: service starts when the previous
-    /// request finishes.
-    fn serve_request(&mut self, t_arrival: f64, cloud: &CloudSnapshot) {
-        let t_start = t_arrival.max(self.last_done_s);
-        let idle = t_start - self.last_done_s;
-        if idle > 0.0 {
-            // the SoC cools between requests
-            self.env.sim.thermal.advance(0.2, idle);
-        }
+/// Immutable request-loop parameters shared read-only by every shard.
+struct FleetShared {
+    /// Round-robin model descriptors, resolved once at construction — the
+    /// request loop never does a by-name zoo lookup.
+    models: Vec<&'static NnDesc>,
+    scenario: Scenario,
+    accuracy_target: f64,
+    agent: AgentParams,
+}
 
-        let nn = by_name(self.models[self.served % self.models.len()]).unwrap();
-        let qos = qos_for(self.scenario, nn);
+/// One worker's mutable window into the fleet arrays: device slots
+/// `[lo, lo + len)` of every parallel array, split shard-aligned so
+/// workers share nothing mutable.
+struct Shard<'a> {
+    clocks: &'a mut [DeviceClock],
+    envs: &'a mut [Environment],
+    policies: &'a mut [Box<dyn ScalingPolicy>],
+    arrivals: &'a mut [ArrivalProcess],
+    rngs: &'a mut [Pcg64],
+    catalogues: &'a [Arc<[Action]>],
+    metrics: &'a mut [FleetMetrics],
+}
 
-        let (obs, true_inter) = self.observe(nn, t_start);
-        let s = State::discretize(&obs);
-        // Decide against the frozen congestion snapshot: congestion-aware
-        // policies price cloud actions at the epoch's queueing delay and
-        // service slowdown through `DecisionCtx::cloud`.
-        let decision = {
-            let dctx = DecisionCtx {
-                obs: &obs,
-                state: s,
-                nn,
-                qos_s: qos,
-                accuracy_target: self.accuracy_target,
-                catalogue: &self.catalogue,
-                sim: &self.env.sim,
-                cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
-            };
-            self.policy.decide(&dctx)
-        };
-        let action = decision.action;
-
-        // Physics: true interference; shared-cloud congestion priced in.
-        let ctx = RunContext {
-            interference: true_inter,
-            thermal_cap: 1.0, // simulator applies its own thermal state
-            compute_factor: if action.site == Site::Cloud { cloud.slowdown } else { 1.0 },
-            remote_queue_s: if action.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
-        };
-        let m = self.env.sim.run(nn, action, &ctx);
-
-        // A request that timed out over a dead link never reached the
-        // backend, so it adds no cloud load.
-        if action.site == Site::Cloud && !m.remote_failed {
-            self.tally_jobs += 1;
-            self.tally_macs_m += nn.macs_m;
-        }
-
-        // Reward on the END-TO-END latency (device queue wait included):
-        // that is what the user experiences and what the agent must learn
-        // to keep inside the QoS budget.
-        let wait_s = t_start - t_arrival;
-        let m_user = Measurement { latency_s: wait_s + m.latency_s, ..m };
-        let rp = RewardParams {
-            alpha: self.agent.alpha,
-            beta: self.agent.beta,
-            qos_s: qos,
-            accuracy_req: self.accuracy_target,
-        };
-        let r = reward(&m_user, &rp);
-        if self.policy.is_learning() {
-            let t_done = t_start + m.latency_s;
-            let (obs_next, _) = self.observe(nn, t_done);
-            let s_next = State::discretize(&obs_next);
-            self.policy.feedback(&Feedback {
-                state: s,
-                next_state: s_next,
-                catalogue_idx: decision.catalogue_idx,
-                reward: r,
-            });
-        }
-
-        self.last_done_s = t_start + m.latency_s;
-        self.metrics.push(&FleetRecord {
-            action,
-            latency_s: m_user.latency_s,
-            energy_j: m.energy_true_j,
-            qos_target_s: qos,
-            accuracy: m.accuracy,
-            accuracy_target: self.accuracy_target,
-            remote_failed: m.remote_failed,
+/// Partition every parallel array into aligned chunks of `chunk` devices.
+fn split_shards(state: &mut FleetState, chunk: usize) -> Vec<Shard<'_>> {
+    let mut clocks = state.clocks.as_mut_slice();
+    let mut envs = state.envs.as_mut_slice();
+    let mut policies = state.policies.as_mut_slice();
+    let mut arrivals = state.arrivals.as_mut_slice();
+    let mut rngs = state.rngs.as_mut_slice();
+    let mut catalogues = state.catalogues.as_slice();
+    let mut metrics = state.metrics.as_mut_slice();
+    let mut out = Vec::new();
+    while !clocks.is_empty() {
+        let k = chunk.min(clocks.len());
+        let (c, rest) = std::mem::take(&mut clocks).split_at_mut(k);
+        clocks = rest;
+        let (e, rest) = std::mem::take(&mut envs).split_at_mut(k);
+        envs = rest;
+        let (p, rest) = std::mem::take(&mut policies).split_at_mut(k);
+        policies = rest;
+        let (a, rest) = std::mem::take(&mut arrivals).split_at_mut(k);
+        arrivals = rest;
+        let (r, rest) = std::mem::take(&mut rngs).split_at_mut(k);
+        rngs = rest;
+        let (cat, rest) = catalogues.split_at(k);
+        catalogues = rest;
+        let (m, rest) = std::mem::take(&mut metrics).split_at_mut(k);
+        metrics = rest;
+        out.push(Shard {
+            clocks: c,
+            envs: e,
+            policies: p,
+            arrivals: a,
+            rngs: r,
+            catalogues: cat,
+            metrics: m,
         });
     }
+    out
+}
+
+/// Serve the request that arrived at `t_arrival` on device `slot` against
+/// the frozen cloud snapshot. FIFO at the device: service starts when the
+/// previous request finishes. Operation-for-operation identical to the
+/// pre-refactor per-device loop — the reference-parity tests in
+/// `tests/fleet.rs` pin the fingerprints bit-exactly.
+fn serve_request(
+    shard: &mut Shard,
+    slot: usize,
+    t_arrival: f64,
+    cloud: &CloudSnapshot,
+    sh: &FleetShared,
+) {
+    let clock = &mut shard.clocks[slot];
+    let env = &mut shard.envs[slot];
+    let policy = &mut shard.policies[slot];
+    let rng = &mut shard.rngs[slot];
+
+    let t_start = t_arrival.max(clock.last_done_s);
+    let idle = t_start - clock.last_done_s;
+    if idle > 0.0 {
+        // the SoC cools between requests
+        env.sim.thermal.advance(0.2, idle);
+    }
+
+    let nn = sh.models[clock.served as usize % sh.models.len()];
+    let qos = qos_for(sh.scenario, nn);
+
+    // Sensor observation at service start (the shared noise model on
+    // [`Environment::observe`]).
+    let (obs, true_inter) = env.observe(nn, t_start, rng);
+    let s = State::discretize(&obs);
+    // Decide against the frozen congestion snapshot: congestion-aware
+    // policies price cloud actions at the epoch's queueing delay and
+    // service slowdown through `DecisionCtx::cloud`.
+    let decision = {
+        let dctx = DecisionCtx {
+            obs: &obs,
+            state: s,
+            nn,
+            qos_s: qos,
+            accuracy_target: sh.accuracy_target,
+            catalogue: &shard.catalogues[slot],
+            sim: &env.sim,
+            cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
+        };
+        policy.decide(&dctx)
+    };
+    let action = decision.action;
+
+    // Physics: true interference; shared-cloud congestion priced in.
+    let ctx = RunContext {
+        interference: true_inter,
+        thermal_cap: 1.0, // simulator applies its own thermal state
+        compute_factor: if action.site == Site::Cloud { cloud.slowdown } else { 1.0 },
+        remote_queue_s: if action.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
+    };
+    let m = env.sim.run(nn, action, &ctx);
+
+    // A request that timed out over a dead link never reached the
+    // backend, so it adds no cloud load.
+    if action.site == Site::Cloud && !m.remote_failed {
+        clock.tally_jobs += 1;
+        clock.tally_macs_m += nn.macs_m;
+    }
+
+    // Reward on the END-TO-END latency (device queue wait included):
+    // that is what the user experiences and what the agent must learn
+    // to keep inside the QoS budget.
+    let wait_s = t_start - t_arrival;
+    let m_user = Measurement { latency_s: wait_s + m.latency_s, ..m };
+    let rp = RewardParams {
+        alpha: sh.agent.alpha,
+        beta: sh.agent.beta,
+        qos_s: qos,
+        accuracy_req: sh.accuracy_target,
+    };
+    let r = reward(&m_user, &rp);
+    if policy.is_learning() {
+        let t_done = t_start + m.latency_s;
+        let (obs_next, _) = env.observe(nn, t_done, rng);
+        let s_next = State::discretize(&obs_next);
+        policy.feedback(&Feedback {
+            state: s,
+            next_state: s_next,
+            catalogue_idx: decision.catalogue_idx,
+            reward: r,
+        });
+    }
+
+    clock.last_done_s = t_start + m.latency_s;
+    shard.metrics[slot].push(&FleetRecord {
+        action,
+        latency_s: m_user.latency_s,
+        energy_j: m.energy_true_j,
+        qos_target_s: qos,
+        accuracy: m.accuracy,
+        accuracy_target: sh.accuracy_target,
+        remote_failed: m.remote_failed,
+    });
 }
 
 /// Run one epoch for a shard: a discrete-event loop interleaving the
-/// shard's devices in service-start order. Devices share no mutable state
-/// within an epoch, so this interleaving does not affect results (a
-/// per-device loop would be bit-identical) — it executes requests in
-/// chronological order, which any future intra-epoch cross-device
-/// coupling will require; see [`EventQueue`]. Requests whose service
-/// would start after `t_end` stay pending, so every request executes
-/// against a snapshot at most one epoch old — even when a device's FIFO
-/// is backed up far beyond its arrival epoch.
-fn run_epoch_shard(devices: &mut [DeviceSim], t_end: f64, cloud: &CloudSnapshot) {
-    let mut q: EventQueue<usize> = EventQueue::new();
-    for (slot, d) in devices.iter().enumerate() {
-        if !d.done() && d.next_service_s() < t_end {
-            q.push(d.next_service_s(), slot);
+/// shard's devices in service-start order on the worker's reusable
+/// [`CalendarQueue`]. Devices share no mutable state within an epoch, so
+/// this interleaving does not affect results (a per-device loop would be
+/// bit-identical) — it executes requests in chronological order, which
+/// any future intra-epoch cross-device coupling will require. Requests
+/// whose service would start after `t_end` stay pending, so every request
+/// executes against a snapshot at most one epoch old — even when a
+/// device's FIFO is backed up far beyond its arrival epoch.
+fn run_epoch_shard(
+    shard: &mut Shard,
+    queue: &mut CalendarQueue<u32>,
+    t_start: f64,
+    t_end: f64,
+    cloud: &CloudSnapshot,
+    sh: &FleetShared,
+) {
+    queue.reset(t_start, t_end - t_start, shard.clocks.len());
+    for (slot, c) in shard.clocks.iter().enumerate() {
+        if !c.done() && c.next_service_s() < t_end {
+            queue.push(c.next_service_s(), slot as u32);
         }
     }
-    while let Some(ev) = q.pop() {
-        let d = &mut devices[ev.event];
-        let t_arrival = d.next_arrival_s;
-        d.serve_request(t_arrival, cloud);
-        d.served += 1;
-        d.next_arrival_s = d.arrivals.next_after(t_arrival, &mut d.rng);
-        if !d.done() && d.next_service_s() < t_end {
-            q.push(d.next_service_s(), ev.event);
+    while let Some(ev) = queue.pop() {
+        let slot = ev.event as usize;
+        let t_arrival = shard.clocks[slot].next_arrival_s;
+        serve_request(shard, slot, t_arrival, cloud, sh);
+        let next = shard.arrivals[slot].next_after(t_arrival, &mut shard.rngs[slot]);
+        let clock = &mut shard.clocks[slot];
+        clock.served += 1;
+        clock.next_arrival_s = next;
+        if !clock.done() && clock.next_service_s() < t_end {
+            queue.push(clock.next_service_s(), ev.event);
         }
     }
 }
@@ -462,30 +503,86 @@ fn run_epoch_shard(devices: &mut [DeviceSim], t_end: f64, cloud: &CloudSnapshot)
 /// for identical `(cfg, seed)` regardless of `cfg.shards`.
 pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     cfg.validate()?;
-    let models: Vec<&'static str> = if cfg.models.is_empty() {
-        ZOO.iter().map(|d| d.name).collect()
+    let models: Vec<&'static NnDesc> = if cfg.models.is_empty() {
+        ZOO.iter().collect()
     } else {
-        cfg.models.clone()
+        cfg.models
+            .iter()
+            .map(|m| by_name(m).expect("model names are checked by FleetConfig::validate"))
+            .collect()
     };
+    let shared = FleetShared {
+        models,
+        scenario: cfg.scenario,
+        accuracy_target: cfg.accuracy_target,
+        agent: cfg.agent,
+    };
+
     // Single-threaded, device-id-order construction: prototype reuse for
     // clonable policies stays deterministic and shard-independent.
-    // Scenarios are built once per key and cloned per device — a
+    // Scenarios are built once per key and shared via `Arc` handles — a
     // trace:<path> fleet reads its file once, and an unreadable file is a
     // config error here rather than a panic mid-construction.
-    let mut prototypes: HashMap<DeviceId, Box<dyn ScalingPolicy>> = HashMap::new();
-    let mut scenarios: HashMap<String, crate::scenario::ScenarioEnv> = HashMap::new();
-    let mut devices: Vec<DeviceSim> = Vec::with_capacity(cfg.devices);
-    for i in 0..cfg.devices {
+    let n = cfg.devices;
+    let mut scenarios = ScenarioCache::new();
+    let mut arena = PrototypeArena::new(&cfg.policy);
+    let mut preset_catalogues: HashMap<DeviceId, Arc<[Action]>> = HashMap::new();
+    let mut state = FleetState {
+        clocks: Vec::with_capacity(n),
+        envs: Vec::with_capacity(n),
+        policies: Vec::with_capacity(n),
+        arrivals: Vec::with_capacity(n),
+        rngs: Vec::with_capacity(n),
+        catalogues: Vec::with_capacity(n),
+        metrics: Vec::with_capacity(n),
+    };
+    for i in 0..n {
         let key = cfg.device_scenario_key(i);
-        let sc = match scenarios.get(&key) {
-            Some(sc) => sc.clone(),
-            None => {
-                let sc = crate::scenario::build(&key)?;
-                scenarios.insert(key, sc.clone());
-                sc
-            }
-        };
-        devices.push(DeviceSim::build(cfg, i, sc, &models, &mut prototypes));
+        let sc = scenarios.get(&key)?;
+        let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
+        let dseed = device_seed(cfg.seed, i);
+        state.envs.push(Environment::from_scenario_shared(dev_id, &sc, dseed));
+
+        // Per-device policy through the prototype arena. Compact catalogue
+        // scope: a dense learner per device at fleet scale must stay small
+        // (see compact_action_catalogue); the Opt builder overrides it with
+        // the full DVFS sweep it what-ifs. Expensive-but-stateless policies
+        // (the offline-trained predictors) train once per preset inside the
+        // arena and clone thereafter — still a pure function of
+        // (config, seed), so determinism and shard-invariance hold, without
+        // ~13k profiling runs per device.
+        let mut spec = PolicySpec::new(dev_id, dseed);
+        spec.agent = cfg.agent;
+        spec.scope = CatalogueScope::Compact;
+        spec.scenario = cfg.scenario;
+        spec.accuracy_target = cfg.accuracy_target;
+        // Predictor training keeps the PolicySpec defaults (the STATIC
+        // envs, 40 samples each) deliberately: offline profiling happens
+        // under controlled conditions, not in the deployment env —
+        // mirroring how the §3.3 comparators are trained in the paper.
+        let policy = arena.build(&spec)?;
+        let catalogue = preset_catalogues
+            .entry(dev_id)
+            .or_insert_with(|| policy.catalogue().into())
+            .clone();
+        state.catalogues.push(catalogue);
+        state.policies.push(policy);
+
+        let mut rng = Pcg64::with_stream(dseed, 2001);
+        let mut arrivals = build_arrivals(cfg, i);
+        arrivals.stagger_start(&mut rng);
+        let next_arrival_s = arrivals.next_after(0.0, &mut rng);
+        state.arrivals.push(arrivals);
+        state.rngs.push(rng);
+        state.clocks.push(DeviceClock {
+            next_arrival_s,
+            last_done_s: 0.0,
+            served: 0,
+            quota: cfg.requests_per_device as u32,
+            tally_jobs: 0,
+            tally_macs_m: 0.0,
+        });
+        state.metrics.push(FleetMetrics::with_capacity(cfg.requests_per_device));
     }
     let mut cloud = CloudModel::new(cfg.cloud);
     let mut timeline = Vec::new();
@@ -494,9 +591,10 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     // arrival-limited makespan PLUS the service-limited one — a saturated
     // cloud can legitimately hold every request for up to max_backlog_s,
     // and device FIFOs serialize that wait.
-    let min_rate = devices
+    let min_rate = state
+        .arrivals
         .iter()
-        .map(|d| d.arrivals.mean_rate_hz())
+        .map(|a| a.mean_rate_hz())
         .fold(f64::INFINITY, f64::min);
     let per_request_service_bound_s = cfg.cloud.max_backlog_s + 60.0;
     let horizon_s = 20.0 * cfg.requests_per_device as f64 / min_rate
@@ -504,33 +602,41 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         + 100.0 * cfg.epoch_s;
     let max_epochs = (horizon_s / cfg.epoch_s).ceil() as usize;
 
-    let shards = cfg.shards.min(devices.len());
-    let chunk = (devices.len() + shards - 1) / shards;
+    let shards = cfg.shards.min(n);
+    let chunk = n.div_ceil(shards);
+    // One reusable scheduler per worker: reset each epoch, never freed.
+    let mut queues: Vec<CalendarQueue<u32>> = (0..shards).map(|_| CalendarQueue::new()).collect();
 
     let mut epoch_start = 0.0;
     for _ in 0..max_epochs {
-        if devices.iter().all(|d| d.done()) {
+        if state.clocks.iter().all(|c| c.done()) {
             break;
         }
         let t_end = epoch_start + cfg.epoch_s;
         let snapshot = cloud.snapshot();
-        if shards <= 1 {
-            run_epoch_shard(&mut devices, t_end, &snapshot);
+        let mut parts = split_shards(&mut state, chunk);
+        if parts.len() == 1 {
+            run_epoch_shard(&mut parts[0], &mut queues[0], epoch_start, t_end, &snapshot, &shared);
         } else {
+            let snap = &snapshot;
+            let sh = &shared;
             std::thread::scope(|scope| {
-                for part in devices.chunks_mut(chunk) {
-                    scope.spawn(move || run_epoch_shard(part, t_end, &snapshot));
+                for (part, queue) in parts.iter_mut().zip(queues.iter_mut()) {
+                    scope.spawn(move || {
+                        run_epoch_shard(part, queue, epoch_start, t_end, snap, sh);
+                    });
                 }
             });
         }
+        drop(parts);
         // Deterministic reduction: fold tallies in device-id order.
         let mut jobs = 0u64;
         let mut macs_m = 0.0;
-        for d in &mut devices {
-            jobs += d.tally_jobs;
-            macs_m += d.tally_macs_m;
-            d.tally_jobs = 0;
-            d.tally_macs_m = 0.0;
+        for c in &mut state.clocks {
+            jobs += c.tally_jobs;
+            macs_m += c.tally_macs_m;
+            c.tally_jobs = 0;
+            c.tally_macs_m = 0.0;
         }
         cloud.advance_epoch(jobs, macs_m, cfg.epoch_s);
         let s = cloud.snapshot();
@@ -543,16 +649,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         epoch_start = t_end;
     }
     anyhow::ensure!(
-        devices.iter().all(|d| d.done()),
+        state.clocks.iter().all(|c| c.done()),
         "fleet failed to progress: {max_epochs}-epoch runaway guard tripped \
          before all devices finished"
     );
 
     let mut metrics = FleetMetrics::default();
     let mut makespan_s = 0.0f64;
-    for d in &devices {
-        metrics.merge(&d.metrics);
-        makespan_s = makespan_s.max(d.last_done_s);
+    for (c, m) in state.clocks.iter().zip(&state.metrics) {
+        metrics.merge(m);
+        makespan_s = makespan_s.max(c.last_done_s);
     }
     Ok(FleetOutcome { metrics, cloud_timeline: timeline, makespan_s })
 }
@@ -626,7 +732,7 @@ mod tests {
     #[test]
     fn every_registry_policy_runs_at_fleet_scale() {
         // The open API's fleet contract: any registry key drives the fleet.
-        // Tiny quota; predictors train once per device preset (clone_box).
+        // Tiny quota; predictors train once per device preset (the arena).
         for key in crate::policy::names() {
             let cfg = FleetConfig {
                 devices: 3,

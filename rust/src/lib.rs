@@ -60,6 +60,18 @@
 //! device, and the policy sees a heavily penalized reward
 //! ([`agent::reward::REMOTE_FAILURE_PENALTY`]). The trace interchange
 //! format (CSV/JSONL, record/replay) is documented in [`scenario::trace`].
+//!
+//! ## Performance trajectory
+//!
+//! Benchmarks live in [`benchsuite`] (shared by `cargo bench` and the
+//! `bench` CLI subcommand). The **trajectory file convention**: each
+//! machine-tracked suite serializes to `BENCH_<suite>.json` at the repo
+//! root (`BENCH_fleet.json`, `BENCH_e2e.json`), schema documented on
+//! [`util::bench::SuiteReport::to_json`]. The committed files are the
+//! baseline the CI `bench-regression` job compares fresh runs against
+//! (calibration-normalized means, 25% tolerance via `bench --check`);
+//! re-commit them whenever a PR deliberately moves performance, so the
+//! repo history records the trajectory PR over PR.
 
 // Style-lint allowances (kept deliberately small): the codebase favours
 // explicit index loops and field-by-field config setup for readability in
@@ -75,6 +87,7 @@
 
 pub mod agent;
 pub mod baselines;
+pub mod benchsuite;
 pub mod configsys;
 pub mod coordinator;
 pub mod device;

@@ -3,13 +3,16 @@
 //! Subcommands (hand-rolled parser; offline cache has no clap):
 //!   figure <id> [--seed N] [--full]   regenerate one paper figure/table
 //!   all [--seed N] [--full]           regenerate every figure/table
-//!   serve [--device D] [--env E] [--scenario-env K] [--requests N]
+//!   serve [--device D] [--env E] [--scenario-env K|all] [--requests N]
 //!         [--policy P] [--seed N] [--runtime]
 //!                                     run the serving loop once and report
 //!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
-//!         [--scenario-env K|mix] [--policy P] [--arrival A] [--rate HZ]
+//!         [--scenario-env K|mix|all] [--policy P] [--arrival A] [--rate HZ]
 //!         [--epoch S] [--cloud-capacity MMACS] [--batch-window S]
 //!                                     multi-device shared-cloud simulation
+//!   bench [--quick|--full] [--suite S] [--out DIR] [--check DIR]
+//!         [--tolerance F]             run the bench suites, write BENCH_*.json,
+//!                                     optionally gate against a baseline
 //!   train [--device D] [--save PATH] [--seed N] [--full]
 //!                                     train an agent, optionally save Q-table
 //!   scenarios [--keys]               list the scenario registry
@@ -19,9 +22,11 @@
 //! The parser is strict: unknown `--flags` and malformed numbers are
 //! errors, not silently ignored. `--policy` accepts any key from the
 //! policy registry and `--scenario-env` any key from the scenario
-//! registry (plus `trace:<path>` playback, and `mix` for fleet-level
-//! heterogeneous assignment); errors and help text enumerate the
-//! registries so they can never go stale.
+//! registry (plus `trace:<path>` playback, `mix` for fleet-level
+//! heterogeneous assignment, and `all` — a batch smoke mode running every
+//! registered key in one process, which is what the CI scenario-smoke job
+//! drives); errors and help text enumerate the registries so they can
+//! never go stale.
 
 // Config structs are built field-by-field from parsed flags.
 #![allow(clippy::field_reassign_with_default)]
@@ -30,6 +35,7 @@ use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::str::FromStr;
 
+use autoscale::benchsuite;
 use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::serve::{ServeConfig, Server};
@@ -38,6 +44,7 @@ use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig};
 use autoscale::policy::{PolicySpec, ScalingPolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
+use autoscale::util::bench::{Bencher, SuiteReport};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -139,6 +146,51 @@ fn parse_env(s: &str) -> anyhow::Result<EnvKind> {
     EnvKind::from_name(s).ok_or_else(|| anyhow::anyhow!("unknown env '{s}' (S1-S5|D1-D3)"))
 }
 
+/// Build and run one single-device serving episode; returns the policy's
+/// display name, the resolved scenario key, and the episode metrics.
+fn serve_episode(
+    device: DeviceId,
+    env: EnvKind,
+    scenario_env: Option<&str>,
+    seed: u64,
+    policy_key: &str,
+    requests: usize,
+    runtime: bool,
+) -> anyhow::Result<(&'static str, String, autoscale::coordinator::metrics::EpisodeMetrics)> {
+    let mut run_cfg = RunConfig::default();
+    run_cfg.device = device;
+    run_cfg.env = env;
+    run_cfg.scenario_env = scenario_env.map(str::to_string);
+    run_cfg.seed = seed;
+    run_cfg.scenario = Scenario::NonStreaming;
+
+    // Any registry key works here; unknown names error with the key list
+    // straight from the registry.
+    let mut spec = PolicySpec::new(device, seed);
+    spec.scenario = run_cfg.scenario;
+    spec.accuracy_target = run_cfg.accuracy_target;
+    let policy = autoscale::policy::build(policy_key, &spec)?;
+
+    // `--scenario-env` (any scenario-registry key, or `trace:<path>`)
+    // overrides the legacy `--env` enum; both construct through the
+    // scenario registry.
+    let scenario_key = run_cfg.scenario_key();
+    let environment = Environment::build_keyed(device, &scenario_key, seed)?;
+    let mut engine_store;
+    let mut server = Server::new(
+        environment,
+        policy,
+        ServeConfig { run: run_cfg, models: vec![] },
+    );
+    if runtime {
+        engine_store = Engine::from_default_manifest()?;
+        println!("PJRT platform: {}", engine_store.platform());
+        server = server.with_engine(&mut engine_store);
+    }
+    let metrics = server.serve(requests);
+    Ok((server.policy.name(), scenario_key, metrics))
+}
+
 fn run(args: &[String]) -> anyhow::Result<()> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let rest = if args.is_empty() { args } else { &args[1..] };
@@ -216,39 +268,40 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let device = parse_device(cli.value("--device").unwrap_or("Mi8Pro"))?;
             let env = parse_env(cli.value("--env").unwrap_or("S1"))?;
             let requests: usize = cli.num("--requests", 200)?;
-            let mut run_cfg = RunConfig::default();
-            run_cfg.device = device;
-            run_cfg.env = env;
-            run_cfg.scenario_env = cli.value("--scenario-env").map(str::to_string);
-            run_cfg.seed = seed;
-            run_cfg.scenario = Scenario::NonStreaming;
+            let policy_key = cli.value("--policy").unwrap_or("autoscale");
+            let runtime = cli.switches.contains("--runtime");
 
-            // Any registry key works here; unknown names error with the
-            // key list straight from the registry.
-            let mut spec = PolicySpec::new(device, seed);
-            spec.scenario = run_cfg.scenario;
-            spec.accuracy_target = run_cfg.accuracy_target;
-            let policy =
-                autoscale::policy::build(cli.value("--policy").unwrap_or("autoscale"), &spec)?;
-
-            // `--scenario-env` (any scenario-registry key, or
-            // `trace:<path>`) overrides the legacy `--env` enum; both
-            // construct through the scenario registry.
-            let scenario_key = run_cfg.scenario_key();
-            let environment = Environment::build_keyed(device, &scenario_key, seed)?;
-            let mut engine_store;
-            let mut server = Server::new(
-                environment,
-                policy,
-                ServeConfig { run: run_cfg, models: vec![] },
-            );
-            if cli.switches.contains("--runtime") {
-                engine_store = Engine::from_default_manifest()?;
-                println!("PJRT platform: {}", engine_store.platform());
-                server = server.with_engine(&mut engine_store);
+            if cli.value("--scenario-env") == Some("all") {
+                // Batch smoke mode: every registered scenario key in ONE
+                // process — the CI scenario-smoke job drives this instead
+                // of one cargo invocation per key.
+                anyhow::ensure!(!runtime, "--scenario-env all does not combine with --runtime");
+                println!("== serve smoke: every registered scenario ({requests} requests each) ==");
+                for key in autoscale::scenario::names() {
+                    let (name, _, m) =
+                        serve_episode(device, env, Some(key), seed, policy_key, requests, false)?;
+                    println!(
+                        "{key:12} {name:16} PPW {:8.3} inf/J  lat {:7.2} ms  \
+                         QoS miss {:5.1}%  net fail {:5.1}%",
+                        m.ppw(),
+                        m.mean_latency_s() * 1e3,
+                        m.qos_violation_ratio() * 100.0,
+                        m.remote_failure_ratio() * 100.0,
+                    );
+                }
+                return Ok(());
             }
-            let metrics = server.serve(requests);
-            println!("policy       : {}", server.policy.name());
+
+            let (policy_name, scenario_key, metrics) = serve_episode(
+                device,
+                env,
+                cli.value("--scenario-env"),
+                seed,
+                policy_key,
+                requests,
+                runtime,
+            )?;
+            println!("policy       : {policy_name}");
             println!("device/env   : {device} / {scenario_key}");
             println!("requests     : {}", metrics.n());
             println!("PPW          : {:.3} inf/J", metrics.ppw());
@@ -329,6 +382,38 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 },
                 ..Default::default()
             };
+
+            if cfg.scenario_env.as_deref() == Some("all") {
+                // Batch smoke mode: the configured fleet once per
+                // registered scenario key plus the heterogeneous "mix",
+                // all in ONE process (CI's scenario-smoke job).
+                println!(
+                    "== fleet smoke: {} devices x {} requests per scenario ==",
+                    cfg.devices, cfg.requests_per_device
+                );
+                let keys: Vec<String> = autoscale::scenario::names()
+                    .into_iter()
+                    .map(str::to_string)
+                    .chain(std::iter::once("mix".to_string()))
+                    .collect();
+                for key in keys {
+                    let mut one = cfg.clone();
+                    one.scenario_env = Some(key.clone());
+                    let out = run_fleet(&one)?;
+                    let m = &out.metrics;
+                    println!(
+                        "{key:12} served {:6}  PPW {:8.3} inf/J  cloud {:5.1}%  \
+                         net fail {:5.1}%  fingerprint {:016x}",
+                        m.n(),
+                        m.ppw(),
+                        m.cloud_rate() * 100.0,
+                        m.remote_failure_ratio() * 100.0,
+                        m.fingerprint(),
+                    );
+                }
+                return Ok(());
+            }
+
             let wall = std::time::Instant::now();
             let out = run_fleet(&cfg)?;
             let wall_s = wall.elapsed().as_secs_f64();
@@ -385,6 +470,110 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "bench" => {
+            let cli = parse_cli(
+                cmd,
+                rest,
+                &["--suite", "--out", "--check", "--tolerance"],
+                &["--quick", "--full"],
+                0,
+            )?;
+            let quick = cli.switches.contains("--quick");
+            let full = cli.switches.contains("--full");
+            anyhow::ensure!(!(quick && full), "--quick and --full are mutually exclusive");
+            let suite = cli.value("--suite").unwrap_or("all");
+            let known = ["all", "fleet", "e2e", "agent", "models", "figures"];
+            anyhow::ensure!(
+                known.contains(&suite),
+                "unknown suite '{suite}' (known: {})",
+                known.join("|")
+            );
+            let out_dir = Path::new(cli.value("--out").unwrap_or("."));
+            let tolerance: f64 = cli.num("--tolerance", 0.25)?;
+            let wants = |k: &str| suite == "all" || suite == k;
+
+            // Read baselines BEFORE running — and before --out possibly
+            // overwrites them when both flags point at the same directory.
+            let mut baselines: Vec<(&'static str, String)> = Vec::new();
+            if let Some(dir) = cli.value("--check").map(Path::new) {
+                for key in ["fleet", "e2e"] {
+                    if wants(key) {
+                        let path = dir.join(format!("BENCH_{key}.json"));
+                        let text = std::fs::read_to_string(&path).map_err(|e| {
+                            anyhow::anyhow!("cannot read baseline {}: {e}", path.display())
+                        })?;
+                        baselines.push((key, text));
+                    }
+                }
+            }
+
+            let b = if quick { Bencher::quick() } else { Bencher::default() };
+            let mut tracked: Vec<SuiteReport> = Vec::new();
+            if wants("fleet") {
+                let report = benchsuite::run_fleet_suite(&b, full);
+                benchsuite::print_report(&report);
+                if let Some(s) = benchsuite::sharding_speedup(&report) {
+                    println!("sharding speedup (1 -> 4 workers): {s:.2}x");
+                }
+                println!();
+                tracked.push(report);
+            }
+            if wants("e2e") {
+                let report = benchsuite::run_e2e_suite();
+                benchsuite::print_report(&report);
+                println!();
+                tracked.push(report);
+            }
+            if wants("agent") {
+                let (report, select_us, train_us) = benchsuite::run_agent_suite(&b);
+                benchsuite::print_report(&report);
+                println!(
+                    "select {select_us:.2} us (paper 7.3 us), \
+                     train step {train_us:.2} us (paper 10.6 us)\n"
+                );
+            }
+            if wants("models") {
+                let report = benchsuite::run_models_suite(&b);
+                benchsuite::print_report(&report);
+                println!();
+            }
+            if wants("figures") {
+                let report = benchsuite::run_figures_suite();
+                benchsuite::print_report(&report);
+                println!();
+            }
+
+            // The machine-tracked suites seed/extend the perf trajectory.
+            for report in &tracked {
+                let path = report.write(out_dir)?;
+                println!("wrote {}", path.display());
+            }
+
+            // Regression gate against the committed baselines.
+            let mut failures = Vec::new();
+            for (key, text) in &baselines {
+                let report = tracked
+                    .iter()
+                    .find(|r| r.suite == *key)
+                    .expect("checked suites always run");
+                for msg in autoscale::util::bench::check_against(report, text, tolerance)? {
+                    failures.push(format!("[{key}] {msg}"));
+                }
+            }
+            if !failures.is_empty() {
+                for f in &failures {
+                    eprintln!("perf regression: {f}");
+                }
+                anyhow::bail!(
+                    "bench check failed: {} regression(s) against the committed baseline",
+                    failures.len()
+                );
+            }
+            if !baselines.is_empty() {
+                println!("bench check passed (tolerance {:.0}%)", tolerance * 100.0);
+            }
+            Ok(())
+        }
         "train" => {
             let cli = parse_cli(cmd, rest, &["--device", "--save", "--seed"], &["--full"], 0)?;
             let seed: u64 = cli.num("--seed", 7)?;
@@ -426,12 +615,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "autoscale — edge-inference execution scaling (AutoScale reproduction)\n\
-                 usage: autoscale <figure|all|serve|fleet|train|scenarios|runtime-check|list> [flags]\n\
+                 usage: autoscale <figure|all|serve|fleet|bench|train|scenarios|runtime-check|list> [flags]\n\
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
-                 \x20             --scenario-env K (see `autoscale scenarios`)\n\
+                 \x20             --scenario-env K (see `autoscale scenarios`; `all` = batch smoke)\n\
                  serve: --runtime\n\
                  fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
-                 \x20       --epoch S --cloud-capacity MMACS --batch-window S --scenario-env K|mix\n\
+                 \x20       --epoch S --cloud-capacity MMACS --batch-window S --scenario-env K|mix|all\n\
+                 bench: --quick|--full --suite all|fleet|e2e|agent|models|figures\n\
+                 \x20       --out DIR --check DIR --tolerance F (writes BENCH_<suite>.json)\n\
                  policies (--policy, serve & fleet):"
             );
             for e in autoscale::policy::REGISTRY {

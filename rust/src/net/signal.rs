@@ -18,6 +18,8 @@
 //!   trace (CSV/JSONL parsing and record/replay live in
 //!   `crate::scenario::trace`).
 
+use std::sync::Arc;
+
 use crate::util::rng::Pcg64;
 
 /// Physical clamp range for simulated RSSI (dBm).
@@ -66,11 +68,15 @@ impl Regime {
 
 /// Markov-modulated regime chain: dwell in a regime for a sampled time,
 /// then jump according to row-stochastic transition weights.
+///
+/// The regime table and transition matrix are shared via `Arc`: cloning a
+/// channel (one clone per device at fleet scale) copies only the chain's
+/// mutable position, not the static scenario data.
 #[derive(Clone, Debug)]
 pub struct MarkovChannel {
-    regimes: Vec<Regime>,
+    regimes: Arc<[Regime]>,
     /// Transition weights, one row per regime (need not be normalized).
-    transitions: Vec<Vec<f64>>,
+    transitions: Arc<[Vec<f64>]>,
     current: usize,
     next_switch_s: f64,
     started: bool,
@@ -88,8 +94,8 @@ impl MarkovChannel {
             assert!(row.iter().all(|w| *w >= 0.0) && row.iter().sum::<f64>() > 0.0);
         }
         MarkovChannel {
-            regimes,
-            transitions,
+            regimes: regimes.into(),
+            transitions: transitions.into(),
             current: 0,
             next_switch_s: 0.0,
             started: false,
@@ -147,9 +153,12 @@ pub struct TraceSample {
 
 /// Time-indexed signal trace, replayed piecewise-constant and looped with
 /// period `period_s`.
+///
+/// The sample buffer is shared via `Arc`: a fleet whose devices replay the
+/// same recorded trace clones a handle per device, not the recording.
 #[derive(Clone, Debug)]
 pub struct SignalTrace {
-    samples: Vec<TraceSample>,
+    samples: Arc<[TraceSample]>,
     period_s: f64,
 }
 
@@ -176,7 +185,7 @@ impl SignalTrace {
             samples.last().unwrap().t_s < period_s || samples.len() == 1,
             "trace period {period_s} must exceed the last timestamp"
         );
-        Ok(SignalTrace { samples, period_s })
+        Ok(SignalTrace { samples: samples.into(), period_s })
     }
 
     /// Loop with one trailing inter-sample gap after the last sample (the

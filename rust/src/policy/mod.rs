@@ -53,7 +53,7 @@ pub use predictors::{
     collect_dataset, features, fit_classifier, fit_regression, ClassifierPolicy, ClsModel,
     RegModel, RegressionPolicy, Sample,
 };
-pub use registry::{build, is_known, names, CatalogueScope, PolicySpec, REGISTRY};
+pub use registry::{build, is_known, names, CatalogueScope, PolicySpec, PrototypeArena, REGISTRY};
 pub use rl::AutoScalePolicy;
 
 /// Everything a policy may consult for one decision. The hosts (server,

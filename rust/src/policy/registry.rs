@@ -4,6 +4,8 @@
 //! error that enumerates the registry, so the help text can never go
 //! stale.
 
+use std::collections::HashMap;
+
 use crate::agent::qlearn::AutoScaleAgent;
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
 use crate::device::presets::device;
@@ -201,6 +203,52 @@ pub fn is_known(key: &str) -> bool {
     REGISTRY.iter().any(|e| e.key == key)
 }
 
+/// Prototype-backed builder for hosts that construct *many* instances of
+/// one policy key (the fleet builds one per device). Expensive but
+/// stateless policies — those advertising [`ScalingPolicy::clone_box`],
+/// i.e. the offline-trained predictors — are built once per device preset
+/// and cloned from that prototype thereafter; stateful learners and
+/// seeded policies are built fresh on every call, so RNG streams are
+/// never duplicated across devices.
+///
+/// The arena is a pure function of its call sequence: hosts that iterate
+/// devices in id order get deterministic, shard-invariant construction.
+pub struct PrototypeArena {
+    key: String,
+    prototypes: HashMap<DeviceId, Box<dyn ScalingPolicy>>,
+}
+
+impl PrototypeArena {
+    /// An arena for policy registry key `key` (validated on first build).
+    pub fn new(key: &str) -> PrototypeArena {
+        PrototypeArena { key: key.to_string(), prototypes: HashMap::new() }
+    }
+
+    /// The registry key this arena builds.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Build (or clone-from-prototype) one policy instance for `spec`;
+    /// `spec.device` selects the prototype slot.
+    pub fn build(&mut self, spec: &PolicySpec) -> anyhow::Result<Box<dyn ScalingPolicy>> {
+        if let Some(clone) = self.prototypes.get(&spec.device).and_then(|p| p.clone_box()) {
+            return Ok(clone);
+        }
+        let built = build(&self.key, spec)?;
+        if let Some(proto) = built.clone_box() {
+            self.prototypes.insert(spec.device, proto);
+        }
+        Ok(built)
+    }
+
+    /// How many per-preset prototypes are resident (0 for policies that
+    /// cannot be cloned).
+    pub fn prototype_count(&self) -> usize {
+        self.prototypes.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +302,30 @@ mod tests {
             let p = build(key, &spec).unwrap();
             assert_eq!(p.clone_box().is_some(), clonable, "{key}");
         }
+    }
+
+    #[test]
+    fn arena_clones_stateless_prototypes_and_rebuilds_learners() {
+        let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        spec.train_envs = vec![EnvKind::S1NoVariance];
+        spec.train_per_env = 6;
+        // Predictors: one training run per preset, clones thereafter.
+        let mut arena = PrototypeArena::new("lr");
+        arena.build(&spec).unwrap();
+        assert_eq!(arena.prototype_count(), 1);
+        arena.build(&spec).unwrap();
+        assert_eq!(arena.prototype_count(), 1, "same preset reuses the prototype");
+        spec.device = DeviceId::GalaxyS10e;
+        arena.build(&spec).unwrap();
+        assert_eq!(arena.prototype_count(), 2, "new preset trains a new prototype");
+        // Learners: never cached, every device gets a fresh instance.
+        let mut arena = PrototypeArena::new("autoscale");
+        arena.build(&spec).unwrap();
+        arena.build(&spec).unwrap();
+        assert_eq!(arena.prototype_count(), 0);
+        assert_eq!(arena.key(), "autoscale");
+        // Unknown keys surface the registry error on first build.
+        assert!(PrototypeArena::new("warp-drive").build(&spec).is_err());
     }
 
     #[test]

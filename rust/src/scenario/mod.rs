@@ -35,7 +35,7 @@ pub mod trace;
 use crate::interference::CoRunner;
 use crate::net::SignalModel;
 
-pub use registry::{build, is_known, is_valid_key, names, ScenarioEntry, REGISTRY};
+pub use registry::{build, is_known, is_valid_key, names, ScenarioCache, ScenarioEntry, REGISTRY};
 
 /// One assembled scenario: everything environment construction needs
 /// beyond the device preset and the seed.

@@ -9,6 +9,9 @@
 //! `trace:<path>` builds a playback scenario from a trace file at run
 //! time.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::interference::CoRunner;
 use crate::net::{MarkovChannel, Regime, SignalModel};
 
@@ -208,6 +211,43 @@ pub fn is_valid_key(key: &str) -> bool {
     is_known(key) || key.strip_prefix("trace:").is_some_and(|p| !p.is_empty())
 }
 
+/// Build-once cache of shared scenario handles for hosts that embed many
+/// devices (the fleet): each distinct key is built exactly once — a
+/// `trace:<path>` fleet reads its file once — and handed out as an
+/// `Arc<ScenarioEnv>` instead of being cloned per device. Combined with
+/// the `Arc`-shared tables inside [`SignalModel`], per-device environment
+/// construction copies only the mutable channel state.
+#[derive(Default)]
+pub struct ScenarioCache {
+    cache: HashMap<String, Arc<ScenarioEnv>>,
+}
+
+impl ScenarioCache {
+    pub fn new() -> ScenarioCache {
+        ScenarioCache::default()
+    }
+
+    /// The shared handle for `key`, building it on first request. Errors
+    /// (unknown key, unreadable trace file) surface on that first request.
+    pub fn get(&mut self, key: &str) -> anyhow::Result<Arc<ScenarioEnv>> {
+        if let Some(sc) = self.cache.get(key) {
+            return Ok(Arc::clone(sc));
+        }
+        let sc = Arc::new(build(key)?);
+        self.cache.insert(key.to_string(), Arc::clone(&sc));
+        Ok(sc)
+    }
+
+    /// Number of distinct scenarios built so far.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +299,19 @@ mod tests {
             SignalModel::Trace(t) => assert_eq!(t.samples().len(), 8),
             other => panic!("expected trace playback, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn cache_builds_each_key_once_and_shares_handles() {
+        let mut cache = ScenarioCache::new();
+        assert!(cache.is_empty());
+        let a = cache.get("S1").unwrap();
+        let b = cache.get("S1").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "repeat keys must share one handle");
+        assert_eq!(cache.len(), 1);
+        cache.get("deadzone").unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get("warp-zone").is_err());
     }
 
     #[test]

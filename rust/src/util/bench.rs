@@ -1,10 +1,19 @@
 //! Criterion-style measurement loop (the offline cache has no `criterion`).
 //! Warms up, runs timed batches until a target measurement time, and reports
 //! mean / median / p95 with outlier-robust statistics. All `cargo bench`
-//! targets (`harness = false`) use this.
+//! targets (`harness = false`) and the `bench` CLI subcommand use this via
+//! [`crate::benchsuite`].
+//!
+//! Machine-readable trajectory: a [`SuiteReport`] serializes one suite's
+//! rows plus a machine-speed [`calibrate`] anchor to `BENCH_<suite>.json`
+//! (schema documented on [`SuiteReport::to_json`]), and [`check_against`]
+//! gates CI by comparing a fresh run against a committed baseline with
+//! calibration-normalized means.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 /// One benchmark's collected samples (seconds per iteration).
@@ -105,10 +114,239 @@ impl Bencher {
     }
 }
 
+impl Bencher {
+    /// Measure one single execution of `f` — for heavyweight iterations
+    /// (multi-second fleet episodes) where repeated sampling would blow
+    /// the wall-clock budget. One sample, one iteration.
+    pub fn once<F: FnOnce()>(name: &str, f: F) -> BenchResult {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        BenchResult { name: name.to_string(), samples_s: vec![dt], iters_per_sample: 1 }
+    }
+}
+
 /// Prevent the optimizer from deleting a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Machine-speed anchor written into every suite report: the best-of-3
+/// wall time of a fixed integer workload (FNV-folding 4M values).
+/// Regression checks normalize mean times by the calibration ratio, so a
+/// baseline recorded on one machine stays comparable on a faster or
+/// slower one.
+pub fn calibrate() -> f64 {
+    fn one() -> f64 {
+        use super::hash::{fnv1a_fold, FNV_OFFSET};
+        let t = Instant::now();
+        let mut h = FNV_OFFSET;
+        for i in 0..4_000_000u64 {
+            h = fnv1a_fold(h, i);
+        }
+        black_box(h);
+        t.elapsed().as_secs_f64()
+    }
+    (0..3).map(|_| one()).fold(f64::INFINITY, f64::min)
+}
+
+/// One measured row of a bench suite, destined for `BENCH_<suite>.json`.
+/// Names must stay stable across PRs — they are the join key the
+/// regression gate matches baseline entries on.
+#[derive(Clone, Debug)]
+pub struct SuiteEntry {
+    pub name: String,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub samples: usize,
+    /// Work-rate companion metric (requests/s, inferences/s) when the row
+    /// has a natural unit count.
+    pub throughput_per_s: Option<f64>,
+    /// Required rows gate CI; optional rows (artifact- or
+    /// environment-dependent) may be absent without failing `--check`.
+    pub required: bool,
+}
+
+impl SuiteEntry {
+    /// Build from a measurement; `units_per_iter` adds a throughput
+    /// column (e.g. requests simulated per iteration).
+    pub fn from_result(r: &BenchResult, units_per_iter: Option<f64>) -> SuiteEntry {
+        SuiteEntry {
+            name: r.name.clone(),
+            mean_s: r.mean_s(),
+            median_s: r.median_s(),
+            p95_s: r.p95_s(),
+            samples: r.samples_s.len(),
+            throughput_per_s: units_per_iter.map(|u| u / r.median_s()),
+            required: true,
+        }
+    }
+
+    /// Mark the row environment-dependent: its absence never fails a
+    /// baseline check.
+    pub fn optional(mut self) -> SuiteEntry {
+        self.required = false;
+        self
+    }
+
+    /// One human-readable report line (mean / median / p95 + throughput).
+    pub fn report(&self) -> String {
+        let thr = match self.throughput_per_s {
+            Some(t) => format!("  {t:>12.0}/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:44} {:>12} {:>12} {:>12}{}",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            fmt_time(self.p95_s),
+            thr,
+        )
+    }
+}
+
+/// A full suite's results plus the machine-speed calibration anchor —
+/// the unit the PR-over-PR perf trajectory is recorded in.
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    /// Suite slug: the `<suite>` in `BENCH_<suite>.json`.
+    pub suite: &'static str,
+    pub calibration_s: f64,
+    pub entries: Vec<SuiteEntry>,
+    /// Determinism digest of a fixed reference run (fleet suite only).
+    pub fingerprint: Option<u64>,
+}
+
+impl SuiteReport {
+    /// An empty report for `suite`, calibrated on this machine.
+    pub fn new(suite: &'static str) -> SuiteReport {
+        SuiteReport {
+            suite,
+            calibration_s: calibrate(),
+            entries: Vec::new(),
+            fingerprint: None,
+        }
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.suite)
+    }
+
+    /// Serialize to the trajectory schema:
+    ///
+    /// ```json
+    /// {
+    ///   "schema": 2,
+    ///   "bench": "<suite>",
+    ///   "calibration_s": <seconds of the fixed calibration workload>,
+    ///   "entries": [
+    ///     {"name": "...", "mean_s": ..., "median_s": ..., "p95_s": ...,
+    ///      "samples": N, "throughput_per_s": ... | null,
+    ///      "required": true | false}
+    ///   ],
+    ///   "fingerprint": "<16-hex determinism digest>" | null
+    /// }
+    /// ```
+    ///
+    /// Entry names are plain ASCII without quotes/backslashes, so the
+    /// hand-rolled writer needs no escaping.
+    pub fn to_json(&self) -> String {
+        let mut rows = String::new();
+        for (i, e) in self.entries.iter().enumerate() {
+            let sep = if i + 1 < self.entries.len() { "," } else { "" };
+            let thr = match e.throughput_per_s {
+                Some(t) => format!("{t:.1}"),
+                None => "null".to_string(),
+            };
+            rows.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {:.9}, \"median_s\": {:.9}, \
+                 \"p95_s\": {:.9}, \"samples\": {}, \"throughput_per_s\": {}, \
+                 \"required\": {}}}{}\n",
+                e.name, e.mean_s, e.median_s, e.p95_s, e.samples, thr, e.required, sep
+            ));
+        }
+        let fp = match self.fingerprint {
+            Some(f) => format!("\"{f:016x}\""),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\n  \"schema\": 2,\n  \"bench\": \"{}\",\n  \
+             \"calibration_s\": {:.9},\n  \"entries\": [\n{}  ],\n  \
+             \"fingerprint\": {}\n}}\n",
+            self.suite, self.calibration_s, rows, fp
+        )
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir`; returns the path written.
+    pub fn write(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Compare a fresh suite run against a committed baseline JSON document.
+///
+/// Mean times are normalized by each side's `calibration_s` before
+/// comparing, so the gate tracks *relative* performance across machines:
+/// a required baseline entry regresses when
+/// `cur.mean/cur.cal > base.mean/base.cal * (1 + tolerance)`.
+/// Returns the human-readable regression messages (empty = pass).
+/// Malformed baselines are an error; baseline entries marked
+/// `"required": false` may be absent from the current run without
+/// failing; entries new in the current run are ignored (they become
+/// baseline rows when the JSON is next committed).
+pub fn check_against(
+    current: &SuiteReport,
+    baseline_json: &str,
+    tolerance: f64,
+) -> anyhow::Result<Vec<String>> {
+    let base = Json::parse(baseline_json)?;
+    let base_cal = base
+        .get("calibration_s")
+        .and_then(Json::as_f64)
+        .filter(|c| *c > 0.0)
+        .unwrap_or(current.calibration_s);
+    let entries = base
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("baseline has no entries array"))?;
+    let mut failures = Vec::new();
+    for b in entries {
+        let name = b
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("baseline entry without a name"))?;
+        let required = b.get("required").and_then(Json::as_bool).unwrap_or(true);
+        let base_mean = b
+            .get("mean_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("baseline entry '{name}' without mean_s"))?;
+        let Some(cur) = current.entries.iter().find(|e| e.name == name) else {
+            if required {
+                failures.push(format!(
+                    "required bench '{name}' missing from the current run"
+                ));
+            }
+            continue;
+        };
+        let base_norm = base_mean / base_cal;
+        let cur_norm = cur.mean_s / current.calibration_s.max(1e-12);
+        if cur_norm > base_norm * (1.0 + tolerance) {
+            failures.push(format!(
+                "'{name}' regressed: {} -> {} (normalized {:.2}x over baseline, \
+                 tolerance {:.0}%)",
+                fmt_time(base_mean),
+                fmt_time(cur.mean_s),
+                cur_norm / base_norm,
+                tolerance * 100.0
+            ));
+        }
+    }
+    Ok(failures)
 }
 
 #[cfg(test)]
@@ -132,5 +370,132 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with("ms"));
         assert!(fmt_time(2e-6).ends_with("us"));
         assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn once_records_a_single_sample() {
+        let r = Bencher::once("single", || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.samples_s.len(), 1);
+        assert_eq!(r.iters_per_sample, 1);
+        assert!(r.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn calibration_is_positive_and_roughly_stable() {
+        let a = calibrate();
+        let b = calibrate();
+        assert!(a > 0.0 && b > 0.0);
+        // Best-of-3 on a fixed workload: the two anchors should agree
+        // within an order of magnitude even on a noisy machine.
+        assert!(a / b < 10.0 && b / a < 10.0, "calibration unstable: {a} vs {b}");
+    }
+
+    fn sample_report() -> SuiteReport {
+        SuiteReport {
+            suite: "fleet",
+            calibration_s: 0.010,
+            entries: vec![
+                SuiteEntry {
+                    name: "fleet 128x25 shards=1".to_string(),
+                    mean_s: 0.5,
+                    median_s: 0.5,
+                    p95_s: 0.6,
+                    samples: 5,
+                    throughput_per_s: Some(6400.0),
+                    required: true,
+                },
+                SuiteEntry {
+                    name: "serve with engine".to_string(),
+                    mean_s: 0.2,
+                    median_s: 0.2,
+                    p95_s: 0.3,
+                    samples: 3,
+                    throughput_per_s: None,
+                    required: false,
+                },
+            ],
+            fingerprint: Some(0xdead_beef),
+        }
+    }
+
+    #[test]
+    fn suite_json_round_trips_through_the_parser() {
+        let report = sample_report();
+        let parsed = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("fleet"));
+        assert_eq!(parsed.get("schema").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            parsed.get("fingerprint").unwrap().as_str(),
+            Some("00000000deadbeef")
+        );
+        let entries = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("mean_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(entries[0].get("required").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            entries[0].get("throughput_per_s").unwrap().as_f64(),
+            Some(6400.0)
+        );
+        assert_eq!(entries[1].get("required").unwrap().as_bool(), Some(false));
+        assert_eq!(report.file_name(), "BENCH_fleet.json");
+    }
+
+    #[test]
+    fn check_passes_identical_and_faster_runs() {
+        let report = sample_report();
+        let baseline = report.to_json();
+        assert!(check_against(&report, &baseline, 0.25).unwrap().is_empty());
+        let mut faster = report.clone();
+        faster.entries[0].mean_s = 0.2;
+        assert!(check_against(&faster, &baseline, 0.25).unwrap().is_empty());
+    }
+
+    #[test]
+    fn check_flags_regressions_and_missing_required_entries() {
+        let report = sample_report();
+        let baseline = report.to_json();
+        let mut slower = report.clone();
+        slower.entries[0].mean_s = 0.8; // 1.6x over a 25% gate
+        let fails = check_against(&slower, &baseline, 0.25).unwrap();
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("regressed"), "{}", fails[0]);
+
+        // Dropping the optional entry is fine; dropping the required one
+        // is suite rot and must fail.
+        let mut pruned = report.clone();
+        pruned.entries.remove(1);
+        assert!(check_against(&pruned, &baseline, 0.25).unwrap().is_empty());
+        let mut rotted = report.clone();
+        rotted.entries.remove(0);
+        let fails = check_against(&rotted, &baseline, 0.25).unwrap();
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("missing"), "{}", fails[0]);
+    }
+
+    #[test]
+    fn check_normalizes_by_calibration_across_machines() {
+        let report = sample_report();
+        let baseline = report.to_json();
+        // A machine 2x slower overall: raw means doubled, calibration
+        // doubled too — normalized, nothing regressed.
+        let mut slow_machine = report.clone();
+        slow_machine.calibration_s = 0.020;
+        for e in &mut slow_machine.entries {
+            e.mean_s *= 2.0;
+        }
+        assert!(check_against(&slow_machine, &baseline, 0.25).unwrap().is_empty());
+        // Same slow machine but the fleet row got 2x slower on top: fails.
+        slow_machine.entries[0].mean_s *= 2.0;
+        let fails = check_against(&slow_machine, &baseline, 0.25).unwrap();
+        assert_eq!(fails.len(), 1);
+    }
+
+    #[test]
+    fn check_rejects_malformed_baselines() {
+        let report = sample_report();
+        assert!(check_against(&report, "not json", 0.25).is_err());
+        assert!(check_against(&report, "{\"entries\": 3}", 0.25).is_err());
     }
 }

@@ -1,0 +1,308 @@
+//! Minimal JSON reader for the bench trajectory files (`BENCH_*.json`).
+//!
+//! The offline cache has no `serde`, and the only JSON this crate reads is
+//! the schema it writes itself (see [`crate::util::bench::SuiteReport`]),
+//! so this is a small strict recursive-descent parser over the full JSON
+//! grammar — objects, arrays, strings with the standard escapes, numbers,
+//! booleans, null — with descriptive errors. It is a *reader*: emission
+//! stays with the hand-formatted writers, which control layout.
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Key/value pairs in document order (duplicate keys keep the first).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(
+            pos == bytes.len(),
+            "trailing characters after JSON document at byte {pos}"
+        );
+        Ok(value)
+    }
+
+    /// Object field lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, ch: u8) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        *pos < bytes.len() && bytes[*pos] == ch,
+        "expected '{}' at byte {} of JSON document",
+        ch as char,
+        *pos
+    );
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(bytes, pos);
+    anyhow::ensure!(*pos < bytes.len(), "unexpected end of JSON document");
+    match bytes[*pos] {
+        b'{' => parse_object(bytes, pos),
+        b'[' => parse_array(bytes, pos),
+        b'"' => Ok(Json::Str(parse_string(bytes, pos)?)),
+        b't' => parse_literal(bytes, pos, "true", Json::Bool(true)),
+        b'f' => parse_literal(bytes, pos, "false", Json::Bool(false)),
+        b'n' => parse_literal(bytes, pos, "null", Json::Null),
+        _ => parse_number(bytes, pos),
+    }
+}
+
+fn parse_literal(
+    bytes: &[u8],
+    pos: &mut usize,
+    word: &str,
+    value: Json,
+) -> anyhow::Result<Json> {
+    anyhow::ensure!(
+        bytes[*pos..].starts_with(word.as_bytes()),
+        "malformed literal at byte {} (expected '{word}')",
+        *pos
+    );
+    *pos += word.len();
+    Ok(value)
+}
+
+fn parse_object(bytes: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    expect(bytes, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if *pos < bytes.len() && bytes[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect(bytes, pos, b':')?;
+        let value = parse_value(bytes, pos)?;
+        if !fields.iter().any(|f: &(String, Json)| f.0 == key) {
+            fields.push((key, value));
+        }
+        skip_ws(bytes, pos);
+        anyhow::ensure!(*pos < bytes.len(), "unterminated JSON object");
+        match bytes[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            other => anyhow::bail!(
+                "expected ',' or '}}' in object at byte {} (got '{}')",
+                *pos,
+                other as char
+            ),
+        }
+    }
+}
+
+fn parse_array(bytes: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    expect(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if *pos < bytes.len() && bytes[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        anyhow::ensure!(*pos < bytes.len(), "unterminated JSON array");
+        match bytes[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            other => anyhow::bail!(
+                "expected ',' or ']' in array at byte {} (got '{}')",
+                *pos,
+                other as char
+            ),
+        }
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        anyhow::ensure!(*pos < bytes.len(), "unterminated JSON string");
+        match bytes[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < bytes.len(), "unterminated escape sequence");
+                let esc = bytes[*pos];
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        anyhow::ensure!(
+                            *pos + 4 <= bytes.len(),
+                            "truncated \\u escape in JSON string"
+                        );
+                        let hex = std::str::from_utf8(&bytes[*pos..*pos + 4])
+                            .map_err(|_| anyhow::anyhow!("non-ASCII \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow::anyhow!("invalid \\u escape '{hex}'"))?;
+                        *pos += 4;
+                        // Surrogate pairs are not emitted by our writers;
+                        // map unpaired surrogates to the replacement char.
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    other => anyhow::bail!("unknown escape '\\{}'", other as char),
+                }
+            }
+            _ => {
+                // Copy one UTF-8 scalar (multi-byte sequences intact).
+                let start = *pos;
+                let s = std::str::from_utf8(&bytes[start..])
+                    .map_err(|_| anyhow::anyhow!("invalid UTF-8 in JSON string"))?;
+                let ch = s.chars().next().unwrap();
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    anyhow::ensure!(*pos > start, "expected a JSON value at byte {start}");
+    let text = std::str::from_utf8(&bytes[start..*pos]).expect("ASCII number bytes");
+    let num: f64 = text
+        .parse()
+        .map_err(|_| anyhow::anyhow!("malformed number '{text}' at byte {start}"))?;
+    Ok(Json::Num(num))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_bench_schema_shape() {
+        let doc = r#"{
+  "schema": 1,
+  "bench": "fleet",
+  "calibration_s": 0.0123,
+  "entries": [
+    {"name": "fleet 128x25 shards=1", "mean_s": 0.25, "required": true},
+    {"name": "fleet 10k", "mean_s": 1.5, "required": false}
+  ],
+  "fingerprint": null
+}"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("fleet"));
+        assert_eq!(v.get("fingerprint"), Some(&Json::Null));
+        let entries = v.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(
+            entries[0].get("name").unwrap().as_str(),
+            Some("fleet 128x25 shards=1")
+        );
+        assert_eq!(entries[1].get("required").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parses_escapes_and_nested_values() {
+        let v = Json::parse(r#"{"a": "x\n\"y\"A", "b": [1, -2.5e-3, true]}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("x\n\"y\"A"));
+        let b = v.get("b").unwrap().as_arr().unwrap();
+        assert_eq!(b[1].as_f64(), Some(-2.5e-3));
+        assert_eq!(b[2].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]extra",
+            "{\"a\" 1}",
+            "{\"a\": nul}",
+            "\"unterminated",
+            "[1 2]",
+            "{} {}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_keep_the_first() {
+        let v = Json::parse(r#"{"k": 1, "k": 2}"#).unwrap();
+        assert_eq!(v.get("k").unwrap().as_f64(), Some(1.0));
+    }
+}

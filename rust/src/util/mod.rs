@@ -1,11 +1,13 @@
 //! Foundation utilities built from scratch for the offline environment:
 //! PRNG (no `rand`), statistics, a virtual clock, a mini property-testing
-//! harness (no `proptest`), a benchmark timer (no `criterion`) and report
-//! helpers.
+//! harness (no `proptest`), a benchmark timer with machine-readable
+//! trajectory output (no `criterion`), a minimal JSON reader (no `serde`)
+//! and report helpers.
 
 pub mod bench;
 pub mod clock;
 pub mod hash;
+pub mod json;
 pub mod ptest;
 pub mod report;
 pub mod rng;

@@ -1,15 +1,374 @@
 //! Fleet-level integration tests: the determinism contract (identical
-//! aggregates across seeds-runs and shard layouts, at 1,000-device scale)
-//! and the closed congestion loop (a scarce shared cloud pushes
-//! congestion-aware agents back toward local execution).
+//! aggregates across seeds-runs and shard layouts, at 1,000-device scale),
+//! bit-exact parity of the struct-of-arrays/calendar-queue driver against
+//! an embedded pre-refactor reference loop, and the closed congestion loop
+//! (a scarce shared cloud pushes congestion-aware agents back toward local
+//! execution).
 
 use autoscale::configsys::runconfig::EnvKind;
-use autoscale::fleet::{run_fleet, CloudParams, FleetConfig};
+use autoscale::fleet::sim::device_seed;
+use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig};
+use autoscale::util::rng::Pcg64;
+
+/// The fleet driver as it stood before the 100k-scale overhaul (per-device
+/// heap objects, per-device `ScenarioEnv` clones, binary-heap event queue,
+/// fresh allocations per epoch), kept verbatim as an executable
+/// specification. `run_fleet` must reproduce its fingerprints bit-exactly:
+/// the refactor changed the memory layout and the scheduler, never the
+/// simulated physics, the RNG streams, or the order of floating-point
+/// operations.
+mod reference {
+    use std::collections::HashMap;
+
+    use autoscale::agent::reward::{reward, RewardParams};
+    use autoscale::agent::state::State;
+    use autoscale::coordinator::envs::Environment;
+    use autoscale::coordinator::serve::qos_for;
+    use autoscale::exec::latency::RunContext;
+    use autoscale::fleet::sim::device_seed;
+    use autoscale::fleet::{
+        ArrivalKind, ArrivalProcess, CloudModel, CloudSnapshot, EventQueue, FleetConfig,
+        FleetMetrics, FleetRecord,
+    };
+    use autoscale::nn::zoo::{by_name, NnDesc, ZOO};
+    use autoscale::policy::{
+        CatalogueScope, CloudCtx, DecisionCtx, Feedback, PolicySpec, ScalingPolicy,
+    };
+    use autoscale::types::{Action, DeviceId, Measurement, Site};
+    use autoscale::util::rng::Pcg64;
+
+    struct RefDevice {
+        env: Environment,
+        policy: Box<dyn ScalingPolicy>,
+        arrivals: ArrivalProcess,
+        rng: Pcg64,
+        catalogue: Vec<Action>,
+        models: Vec<&'static str>,
+        next_arrival_s: f64,
+        last_done_s: f64,
+        served: usize,
+        quota: usize,
+        metrics: FleetMetrics,
+        tally_jobs: u64,
+        tally_macs_m: f64,
+    }
+
+    impl RefDevice {
+        fn build(
+            cfg: &FleetConfig,
+            i: usize,
+            scenario: autoscale::scenario::ScenarioEnv,
+            models: &[&'static str],
+            prototypes: &mut HashMap<DeviceId, Box<dyn ScalingPolicy>>,
+        ) -> RefDevice {
+            let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
+            let dseed = device_seed(cfg.seed, i);
+            let env = Environment::from_scenario(dev_id, scenario, dseed);
+            let policy = match prototypes.get(&dev_id).and_then(|p| p.clone_box()) {
+                Some(clone) => clone,
+                None => {
+                    let mut spec = PolicySpec::new(dev_id, dseed);
+                    spec.agent = cfg.agent;
+                    spec.scope = CatalogueScope::Compact;
+                    spec.scenario = cfg.scenario;
+                    spec.accuracy_target = cfg.accuracy_target;
+                    let built = autoscale::policy::build(&cfg.policy, &spec).unwrap();
+                    if let Some(proto) = built.clone_box() {
+                        prototypes.insert(dev_id, proto);
+                    }
+                    built
+                }
+            };
+            let catalogue = policy.catalogue().to_vec();
+            let r = cfg.rate_hz;
+            let arrivals = match cfg.arrival {
+                ArrivalKind::Poisson => ArrivalProcess::poisson(r),
+                ArrivalKind::Diurnal => {
+                    let period = 240.0;
+                    let phase = (i as f64 * 0.618_033_988_749_895).fract() * period;
+                    ArrivalProcess::diurnal(r, 0.8, period, phase)
+                }
+                ArrivalKind::Bursty => {
+                    let k = (8.0 * 2.0 + 0.1 * 14.0) / 16.0;
+                    ArrivalProcess::bursty(8.0 * r / k, 0.1 * r / k, 2.0, 14.0)
+                }
+            };
+            let mut d = RefDevice {
+                env,
+                policy,
+                arrivals,
+                rng: Pcg64::with_stream(dseed, 2001),
+                catalogue,
+                models: models.to_vec(),
+                next_arrival_s: 0.0,
+                last_done_s: 0.0,
+                served: 0,
+                quota: cfg.requests_per_device,
+                metrics: FleetMetrics::default(),
+                tally_jobs: 0,
+                tally_macs_m: 0.0,
+            };
+            d.arrivals.stagger_start(&mut d.rng);
+            d.next_arrival_s = d.arrivals.next_after(0.0, &mut d.rng);
+            d
+        }
+
+        fn done(&self) -> bool {
+            self.served >= self.quota
+        }
+
+        fn next_service_s(&self) -> f64 {
+            self.next_arrival_s.max(self.last_done_s)
+        }
+
+        fn serve_request(&mut self, cfg: &FleetConfig, t_arrival: f64, cloud: &CloudSnapshot) {
+            let t_start = t_arrival.max(self.last_done_s);
+            let idle = t_start - self.last_done_s;
+            if idle > 0.0 {
+                self.env.sim.thermal.advance(0.2, idle);
+            }
+
+            let nn: &'static NnDesc = by_name(self.models[self.served % self.models.len()])
+                .unwrap();
+            let qos = qos_for(cfg.scenario, nn);
+
+            let (obs, true_inter) = self.env.observe(nn, t_start, &mut self.rng);
+            let s = State::discretize(&obs);
+            let decision = {
+                let dctx = DecisionCtx {
+                    obs: &obs,
+                    state: s,
+                    nn,
+                    qos_s: qos,
+                    accuracy_target: cfg.accuracy_target,
+                    catalogue: &self.catalogue,
+                    sim: &self.env.sim,
+                    cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
+                };
+                self.policy.decide(&dctx)
+            };
+            let action = decision.action;
+
+            let ctx = RunContext {
+                interference: true_inter,
+                thermal_cap: 1.0,
+                compute_factor: if action.site == Site::Cloud { cloud.slowdown } else { 1.0 },
+                remote_queue_s: if action.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
+            };
+            let m = self.env.sim.run(nn, action, &ctx);
+
+            if action.site == Site::Cloud && !m.remote_failed {
+                self.tally_jobs += 1;
+                self.tally_macs_m += nn.macs_m;
+            }
+
+            let wait_s = t_start - t_arrival;
+            let m_user = Measurement { latency_s: wait_s + m.latency_s, ..m };
+            let rp = RewardParams {
+                alpha: cfg.agent.alpha,
+                beta: cfg.agent.beta,
+                qos_s: qos,
+                accuracy_req: cfg.accuracy_target,
+            };
+            let r = reward(&m_user, &rp);
+            if self.policy.is_learning() {
+                let t_done = t_start + m.latency_s;
+                let (obs_next, _) = self.env.observe(nn, t_done, &mut self.rng);
+                let s_next = State::discretize(&obs_next);
+                self.policy.feedback(&Feedback {
+                    state: s,
+                    next_state: s_next,
+                    catalogue_idx: decision.catalogue_idx,
+                    reward: r,
+                });
+            }
+
+            self.last_done_s = t_start + m.latency_s;
+            self.metrics.push(&FleetRecord {
+                action,
+                latency_s: m_user.latency_s,
+                energy_j: m.energy_true_j,
+                qos_target_s: qos,
+                accuracy: m.accuracy,
+                accuracy_target: cfg.accuracy_target,
+                remote_failed: m.remote_failed,
+            });
+        }
+    }
+
+    fn run_epoch(cfg: &FleetConfig, devices: &mut [RefDevice], t_end: f64, cloud: &CloudSnapshot) {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        for (slot, d) in devices.iter().enumerate() {
+            if !d.done() && d.next_service_s() < t_end {
+                q.push(d.next_service_s(), slot);
+            }
+        }
+        while let Some(ev) = q.pop() {
+            let d = &mut devices[ev.event];
+            let t_arrival = d.next_arrival_s;
+            d.serve_request(cfg, t_arrival, cloud);
+            d.served += 1;
+            d.next_arrival_s = d.arrivals.next_after(t_arrival, &mut d.rng);
+            if !d.done() && d.next_service_s() < t_end {
+                q.push(d.next_service_s(), ev.event);
+            }
+        }
+    }
+
+    /// The pre-refactor `run_fleet`, single-sharded (shard count never
+    /// changed results). Returns (fingerprint, total energy bits, n).
+    pub fn run(cfg: &FleetConfig) -> (u64, u64, usize) {
+        let models: Vec<&'static str> = if cfg.models.is_empty() {
+            ZOO.iter().map(|d| d.name).collect()
+        } else {
+            cfg.models.clone()
+        };
+        let mut prototypes: HashMap<DeviceId, Box<dyn ScalingPolicy>> = HashMap::new();
+        let mut scenarios: HashMap<String, autoscale::scenario::ScenarioEnv> = HashMap::new();
+        let mut devices: Vec<RefDevice> = Vec::with_capacity(cfg.devices);
+        for i in 0..cfg.devices {
+            let key = cfg.device_scenario_key(i);
+            let sc = match scenarios.get(&key) {
+                Some(sc) => sc.clone(),
+                None => {
+                    let sc = autoscale::scenario::build(&key).unwrap();
+                    scenarios.insert(key, sc.clone());
+                    sc
+                }
+            };
+            devices.push(RefDevice::build(cfg, i, sc, &models, &mut prototypes));
+        }
+        let mut cloud = CloudModel::new(cfg.cloud);
+
+        let min_rate = devices
+            .iter()
+            .map(|d| d.arrivals.mean_rate_hz())
+            .fold(f64::INFINITY, f64::min);
+        let per_request_service_bound_s = cfg.cloud.max_backlog_s + 60.0;
+        let horizon_s = 20.0 * cfg.requests_per_device as f64 / min_rate
+            + cfg.requests_per_device as f64 * per_request_service_bound_s
+            + 100.0 * cfg.epoch_s;
+        let max_epochs = (horizon_s / cfg.epoch_s).ceil() as usize;
+
+        let mut epoch_start = 0.0;
+        for _ in 0..max_epochs {
+            if devices.iter().all(|d| d.done()) {
+                break;
+            }
+            let t_end = epoch_start + cfg.epoch_s;
+            let snapshot = cloud.snapshot();
+            run_epoch(cfg, &mut devices, t_end, &snapshot);
+            let mut jobs = 0u64;
+            let mut macs_m = 0.0;
+            for d in &mut devices {
+                jobs += d.tally_jobs;
+                macs_m += d.tally_macs_m;
+                d.tally_jobs = 0;
+                d.tally_macs_m = 0.0;
+            }
+            cloud.advance_epoch(jobs, macs_m, cfg.epoch_s);
+            epoch_start = t_end;
+        }
+        assert!(devices.iter().all(|d| d.done()), "reference loop stalled");
+
+        let mut metrics = FleetMetrics::default();
+        for d in &devices {
+            metrics.merge(&d.metrics);
+        }
+        (metrics.fingerprint(), metrics.total_energy_j().to_bits(), metrics.n())
+    }
+}
+
+/// The parity pin: the overhauled driver must reproduce the pre-refactor
+/// loop bit-exactly across policies (fixed, learning, state-machine,
+/// oracle), environments (static, stochastic D3, heterogeneous mix) and
+/// arrival shapes.
+#[test]
+fn refactored_driver_matches_pre_refactor_reference_bit_exactly() {
+    let base = FleetConfig {
+        devices: 12,
+        requests_per_device: 6,
+        rate_hz: 2.0,
+        seed: 42,
+        ..Default::default()
+    };
+    let cases: Vec<FleetConfig> = vec![
+        FleetConfig { policy: "best".to_string(), ..base.clone() },
+        FleetConfig {
+            policy: "autoscale".to_string(),
+            env: EnvKind::D3RandomWlan,
+            arrival: ArrivalKind::Bursty,
+            ..base.clone()
+        },
+        FleetConfig {
+            policy: "hysteresis".to_string(),
+            scenario_env: Some("mix".to_string()),
+            arrival: ArrivalKind::Diurnal,
+            ..base.clone()
+        },
+        FleetConfig {
+            policy: "cloud".to_string(),
+            models: vec!["resnet50", "mobilebert"],
+            ..base.clone()
+        },
+        FleetConfig {
+            policy: "opt".to_string(),
+            devices: 6,
+            requests_per_device: 4,
+            env: EnvKind::S5WeakP2p,
+            ..base.clone()
+        },
+    ];
+    for cfg in cases {
+        let (ref_fp, ref_energy_bits, ref_n) = reference::run(&cfg);
+        for shards in [1usize, 3] {
+            let mut c = cfg.clone();
+            c.shards = shards;
+            let out = run_fleet(&c).unwrap();
+            assert_eq!(out.metrics.n(), ref_n, "n ({}, shards={shards})", cfg.policy);
+            assert_eq!(
+                out.metrics.fingerprint(),
+                ref_fp,
+                "fingerprint diverged from the pre-refactor reference \
+                 (policy {}, shards {shards})",
+                cfg.policy
+            );
+            assert_eq!(
+                out.metrics.total_energy_j().to_bits(),
+                ref_energy_bits,
+                "energy fold diverged (policy {}, shards {shards})",
+                cfg.policy
+            );
+        }
+    }
+}
+
+/// The mix assignment must remain a pure function of the per-device seed
+/// stream — shared scenario handles must not change which scenario a
+/// device draws.
+#[test]
+fn mix_assignment_matches_per_device_seed_draws() {
+    let cfg = FleetConfig {
+        scenario_env: Some("mix".to_string()),
+        seed: 99,
+        ..Default::default()
+    };
+    let keys = autoscale::scenario::names();
+    for i in 0..64 {
+        let mut rng = Pcg64::with_stream(device_seed(cfg.seed, i), 3001);
+        let expect = keys[rng.below(keys.len())];
+        assert_eq!(
+            cfg.device_scenario_key(i),
+            expect,
+            "device {i} must draw its mix scenario from stream 3001 of its seed"
+        );
+    }
+}
 
 #[test]
 fn thousand_device_fleet_is_deterministic_across_shards() {
     // The CLI default is 1000 x 100; the test pins the same contract at
-    // 1000 x 10 to keep the suite fast.
+    // 1000 x 10 to keep the suite fast — across 1, 2 and 8 workers.
     let mut cfg = FleetConfig {
         devices: 1000,
         requests_per_device: 10,
@@ -21,30 +380,31 @@ fn thousand_device_fleet_is_deterministic_across_shards() {
     };
     cfg.shards = 1;
     let a = run_fleet(&cfg).unwrap();
-    cfg.shards = 8;
-    let b = run_fleet(&cfg).unwrap();
-
     assert_eq!(a.metrics.n(), 1000 * 10);
-    assert_eq!(b.metrics.n(), 1000 * 10);
-    assert_eq!(
-        a.metrics.fingerprint(),
-        b.metrics.fingerprint(),
-        "shard layout must not change results"
-    );
-    // Bit-exact aggregates, not just the digest.
-    assert_eq!(
-        a.metrics.total_energy_j().to_bits(),
-        b.metrics.total_energy_j().to_bits()
-    );
-    assert_eq!(
-        a.metrics.p99_latency_s().to_bits(),
-        b.metrics.p99_latency_s().to_bits()
-    );
-    assert_eq!(a.metrics.selections().total(), b.metrics.selections().total());
-    assert_eq!(a.cloud_timeline.len(), b.cloud_timeline.len());
-    for (x, y) in a.cloud_timeline.iter().zip(&b.cloud_timeline) {
-        assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
-        assert_eq!(x.load.to_bits(), y.load.to_bits());
+    for shards in [2usize, 8] {
+        cfg.shards = shards;
+        let b = run_fleet(&cfg).unwrap();
+        assert_eq!(b.metrics.n(), 1000 * 10);
+        assert_eq!(
+            a.metrics.fingerprint(),
+            b.metrics.fingerprint(),
+            "shard layout must not change results (shards={shards})"
+        );
+        // Bit-exact aggregates, not just the digest.
+        assert_eq!(
+            a.metrics.total_energy_j().to_bits(),
+            b.metrics.total_energy_j().to_bits()
+        );
+        assert_eq!(
+            a.metrics.p99_latency_s().to_bits(),
+            b.metrics.p99_latency_s().to_bits()
+        );
+        assert_eq!(a.metrics.selections().total(), b.metrics.selections().total());
+        assert_eq!(a.cloud_timeline.len(), b.cloud_timeline.len());
+        for (x, y) in a.cloud_timeline.iter().zip(&b.cloud_timeline) {
+            assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+            assert_eq!(x.load.to_bits(), y.load.to_bits());
+        }
     }
 }
 

@@ -340,3 +340,57 @@ fn prop_episode_metrics_consistent() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_calendar_queue_matches_binary_heap_ordering() {
+    // The fleet's hot-path scheduler must pop in exactly the reference
+    // heap's (t_s, seq) order — ties broken identically — for any bucket
+    // geometry, including pushes outside the armed epoch window (clamped
+    // buckets) and pushes below the advancing cursor.
+    use autoscale::fleet::{CalendarQueue, EventQueue};
+    Runner::new("calendar_heap_parity", 150).run(|g| {
+        let t0 = g.f64_in(-10.0, 10.0);
+        let horizon = g.f64_in(0.0, 20.0); // 0 exercises the degenerate width
+        let expected = g.usize_in(1, 64);
+        let mut cal: CalendarQueue<u32> = CalendarQueue::new();
+        cal.reset(t0, horizon, expected);
+        let mut heap: EventQueue<u32> = EventQueue::new();
+        // Interleaved pushes and pops; coarse-quantized times force ties.
+        let n_ops = g.usize_in(1, 200);
+        let mut next_id = 0u32;
+        for _ in 0..n_ops {
+            if heap.is_empty() || g.f64_in(0.0, 1.0) < 0.7 {
+                let t = (g.f64_in(t0 - 5.0, t0 + horizon + 5.0) * 4.0).round() / 4.0;
+                cal.push(t, next_id);
+                heap.push(t, next_id);
+                next_id += 1;
+            } else {
+                let a = heap.pop().unwrap();
+                let b = cal.pop().unwrap();
+                ptassert!(
+                    a.t_s == b.t_s && a.seq == b.seq && a.event == b.event,
+                    "pop mismatch: heap ({}, {}, {}) vs calendar ({}, {}, {})",
+                    a.t_s,
+                    a.seq,
+                    a.event,
+                    b.t_s,
+                    b.seq,
+                    b.event
+                );
+            }
+        }
+        ptassert!(heap.len() == cal.len(), "size skew {} vs {}", heap.len(), cal.len());
+        while let Some(a) = heap.pop() {
+            let b = cal.pop().unwrap();
+            ptassert!(
+                a.t_s == b.t_s && a.seq == b.seq && a.event == b.event,
+                "drain mismatch at seq {} ({} vs {})",
+                a.seq,
+                a.t_s,
+                b.t_s
+            );
+        }
+        ptassert!(cal.pop().is_none(), "calendar must drain empty");
+        Ok(())
+    });
+}
