@@ -49,7 +49,8 @@ fn fleet_cfg(devices: usize, requests: usize, shards: usize, policy: &str) -> Fl
 /// Fleet-simulator throughput: simulated requests/second through the full
 /// multi-device loop (arrivals → policy → physics → shared-cloud
 /// accounting), the sharding speedup, and scale points at 1k and 10k
-/// devices (plus 100k in `full` mode). Also asserts the determinism
+/// devices (plus 100k and 1M in `full` mode). Scale rows carry the memory
+/// columns (peak RSS + bytes/device). Also asserts the determinism
 /// contract cheaply — a bench that drifts run-to-run is useless — and
 /// records the digest in the report's `fingerprint`.
 pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
@@ -66,25 +67,44 @@ pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
 
     // Scale points are one-shot: an iteration is a whole fleet episode.
     let cfg = fleet_cfg(1_000, 10, 8, "autoscale");
+    let mut bpd = None;
     let r = Bencher::once("fleet 1k x10 autoscale shards=8", || {
-        black_box(run_fleet(&cfg).unwrap());
+        bpd = Some(black_box(run_fleet(&cfg).unwrap()).bytes_per_device);
     });
-    report.entries.push(SuiteEntry::from_result(&r, Some(10_000.0)));
+    report.entries.push(SuiteEntry::from_result(&r, Some(10_000.0)).with_memory(bpd));
 
     // 10k devices run the dispatch-light fixed policy: the row measures
     // the driver (scheduler, snapshots, physics), not 10k Q-tables.
     let cfg = fleet_cfg(10_000, 5, 8, "best");
+    let mut bpd = None;
     let r = Bencher::once("fleet 10k x5 best shards=8", || {
-        black_box(run_fleet(&cfg).unwrap());
+        bpd = Some(black_box(run_fleet(&cfg).unwrap()).bytes_per_device);
     });
-    report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)));
+    report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)).with_memory(bpd));
 
     if full {
         let cfg = fleet_cfg(100_000, 2, 8, "best");
+        let mut bpd = None;
         let r = Bencher::once("fleet 100k x2 best shards=8", || {
-            black_box(run_fleet(&cfg).unwrap());
+            bpd = Some(black_box(run_fleet(&cfg).unwrap()).bytes_per_device);
         });
-        report.entries.push(SuiteEntry::from_result(&r, Some(200_000.0)).optional());
+        report
+            .entries
+            .push(SuiteEntry::from_result(&r, Some(200_000.0)).with_memory(bpd).optional());
+
+        // The million-device episode: streaming sketch percentiles (auto
+        // mode crosses the threshold at 2M requests), fixed-plan dispatch,
+        // work-stealing blocks. Full-mode only — it is the wall-clock
+        // heavyweight of the suite.
+        let cfg = fleet_cfg(1_000_000, 2, 8, "best");
+        debug_assert!(cfg.use_sketch(), "1M x2 must select the streaming sketch");
+        let mut bpd = None;
+        let r = Bencher::once("fleet 1M x2 best shards=8", || {
+            bpd = Some(black_box(run_fleet(&cfg).unwrap()).bytes_per_device);
+        });
+        report
+            .entries
+            .push(SuiteEntry::from_result(&r, Some(2_000_000.0)).with_memory(bpd).optional());
     }
 
     // Determinism spot-check: identical config+seed, identical digest.

@@ -159,9 +159,36 @@ impl SelectionStats {
         "Connected Edge",
     ];
 
+    /// Position of an action's bucket in [`Self::BUCKETS`]. Lets hot-path
+    /// collectors count selections in a fixed `[u32; 7]` array (no hash
+    /// map, no heap) and fold into a `SelectionStats` afterwards via
+    /// [`Self::add_bucket_counts`].
+    pub fn bucket_index(a: Action) -> usize {
+        match (a.site, a.proc, a.precision) {
+            (Site::Local, ProcKind::Cpu, Precision::Fp32) => 0,
+            (Site::Local, ProcKind::Cpu, _) => 1,
+            (Site::Local, ProcKind::Gpu, Precision::Fp16) => 3,
+            (Site::Local, ProcKind::Gpu, _) => 2,
+            (Site::Local, ProcKind::Dsp, _) => 4,
+            (Site::Cloud, _, _) => 5,
+            (Site::ConnectedEdge, _, _) => 6,
+        }
+    }
+
     pub fn add(&mut self, a: Action) {
         *self.counts.entry(Self::bucket(a)).or_insert(0) += 1;
         self.total += 1;
+    }
+
+    /// Fold a fixed-size bucket-count array (indexed per
+    /// [`Self::bucket_index`]) into this collector.
+    pub fn add_bucket_counts(&mut self, counts: &[u32; Self::BUCKETS.len()]) {
+        for (bucket, &n) in Self::BUCKETS.iter().zip(counts.iter()) {
+            if n > 0 {
+                *self.counts.entry(bucket).or_insert(0) += n as usize;
+                self.total += n as usize;
+            }
+        }
     }
 
     /// Raw selection count of a bucket.
@@ -253,6 +280,36 @@ mod tests {
             SelectionStats::bucket(Action::connected_edge()),
             "Connected Edge"
         );
+    }
+
+    #[test]
+    fn bucket_index_agrees_with_bucket_names() {
+        use crate::types::{Precision, ProcKind};
+        let actions = [
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+            Action::local(ProcKind::Cpu, Precision::Int8),
+            Action::local(ProcKind::Gpu, Precision::Fp32),
+            Action::local(ProcKind::Gpu, Precision::Fp16),
+            Action::local(ProcKind::Dsp, Precision::Int8),
+            Action::cloud(),
+            Action::connected_edge(),
+        ];
+        let mut counts = [0u32; SelectionStats::BUCKETS.len()];
+        for a in actions {
+            let idx = SelectionStats::bucket_index(a);
+            assert_eq!(SelectionStats::BUCKETS[idx], SelectionStats::bucket(a));
+            counts[idx] += 1;
+        }
+        let mut via_array = SelectionStats::default();
+        via_array.add_bucket_counts(&counts);
+        let mut via_add = SelectionStats::default();
+        for a in actions {
+            via_add.add(a);
+        }
+        assert_eq!(via_array.total(), via_add.total());
+        for b in SelectionStats::BUCKETS {
+            assert_eq!(via_array.count(b), via_add.count(b));
+        }
     }
 
     #[test]

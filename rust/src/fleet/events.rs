@@ -9,15 +9,19 @@
 //! * [`CalendarQueue`] — a bucketed calendar queue: amortized O(1)
 //!   push/pop over a bounded horizon, and fully reusable across epochs
 //!   without freeing its bucket storage. The fleet driver's hot-path
-//!   scheduler; at 100k devices the heap's comparison-shuffling and
-//!   per-epoch reallocation dominate the scheduling cost.
+//!   scheduler; at 100k+ devices the heap's comparison-shuffling and
+//!   per-epoch reallocation dominate the scheduling cost. Each fleet
+//!   worker owns one instance and re-arms it per stolen device block, so
+//!   a [`CalendarQueue::reset`] must stay O(buckets) with no allocation
+//!   in steady state — the driver caps blocks at 4096 devices, far under
+//!   [`MAX_BUCKETS`].
 //!
 //! Pop-order parity between the two (including tie-breaks) is pinned by
 //! a property test over random event streams in `tests/properties.rs`.
 //!
-//! Today the per-shard driver's devices share no mutable state within an
+//! Today the fleet driver's devices share no mutable state within an
 //! epoch, so fleet *results* do not depend on cross-device pop order —
-//! the queue's job is to execute a shard's requests in global
+//! the queue's job is to execute a device block's requests in global
 //! chronological order, which is what keeps traces readable and is the
 //! prerequisite for any future intra-epoch cross-device coupling (P2P
 //! contention at the shared connected-edge tier, per-request cloud
@@ -105,8 +109,8 @@ impl<E> EventQueue<E> {
 }
 
 /// Upper bound on calendar-bucket count: enough for one bucket per device
-/// on a 64k-device shard, small enough that a reset can never balloon.
-const MAX_BUCKETS: usize = 1 << 16;
+/// on a 64k-event block, small enough that a reset can never balloon.
+pub const MAX_BUCKETS: usize = 1 << 16;
 
 /// Bucketed calendar queue — the fleet driver's hot-path scheduler.
 ///

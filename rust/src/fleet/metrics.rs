@@ -5,10 +5,26 @@
 //! function of the seed and configuration — independent of shard layout
 //! and thread scheduling. The `fingerprint` distils the run into one u64
 //! for cheap determinism assertions.
+//!
+//! Two latency representations share one API:
+//!
+//! * **Exact** — every latency sample is kept (device-id order), and
+//!   percentiles are linearly interpolated over the sorted samples. This
+//!   is the small-fleet default and what the embedded pre-refactor
+//!   reference pins compare against.
+//! * **Sketch** — samples stream into a fixed-size
+//!   [`LogHistogram`](crate::util::stats::LogHistogram) (~2 KiB total,
+//!   O(1) per fleet, not per device) and percentiles are nearest-rank
+//!   bucket representatives, within a documented ≤ 5% relative error.
+//!   This is what makes million-device episodes fit in memory.
+//!
+//! The [`FleetMetrics::fingerprint`] folds the exact running `lat_sum`
+//! and energy sums — never the latency store — so the fingerprint of a
+//! run is identical in both modes and across any shard layout.
 
 use crate::coordinator::metrics::SelectionStats;
 use crate::types::Action;
-use crate::util::stats;
+use crate::util::stats::{self, LogHistogram};
 
 /// One served fleet request (the fleet's compact analogue of
 /// [`crate::exec::ExecOutcome`] — end-to-end, including device queueing).
@@ -25,10 +41,30 @@ pub struct FleetRecord {
     pub remote_failed: bool,
 }
 
+/// How a [`FleetMetrics`] stores latencies for percentile queries.
+#[derive(Clone, Debug)]
+enum LatencyStore {
+    /// Every sample, in push/merge order.
+    Exact(Vec<f64>),
+    /// Fixed-size log-bucketed histogram; no per-sample storage.
+    Sketch(LogHistogram),
+}
+
+impl Default for LatencyStore {
+    fn default() -> Self {
+        LatencyStore::Exact(Vec::new())
+    }
+}
+
 /// Aggregated metrics for a fleet run (or one device's slice of it).
 #[derive(Clone, Debug, Default)]
 pub struct FleetMetrics {
-    latencies_s: Vec<f64>,
+    n: usize,
+    /// Exact running sum of all latencies, in push order; merged
+    /// per-collector sums add in device-id order. This (not the store)
+    /// feeds `mean_latency_s` and the fingerprint.
+    lat_sum: f64,
+    store: LatencyStore,
     total_energy_j: f64,
     qos_violations: usize,
     accuracy_violations: usize,
@@ -37,18 +73,36 @@ pub struct FleetMetrics {
 }
 
 impl FleetMetrics {
-    /// A collector preallocated for `n` requests. The fleet sizes each
-    /// per-device collector at the device's quota, so steady-state pushes
-    /// never reallocate.
+    /// An exact-mode collector preallocated for `n` requests.
     pub fn with_capacity(n: usize) -> FleetMetrics {
         FleetMetrics {
-            latencies_s: Vec::with_capacity(n),
+            store: LatencyStore::Exact(Vec::with_capacity(n)),
             ..FleetMetrics::default()
         }
     }
 
+    /// A sketch-mode collector: O(1) memory regardless of sample count,
+    /// percentiles within ≤ 5% relative error (see
+    /// [`LogHistogram`](crate::util::stats::LogHistogram)).
+    pub fn sketch() -> FleetMetrics {
+        FleetMetrics {
+            store: LatencyStore::Sketch(LogHistogram::new()),
+            ..FleetMetrics::default()
+        }
+    }
+
+    /// True when latencies stream into the fixed-size sketch.
+    pub fn is_sketch(&self) -> bool {
+        matches!(self.store, LatencyStore::Sketch(_))
+    }
+
     pub fn push(&mut self, r: &FleetRecord) {
-        self.latencies_s.push(r.latency_s);
+        self.n += 1;
+        self.lat_sum += r.latency_s;
+        match &mut self.store {
+            LatencyStore::Exact(v) => v.push(r.latency_s),
+            LatencyStore::Sketch(h) => h.push(r.latency_s),
+        }
         self.total_energy_j += r.energy_j;
         if r.latency_s > r.qos_target_s {
             self.qos_violations += 1;
@@ -63,9 +117,37 @@ impl FleetMetrics {
     }
 
     /// Fold another collector into this one. Call in device-id order for
-    /// shard-invariant floating-point results.
+    /// shard-invariant floating-point results (the integer sketch counts
+    /// are order-invariant regardless).
+    ///
+    /// Merging an exact collector into a sketch collector folds its
+    /// samples through the sketch; merging a sketch into an exact
+    /// collector upgrades `self` to sketch mode first (exact samples
+    /// cannot be recovered from a histogram).
     pub fn merge(&mut self, other: &FleetMetrics) {
-        self.latencies_s.extend_from_slice(&other.latencies_s);
+        self.n += other.n;
+        self.lat_sum += other.lat_sum;
+        match (&mut self.store, &other.store) {
+            (LatencyStore::Exact(a), LatencyStore::Exact(b)) => {
+                a.extend_from_slice(b);
+            }
+            (LatencyStore::Sketch(a), LatencyStore::Sketch(b)) => {
+                a.merge(b);
+            }
+            (LatencyStore::Sketch(a), LatencyStore::Exact(b)) => {
+                for &x in b {
+                    a.push(x);
+                }
+            }
+            (LatencyStore::Exact(a), LatencyStore::Sketch(b)) => {
+                let mut h = LogHistogram::new();
+                for &x in a.iter() {
+                    h.push(x);
+                }
+                h.merge(b);
+                self.store = LatencyStore::Sketch(h);
+            }
+        }
         self.total_energy_j += other.total_energy_j;
         self.qos_violations += other.qos_violations;
         self.accuracy_violations += other.accuracy_violations;
@@ -73,8 +155,37 @@ impl FleetMetrics {
         self.selections.merge(&other.selections);
     }
 
+    /// Fold one device's compact collector into this aggregate. Same
+    /// floating-point operation sequence as [`Self::merge`] on a
+    /// per-device [`FleetMetrics`], so results are bit-identical to the
+    /// pre-refactor per-device-`FleetMetrics` driver.
+    pub fn merge_device(&mut self, dev: &DeviceMetrics) {
+        self.n += dev.n as usize;
+        self.lat_sum += dev.lat_sum;
+        if let LatencyStore::Exact(v) = &mut self.store {
+            v.extend_from_slice(&dev.samples);
+        }
+        self.total_energy_j += dev.energy_j;
+        self.qos_violations += dev.qos_violations as usize;
+        self.accuracy_violations += dev.accuracy_violations as usize;
+        self.remote_failures += dev.remote_failures as usize;
+        self.selections.add_bucket_counts(&dev.selections);
+    }
+
+    /// Fold a worker-local latency sketch into a sketch-mode aggregate.
+    /// Integer count addition — any fold order gives identical state.
+    /// No-op (debug-asserted) for exact-mode collectors.
+    pub fn merge_latency_sketch(&mut self, h: &LogHistogram) {
+        match &mut self.store {
+            LatencyStore::Sketch(s) => s.merge(h),
+            LatencyStore::Exact(_) => {
+                debug_assert!(false, "merge_latency_sketch on exact-mode collector");
+            }
+        }
+    }
+
     pub fn n(&self) -> usize {
-        self.latencies_s.len()
+        self.n
     }
 
     pub fn total_energy_j(&self) -> f64 {
@@ -89,18 +200,27 @@ impl FleetMetrics {
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        stats::mean(&self.latencies_s)
+        if self.n == 0 {
+            0.0
+        } else {
+            self.lat_sum / self.n as f64
+        }
     }
 
     pub fn latency_percentile_s(&self, p: f64) -> f64 {
-        stats::percentile(&self.latencies_s, p)
+        match &self.store {
+            LatencyStore::Exact(v) => stats::percentile(v, p),
+            LatencyStore::Sketch(h) => h.percentile(p),
+        }
     }
 
-    /// The reporting trio from one sort — at fleet scale (10^5..10^6
-    /// samples) three separate percentile calls would clone+sort the
-    /// vector three times.
+    /// The reporting trio from one pass — exact mode sorts the samples
+    /// once; sketch mode walks the fixed bucket array once.
     pub fn latency_p50_p95_p99_s(&self) -> (f64, f64, f64) {
-        let v = stats::percentiles(&self.latencies_s, &[50.0, 95.0, 99.0]);
+        let v = match &self.store {
+            LatencyStore::Exact(v) => stats::percentiles(v, &[50.0, 95.0, 99.0]),
+            LatencyStore::Sketch(h) => h.percentiles(&[50.0, 95.0, 99.0]),
+        };
         (v[0], v[1], v[2])
     }
 
@@ -157,7 +277,9 @@ impl FleetMetrics {
     }
 
     /// Order-sensitive 64-bit digest of the aggregates — equal fingerprints
-    /// across runs/shard-counts is the determinism contract.
+    /// across runs/shard-counts is the determinism contract. Folds the
+    /// exact `lat_sum`, never the latency store, so exact-mode and
+    /// sketch-mode runs of the same episode fingerprint identically.
     pub fn fingerprint(&self) -> u64 {
         let mut h: u64 = crate::util::hash::FNV_OFFSET;
         let mut fold = |v: u64| h = crate::util::hash::fnv1a_fold(h, v);
@@ -166,12 +288,94 @@ impl FleetMetrics {
         fold(self.accuracy_violations as u64);
         fold(self.remote_failures as u64);
         fold(self.total_energy_j.to_bits());
-        let lat_sum: f64 = self.latencies_s.iter().sum();
-        fold(lat_sum.to_bits());
+        fold(self.lat_sum.to_bits());
         for bucket in SelectionStats::BUCKETS {
             fold(self.selections.count(bucket) as u64);
         }
         h
+    }
+
+    /// Heap bytes held by the latency store (0 in sketch mode — the
+    /// sketch is a fixed inline array).
+    pub fn latency_store_heap_bytes(&self) -> usize {
+        match &self.store {
+            LatencyStore::Exact(v) => v.capacity() * std::mem::size_of::<f64>(),
+            LatencyStore::Sketch(_) => 0,
+        }
+    }
+}
+
+/// Compact per-device metric collector for the fleet hot path: fixed-size
+/// integer counters plus two running f64 sums — no hash map, no
+/// per-request heap traffic. In streaming (sketch) mode it stores **no
+/// samples at all**: per-device metric memory is O(1)
+/// ([`Self::BASE_BYTES`], ~100 B) regardless of request count.
+///
+/// Fold into the fleet aggregate with [`FleetMetrics::merge_device`] in
+/// device-id order; the floating-point adds there match what a per-device
+/// [`FleetMetrics`] would have produced, bit for bit.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceMetrics {
+    n: u32,
+    qos_violations: u32,
+    accuracy_violations: u32,
+    remote_failures: u32,
+    lat_sum: f64,
+    energy_j: f64,
+    selections: [u32; SelectionStats::BUCKETS.len()],
+    /// Latency samples — populated only by [`Self::with_capacity`]
+    /// (exact mode). Empty and never touched in streaming mode.
+    samples: Vec<f64>,
+    record_samples: bool,
+}
+
+impl DeviceMetrics {
+    /// Inline footprint of one collector (excludes exact-mode sample
+    /// heap). This is the per-device metric cost in streaming mode.
+    pub const BASE_BYTES: usize = std::mem::size_of::<DeviceMetrics>();
+
+    /// Exact-mode collector: keeps each sample for interpolated
+    /// percentiles and reference-parity runs.
+    pub fn with_capacity(n: usize) -> DeviceMetrics {
+        DeviceMetrics {
+            samples: Vec::with_capacity(n),
+            record_samples: true,
+            ..DeviceMetrics::default()
+        }
+    }
+
+    /// Streaming-mode collector: counters and sums only. The caller
+    /// streams latencies into a shared [`LogHistogram`] instead.
+    pub fn streaming() -> DeviceMetrics {
+        DeviceMetrics::default()
+    }
+
+    pub fn push(&mut self, r: &FleetRecord) {
+        self.n += 1;
+        self.lat_sum += r.latency_s;
+        self.energy_j += r.energy_j;
+        if r.latency_s > r.qos_target_s {
+            self.qos_violations += 1;
+        }
+        if r.accuracy < r.accuracy_target {
+            self.accuracy_violations += 1;
+        }
+        if r.remote_failed {
+            self.remote_failures += 1;
+        }
+        self.selections[SelectionStats::bucket_index(r.action)] += 1;
+        if self.record_samples {
+            self.samples.push(r.latency_s);
+        }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    /// Heap bytes held by this collector (exact-mode samples only).
+    pub fn heap_bytes(&self) -> usize {
+        self.samples.capacity() * std::mem::size_of::<f64>()
     }
 }
 
@@ -191,6 +395,9 @@ pub struct FleetOutcome {
     pub cloud_timeline: Vec<CloudTimelinePoint>,
     /// Virtual time the last request completed.
     pub makespan_s: f64,
+    /// Approximate steady-state bytes of mutable per-device simulation
+    /// state (clock + RNG + arrival + metrics), for memory reporting.
+    pub bytes_per_device: usize,
 }
 
 #[cfg(test)]
@@ -217,6 +424,7 @@ mod tests {
             m.push(&record(Action::cloud(), i as f64 * 1e-3, 0.01));
         }
         assert_eq!(m.n(), 100);
+        assert!(!m.is_sketch());
         assert!((m.total_energy_j() - 1.0).abs() < 1e-9);
         assert!((m.ppw() - 100.0).abs() < 1e-6);
         assert!((m.p50_latency_s() - 0.0505).abs() < 1e-3);
@@ -235,6 +443,12 @@ mod tests {
 
     #[test]
     fn merge_matches_sequential_push() {
+        // Latencies and energies are dyadic rationals with a small
+        // exponent spread, so every partial sum is exact and the
+        // split/merged running sums match the sequential fold bit-wise.
+        // (For general f64 samples the merge contract is only "same
+        // partition + same merge order ⇒ same bits", which is what the
+        // fleet driver provides via device-id-ordered folds.)
         let recs: Vec<FleetRecord> = (0..40)
             .map(|i| {
                 let a = if i % 3 == 0 {
@@ -242,9 +456,7 @@ mod tests {
                 } else {
                     Action::local(ProcKind::Cpu, Precision::Int8)
                 };
-                // energy is a dyadic rational so the split/merged energy
-                // folds sum exactly, matching the sequential fold bit-wise
-                record(a, 0.01 + i as f64 * 1e-3, 0.015625)
+                record(a, (i + 1) as f64 * 0.001953125, 0.015625)
             })
             .collect();
         let mut whole = FleetMetrics::default();
@@ -274,5 +486,86 @@ mod tests {
         a.push(&record(Action::cloud(), 0.01, 0.1));
         b.push(&record(Action::cloud(), 0.011, 0.1));
         assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn sketch_mode_fingerprint_matches_exact_mode() {
+        // The fingerprint folds counters and exact sums only, so the
+        // same pushes produce the same digest in either mode.
+        let mut exact = FleetMetrics::default();
+        let mut sk = FleetMetrics::sketch();
+        for i in 1..=50 {
+            let r = record(Action::cloud(), i as f64 * 2e-3, 0.01);
+            exact.push(&r);
+            sk.push(&r);
+        }
+        assert!(sk.is_sketch());
+        assert_eq!(exact.fingerprint(), sk.fingerprint());
+        assert_eq!(sk.latency_store_heap_bytes(), 0);
+        // Sketch percentiles are within the documented 5% of exact
+        // nearest-rank samples (here: exact interpolated values are
+        // close to nearest-rank at n=50).
+        let (p50, p95, p99) = sk.latency_p50_p95_p99_s();
+        let (e50, e95, e99) = exact.latency_p50_p95_p99_s();
+        for (s, e) in [(p50, e50), (p95, e95), (p99, e99)] {
+            assert!((s - e).abs() / e < 0.07, "sketch {s} vs exact {e}");
+        }
+    }
+
+    #[test]
+    fn device_metrics_fold_matches_fleet_metrics_merge() {
+        // The compact per-device collector folded via merge_device must
+        // reproduce the per-device-FleetMetrics merge path bit-exactly —
+        // this is the bridge to the embedded pre-refactor reference.
+        let recs: Vec<FleetRecord> = (0..30)
+            .map(|i| {
+                let a = match i % 4 {
+                    0 => Action::cloud(),
+                    1 => Action::connected_edge(),
+                    2 => Action::local(ProcKind::Gpu, Precision::Fp16),
+                    _ => Action::local(ProcKind::Dsp, Precision::Int8),
+                };
+                let mut r = record(a, 0.013 + i as f64 * 7.3e-4, 0.0123 + i as f64 * 1e-4);
+                r.remote_failed = i % 7 == 0 && a.site == crate::types::Site::Cloud;
+                r
+            })
+            .collect();
+        // Old path: two per-device FleetMetrics merged in id order.
+        let mut da = FleetMetrics::default();
+        let mut db = FleetMetrics::default();
+        // New path: two DeviceMetrics folded in id order.
+        let mut ca = DeviceMetrics::with_capacity(15);
+        let mut cb = DeviceMetrics::with_capacity(15);
+        for (i, r) in recs.iter().enumerate() {
+            if i < 15 {
+                da.push(r);
+                ca.push(r);
+            } else {
+                db.push(r);
+                cb.push(r);
+            }
+        }
+        let mut via_fleet = FleetMetrics::default();
+        via_fleet.merge(&da);
+        via_fleet.merge(&db);
+        let mut via_device = FleetMetrics::default();
+        via_device.merge_device(&ca);
+        via_device.merge_device(&cb);
+        assert_eq!(via_fleet.fingerprint(), via_device.fingerprint());
+        assert_eq!(
+            via_fleet.p95_latency_s().to_bits(),
+            via_device.p95_latency_s().to_bits()
+        );
+        assert_eq!(via_fleet.selections().total(), via_device.selections().total());
+    }
+
+    #[test]
+    fn streaming_device_metrics_store_no_samples() {
+        let mut d = DeviceMetrics::streaming();
+        for i in 0..1000 {
+            d.push(&record(Action::cloud(), 0.01 + i as f64 * 1e-5, 0.01));
+        }
+        assert_eq!(d.n(), 1000);
+        assert_eq!(d.heap_bytes(), 0);
     }
 }

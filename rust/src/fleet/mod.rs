@@ -3,7 +3,7 @@
 //!
 //! The paper evaluates AutoScale one device at a time against an
 //! infinitely-provisioned cloud. This subsystem simulates **N devices
-//! (hundreds to tens of thousands) sharing one cloud backend**, closing
+//! (hundreds to millions) sharing one cloud backend**, closing
 //! the feedback loop that single-device evaluation cannot express: every
 //! offload decision raises cloud queueing and service time for everyone
 //! else, which shifts the energy/latency optimum back toward local
@@ -19,12 +19,16 @@
 //! * [`cloud`] — the shared backend: backlog queue, batching window,
 //!   load-dependent service-time inflation;
 //! * [`sim`] — the sharded driver: epoch-frozen cloud snapshots make
-//!   device execution embarrassingly parallel within an epoch while
+//!   device execution embarrassingly parallel within an epoch; workers
+//!   steal contiguous device blocks off an atomic counter while
 //!   per-device RNG streams and device-ordered reductions keep results
-//!   bit-identical across `--shards` settings;
-//! * [`metrics`] — fleet aggregates: latency percentiles (p50/p95/p99),
-//!   total energy / PPW, QoS-violation rate, selection mix, cloud queue
-//!   timeline, and a determinism fingerprint.
+//!   bit-identical across `--shards` settings; fixed policies dispatch
+//!   through a precomputed (preset, model) decision table;
+//! * [`metrics`] — fleet aggregates: latency percentiles (p50/p95/p99)
+//!   from exact samples or a fixed-size streaming sketch
+//!   ([`sim::MetricsMode`]), total energy / PPW, QoS-violation rate,
+//!   selection mix, cloud queue timeline, and a determinism fingerprint
+//!   that is invariant to shard count and metrics mode.
 //!
 //! Per-request physics are the existing single-device models — `net` for
 //! the radio, `device`+`power` for the SoC, `exec` for latency/energy,
@@ -41,5 +45,5 @@ pub mod sim;
 pub use arrivals::ArrivalProcess;
 pub use cloud::{CloudModel, CloudParams, CloudSnapshot};
 pub use events::{CalendarQueue, EventQueue};
-pub use metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
-pub use sim::{run_fleet, ArrivalKind, FleetConfig};
+pub use metrics::{CloudTimelinePoint, DeviceMetrics, FleetMetrics, FleetOutcome, FleetRecord};
+pub use sim::{run_fleet, ArrivalKind, FleetConfig, MetricsMode, SKETCH_AUTO_THRESHOLD};

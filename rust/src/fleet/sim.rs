@@ -1,5 +1,5 @@
 //! The sharded fleet driver: N devices, one shared cloud, deterministic
-//! parallel execution at 100k+ device scale.
+//! parallel execution at 1M+ device scale.
 //!
 //! ## Execution model
 //!
@@ -15,11 +15,18 @@
 //!
 //! Because intra-epoch coupling flows only through the frozen snapshot,
 //! devices can be partitioned across worker threads freely: `--shards 8`
-//! and `--shards 1` produce bit-identical aggregate metrics. Each shard
-//! runs a real discrete-event loop (a reusable [`CalendarQueue`]
-//! interleaving its devices' arrivals in time order); each device owns
-//! private RNG streams derived from (seed, device-id), never from thread
-//! identity.
+//! and `--shards 1` produce bit-identical aggregate metrics. Devices are
+//! cut into contiguous **blocks**; each epoch, `--shards` workers pull
+//! blocks from a shared atomic counter (work stealing), so a straggler
+//! block — e.g. a run of learning-policy devices — never idles the other
+//! workers the way the old one-static-chunk-per-worker partition did.
+//! Determinism survives stealing because (a) each block is processed by
+//! exactly one worker per epoch, (b) devices in different blocks share no
+//! mutable state within an epoch, (c) every floating-point reduction
+//! (cloud tallies, metric folds) runs on the main thread in device-id
+//! order, and (d) the streaming latency sketch merges by u64 addition,
+//! which commutes exactly. Each device owns private RNG streams derived
+//! from (seed, device-id), never from thread or block identity.
 //!
 //! The snapshot freeze is a fluid approximation: a request admitted
 //! mid-epoch sees the congestion measured at the epoch start (default
@@ -30,16 +37,23 @@
 //! ## Hot-path layout
 //!
 //! Device state is struct-of-arrays ([`FleetState`]): the scheduler walks
-//! a contiguous array of [`DeviceClock`]s (a few cache lines per device)
-//! instead of chasing per-device heap objects; policies live in an arena
-//! of instances built through [`PrototypeArena`] (clone-from-prototype
-//! once per preset, index thereafter); scenario data and per-preset
-//! action catalogues are shared via `Arc` handles instead of per-device
-//! clones ([`crate::scenario::ScenarioCache`]); model descriptors are
-//! resolved to `&'static NnDesc` once at construction, eliminating the
-//! per-request by-name lookup; and each shard worker reuses one
-//! preallocated [`CalendarQueue`] plus quota-sized measurement buffers,
-//! so the steady-state request loop performs no allocation.
+//! a contiguous array of 32-byte [`DeviceClock`]s instead of chasing
+//! per-device heap objects; per-request metrics land in compact
+//! [`DeviceMetrics`] counters (no hash map, no sample storage in
+//! streaming mode); per-preset action catalogues are shared via `Arc`
+//! handles indexed by `device_id % presets` (no per-device handle at
+//! all); model descriptors are resolved to `&'static NnDesc` once at
+//! construction; and each worker reuses one preallocated
+//! [`CalendarQueue`] plus a fixed-size latency sketch, so the
+//! steady-state request loop performs no allocation.
+//!
+//! Latency percentiles come from one of two stores (see
+//! [`MetricsMode`]): exact per-sample vectors for small fleets, or a
+//! fixed ~2 KiB [`LogHistogram`] sketch for large ones — per-device
+//! metric memory is then O(1), which is what lets
+//! `fleet --devices 1000000` fit in a bounded budget. The run
+//! `fingerprint` folds exact sums only, so it is identical across metric
+//! modes, shard counts and repeated runs.
 //!
 //! ## Policies
 //!
@@ -48,9 +62,17 @@
 //! construction path the CLI and the experiments use. The shared-cloud
 //! congestion snapshot reaches congestion-aware policies (Opt, and any
 //! future ones) through [`DecisionCtx::cloud`].
+//!
+//! Fixed policies (`cpu`/`best`/`cloud`/`connected`) advertise their
+//! choice as a pure function of (device, network) via
+//! [`ScalingPolicy::fixed_plan`]; the driver then precomputes one
+//! [`Decision`] per (preset, model) and the hot path dispatches by table
+//! lookup — no per-device policy instances, no state discretization, no
+//! virtual call. The physics and RNG draws are untouched, so plan
+//! dispatch is bit-identical to calling `decide` (pinned by tests).
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::agent::reward::{reward, RewardParams};
 use crate::agent::state::State;
@@ -60,16 +82,18 @@ use crate::coordinator::serve::qos_for;
 use crate::exec::latency::RunContext;
 use crate::nn::zoo::{by_name, NnDesc, ZOO};
 use crate::policy::{
-    CatalogueScope, CloudCtx, DecisionCtx, Feedback, PolicySpec, PrototypeArena, ScalingPolicy,
+    CatalogueScope, CloudCtx, Decision, DecisionCtx, Feedback, PolicySpec, PrototypeArena,
+    ScalingPolicy,
 };
 use crate::scenario::ScenarioCache;
 use crate::types::{Action, DeviceId, Measurement, Site};
 use crate::util::rng::Pcg64;
+use crate::util::stats::LogHistogram;
 
 use super::arrivals::ArrivalProcess;
 use super::cloud::{CloudModel, CloudParams, CloudSnapshot};
 use super::events::CalendarQueue;
-use super::metrics::{CloudTimelinePoint, FleetMetrics, FleetOutcome, FleetRecord};
+use super::metrics::{CloudTimelinePoint, DeviceMetrics, FleetMetrics, FleetOutcome, FleetRecord};
 
 /// Request arrival shape shared by the fleet (each device gets its own
 /// seeded instance; diurnal devices get spread phases).
@@ -99,13 +123,54 @@ impl ArrivalKind {
     }
 }
 
+/// Above this many total requests, [`MetricsMode::Auto`] switches from
+/// exact per-sample latency storage to the fixed-size streaming sketch.
+pub const SKETCH_AUTO_THRESHOLD: usize = 1 << 20;
+
+/// How the fleet stores latencies for percentile reporting.
+///
+/// The run fingerprint folds exact running sums in every mode, so the
+/// mode changes only percentile *reporting* (exact interpolated vs
+/// sketch nearest-rank within ≤ 5%), never determinism contracts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Exact up to [`SKETCH_AUTO_THRESHOLD`] total requests, streaming
+    /// sketch above — small fleets keep exact percentiles, million-device
+    /// fleets keep bounded memory, nobody has to choose.
+    #[default]
+    Auto,
+    /// Always store every latency sample (memory grows with requests).
+    Exact,
+    /// Always stream latencies into the fixed-size [`LogHistogram`].
+    Sketch,
+}
+
+impl MetricsMode {
+    pub fn from_name(s: &str) -> Option<MetricsMode> {
+        Some(match s {
+            "auto" => MetricsMode::Auto,
+            "exact" => MetricsMode::Exact,
+            "sketch" => MetricsMode::Sketch,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricsMode::Auto => "auto",
+            MetricsMode::Exact => "exact",
+            MetricsMode::Sketch => "sketch",
+        }
+    }
+}
+
 /// Full fleet-run configuration.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
     pub devices: usize,
     pub requests_per_device: usize,
-    /// Worker threads the devices are partitioned across. Any value
-    /// produces identical results; it only changes wall-clock time.
+    /// Worker threads pulling device blocks. Any value produces identical
+    /// results; it only changes wall-clock time.
     pub shards: usize,
     pub seed: u64,
     /// Table-4 environment every device is embedded in (legacy enum; see
@@ -131,6 +196,8 @@ pub struct FleetConfig {
     pub cloud: CloudParams,
     /// Networks served (round-robin per device); empty = all-zoo mix.
     pub models: Vec<&'static str>,
+    /// Latency-store selection (exact samples vs streaming sketch).
+    pub metrics: MetricsMode,
 }
 
 impl Default for FleetConfig {
@@ -151,6 +218,7 @@ impl Default for FleetConfig {
             epoch_s: 1.0,
             cloud: CloudParams::default(),
             models: Vec::new(),
+            metrics: MetricsMode::Auto,
         }
     }
 }
@@ -159,6 +227,10 @@ impl FleetConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.devices > 0, "devices must be > 0");
         anyhow::ensure!(self.requests_per_device > 0, "requests must be > 0");
+        anyhow::ensure!(
+            self.requests_per_device <= u32::MAX as usize,
+            "requests per device must fit in u32"
+        );
         anyhow::ensure!(self.shards > 0, "shards must be > 0");
         anyhow::ensure!(self.rate_hz > 0.0, "rate must be > 0");
         anyhow::ensure!(self.epoch_s > 0.0, "epoch must be > 0");
@@ -217,6 +289,17 @@ impl FleetConfig {
             Some(key) => key.clone(),
         }
     }
+
+    /// Resolved latency-store choice for this config.
+    pub fn use_sketch(&self) -> bool {
+        match self.metrics {
+            MetricsMode::Exact => false,
+            MetricsMode::Sketch => true,
+            MetricsMode::Auto => {
+                self.devices.saturating_mul(self.requests_per_device) > SKETCH_AUTO_THRESHOLD
+            }
+        }
+    }
 }
 
 /// SplitMix64 — derives independent per-device seeds from the fleet seed.
@@ -254,9 +337,10 @@ fn build_arrivals(cfg: &FleetConfig, i: usize) -> ArrivalProcess {
     }
 }
 
-/// Per-device scheduling/accounting state — plain copyable data packed
-/// into one contiguous array, so the epoch scheduler reads a few cache
-/// lines per device instead of walking heap objects.
+/// Per-device scheduling/accounting state — 32 bytes of plain copyable
+/// data packed into one contiguous array, so the epoch scheduler reads a
+/// fraction of a cache line per device instead of walking heap objects.
+/// The per-fleet request quota lives in [`FleetShared`], not here.
 #[derive(Clone, Copy, Debug)]
 struct DeviceClock {
     next_arrival_s: f64,
@@ -264,16 +348,16 @@ struct DeviceClock {
     /// device, so this is both when the device frees up and when idle
     /// cooling started.
     last_done_s: f64,
-    served: u32,
-    quota: u32,
-    /// Cloud traffic submitted this epoch (drained at the barrier).
-    tally_jobs: u64,
+    /// Cloud MACs submitted this epoch (drained at the barrier).
     tally_macs_m: f64,
+    served: u32,
+    /// Cloud jobs submitted this epoch (bounded by the u32 quota).
+    tally_jobs: u32,
 }
 
 impl DeviceClock {
-    fn done(&self) -> bool {
-        self.served >= self.quota
+    fn done(&self, quota: u32) -> bool {
+        self.served >= quota
     }
 
     /// When the next pending request would actually start service: its
@@ -287,19 +371,27 @@ impl DeviceClock {
 
 /// Struct-of-arrays device state: one parallel array per concern, all
 /// indexed by device slot. `policies` is the arena of per-device policy
-/// instances (filled through [`PrototypeArena`]); `catalogues` holds one
-/// `Arc` handle per device onto a per-preset shared allocation.
+/// instances — left **empty** when the policy advertises a fixed plan,
+/// in which case devices carry no policy state at all.
 struct FleetState {
     clocks: Vec<DeviceClock>,
     envs: Vec<Environment>,
     policies: Vec<Box<dyn ScalingPolicy>>,
     arrivals: Vec<ArrivalProcess>,
     rngs: Vec<Pcg64>,
-    catalogues: Vec<Arc<[Action]>>,
-    metrics: Vec<FleetMetrics>,
+    metrics: Vec<DeviceMetrics>,
 }
 
-/// Immutable request-loop parameters shared read-only by every shard.
+/// Precomputed fixed-policy dispatch: one [`Decision`] per
+/// (device preset, model), indexed `preset_idx * n_models + model_idx`.
+/// Built once at construction from [`ScalingPolicy::fixed_plan`]; the
+/// hot path is then a table load instead of state discretization +
+/// `DecisionCtx` assembly + a virtual `decide` call.
+struct FixedPlan {
+    decisions: Vec<Decision>,
+}
+
+/// Immutable request-loop parameters shared read-only by every worker.
 struct FleetShared {
     /// Round-robin model descriptors, resolved once at construction — the
     /// request loop never does a by-name zoo lookup.
@@ -307,56 +399,80 @@ struct FleetShared {
     scenario: Scenario,
     accuracy_target: f64,
     agent: AgentParams,
+    /// Per-device request quota (uniform across the fleet).
+    quota: u32,
+    /// Per-preset shared action catalogues, indexed by
+    /// `device_id % DeviceId::PHONES.len()`.
+    catalogues: Vec<Arc<[Action]>>,
+    /// Fixed-policy dispatch table; `None` for adaptive policies.
+    plan: Option<FixedPlan>,
 }
 
-/// One worker's mutable window into the fleet arrays: device slots
-/// `[lo, lo + len)` of every parallel array, split shard-aligned so
-/// workers share nothing mutable.
+impl FleetShared {
+    fn preset_idx(&self, device_id: usize) -> usize {
+        device_id % DeviceId::PHONES.len()
+    }
+}
+
+/// One contiguous block of the fleet arrays: device slots
+/// `[lo, lo + len)` of every parallel array, split block-aligned so
+/// blocks share nothing mutable. `lo` is the global id of slot 0, used
+/// to derive each device's preset index.
 struct Shard<'a> {
+    lo: usize,
     clocks: &'a mut [DeviceClock],
     envs: &'a mut [Environment],
     policies: &'a mut [Box<dyn ScalingPolicy>],
     arrivals: &'a mut [ArrivalProcess],
     rngs: &'a mut [Pcg64],
-    catalogues: &'a [Arc<[Action]>],
-    metrics: &'a mut [FleetMetrics],
+    metrics: &'a mut [DeviceMetrics],
 }
 
-/// Partition every parallel array into aligned chunks of `chunk` devices.
+/// Per-worker reusable scratch: the event scheduler and (in sketch mode)
+/// the worker's latency sketch, merged once after the run — u64 counts,
+/// so the worker-to-block assignment never shows in the result.
+struct Worker {
+    queue: CalendarQueue<u32>,
+    hist: Option<LogHistogram>,
+}
+
+/// Partition every parallel array into aligned contiguous blocks of
+/// `chunk` devices (the last may be short). `policies` may be globally
+/// empty (fixed-plan dispatch); it then splits into empty slices.
 fn split_shards(state: &mut FleetState, chunk: usize) -> Vec<Shard<'_>> {
     let mut clocks = state.clocks.as_mut_slice();
     let mut envs = state.envs.as_mut_slice();
     let mut policies = state.policies.as_mut_slice();
     let mut arrivals = state.arrivals.as_mut_slice();
     let mut rngs = state.rngs.as_mut_slice();
-    let mut catalogues = state.catalogues.as_slice();
     let mut metrics = state.metrics.as_mut_slice();
     let mut out = Vec::new();
+    let mut lo = 0usize;
     while !clocks.is_empty() {
         let k = chunk.min(clocks.len());
         let (c, rest) = std::mem::take(&mut clocks).split_at_mut(k);
         clocks = rest;
         let (e, rest) = std::mem::take(&mut envs).split_at_mut(k);
         envs = rest;
-        let (p, rest) = std::mem::take(&mut policies).split_at_mut(k);
+        let kp = k.min(policies.len());
+        let (p, rest) = std::mem::take(&mut policies).split_at_mut(kp);
         policies = rest;
         let (a, rest) = std::mem::take(&mut arrivals).split_at_mut(k);
         arrivals = rest;
         let (r, rest) = std::mem::take(&mut rngs).split_at_mut(k);
         rngs = rest;
-        let (cat, rest) = catalogues.split_at(k);
-        catalogues = rest;
         let (m, rest) = std::mem::take(&mut metrics).split_at_mut(k);
         metrics = rest;
         out.push(Shard {
+            lo,
             clocks: c,
             envs: e,
             policies: p,
             arrivals: a,
             rngs: r,
-            catalogues: cat,
             metrics: m,
         });
+        lo += k;
     }
     out
 }
@@ -365,17 +481,19 @@ fn split_shards(state: &mut FleetState, chunk: usize) -> Vec<Shard<'_>> {
 /// the frozen cloud snapshot. FIFO at the device: service starts when the
 /// previous request finishes. Operation-for-operation identical to the
 /// pre-refactor per-device loop — the reference-parity tests in
-/// `tests/fleet.rs` pin the fingerprints bit-exactly.
+/// `tests/fleet.rs` pin the fingerprints bit-exactly. The fixed-plan
+/// dispatch path skips only RNG-free work (discretization, ctx assembly,
+/// the virtual call, reward arithmetic), so it cannot perturb results.
 fn serve_request(
     shard: &mut Shard,
     slot: usize,
     t_arrival: f64,
     cloud: &CloudSnapshot,
     sh: &FleetShared,
+    hist: Option<&mut LogHistogram>,
 ) {
     let clock = &mut shard.clocks[slot];
     let env = &mut shard.envs[slot];
-    let policy = &mut shard.policies[slot];
     let rng = &mut shard.rngs[slot];
 
     let t_start = t_arrival.max(clock.last_done_s);
@@ -385,28 +503,39 @@ fn serve_request(
         env.sim.thermal.advance(0.2, idle);
     }
 
-    let nn = sh.models[clock.served as usize % sh.models.len()];
+    let model_idx = clock.served as usize % sh.models.len();
+    let nn = sh.models[model_idx];
     let qos = qos_for(sh.scenario, nn);
 
     // Sensor observation at service start (the shared noise model on
-    // [`Environment::observe`]).
+    // [`Environment::observe`]) — consumed in every dispatch mode: it
+    // advances the device's RNG stream and yields the true interference
+    // the physics run under.
     let (obs, true_inter) = env.observe(nn, t_start, rng);
-    let s = State::discretize(&obs);
+
     // Decide against the frozen congestion snapshot: congestion-aware
     // policies price cloud actions at the epoch's queueing delay and
-    // service slowdown through `DecisionCtx::cloud`.
-    let decision = {
-        let dctx = DecisionCtx {
-            obs: &obs,
-            state: s,
-            nn,
-            qos_s: qos,
-            accuracy_target: sh.accuracy_target,
-            catalogue: &shard.catalogues[slot],
-            sim: &env.sim,
-            cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
-        };
-        policy.decide(&dctx)
+    // service slowdown through `DecisionCtx::cloud`. Fixed policies skip
+    // all of this via the precomputed plan.
+    let (decision, pre_state) = match &sh.plan {
+        Some(plan) => {
+            let p = sh.preset_idx(shard.lo + slot);
+            (plan.decisions[p * sh.models.len() + model_idx], None)
+        }
+        None => {
+            let s = State::discretize(&obs);
+            let dctx = DecisionCtx {
+                obs: &obs,
+                state: s,
+                nn,
+                qos_s: qos,
+                accuracy_target: sh.accuracy_target,
+                catalogue: &sh.catalogues[sh.preset_idx(shard.lo + slot)],
+                sim: &env.sim,
+                cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
+            };
+            (shard.policies[slot].decide(&dctx), Some(s))
+        }
     };
     let action = decision.action;
 
@@ -426,81 +555,96 @@ fn serve_request(
         clock.tally_macs_m += nn.macs_m;
     }
 
-    // Reward on the END-TO-END latency (device queue wait included):
-    // that is what the user experiences and what the agent must learn
-    // to keep inside the QoS budget.
+    // END-TO-END latency (device queue wait included): what the user
+    // experiences, what the QoS check gates on, and what the agent must
+    // learn to keep inside budget.
     let wait_s = t_start - t_arrival;
-    let m_user = Measurement { latency_s: wait_s + m.latency_s, ..m };
-    let rp = RewardParams {
-        alpha: sh.agent.alpha,
-        beta: sh.agent.beta,
-        qos_s: qos,
-        accuracy_req: sh.accuracy_target,
-    };
-    let r = reward(&m_user, &rp);
-    if policy.is_learning() {
-        let t_done = t_start + m.latency_s;
-        let (obs_next, _) = env.observe(nn, t_done, rng);
-        let s_next = State::discretize(&obs_next);
-        policy.feedback(&Feedback {
-            state: s,
-            next_state: s_next,
-            catalogue_idx: decision.catalogue_idx,
-            reward: r,
-        });
+    let latency_e2e_s = wait_s + m.latency_s;
+    if let Some(s) = pre_state {
+        let policy = &mut shard.policies[slot];
+        if policy.is_learning() {
+            // Reward arithmetic is pure, so non-learning policies skip it.
+            let m_user = Measurement { latency_s: latency_e2e_s, ..m };
+            let rp = RewardParams {
+                alpha: sh.agent.alpha,
+                beta: sh.agent.beta,
+                qos_s: qos,
+                accuracy_req: sh.accuracy_target,
+            };
+            let r = reward(&m_user, &rp);
+            let t_done = t_start + m.latency_s;
+            let (obs_next, _) = env.observe(nn, t_done, rng);
+            let s_next = State::discretize(&obs_next);
+            policy.feedback(&Feedback {
+                state: s,
+                next_state: s_next,
+                catalogue_idx: decision.catalogue_idx,
+                reward: r,
+            });
+        }
     }
 
     clock.last_done_s = t_start + m.latency_s;
     shard.metrics[slot].push(&FleetRecord {
         action,
-        latency_s: m_user.latency_s,
+        latency_s: latency_e2e_s,
         energy_j: m.energy_true_j,
         qos_target_s: qos,
         accuracy: m.accuracy,
         accuracy_target: sh.accuracy_target,
         remote_failed: m.remote_failed,
     });
+    if let Some(h) = hist {
+        h.push(latency_e2e_s);
+    }
 }
 
-/// Run one epoch for a shard: a discrete-event loop interleaving the
-/// shard's devices in service-start order on the worker's reusable
+/// Run one epoch for one device block: a discrete-event loop interleaving
+/// the block's devices in service-start order on the worker's reusable
 /// [`CalendarQueue`]. Devices share no mutable state within an epoch, so
-/// this interleaving does not affect results (a per-device loop would be
-/// bit-identical) — it executes requests in chronological order, which
-/// any future intra-epoch cross-device coupling will require. Requests
-/// whose service would start after `t_end` stay pending, so every request
+/// the interleaving (and the block partition itself) does not affect
+/// results — it executes requests in chronological order, which any
+/// future intra-epoch cross-device coupling will require. Requests whose
+/// service would start after `t_end` stay pending, so every request
 /// executes against a snapshot at most one epoch old — even when a
 /// device's FIFO is backed up far beyond its arrival epoch.
 fn run_epoch_shard(
     shard: &mut Shard,
-    queue: &mut CalendarQueue<u32>,
+    worker: &mut Worker,
     t_start: f64,
     t_end: f64,
     cloud: &CloudSnapshot,
     sh: &FleetShared,
 ) {
-    queue.reset(t_start, t_end - t_start, shard.clocks.len());
+    worker.queue.reset(t_start, t_end - t_start, shard.clocks.len());
     for (slot, c) in shard.clocks.iter().enumerate() {
-        if !c.done() && c.next_service_s() < t_end {
-            queue.push(c.next_service_s(), slot as u32);
+        if !c.done(sh.quota) && c.next_service_s() < t_end {
+            worker.queue.push(c.next_service_s(), slot as u32);
         }
     }
-    while let Some(ev) = queue.pop() {
+    while let Some(ev) = worker.queue.pop() {
         let slot = ev.event as usize;
         let t_arrival = shard.clocks[slot].next_arrival_s;
-        serve_request(shard, slot, t_arrival, cloud, sh);
+        serve_request(shard, slot, t_arrival, cloud, sh, worker.hist.as_mut());
         let next = shard.arrivals[slot].next_after(t_arrival, &mut shard.rngs[slot]);
         let clock = &mut shard.clocks[slot];
         clock.served += 1;
         clock.next_arrival_s = next;
-        if !clock.done() && clock.next_service_s() < t_end {
-            queue.push(clock.next_service_s(), ev.event);
+        if !clock.done(sh.quota) && clock.next_service_s() < t_end {
+            worker.queue.push(clock.next_service_s(), ev.event);
         }
     }
 }
 
+/// Largest device block handed to a worker at once. Small enough that
+/// `shards` workers stay balanced even when block costs are skewed,
+/// large enough that the per-block claim (one atomic fetch-add + an
+/// uncontended lock) is noise.
+const MAX_BLOCK_DEVICES: usize = 4096;
+
 /// Run the whole fleet to completion. Aggregate results are bit-identical
-/// for identical `(cfg, seed)` regardless of `cfg.shards`.
+/// for identical `(cfg, seed)` regardless of `cfg.shards` and of the
+/// metrics mode (the fingerprint never folds the latency store).
 pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     cfg.validate()?;
     let models: Vec<&'static NnDesc> = if cfg.models.is_empty() {
@@ -511,11 +655,71 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             .map(|m| by_name(m).expect("model names are checked by FleetConfig::validate"))
             .collect()
     };
+
+    let n = cfg.devices;
+    let quota = cfg.requests_per_device as u32;
+    let sketch = cfg.use_sketch();
+    let n_presets = DeviceId::PHONES.len().min(n);
+    let mut arena = PrototypeArena::new(&cfg.policy);
+    let mk_spec = |i: usize| {
+        // Compact catalogue scope: a dense learner per device at fleet
+        // scale must stay small (see compact_action_catalogue); the Opt
+        // builder overrides it with the full DVFS sweep it what-ifs.
+        // Predictor training keeps the PolicySpec defaults (the STATIC
+        // envs, 40 samples each) deliberately: offline profiling happens
+        // under controlled conditions, not in the deployment env —
+        // mirroring how the §3.3 comparators are trained in the paper.
+        let mut spec = PolicySpec::new(
+            DeviceId::PHONES[i % DeviceId::PHONES.len()],
+            device_seed(cfg.seed, i),
+        );
+        spec.agent = cfg.agent;
+        spec.scope = CatalogueScope::Compact;
+        spec.scenario = cfg.scenario;
+        spec.accuracy_target = cfg.accuracy_target;
+        spec
+    };
+
+    // Probe pass: one policy instance per preset (devices 0..n_presets —
+    // exactly the first device of each preset, so arena prototypes are
+    // built with the same specs, in the same order, as before). These
+    // yield the per-preset shared catalogues, decide whether the policy
+    // admits fixed-plan dispatch, and — for adaptive policies — are
+    // reused verbatim as the per-device instances of devices
+    // 0..n_presets.
+    let mut catalogues: Vec<Arc<[Action]>> = Vec::with_capacity(n_presets);
+    let mut probes: Vec<Box<dyn ScalingPolicy>> = Vec::with_capacity(n_presets);
+    for p in 0..n_presets {
+        let policy = arena.build(&mk_spec(p))?;
+        catalogues.push(policy.catalogue().into());
+        probes.push(policy);
+    }
+    let plan: Option<FixedPlan> = {
+        let mut decisions = Vec::with_capacity(n_presets * models.len());
+        let mut all_fixed = true;
+        'probe: for (p, probe) in probes.iter().enumerate() {
+            let dev = crate::device::presets::device(DeviceId::PHONES[p]);
+            for nn in &models {
+                match probe.fixed_plan(&dev, nn) {
+                    Some(a) => decisions.push(Decision::from_catalogue(&catalogues[p], a)),
+                    None => {
+                        all_fixed = false;
+                        break 'probe;
+                    }
+                }
+            }
+        }
+        all_fixed.then_some(FixedPlan { decisions })
+    };
+
     let shared = FleetShared {
         models,
         scenario: cfg.scenario,
         accuracy_target: cfg.accuracy_target,
         agent: cfg.agent,
+        quota,
+        catalogues,
+        plan,
     };
 
     // Single-threaded, device-id-order construction: prototype reuse for
@@ -523,17 +727,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     // Scenarios are built once per key and shared via `Arc` handles — a
     // trace:<path> fleet reads its file once, and an unreadable file is a
     // config error here rather than a panic mid-construction.
-    let n = cfg.devices;
     let mut scenarios = ScenarioCache::new();
-    let mut arena = PrototypeArena::new(&cfg.policy);
-    let mut preset_catalogues: HashMap<DeviceId, Arc<[Action]>> = HashMap::new();
+    let per_device_policies = shared.plan.is_none();
+    let mut probe_policies = probes.into_iter();
     let mut state = FleetState {
         clocks: Vec::with_capacity(n),
         envs: Vec::with_capacity(n),
-        policies: Vec::with_capacity(n),
+        policies: Vec::with_capacity(if per_device_policies { n } else { 0 }),
         arrivals: Vec::with_capacity(n),
         rngs: Vec::with_capacity(n),
-        catalogues: Vec::with_capacity(n),
         metrics: Vec::with_capacity(n),
     };
     for i in 0..n {
@@ -543,30 +745,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         let dseed = device_seed(cfg.seed, i);
         state.envs.push(Environment::from_scenario_shared(dev_id, &sc, dseed));
 
-        // Per-device policy through the prototype arena. Compact catalogue
-        // scope: a dense learner per device at fleet scale must stay small
-        // (see compact_action_catalogue); the Opt builder overrides it with
-        // the full DVFS sweep it what-ifs. Expensive-but-stateless policies
-        // (the offline-trained predictors) train once per preset inside the
-        // arena and clone thereafter — still a pure function of
-        // (config, seed), so determinism and shard-invariance hold, without
-        // ~13k profiling runs per device.
-        let mut spec = PolicySpec::new(dev_id, dseed);
-        spec.agent = cfg.agent;
-        spec.scope = CatalogueScope::Compact;
-        spec.scenario = cfg.scenario;
-        spec.accuracy_target = cfg.accuracy_target;
-        // Predictor training keeps the PolicySpec defaults (the STATIC
-        // envs, 40 samples each) deliberately: offline profiling happens
-        // under controlled conditions, not in the deployment env —
-        // mirroring how the §3.3 comparators are trained in the paper.
-        let policy = arena.build(&spec)?;
-        let catalogue = preset_catalogues
-            .entry(dev_id)
-            .or_insert_with(|| policy.catalogue().into())
-            .clone();
-        state.catalogues.push(catalogue);
-        state.policies.push(policy);
+        if per_device_policies {
+            // Per-device policy through the prototype arena; the probe
+            // instances ARE devices 0..n_presets (same spec, same build).
+            let policy = match probe_policies.next() {
+                Some(p) => p,
+                None => arena.build(&mk_spec(i))?,
+            };
+            state.policies.push(policy);
+        }
 
         let mut rng = Pcg64::with_stream(dseed, 2001);
         let mut arrivals = build_arrivals(cfg, i);
@@ -577,12 +764,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         state.clocks.push(DeviceClock {
             next_arrival_s,
             last_done_s: 0.0,
-            served: 0,
-            quota: cfg.requests_per_device as u32,
-            tally_jobs: 0,
             tally_macs_m: 0.0,
+            served: 0,
+            tally_jobs: 0,
         });
-        state.metrics.push(FleetMetrics::with_capacity(cfg.requests_per_device));
+        state.metrics.push(if sketch {
+            DeviceMetrics::streaming()
+        } else {
+            DeviceMetrics::with_capacity(cfg.requests_per_device)
+        });
     }
     let mut cloud = CloudModel::new(cfg.cloud);
     let mut timeline = Vec::new();
@@ -602,38 +792,60 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         + 100.0 * cfg.epoch_s;
     let max_epochs = (horizon_s / cfg.epoch_s).ceil() as usize;
 
+    // Work-stealing layout: contiguous blocks, claimed by `shards`
+    // workers off an atomic counter each epoch. ~4 blocks per worker
+    // keeps stragglers from idling the rest; the cap bounds block cost.
     let shards = cfg.shards.min(n);
-    let chunk = n.div_ceil(shards);
-    // One reusable scheduler per worker: reset each epoch, never freed.
-    let mut queues: Vec<CalendarQueue<u32>> = (0..shards).map(|_| CalendarQueue::new()).collect();
+    let block = n.div_ceil(shards * 4).clamp(1, MAX_BLOCK_DEVICES);
+    let n_blocks = n.div_ceil(block);
+    let workers = shards.min(n_blocks);
+    let mut worker_state: Vec<Worker> = (0..workers)
+        .map(|_| Worker { queue: CalendarQueue::new(), hist: sketch.then(LogHistogram::new) })
+        .collect();
 
     let mut epoch_start = 0.0;
     for _ in 0..max_epochs {
-        if state.clocks.iter().all(|c| c.done()) {
+        if state.clocks.iter().all(|c| c.done(quota)) {
             break;
         }
         let t_end = epoch_start + cfg.epoch_s;
         let snapshot = cloud.snapshot();
-        let mut parts = split_shards(&mut state, chunk);
-        if parts.len() == 1 {
-            run_epoch_shard(&mut parts[0], &mut queues[0], epoch_start, t_end, &snapshot, &shared);
+        let parts = split_shards(&mut state, block);
+        if workers == 1 {
+            let worker = &mut worker_state[0];
+            for mut part in parts {
+                run_epoch_shard(&mut part, worker, epoch_start, t_end, &snapshot, &shared);
+            }
         } else {
+            // Each block is claimed exactly once; the Mutex is never
+            // contended (the counter hands each index to one worker) and
+            // exists only to move `&mut Shard` across the scope safely.
+            let blocks: Vec<Mutex<Shard>> = parts.into_iter().map(Mutex::new).collect();
+            let next = AtomicUsize::new(0);
             let snap = &snapshot;
             let sh = &shared;
+            let blocks_ref = &blocks;
+            let next_ref = &next;
             std::thread::scope(|scope| {
-                for (part, queue) in parts.iter_mut().zip(queues.iter_mut()) {
-                    scope.spawn(move || {
-                        run_epoch_shard(part, queue, epoch_start, t_end, snap, sh);
+                for worker in worker_state.iter_mut() {
+                    scope.spawn(move || loop {
+                        let idx = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if idx >= blocks_ref.len() {
+                            break;
+                        }
+                        let mut shard = blocks_ref[idx]
+                            .lock()
+                            .expect("block mutex poisoned (worker panicked)");
+                        run_epoch_shard(&mut shard, worker, epoch_start, t_end, snap, sh);
                     });
                 }
             });
         }
-        drop(parts);
         // Deterministic reduction: fold tallies in device-id order.
         let mut jobs = 0u64;
         let mut macs_m = 0.0;
         for c in &mut state.clocks {
-            jobs += c.tally_jobs;
+            jobs += c.tally_jobs as u64;
             macs_m += c.tally_macs_m;
             c.tally_jobs = 0;
             c.tally_macs_m = 0.0;
@@ -649,18 +861,47 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         epoch_start = t_end;
     }
     anyhow::ensure!(
-        state.clocks.iter().all(|c| c.done()),
+        state.clocks.iter().all(|c| c.done(quota)),
         "fleet failed to progress: {max_epochs}-epoch runaway guard tripped \
          before all devices finished"
     );
 
-    let mut metrics = FleetMetrics::default();
+    // Device-id-ordered final fold: identical floating-point sequence to
+    // the pre-refactor per-device-FleetMetrics merge loop.
+    let mut metrics = if sketch {
+        FleetMetrics::sketch()
+    } else {
+        FleetMetrics::with_capacity(n * cfg.requests_per_device)
+    };
     let mut makespan_s = 0.0f64;
     for (c, m) in state.clocks.iter().zip(&state.metrics) {
-        metrics.merge(m);
+        metrics.merge_device(m);
         makespan_s = makespan_s.max(c.last_done_s);
     }
-    Ok(FleetOutcome { metrics, cloud_timeline: timeline, makespan_s })
+    // Worker latency sketches merge by exact u64 addition — any order,
+    // any block-to-worker assignment, same state.
+    for w in &worker_state {
+        if let Some(h) = &w.hist {
+            metrics.merge_latency_sketch(h);
+        }
+    }
+
+    // Steady-state mutable per-device footprint (inline state + exact-mode
+    // sample heap; policy heap for adaptive fleets is extra and
+    // policy-dependent).
+    let bytes_per_device = std::mem::size_of::<DeviceClock>()
+        + std::mem::size_of::<Environment>()
+        + std::mem::size_of::<ArrivalProcess>()
+        + std::mem::size_of::<Pcg64>()
+        + DeviceMetrics::BASE_BYTES
+        + if sketch { 0 } else { cfg.requests_per_device * std::mem::size_of::<f64>() }
+        + if per_device_policies {
+            std::mem::size_of::<Box<dyn ScalingPolicy>>()
+        } else {
+            0
+        };
+
+    Ok(FleetOutcome { metrics, cloud_timeline: timeline, makespan_s, bytes_per_device })
 }
 
 #[cfg(test)]
@@ -683,6 +924,7 @@ mod tests {
         assert_eq!(out.metrics.n(), 12 * 8);
         assert!(out.makespan_s > 0.0);
         assert!(!out.cloud_timeline.is_empty());
+        assert!(out.bytes_per_device > 0);
     }
 
     #[test]
@@ -706,6 +948,68 @@ mod tests {
         cfg.shards = 5;
         let b = run_fleet(&cfg).unwrap();
         assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
+    }
+
+    #[test]
+    fn metrics_mode_does_not_change_fingerprint() {
+        // Sketch vs exact storage changes percentile *reporting* only;
+        // the fingerprint folds exact sums and must match bit-for-bit.
+        let mut cfg = small_cfg();
+        cfg.metrics = MetricsMode::Exact;
+        let exact = run_fleet(&cfg).unwrap();
+        cfg.metrics = MetricsMode::Sketch;
+        let sk = run_fleet(&cfg).unwrap();
+        assert_eq!(exact.metrics.fingerprint(), sk.metrics.fingerprint());
+        assert_eq!(exact.metrics.n(), sk.metrics.n());
+        assert!(sk.metrics.is_sketch());
+        assert!(!exact.metrics.is_sketch());
+        // Sketch percentiles track the exact ones within the documented
+        // ≤5% relative bound (nearest-rank vs interpolated adds a hair
+        // of slack at n=96).
+        let (e50, e95, e99) = exact.metrics.latency_p50_p95_p99_s();
+        let (s50, s95, s99) = sk.metrics.latency_p50_p95_p99_s();
+        for (s, e) in [(s50, e50), (s95, e95), (s99, e99)] {
+            assert!((s - e).abs() / e < 0.10, "sketch {s} vs exact {e}");
+        }
+        assert!(sk.bytes_per_device < exact.bytes_per_device);
+    }
+
+    #[test]
+    fn auto_mode_picks_exact_for_small_fleets() {
+        let cfg = small_cfg();
+        assert!(!cfg.use_sketch());
+        let mut big = small_cfg();
+        big.devices = 2_000_000;
+        big.requests_per_device = 2;
+        assert!(big.use_sketch());
+        let mut forced = small_cfg();
+        forced.metrics = MetricsMode::Sketch;
+        assert!(forced.use_sketch());
+    }
+
+    #[test]
+    fn fixed_plan_dispatch_matches_generic_dispatch() {
+        // Run the same fixed-policy fleet twice: once with the plan table
+        // (normal path) and once with per-device policy instances forced
+        // by a plan-less run... we can't force that from the public API,
+        // so instead pin the equivalence the other way: a fixed-policy
+        // fleet and an adaptive-policy fleet must both satisfy the
+        // shard-invariance contract, and the fixed plan's decisions are
+        // pinned against `decide` in `policy::fixed` unit tests. Here we
+        // check plan-mode shard invariance explicitly.
+        for policy in ["cpu", "best", "cloud", "connected"] {
+            let mut cfg = small_cfg();
+            cfg.policy = policy.to_string();
+            cfg.shards = 1;
+            let a = run_fleet(&cfg).unwrap();
+            cfg.shards = 4;
+            let b = run_fleet(&cfg).unwrap();
+            assert_eq!(
+                a.metrics.fingerprint(),
+                b.metrics.fingerprint(),
+                "plan-mode shard variance for {policy}"
+            );
+        }
     }
 
     #[test]
@@ -791,5 +1095,13 @@ mod tests {
             mutate(&mut cfg);
             assert!(run_fleet(&cfg).is_err());
         }
+    }
+
+    #[test]
+    fn device_clock_stays_compact() {
+        // The 1M-device budget assumes a 32-byte clock; catch accidental
+        // growth (e.g. re-adding per-device quota) at compile-adjacent
+        // time rather than in a memory regression.
+        assert!(std::mem::size_of::<DeviceClock>() <= 32);
     }
 }

@@ -13,13 +13,16 @@
 //!   prediction-based policies ([`baselines`]), and the experiment harness
 //!   regenerating every paper figure ([`experiments`]).
 //! * **Fleet layer** ([`fleet`]) — the production-scale step beyond the
-//!   paper: a seeded discrete-event simulator running hundreds to tens of
-//!   thousands of devices (each with its own environment, policy and
+//!   paper: a seeded discrete-event simulator running hundreds to
+//!   **millions** of devices (each with its own environment, policy and
 //!   arrival process) against one **shared** cloud backend with a batching
-//!   window, a backlog queue and load-dependent service time. Devices are
-//!   sharded across worker threads with per-device RNG streams and
-//!   device-ordered reductions, so aggregate metrics are bit-identical for
-//!   any `--shards` setting. `autoscale fleet --devices 1000 ...` drives it
+//!   window, a backlog queue and load-dependent service time. Worker
+//!   threads steal contiguous device blocks off an atomic counter; per-
+//!   device RNG streams and device-ordered reductions keep aggregate
+//!   metrics bit-identical for any `--shards` setting, and above ~1M total
+//!   requests latency percentiles switch to a fixed-size streaming sketch
+//!   ([`fleet::MetricsMode`], ≤5% relative error) so per-device metric
+//!   memory stays O(1). `autoscale fleet --devices 1000000 ...` drives it
 //!   from the CLI.
 //! * **L2/L1 (build-time python)** — the 10-NN model zoo in JAX calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`; loaded and

@@ -9,6 +9,7 @@
 //!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
 //!         [--scenario-env K|mix|all] [--policy P] [--arrival A] [--rate HZ]
 //!         [--epoch S] [--cloud-capacity MMACS] [--batch-window S]
+//!         [--metrics auto|exact|sketch]
 //!                                     multi-device shared-cloud simulation
 //!   bench [--quick|--full] [--suite S] [--out DIR] [--check DIR]
 //!         [--tolerance F]             run the bench suites, write BENCH_*.json,
@@ -40,7 +41,7 @@ use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::serve::{ServeConfig, Server};
 use autoscale::experiments;
-use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig};
+use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig, MetricsMode};
 use autoscale::policy::{PolicySpec, ScalingPolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
@@ -346,14 +347,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--epoch",
                     "--cloud-capacity",
                     "--batch-window",
+                    "--metrics",
                 ],
                 &[],
                 0,
             )?;
+            // Workers steal device blocks, so extra cores always help;
+            // no cap (the old min(8) predates work stealing).
             let default_shards = std::thread::available_parallelism()
                 .map(|n| n.get())
-                .unwrap_or(1)
-                .min(8);
+                .unwrap_or(1);
             let cloud_defaults = CloudParams::default();
             let arrival_name = cli.value("--arrival").unwrap_or("poisson");
             let cfg = FleetConfig {
@@ -379,6 +382,12 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         .num("--cloud-capacity", cloud_defaults.capacity_mmacs_per_s)?,
                     batch_window_s: cli.num("--batch-window", cloud_defaults.batch_window_s)?,
                     ..cloud_defaults
+                },
+                metrics: {
+                    let name = cli.value("--metrics").unwrap_or("auto");
+                    MetricsMode::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!("unknown metrics mode '{name}' (auto|exact|sketch)")
+                    })?
                 },
                 ..Default::default()
             };
@@ -435,6 +444,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             );
             println!("policy       : {} (per device)", cfg.policy);
             println!("shards       : {}", cfg.shards);
+            println!(
+                "metrics      : {} ({} latency store), ~{} B/device mutable state",
+                cfg.metrics.name(),
+                if m.is_sketch() { "sketch" } else { "exact" },
+                out.bytes_per_device,
+            );
+            if let Some(rss) = autoscale::util::bench::peak_rss_bytes() {
+                println!("peak RSS     : {:.0} MiB", rss as f64 / (1u64 << 20) as f64);
+            }
             println!("served       : {} requests", m.n());
             println!("virtual time : {:.1} s", out.makespan_s);
             println!("total energy : {:.1} J", m.total_energy_j());
@@ -621,6 +639,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                  serve: --runtime\n\
                  fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
                  \x20       --epoch S --cloud-capacity MMACS --batch-window S --scenario-env K|mix|all\n\
+                 \x20       --metrics auto|exact|sketch (latency store; auto switches at 1M requests)\n\
                  bench: --quick|--full --suite all|fleet|e2e|agent|models|figures\n\
                  \x20       --out DIR --check DIR --tolerance F (writes BENCH_<suite>.json)\n\
                  policies (--policy, serve & fleet):"

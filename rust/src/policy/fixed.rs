@@ -10,10 +10,16 @@ use super::{Decision, DecisionCtx, ScalingPolicy};
 
 /// A baseline that maps each request to a fixed execution target (fixed
 /// per request — Edge(Best) still adapts to the NN's layer composition).
+///
+/// The chooser is a pure function of (device, network), which is exactly
+/// the [`ScalingPolicy::fixed_plan`] contract: hosts serving many
+/// requests (the fleet driver) precompute one decision per (device
+/// preset, model) and never call [`ScalingPolicy::decide`] on the hot
+/// path.
 pub struct FixedTargetPolicy {
     name: &'static str,
     catalogue: Vec<Action>,
-    choose: fn(&DecisionCtx) -> Action,
+    choose: fn(&Device, &NnDesc) -> Action,
 }
 
 impl FixedTargetPolicy {
@@ -22,7 +28,7 @@ impl FixedTargetPolicy {
         FixedTargetPolicy {
             name: "Edge(CPU FP32)",
             catalogue,
-            choose: |_| Action::local(ProcKind::Cpu, Precision::Fp32),
+            choose: |_, _| Action::local(ProcKind::Cpu, Precision::Fp32),
         }
     }
 
@@ -32,13 +38,13 @@ impl FixedTargetPolicy {
         FixedTargetPolicy {
             name: "Edge(Best)",
             catalogue,
-            choose: |ctx| edge_best_action(&ctx.sim.local, ctx.nn),
+            choose: edge_best_action,
         }
     }
 
     /// Baseline 3: always offload to the cloud.
     pub fn cloud_always(catalogue: Vec<Action>) -> FixedTargetPolicy {
-        FixedTargetPolicy { name: "Cloud", catalogue, choose: |_| Action::cloud() }
+        FixedTargetPolicy { name: "Cloud", catalogue, choose: |_, _| Action::cloud() }
     }
 
     /// Baseline 4: always the locally connected edge device.
@@ -46,7 +52,7 @@ impl FixedTargetPolicy {
         FixedTargetPolicy {
             name: "Connected Edge",
             catalogue,
-            choose: |_| Action::connected_edge(),
+            choose: |_, _| Action::connected_edge(),
         }
     }
 }
@@ -57,11 +63,15 @@ impl ScalingPolicy for FixedTargetPolicy {
     }
 
     fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
-        Decision::from_catalogue(ctx.catalogue, (self.choose)(ctx))
+        Decision::from_catalogue(ctx.catalogue, (self.choose)(&ctx.sim.local, ctx.nn))
     }
 
     fn catalogue(&self) -> &[Action] {
         &self.catalogue
+    }
+
+    fn fixed_plan(&self, dev: &Device, nn: &NnDesc) -> Option<Action> {
+        Some((self.choose)(dev, nn))
     }
 }
 
@@ -139,6 +149,9 @@ mod tests {
             let mut p = mk(catalogue.clone());
             let d = p.decide(&ctx);
             assert_eq!(catalogue[d.catalogue_idx], d.action, "{}", p.name());
+            // fixed_plan must pin exactly what decide would choose — the
+            // fleet's vectorized dispatch relies on this equivalence.
+            assert_eq!(p.fixed_plan(&env.sim.local, nn), Some(d.action), "{}", p.name());
         }
     }
 }

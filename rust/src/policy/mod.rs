@@ -40,6 +40,7 @@ pub mod registry;
 pub mod rl;
 
 use crate::agent::state::{State, StateObs};
+use crate::device::processor::Device;
 use crate::exec::latency::Simulator;
 use crate::nn::zoo::NnDesc;
 use crate::types::Action;
@@ -165,6 +166,22 @@ pub trait ScalingPolicy: Send {
     /// back through [`DecisionCtx::catalogue`] on every decision.
     fn catalogue(&self) -> &[Action];
 
+    /// If this policy's choice for `(device, network)` is a pure function
+    /// of those two — independent of per-request observations, learning
+    /// state and congestion — return it. Hosts may then precompute one
+    /// [`Decision`] per (device preset, model) and skip state
+    /// discretization, `DecisionCtx` assembly and the virtual
+    /// [`Self::decide`] call on the hot path entirely. The fleet driver
+    /// uses this to vectorize fixed-policy dispatch (`cpu`/`best`/
+    /// `cloud`/`connected`) into a table lookup.
+    ///
+    /// Contract: when `Some(a)` is returned, `decide` on any ctx with the
+    /// same device and `nn` must pick exactly `a`. Adaptive and learning
+    /// policies must return `None` (the default).
+    fn fixed_plan(&self, _dev: &Device, _nn: &NnDesc) -> Option<Action> {
+        None
+    }
+
     /// A fresh boxed copy, for policies whose construction is expensive
     /// but deterministic and holds no per-instance exploration state
     /// (the offline-trained predictors). The fleet uses this to train one
@@ -198,6 +215,10 @@ impl<P: ScalingPolicy + ?Sized> ScalingPolicy for Box<P> {
 
     fn catalogue(&self) -> &[Action] {
         (**self).catalogue()
+    }
+
+    fn fixed_plan(&self, dev: &Device, nn: &NnDesc) -> Option<Action> {
+        (**self).fixed_plan(dev, nn)
     }
 
     fn clone_box(&self) -> Option<Box<dyn ScalingPolicy>> {

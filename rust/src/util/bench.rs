@@ -132,6 +132,20 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Peak resident-set size of this process so far (bytes), from
+/// `/proc/self/status` `VmHWM`. `None` off Linux or when the field is
+/// unavailable — callers must treat the column as best-effort.
+pub fn peak_rss_bytes() -> Option<u64> {
+    if !cfg!(target_os = "linux") {
+        return None;
+    }
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    // Format: "VmHWM:     12345 kB"
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// Machine-speed anchor written into every suite report: the best-of-3
 /// wall time of a fixed integer workload (FNV-folding 4M values).
 /// Regression checks normalize mean times by the calibration ratio, so a
@@ -164,6 +178,13 @@ pub struct SuiteEntry {
     /// Work-rate companion metric (requests/s, inferences/s) when the row
     /// has a natural unit count.
     pub throughput_per_s: Option<f64>,
+    /// Process peak RSS (bytes) observed after the row ran — a whole-run
+    /// high-water mark, not a per-row delta. Best-effort (Linux only);
+    /// informational, never compared by [`check_against`].
+    pub peak_rss_bytes: Option<u64>,
+    /// Steady-state mutable simulation bytes per device (fleet rows).
+    /// Informational, never compared by [`check_against`].
+    pub bytes_per_device: Option<u64>,
     /// Required rows gate CI; optional rows (artifact- or
     /// environment-dependent) may be absent without failing `--check`.
     pub required: bool,
@@ -180,6 +201,8 @@ impl SuiteEntry {
             p95_s: r.p95_s(),
             samples: r.samples_s.len(),
             throughput_per_s: units_per_iter.map(|u| u / r.median_s()),
+            peak_rss_bytes: None,
+            bytes_per_device: None,
             required: true,
         }
     }
@@ -191,19 +214,36 @@ impl SuiteEntry {
         self
     }
 
-    /// One human-readable report line (mean / median / p95 + throughput).
+    /// Attach memory columns: the process peak RSS sampled after the row
+    /// ran, plus (for fleet rows) the per-device steady-state footprint.
+    pub fn with_memory(mut self, bytes_per_device: Option<usize>) -> SuiteEntry {
+        self.peak_rss_bytes = peak_rss_bytes();
+        self.bytes_per_device = bytes_per_device.map(|b| b as u64);
+        self
+    }
+
+    /// One human-readable report line (mean / median / p95 + throughput
+    /// + memory columns when present).
     pub fn report(&self) -> String {
         let thr = match self.throughput_per_s {
             Some(t) => format!("  {t:>12.0}/s"),
             None => String::new(),
         };
+        let mut mem = String::new();
+        if let Some(b) = self.bytes_per_device {
+            mem.push_str(&format!("  {b:>6} B/dev"));
+        }
+        if let Some(rss) = self.peak_rss_bytes {
+            mem.push_str(&format!("  rss {:.0} MiB", rss as f64 / (1 << 20) as f64));
+        }
         format!(
-            "{:44} {:>12} {:>12} {:>12}{}",
+            "{:44} {:>12} {:>12} {:>12}{}{}",
             self.name,
             fmt_time(self.mean_s),
             fmt_time(self.median_s),
             fmt_time(self.p95_s),
             thr,
+            mem,
         )
     }
 }
@@ -239,17 +279,22 @@ impl SuiteReport {
     ///
     /// ```json
     /// {
-    ///   "schema": 2,
+    ///   "schema": 3,
     ///   "bench": "<suite>",
     ///   "calibration_s": <seconds of the fixed calibration workload>,
     ///   "entries": [
     ///     {"name": "...", "mean_s": ..., "median_s": ..., "p95_s": ...,
     ///      "samples": N, "throughput_per_s": ... | null,
+    ///      "peak_rss_bytes": ... | null, "bytes_per_device": ... | null,
     ///      "required": true | false}
     ///   ],
     ///   "fingerprint": "<16-hex determinism digest>" | null
     /// }
     /// ```
+    ///
+    /// Schema 3 added the two memory columns; they are informational and
+    /// nullable, so schema-2 baselines (which simply lack them) stay
+    /// readable by [`check_against`] unchanged.
     ///
     /// Entry names are plain ASCII without quotes/backslashes, so the
     /// hand-rolled writer needs no escaping.
@@ -261,11 +306,20 @@ impl SuiteReport {
                 Some(t) => format!("{t:.1}"),
                 None => "null".to_string(),
             };
+            let rss = match e.peak_rss_bytes {
+                Some(b) => b.to_string(),
+                None => "null".to_string(),
+            };
+            let bpd = match e.bytes_per_device {
+                Some(b) => b.to_string(),
+                None => "null".to_string(),
+            };
             rows.push_str(&format!(
                 "    {{\"name\": \"{}\", \"mean_s\": {:.9}, \"median_s\": {:.9}, \
                  \"p95_s\": {:.9}, \"samples\": {}, \"throughput_per_s\": {}, \
+                 \"peak_rss_bytes\": {}, \"bytes_per_device\": {}, \
                  \"required\": {}}}{}\n",
-                e.name, e.mean_s, e.median_s, e.p95_s, e.samples, thr, e.required, sep
+                e.name, e.mean_s, e.median_s, e.p95_s, e.samples, thr, rss, bpd, e.required, sep
             ));
         }
         let fp = match self.fingerprint {
@@ -273,7 +327,7 @@ impl SuiteReport {
             None => "null".to_string(),
         };
         format!(
-            "{{\n  \"schema\": 2,\n  \"bench\": \"{}\",\n  \
+            "{{\n  \"schema\": 3,\n  \"bench\": \"{}\",\n  \
              \"calibration_s\": {:.9},\n  \"entries\": [\n{}  ],\n  \
              \"fingerprint\": {}\n}}\n",
             self.suite, self.calibration_s, rows, fp
@@ -404,6 +458,8 @@ mod tests {
                     p95_s: 0.6,
                     samples: 5,
                     throughput_per_s: Some(6400.0),
+                    peak_rss_bytes: Some(64 << 20),
+                    bytes_per_device: Some(1800),
                     required: true,
                 },
                 SuiteEntry {
@@ -413,6 +469,8 @@ mod tests {
                     p95_s: 0.3,
                     samples: 3,
                     throughput_per_s: None,
+                    peak_rss_bytes: None,
+                    bytes_per_device: None,
                     required: false,
                 },
             ],
@@ -425,7 +483,7 @@ mod tests {
         let report = sample_report();
         let parsed = crate::util::json::Json::parse(&report.to_json()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("fleet"));
-        assert_eq!(parsed.get("schema").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.get("schema").unwrap().as_f64(), Some(3.0));
         assert_eq!(
             parsed.get("fingerprint").unwrap().as_str(),
             Some("00000000deadbeef")
@@ -438,8 +496,49 @@ mod tests {
             entries[0].get("throughput_per_s").unwrap().as_f64(),
             Some(6400.0)
         );
+        assert_eq!(
+            entries[0].get("peak_rss_bytes").unwrap().as_f64(),
+            Some((64u64 << 20) as f64)
+        );
+        assert_eq!(entries[0].get("bytes_per_device").unwrap().as_f64(), Some(1800.0));
+        assert!(entries[1].get("peak_rss_bytes").unwrap().as_f64().is_none());
         assert_eq!(entries[1].get("required").unwrap().as_bool(), Some(false));
         assert_eq!(report.file_name(), "BENCH_fleet.json");
+    }
+
+    #[test]
+    fn schema2_baselines_without_memory_columns_still_check() {
+        // A committed schema-2 baseline simply lacks the memory fields;
+        // check_against must keep reading it (they are never compared).
+        let report = sample_report();
+        let baseline = "{\n  \"schema\": 2,\n  \"bench\": \"fleet\",\n  \
+             \"calibration_s\": 0.010,\n  \"entries\": [\n    \
+             {\"name\": \"fleet 128x25 shards=1\", \"mean_s\": 0.5, \
+              \"median_s\": 0.5, \"p95_s\": 0.6, \"samples\": 5, \
+              \"throughput_per_s\": 6400.0, \"required\": true}\n  ],\n  \
+             \"fingerprint\": null\n}\n";
+        assert!(check_against(&report, baseline, 0.25).unwrap().is_empty());
+    }
+
+    #[test]
+    fn peak_rss_is_sane_on_linux() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            let rss = rss.expect("VmHWM should exist on Linux");
+            // A test process is bigger than 1 MiB and smaller than 1 TiB.
+            assert!(rss > 1 << 20 && rss < 1u64 << 40, "implausible RSS {rss}");
+        }
+    }
+
+    #[test]
+    fn memory_columns_attach_via_with_memory() {
+        let r = Bencher::once("m", || {
+            black_box((0..10).sum::<u64>());
+        });
+        let e = SuiteEntry::from_result(&r, None).with_memory(Some(1234));
+        assert_eq!(e.bytes_per_device, Some(1234));
+        assert_eq!(e.peak_rss_bytes.is_some(), cfg!(target_os = "linux"));
+        assert!(e.report().contains("1234"));
     }
 
     #[test]

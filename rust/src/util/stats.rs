@@ -41,7 +41,10 @@ pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
         return vec![0.0; ps.len()];
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp` is a total order over all f64 values (NaN sorts above
+    // +inf), so a stray NaN sample degrades the tail estimate instead of
+    // panicking mid-episode the way `partial_cmp().unwrap()` did.
+    v.sort_by(f64::total_cmp);
     ps.iter()
         .map(|&p| {
             let rank = (p / 100.0) * (v.len() - 1) as f64;
@@ -171,6 +174,180 @@ impl Running {
     }
 }
 
+/// Exponent of the smallest octave tracked by [`LogHistogram`]: 2^-20 s
+/// ≈ 0.95 µs. Anything smaller (or non-finite / non-positive) lands in
+/// the underflow bucket.
+const LOG_HIST_MIN_EXP: i32 = -20;
+/// Number of octaves covered: 2^-20 .. 2^12 (≈ 1 µs .. 4096 s). Latencies
+/// beyond the top land in the overflow bucket.
+const LOG_HIST_OCTAVES: usize = 32;
+/// Sub-buckets per octave. Eight sub-buckets give a bucket width ratio of
+/// 2^(1/8), so the geometric-midpoint representative is within a factor
+/// 2^(1/16) of every sample in the bucket.
+const LOG_HIST_SUBS: usize = 8;
+/// Total bucket count: underflow + octaves*subs + overflow.
+const LOG_HIST_BUCKETS: usize = 2 + LOG_HIST_OCTAVES * LOG_HIST_SUBS;
+
+/// Fixed-size log-bucketed quantile sketch for positive samples
+/// (latencies in seconds).
+///
+/// Design goals, in priority order:
+///
+/// 1. **O(1) memory** — `2 + 32*8 = 258` u64 counters (~2 KiB), never
+///    grows, regardless of how many samples are pushed. This is what lets
+///    a million-device fleet episode report p50/p95/p99 without storing a
+///    single per-request latency.
+/// 2. **Deterministic and merge-order-invariant** — the bucket index is
+///    computed from the sample's IEEE-754 bit pattern (unbiased exponent
+///    plus the top `log2(LOG_HIST_SUBS)` mantissa bits), with no
+///    floating-point arithmetic involved, so the same sample always lands
+///    in the same bucket on every platform. Merging adds u64 counts,
+///    which commutes and associates exactly, so any shard partition or
+///    merge order yields bit-identical sketch state.
+/// 3. **Bounded relative error** — the reported percentile is the
+///    geometric midpoint of the bucket holding the nearest-rank sample.
+///    Bucket edges are a factor 2^(1/8) apart, so the estimate is within
+///    a factor 2^(1/16) ≈ 1.0443 of the true nearest-rank sample value:
+///    **≤ 5% relative error**, verified by property test.
+///
+/// Out-of-range samples are still counted (in the underflow/overflow
+/// buckets, represented by the range edges) so `n()` and ranks stay
+/// consistent with the number of pushes.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: [u64; LOG_HIST_BUCKETS],
+    n: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: [0; LOG_HIST_BUCKETS], n: 0 }
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("n", &self.n)
+            .field("buckets", &LOG_HIST_BUCKETS)
+            .finish()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a sample, from its bit pattern alone.
+    fn bucket(x: f64) -> usize {
+        if !x.is_finite() || x <= 0.0 {
+            return 0; // underflow bucket
+        }
+        let bits = x.to_bits();
+        // Unbiased binary exponent. Subnormals (exponent field 0) are far
+        // below LOG_HIST_MIN_EXP anyway; treat them as exponent -1023 so
+        // they underflow without a special case.
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if exp < LOG_HIST_MIN_EXP {
+            return 0;
+        }
+        if exp >= LOG_HIST_MIN_EXP + LOG_HIST_OCTAVES as i32 {
+            return LOG_HIST_BUCKETS - 1; // overflow bucket
+        }
+        // Top 3 mantissa bits select the sub-bucket within the octave.
+        let sub = ((bits >> 49) & 0x7) as usize;
+        1 + (exp - LOG_HIST_MIN_EXP) as usize * LOG_HIST_SUBS + sub
+    }
+
+    /// Representative value for a bucket: the geometric midpoint of its
+    /// range (range edges for the underflow/overflow buckets).
+    fn representative(idx: usize) -> f64 {
+        if idx == 0 {
+            return (LOG_HIST_MIN_EXP as f64).exp2();
+        }
+        if idx == LOG_HIST_BUCKETS - 1 {
+            return ((LOG_HIST_MIN_EXP + LOG_HIST_OCTAVES as i32) as f64).exp2();
+        }
+        let slot = idx - 1;
+        let oct = slot / LOG_HIST_SUBS;
+        let sub = slot % LOG_HIST_SUBS;
+        // Bucket spans [2^(e + s/8), 2^(e + (s+1)/8)); midpoint at s + 1/2.
+        let e = (LOG_HIST_MIN_EXP + oct as i32) as f64;
+        (e + (sub as f64 + 0.5) / LOG_HIST_SUBS as f64).exp2()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.counts[Self::bucket(x)] += 1;
+        self.n += 1;
+    }
+
+    /// Merge another sketch into this one. Pure u64 addition: exact,
+    /// commutative and associative, hence order- and shard-invariant.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.n += other.n;
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// True iff no samples have been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Nearest-rank percentile estimate (p in 0..=100); 0 for an empty
+    /// sketch. Within 2^(1/16)−1 ≈ 4.4% of the exact nearest-rank sample
+    /// for in-range samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentile estimates from one pass over the buckets.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.n == 0 {
+            return vec![0.0; ps.len()];
+        }
+        ps.iter()
+            .map(|&p| {
+                // Nearest-rank: the k-th smallest sample, k = ceil(p/100 * n),
+                // clamped to [1, n].
+                let k = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+                let k = k.min(self.n);
+                let mut seen = 0u64;
+                for (idx, &c) in self.counts.iter().enumerate() {
+                    seen += c;
+                    if seen >= k {
+                        return Self::representative(idx);
+                    }
+                }
+                Self::representative(LOG_HIST_BUCKETS - 1)
+            })
+            .collect()
+    }
+
+    /// Fold the sketch state into an FNV-1a accumulator. Because the
+    /// state is integer counts, this is bit-stable across platforms and
+    /// shard layouts.
+    pub fn fold_fingerprint(&self, mut h: u64) -> u64 {
+        use super::hash::fnv1a_fold;
+        h = fnv1a_fold(h, self.n);
+        for &c in &self.counts {
+            h = fnv1a_fold(h, c);
+        }
+        h
+    }
+
+    /// Heap + inline size in bytes (all inline: fixed arrays only).
+    pub const fn size_bytes() -> usize {
+        std::mem::size_of::<LogHistogram>()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +412,88 @@ mod tests {
             e.update(10.0);
         }
         assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles_tolerate_nan() {
+        // Regression: `partial_cmp().unwrap()` used to panic here. NaN
+        // sorts above +inf under total_cmp, so finite percentiles of the
+        // clean prefix are unaffected.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let ps = percentiles(&xs, &[0.0, 50.0]);
+        assert_eq!(ps[0], 1.0);
+        assert!((ps[1] - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_within_documented_bound() {
+        // Error bound: representative within a factor 2^(1/16) of any
+        // sample in the same bucket.
+        let bound = (1.0f64 / 16.0).exp2() - 1.0; // ≈ 0.0443
+        let mut h = LogHistogram::new();
+        let mut xs = Vec::new();
+        // Deterministic pseudo-random latencies in ~[1e-4, 10] s.
+        let mut s: u64 = 0x9e37_79b9_7f4a_7c15;
+        for _ in 0..5000 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (s >> 11) as f64 / (1u64 << 53) as f64;
+            let x = 1e-4 * 1e5f64.powf(u);
+            h.push(x);
+            xs.push(x);
+        }
+        xs.sort_by(f64::total_cmp);
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+            let est = h.percentile(p);
+            let k = ((p / 100.0) * xs.len() as f64).ceil().max(1.0) as usize;
+            let exact = xs[k.min(xs.len()) - 1];
+            let rel = (est - exact).abs() / exact;
+            assert!(rel <= bound + 1e-12, "p{p}: est {est} vs exact {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge_is_order_invariant() {
+        let chunks: Vec<Vec<f64>> = vec![
+            vec![0.001, 0.5, 2.0, 0.03],
+            vec![1e-9, 1e9, 0.25],
+            vec![0.07, 0.07, 0.07],
+        ];
+        let mut fwd = LogHistogram::new();
+        let mut rev = LogHistogram::new();
+        for c in &chunks {
+            let mut part = LogHistogram::new();
+            for &x in c {
+                part.push(x);
+            }
+            fwd.merge(&part);
+        }
+        for c in chunks.iter().rev() {
+            let mut part = LogHistogram::new();
+            for &x in c {
+                part.push(x);
+            }
+            rev.merge(&part);
+        }
+        assert_eq!(fwd.fold_fingerprint(0), rev.fold_fingerprint(0));
+        assert_eq!(fwd.n(), rev.n());
+        assert_eq!(fwd.percentile(50.0), rev.percentile(50.0));
+    }
+
+    #[test]
+    fn log_histogram_handles_degenerate_inputs() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        h.push(f64::NAN);
+        h.push(-1.0);
+        h.push(0.0);
+        h.push(f64::INFINITY);
+        assert_eq!(h.n(), 4);
+        // Everything landed in the edge buckets; estimates are the edges.
+        assert!(h.percentile(1.0) > 0.0);
+        let mut single = LogHistogram::new();
+        single.push(0.042);
+        let est = single.percentile(50.0);
+        assert!((est / 0.042 - 1.0).abs() < 0.05, "est {est}");
     }
 
     #[test]

@@ -515,3 +515,87 @@ fn autoscale_fleet_learns_away_from_a_melted_cloud() {
     );
     assert!(out.metrics.n() == 30 * 60);
 }
+
+#[test]
+fn sketch_metrics_mode_keeps_the_determinism_contract_at_scale() {
+    // The streaming-sketch latency store (the 1M-device memory path,
+    // forced here at a test-sized fleet) must not perturb any determinism
+    // contract: same fingerprint as exact mode, bit-identical across
+    // shard layouts, O(1) latency-store memory, and percentiles within
+    // the documented sketch bound of the exact ones.
+    use autoscale::fleet::MetricsMode;
+    let mut cfg = FleetConfig {
+        devices: 400,
+        requests_per_device: 10,
+        rate_hz: 2.0,
+        seed: 42,
+        policy: "autoscale".to_string(),
+        env: EnvKind::D3RandomWlan,
+        ..Default::default()
+    };
+
+    cfg.metrics = MetricsMode::Exact;
+    let exact = run_fleet(&cfg).unwrap();
+    cfg.metrics = MetricsMode::Sketch;
+    let sk1 = run_fleet(&cfg).unwrap();
+    cfg.shards = 8;
+    let sk8 = run_fleet(&cfg).unwrap();
+
+    assert!(sk1.metrics.is_sketch() && !exact.metrics.is_sketch());
+    assert_eq!(exact.metrics.fingerprint(), sk1.metrics.fingerprint());
+    assert_eq!(sk1.metrics.fingerprint(), sk8.metrics.fingerprint());
+    assert_eq!(
+        sk1.metrics.latency_p50_p95_p99_s(),
+        sk8.metrics.latency_p50_p95_p99_s(),
+        "sketch percentiles must be shard-invariant"
+    );
+    assert_eq!(
+        exact.metrics.total_energy_j().to_bits(),
+        sk1.metrics.total_energy_j().to_bits()
+    );
+
+    // O(1) metric memory: the sketch never stores samples.
+    assert_eq!(sk1.metrics.latency_store_heap_bytes(), 0);
+    assert!(
+        exact.metrics.latency_store_heap_bytes() >= 400 * 10 * std::mem::size_of::<f64>()
+    );
+    assert!(sk1.bytes_per_device < exact.bytes_per_device);
+
+    // Reporting accuracy: within the documented sketch bound (~4.4%),
+    // plus a little slack for nearest-rank vs interpolation.
+    let (e50, e95, e99) = exact.metrics.latency_p50_p95_p99_s();
+    let (s50, s95, s99) = sk1.metrics.latency_p50_p95_p99_s();
+    for (s, e, which) in [(s50, e50, "p50"), (s95, e95, "p95"), (s99, e99, "p99")] {
+        assert!(
+            (s - e).abs() / e < 0.06,
+            "{which}: sketch {s} vs exact {e} out of bound"
+        );
+    }
+}
+
+#[test]
+fn fixed_policy_fleets_run_without_per_device_policy_state() {
+    // Fixed policies dispatch through the precomputed (preset, model)
+    // plan: the driver reports a smaller per-device footprint than an
+    // adaptive fleet of the same shape, and still satisfies every
+    // aggregate sanity check.
+    let fixed = FleetConfig {
+        devices: 100,
+        requests_per_device: 10,
+        rate_hz: 2.0,
+        seed: 7,
+        policy: "best".to_string(),
+        ..Default::default()
+    };
+    let adaptive = FleetConfig { policy: "autoscale".to_string(), ..fixed.clone() };
+    let f = run_fleet(&fixed).unwrap();
+    let a = run_fleet(&adaptive).unwrap();
+    assert_eq!(f.metrics.n(), 100 * 10);
+    assert!(f.metrics.total_energy_j() > 0.0);
+    assert!(
+        f.bytes_per_device < a.bytes_per_device,
+        "plan dispatch must drop the per-device policy handle: {} vs {}",
+        f.bytes_per_device,
+        a.bytes_per_device
+    );
+}

@@ -394,3 +394,80 @@ fn prop_calendar_queue_matches_binary_heap_ordering() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_log_histogram_tracks_exact_percentiles_within_bound() {
+    // The fleet's streaming latency sketch promises nearest-rank
+    // percentiles within one sub-bucket of relative error (2^(1/16)-1,
+    // documented as <= 5%) for any positive, finite sample set.
+    use autoscale::util::stats::LogHistogram;
+    Runner::new("log_histogram_accuracy", 60).run(|g| {
+        let n = g.usize_in(1, 400);
+        let mut xs = Vec::with_capacity(n);
+        let mut h = LogHistogram::new();
+        for _ in 0..n {
+            // Log-uniform over nine decades: microseconds to kiloseconds.
+            let x = 10f64.powf(g.f64_in(-5.0, 4.0));
+            xs.push(x);
+            h.push(x);
+        }
+        ptassert!(h.n() == n as u64, "count {} != {n}", h.n());
+        let bound = (1.0f64 / 16.0).exp2() - 1.0 + 1e-12;
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0] {
+            let k = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+            let exact = sorted[k - 1];
+            let approx = h.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            ptassert!(
+                rel <= bound,
+                "p{p}: sketch {approx} vs exact {exact} (rel {rel:.5} > {bound:.5}, n={n})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_log_histogram_merge_is_order_and_partition_invariant() {
+    // Shard invariance at the sketch level: however the sample stream is
+    // partitioned into per-worker sketches, and in whatever order those
+    // sketches merge, the result is state-identical (u64 bucket adds
+    // commute exactly). This is what lets the fleet's work-stealing
+    // workers keep private sketches.
+    use autoscale::util::hash::FNV_OFFSET;
+    use autoscale::util::stats::LogHistogram;
+    Runner::new("log_histogram_merge", 80).run(|g| {
+        let n = g.usize_in(1, 300);
+        let xs: Vec<f64> = (0..n).map(|_| 10f64.powf(g.f64_in(-5.0, 4.0))).collect();
+
+        // Random partition into up to 8 chunks (some possibly empty).
+        let parts = g.usize_in(1, 8);
+        let mut hists = vec![LogHistogram::new(); parts];
+        for x in &xs {
+            hists[g.usize_in(0, parts - 1)].push(*x);
+        }
+
+        let mut fwd = LogHistogram::new();
+        for h in &hists {
+            fwd.merge(h);
+        }
+        let mut rev = LogHistogram::new();
+        for h in hists.iter().rev() {
+            rev.merge(h);
+        }
+        let mut flat = LogHistogram::new();
+        for x in &xs {
+            flat.push(*x);
+        }
+        let fp = |h: &LogHistogram| h.fold_fingerprint(FNV_OFFSET);
+        ptassert!(fwd.n() == n as u64, "merged count {} != {n}", fwd.n());
+        ptassert!(fp(&fwd) == fp(&rev), "merge order changed sketch state");
+        ptassert!(
+            fp(&fwd) == fp(&flat),
+            "partitioned merge diverged from the flat stream"
+        );
+        Ok(())
+    });
+}
