@@ -28,6 +28,7 @@ use crate::experiments;
 use crate::fleet::{run_fleet, FleetConfig};
 use crate::interference::Interference;
 use crate::nn::zoo::by_name;
+use crate::obs::ObsConfig;
 use crate::policy::{action_catalogue, AutoScalePolicy};
 use crate::runtime::Engine;
 use crate::types::{Action, DeviceId, Precision, ProcKind};
@@ -81,6 +82,18 @@ pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
         bpd = Some(black_box(run_fleet(&cfg).unwrap()).bytes_per_device);
     });
     report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)).with_memory(bpd));
+
+    // Same fleet with the timeline + a 1/64-sampled trace collecting:
+    // the delta against the row above is the cost of telemetry, and the
+    // row above staying flat is the cost of telemetry *off* — the
+    // determinism contract's "allocation-free off path" held as a number.
+    let mut cfg = fleet_cfg(10_000, 5, 8, "best");
+    cfg.obs = ObsConfig { timeline: true, trace: true, trace_sample: 64, ..ObsConfig::default() };
+    let r = Bencher::once("fleet 10k x5 best shards=8 telemetry", || {
+        let out = black_box(run_fleet(&cfg).unwrap());
+        assert!(out.telemetry.is_some(), "telemetry requested but not returned");
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)).optional());
 
     if full {
         let cfg = fleet_cfg(100_000, 2, 8, "best");

@@ -15,6 +15,7 @@ use crate::coordinator::metrics::EpisodeMetrics;
 use crate::exec::latency::RunContext;
 use crate::exec::outcome::ExecOutcome;
 use crate::nn::zoo::{by_name, NnDesc, Workload};
+use crate::obs::{sampled, Collector, ObsConfig, Telemetry, TraceEvent, TraceLog, WindowHists};
 use crate::policy::{CloudCtx, DecisionCtx, Feedback, ScalingPolicy};
 use crate::runtime::Engine;
 use crate::types::Action;
@@ -58,6 +59,17 @@ pub struct Server<'a, P: ScalingPolicy> {
     rng: Pcg64,
     /// Optional real-compute engine (PJRT); None = pure simulation.
     engine: Option<&'a mut Engine>,
+    /// Opt-in telemetry (None = zero-cost off path). Single-threaded
+    /// here, so one collector bundle covers the whole episode; in serve
+    /// traces the sampled `id` is the *request* id.
+    telemetry: Option<ServeObs>,
+}
+
+/// Serve-side telemetry state: the collector plus the per-window latency
+/// histograms (merged into the timeline when the caller takes it).
+struct ServeObs {
+    col: Collector,
+    hists: Option<WindowHists>,
 }
 
 impl<'a, P: ScalingPolicy> Server<'a, P> {
@@ -72,6 +84,7 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
             clock: VirtualClock::new(),
             rng: Pcg64::with_stream(seed, 1001),
             engine: None,
+            telemetry: None,
         }
     }
 
@@ -80,6 +93,41 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
     pub fn with_engine(mut self, engine: &'a mut Engine) -> Server<'a, P> {
         self.engine = Some(engine);
         self
+    }
+
+    /// Enable telemetry collection per `ocfg` (no-op when both the
+    /// timeline and the trace are off). Collection draws no RNG and
+    /// reorders no floating-point folds, so episode metrics and their
+    /// fingerprint are bit-identical with or without it (pinned in
+    /// `tests/obs.rs`).
+    pub fn with_telemetry(mut self, ocfg: &ObsConfig) -> Server<'a, P> {
+        if ocfg.enabled() {
+            self.telemetry = Some(ServeObs {
+                col: Collector::from_config(ocfg),
+                hists: if ocfg.timeline { Some(WindowHists::new(ocfg.window_s)) } else { None },
+            });
+        }
+        self
+    }
+
+    /// Take the collected telemetry (None if `with_telemetry` was never
+    /// enabled). Histograms merge into the timeline here; the trace ring
+    /// drains in push order, which is already time order single-threaded.
+    pub fn take_telemetry(&mut self) -> Option<Telemetry> {
+        let obs = self.telemetry.take()?;
+        let mut t = Telemetry::default();
+        if let Some(mut tl) = obs.col.timeline {
+            if let Some(hists) = &obs.hists {
+                tl.merge_hists(hists);
+            }
+            t.timeline = Some(tl);
+        }
+        if let Some(ring) = &obs.col.trace {
+            let mut log = TraceLog::new(obs.col.trace_sample);
+            log.absorb(ring);
+            t.trace = Some(log);
+        }
+        Some(t)
     }
 
     /// QoS target for one network under the configured scenario.
@@ -105,6 +153,7 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
 
     /// One full Fig. 8 cycle for a single request.
     pub fn serve_one(&mut self, nn: &'static NnDesc, req_id: u64) -> ExecOutcome {
+        let t_start = self.clock.now();
         // ① observe state (sensor reading + ground-truth interference)
         let (obs, true_inter) = self.observe(nn);
         let s = State::discretize(&obs);
@@ -158,7 +207,8 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
         // ⑤ feedback: observe S' (same request context, post-execution
         // variance sample) and update the learner. Non-learning policies
         // skip the extra observation, so they consume no additional RNG.
-        if self.policy.is_learning() {
+        let learning = self.policy.is_learning();
+        if learning {
             let (obs_next, _) = self.observe(nn);
             let s_next = State::discretize(&obs_next);
             self.policy.feedback(&Feedback {
@@ -167,6 +217,67 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
                 catalogue_idx: decision.catalogue_idx,
                 reward: r,
             });
+        }
+
+        // Telemetry tap: read-only with respect to the episode — every
+        // value recorded was computed above, no RNG draws, no FP-fold
+        // reordering. With telemetry off this is one `None` check.
+        if let Some(tel) = self.telemetry.as_mut() {
+            let t_done = t_start + m.latency_s;
+            if let Some(hists) = tel.hists.as_mut() {
+                hists.push(t_start, m.latency_s);
+            }
+            if let Some(tl) = tel.col.timeline.as_mut() {
+                tl.record_request(
+                    t_start,
+                    crate::coordinator::metrics::SelectionStats::bucket_index(action),
+                    m.latency_s,
+                    m.energy_true_j,
+                    obs.rssi_wlan,
+                    m.remote_failed,
+                    m.latency_s > qos,
+                );
+            }
+            if let Some(ring) = tel.col.trace.as_mut() {
+                if sampled(req_id, tel.col.trace_sample) {
+                    ring.push(TraceEvent::Decision {
+                        t_s: t_start,
+                        id: req_id,
+                        nn: nn.name,
+                        action,
+                        catalogue_idx: decision.catalogue_idx as u32,
+                        cloud_wait_s: 0.0,
+                    });
+                    if m.remote_failed {
+                        ring.push(TraceEvent::RemoteTimeout {
+                            t_s: t_done,
+                            id: req_id,
+                            nn: nn.name,
+                            latency_s: m.latency_s,
+                            energy_j: m.energy_true_j,
+                        });
+                    } else {
+                        ring.push(TraceEvent::ExecDone {
+                            t_s: t_done,
+                            id: req_id,
+                            nn: nn.name,
+                            action,
+                            latency_s: m.latency_s,
+                            energy_j: m.energy_true_j,
+                            accuracy: m.accuracy,
+                            qos_s: qos,
+                        });
+                    }
+                    if learning {
+                        ring.push(TraceEvent::Feedback {
+                            t_s: t_done,
+                            id: req_id,
+                            reward: r,
+                            catalogue_idx: decision.catalogue_idx as u32,
+                        });
+                    }
+                }
+            }
         }
 
         let mut outcome = ExecOutcome {

@@ -19,6 +19,7 @@ pub mod fig7_predictors;
 pub mod fig9_main;
 pub mod scenarios;
 pub mod tables;
+pub mod timeline;
 
 use crate::util::report::Table;
 
@@ -48,6 +49,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "tab3", about: "NN workloads (Table 3)", run: tables::run_tab3 },
         Experiment { id: "tab4", about: "Execution environments (Table 4)", run: tables::run_tab4 },
         Experiment { id: "scen", about: "Scenario sweep: every registry key (Markov/trace/dead zones)", run: scenarios::run },
+        Experiment { id: "timeline", about: "Fleet trajectory per telemetry window (flash crowd vs small cloud)", run: timeline::run },
         Experiment { id: "ablation_hparams", about: "Hyperparameter sensitivity (§5.3)", run: ablations::run_hparams },
         Experiment { id: "ablation_bins", about: "DBSCAN bins vs coarse binning", run: ablations::run_bins },
         Experiment { id: "ablation_split", about: "Static split-computing vs AutoScale (§7)", run: ablations::run_split },

@@ -1,0 +1,108 @@
+//! Fleet trajectory through the telemetry timeline (beyond the paper): a
+//! bursty flash crowd against a deliberately undersized cloud, reported
+//! per window instead of as end-of-run aggregates. The table shows the
+//! dynamics the aggregate metrics erase — offload share climbing until
+//! the backlog bites, queue wait spiking, then the congestion-aware
+//! policy retreating to local execution while the backlog drains.
+
+use crate::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig};
+use crate::obs::ObsConfig;
+use crate::util::report::{f, pct, Table};
+
+/// The fleet this experiment watches: bursty arrivals at 2 Hz per device
+/// into a cloud with 1/8 the default capacity, timeline windows wide
+/// enough (4 s) that each row aggregates a policy-visible regime rather
+/// than single requests.
+fn config(seed: u64, quick: bool) -> FleetConfig {
+    let (devices, requests) = if quick { (96, 20) } else { (384, 40) };
+    let cloud = CloudParams::default();
+    FleetConfig {
+        devices,
+        requests_per_device: requests,
+        shards: 4,
+        seed,
+        policy: "autoscale".to_string(),
+        arrival: ArrivalKind::Bursty,
+        rate_hz: 2.0,
+        cloud: CloudParams {
+            capacity_mmacs_per_s: cloud.capacity_mmacs_per_s / 8.0,
+            ..cloud
+        },
+        obs: ObsConfig { timeline: true, window_s: 4.0, ..ObsConfig::default() },
+        ..Default::default()
+    }
+}
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    let cfg = config(seed, quick);
+    let out = run_fleet(&cfg).expect("timeline fleet config is valid");
+    let tl = out
+        .telemetry
+        .as_ref()
+        .and_then(|t| t.timeline.as_ref())
+        .expect("timeline collection was requested");
+    let mut table = Table::new(
+        "Fleet timeline (bursty flash crowd, 1/8-capacity cloud): per-window trajectory",
+        &[
+            "t0_s",
+            "requests",
+            "cloud_share",
+            "local_share",
+            "energy_j",
+            "mean_lat_ms",
+            "p95_lat_ms",
+            "backlog_mmacs",
+            "queue_wait_ms",
+            "net_fail",
+            "mean_rssi_dbm",
+        ],
+    );
+    for (i, w) in tl.windows().iter().enumerate() {
+        let (_p50, p95, _p99) = tl.latency_percentiles(i);
+        table.row(vec![
+            f(i as f64 * tl.window_s(), 0),
+            w.requests.to_string(),
+            pct(w.cloud_share()),
+            pct(w.local_share()),
+            f(w.energy_j, 2),
+            f(w.mean_latency_s() * 1e3, 2),
+            f(p95 * 1e3, 2),
+            f(w.cloud_backlog_mmacs, 1),
+            f(w.cloud_queue_wait_s * 1e3, 1),
+            w.remote_failures.to_string(),
+            f(w.mean_rssi_dbm(), 1),
+        ]);
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_accounts_for_every_served_request() {
+        let cfg = config(11, true);
+        let out = run_fleet(&cfg).unwrap();
+        let tl = out.telemetry.as_ref().and_then(|t| t.timeline.as_ref()).unwrap();
+        let windowed: u64 = tl.windows().iter().map(|w| w.requests).sum();
+        assert_eq!(windowed as usize, out.metrics.n(), "every request lands in one window");
+        assert!(tl.n_windows() > 1, "the run spans multiple windows");
+        // The undersized cloud must register pressure somewhere in the run.
+        assert!(
+            tl.windows().iter().any(|w| w.cloud_samples > 0),
+            "cloud epoch samples attach to windows"
+        );
+    }
+
+    #[test]
+    fn table_has_one_row_per_window() {
+        let t = run(11, true);
+        assert_eq!(t.len(), 1);
+        assert!(!t[0].rows.is_empty());
+        // cloud_share + local_share partition the window's decisions.
+        for row in &t[0].rows {
+            assert!(row[2].ends_with('%') && row[3].ends_with('%'));
+        }
+    }
+}

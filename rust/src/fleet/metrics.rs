@@ -398,6 +398,9 @@ pub struct FleetOutcome {
     /// Approximate steady-state bytes of mutable per-device simulation
     /// state (clock + RNG + arrival + metrics), for memory reporting.
     pub bytes_per_device: usize,
+    /// Merged telemetry when the run collected any (`FleetConfig::obs`);
+    /// `None` — one null pointer — on the default no-telemetry path.
+    pub telemetry: Option<Box<crate::obs::Telemetry>>,
 }
 
 #[cfg(test)]

@@ -46,4 +46,6 @@ pub use arrivals::ArrivalProcess;
 pub use cloud::{CloudModel, CloudParams, CloudSnapshot};
 pub use events::{CalendarQueue, EventQueue};
 pub use metrics::{CloudTimelinePoint, DeviceMetrics, FleetMetrics, FleetOutcome, FleetRecord};
-pub use sim::{run_fleet, ArrivalKind, FleetConfig, MetricsMode, SKETCH_AUTO_THRESHOLD};
+pub use sim::{
+    run_fleet, ArrivalKind, FleetConfig, MetricsMode, OBS_BLOCK_DEVICES, SKETCH_AUTO_THRESHOLD,
+};

@@ -81,6 +81,10 @@ use crate::coordinator::envs::Environment;
 use crate::coordinator::serve::qos_for;
 use crate::exec::latency::RunContext;
 use crate::nn::zoo::{by_name, NnDesc, ZOO};
+use crate::obs::{
+    sampled, CloudEpochSample, Collector, ObsConfig, Progress, Telemetry, Timeline, TraceEvent,
+    TraceLog, TraceRing, WindowHists,
+};
 use crate::policy::{
     CatalogueScope, CloudCtx, Decision, DecisionCtx, Feedback, PolicySpec, PrototypeArena,
     ScalingPolicy,
@@ -198,6 +202,9 @@ pub struct FleetConfig {
     pub models: Vec<&'static str>,
     /// Latency-store selection (exact samples vs streaming sketch).
     pub metrics: MetricsMode,
+    /// Opt-in telemetry (timeline/trace/progress) — all-off by default;
+    /// see [`crate::obs`] for the determinism contract.
+    pub obs: ObsConfig,
 }
 
 impl Default for FleetConfig {
@@ -219,6 +226,7 @@ impl Default for FleetConfig {
             cloud: CloudParams::default(),
             models: Vec::new(),
             metrics: MetricsMode::Auto,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -271,6 +279,9 @@ impl FleetConfig {
         for m in &self.models {
             anyhow::ensure!(by_name(m).is_some(), "unknown model '{m}' in fleet config");
         }
+        anyhow::ensure!(self.obs.window_s > 0.0, "telemetry window must be > 0");
+        anyhow::ensure!(self.obs.trace_sample >= 1, "trace-sample must be >= 1");
+        anyhow::ensure!(self.obs.trace_cap >= 1, "trace-cap must be >= 1");
         Ok(())
     }
 
@@ -426,6 +437,12 @@ struct Shard<'a> {
     arrivals: &'a mut [ArrivalProcess],
     rngs: &'a mut [Pcg64],
     metrics: &'a mut [DeviceMetrics],
+    /// This block's telemetry collectors (`None` with telemetry off —
+    /// the hot path then skips recording entirely). Per *block*, not per
+    /// worker: FP window sums group by block, and blocks are fixed-size
+    /// under telemetry ([`OBS_BLOCK_DEVICES`]), so the accumulation
+    /// grouping never depends on `--shards`.
+    telemetry: Option<&'a mut Collector>,
 }
 
 /// Per-worker reusable scratch: the event scheduler and (in sketch mode)
@@ -434,18 +451,29 @@ struct Shard<'a> {
 struct Worker {
     queue: CalendarQueue<u32>,
     hist: Option<LogHistogram>,
+    /// Per-window latency sketches for the telemetry timeline — per
+    /// worker (not per block) because histogram merges are commutative
+    /// u64 adds, so worker-to-block assignment cannot show in output.
+    win_hists: Option<WindowHists>,
 }
 
 /// Partition every parallel array into aligned contiguous blocks of
 /// `chunk` devices (the last may be short). `policies` may be globally
 /// empty (fixed-plan dispatch); it then splits into empty slices.
-fn split_shards(state: &mut FleetState, chunk: usize) -> Vec<Shard<'_>> {
+/// `collectors` is either empty (telemetry off) or one [`Collector`] per
+/// block, handed out in block order.
+fn split_shards<'a>(
+    state: &'a mut FleetState,
+    collectors: &'a mut [Collector],
+    chunk: usize,
+) -> Vec<Shard<'a>> {
     let mut clocks = state.clocks.as_mut_slice();
     let mut envs = state.envs.as_mut_slice();
     let mut policies = state.policies.as_mut_slice();
     let mut arrivals = state.arrivals.as_mut_slice();
     let mut rngs = state.rngs.as_mut_slice();
     let mut metrics = state.metrics.as_mut_slice();
+    let mut col_iter = collectors.iter_mut();
     let mut out = Vec::new();
     let mut lo = 0usize;
     while !clocks.is_empty() {
@@ -471,6 +499,7 @@ fn split_shards(state: &mut FleetState, chunk: usize) -> Vec<Shard<'_>> {
             arrivals: a,
             rngs: r,
             metrics: m,
+            telemetry: col_iter.next(),
         });
         lo += k;
     }
@@ -491,6 +520,7 @@ fn serve_request(
     cloud: &CloudSnapshot,
     sh: &FleetShared,
     hist: Option<&mut LogHistogram>,
+    win_hists: Option<&mut WindowHists>,
 ) {
     let clock = &mut shard.clocks[slot];
     let env = &mut shard.envs[slot];
@@ -560,6 +590,7 @@ fn serve_request(
     // learn to keep inside budget.
     let wait_s = t_start - t_arrival;
     let latency_e2e_s = wait_s + m.latency_s;
+    let mut fb_reward = None;
     if let Some(s) = pre_state {
         let policy = &mut shard.policies[slot];
         if policy.is_learning() {
@@ -581,6 +612,7 @@ fn serve_request(
                 catalogue_idx: decision.catalogue_idx,
                 reward: r,
             });
+            fb_reward = Some(r);
         }
     }
 
@@ -596,6 +628,70 @@ fn serve_request(
     });
     if let Some(h) = hist {
         h.push(latency_e2e_s);
+    }
+
+    // Telemetry tap — strictly read-only with respect to simulation
+    // state: every recorded value was computed above, no RNG is drawn,
+    // and with telemetry off (`telemetry: None`, `win_hists: None`) this
+    // whole block is two branch-not-taken checks.
+    if let Some(wh) = win_hists {
+        wh.push(t_start, latency_e2e_s);
+    }
+    if let Some(col) = shard.telemetry.as_mut() {
+        let bucket = crate::coordinator::metrics::SelectionStats::bucket_index(action);
+        if let Some(tl) = col.timeline.as_mut() {
+            tl.record_request(
+                t_start,
+                bucket,
+                latency_e2e_s,
+                m.energy_true_j,
+                obs.rssi_wlan,
+                m.remote_failed,
+                latency_e2e_s > qos,
+            );
+        }
+        if let Some(ring) = col.trace.as_mut() {
+            let device = (shard.lo + slot) as u64;
+            if sampled(device, col.trace_sample) {
+                ring.push(TraceEvent::Decision {
+                    t_s: t_start,
+                    id: device,
+                    nn: nn.name,
+                    action,
+                    catalogue_idx: decision.catalogue_idx as u32,
+                    cloud_wait_s: cloud.wait_s(),
+                });
+                let t_done = t_start + m.latency_s;
+                if m.remote_failed {
+                    ring.push(TraceEvent::RemoteTimeout {
+                        t_s: t_done,
+                        id: device,
+                        nn: nn.name,
+                        latency_s: latency_e2e_s,
+                        energy_j: m.energy_true_j,
+                    });
+                } else {
+                    ring.push(TraceEvent::ExecDone {
+                        t_s: t_done,
+                        id: device,
+                        nn: nn.name,
+                        action,
+                        latency_s: latency_e2e_s,
+                        energy_j: m.energy_true_j,
+                        accuracy: m.accuracy,
+                        qos_s: qos,
+                    });
+                }
+                if let Some(r) = fb_reward {
+                    ring.push(TraceEvent::Feedback {
+                        t_s: t_done,
+                        id: device,
+                        reward: r,
+                        catalogue_idx: decision.catalogue_idx as u32,
+                    });
+                }
+            }
+        }
     }
 }
 
@@ -625,7 +721,15 @@ fn run_epoch_shard(
     while let Some(ev) = worker.queue.pop() {
         let slot = ev.event as usize;
         let t_arrival = shard.clocks[slot].next_arrival_s;
-        serve_request(shard, slot, t_arrival, cloud, sh, worker.hist.as_mut());
+        serve_request(
+            shard,
+            slot,
+            t_arrival,
+            cloud,
+            sh,
+            worker.hist.as_mut(),
+            worker.win_hists.as_mut(),
+        );
         let next = shard.arrivals[slot].next_after(t_arrival, &mut shard.rngs[slot]);
         let clock = &mut shard.clocks[slot];
         clock.served += 1;
@@ -641,6 +745,31 @@ fn run_epoch_shard(
 /// large enough that the per-block claim (one atomic fetch-add + an
 /// uncontended lock) is noise.
 const MAX_BLOCK_DEVICES: usize = 4096;
+
+/// Fixed device-block size used whenever telemetry is collecting. The
+/// timeline's floating-point window sums accumulate per block and merge
+/// in block order, so the block layout must be a pure function of the
+/// *config* — were it derived from `--shards` (as the throughput-tuned
+/// layout above is), the FP addition grouping would change with the
+/// shard count and telemetry output would not be shard-invariant. 256 is
+/// small enough that even modest fleets span multiple blocks (so the
+/// invariance tests exercise real merging) and large enough that the
+/// per-block claim overhead stays noise.
+pub const OBS_BLOCK_DEVICES: usize = 256;
+
+/// Served-request and completed-device counts for the progress heartbeat
+/// (a pure read of the clock array — cheap at heartbeat frequency).
+fn progress_counts(clocks: &[DeviceClock], quota: u32) -> (u64, usize) {
+    let mut events = 0u64;
+    let mut done = 0usize;
+    for c in clocks {
+        events += c.served as u64;
+        if c.done(quota) {
+            done += 1;
+        }
+    }
+    (events, done)
+}
 
 /// Run the whole fleet to completion. Aggregate results are bit-identical
 /// for identical `(cfg, seed)` regardless of `cfg.shards` and of the
@@ -795,13 +924,42 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     // Work-stealing layout: contiguous blocks, claimed by `shards`
     // workers off an atomic counter each epoch. ~4 blocks per worker
     // keeps stragglers from idling the rest; the cap bounds block cost.
+    // With telemetry on, the block size is instead pinned to the fixed
+    // OBS_BLOCK_DEVICES so the timeline's FP accumulation grouping is a
+    // pure function of the config (see the const's docs). Work stealing
+    // and all determinism arguments are unchanged — only the partition
+    // granularity differs.
+    let obs_on = cfg.obs.enabled();
     let shards = cfg.shards.min(n);
-    let block = n.div_ceil(shards * 4).clamp(1, MAX_BLOCK_DEVICES);
+    let block = if obs_on {
+        OBS_BLOCK_DEVICES
+    } else {
+        n.div_ceil(shards * 4).clamp(1, MAX_BLOCK_DEVICES)
+    };
     let n_blocks = n.div_ceil(block);
     let workers = shards.min(n_blocks);
     let mut worker_state: Vec<Worker> = (0..workers)
-        .map(|_| Worker { queue: CalendarQueue::new(), hist: sketch.then(LogHistogram::new) })
+        .map(|_| Worker {
+            queue: CalendarQueue::new(),
+            hist: sketch.then(LogHistogram::new),
+            win_hists: cfg.obs.timeline.then(|| WindowHists::new(cfg.obs.window_s)),
+        })
         .collect();
+
+    // Telemetry state: one collector per device block (FP sums grouped
+    // deterministically), cloud epoch samples + the cloud trace ring on
+    // the main thread, and the wall-clock progress heartbeat. All empty/
+    // None on the off path — zero allocation, zero work.
+    let mut collectors: Vec<Collector> = if obs_on {
+        (0..n_blocks).map(|_| Collector::from_config(&cfg.obs)).collect()
+    } else {
+        Vec::new()
+    };
+    let mut cloud_samples: Vec<CloudEpochSample> = Vec::new();
+    let mut cloud_ring: Option<TraceRing> =
+        if cfg.obs.trace { Some(TraceRing::new(cfg.obs.trace_cap)) } else { None };
+    let mut progress: Option<Progress> =
+        if cfg.obs.progress { Some(Progress::new("fleet")) } else { None };
 
     let mut epoch_start = 0.0;
     for _ in 0..max_epochs {
@@ -810,7 +968,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         }
         let t_end = epoch_start + cfg.epoch_s;
         let snapshot = cloud.snapshot();
-        let parts = split_shards(&mut state, block);
+        let parts = split_shards(&mut state, &mut collectors, block);
         if workers == 1 {
             let worker = &mut worker_state[0];
             for mut part in parts {
@@ -858,7 +1016,45 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             queue_wait_s: s.queue_wait_s,
             load: s.load,
         });
+        if obs_on {
+            let sample = CloudEpochSample {
+                t_s: epoch_start,
+                jobs,
+                macs_m,
+                backlog_mmacs: cloud.backlog_mmacs(),
+                queue_wait_s: s.queue_wait_s,
+                load: s.load,
+                slowdown: s.slowdown,
+            };
+            if cfg.obs.timeline {
+                cloud_samples.push(sample);
+            }
+            if let Some(ring) = cloud_ring.as_mut() {
+                // Quiet epochs (no jobs, no backlog) add nothing.
+                if jobs > 0 || sample.backlog_mmacs > 0.0 {
+                    ring.push(TraceEvent::CloudBatch {
+                        t_s: epoch_start,
+                        jobs,
+                        macs_m,
+                        backlog_mmacs: sample.backlog_mmacs,
+                        queue_wait_s: sample.queue_wait_s,
+                        load: sample.load,
+                        slowdown: sample.slowdown,
+                    });
+                }
+            }
+        }
+        if let Some(p) = progress.as_mut() {
+            if p.due() {
+                let (events, done) = progress_counts(&state.clocks, quota);
+                p.emit(t_end, events, done, n);
+            }
+        }
         epoch_start = t_end;
+    }
+    if let Some(p) = progress.as_mut() {
+        let (events, done) = progress_counts(&state.clocks, quota);
+        p.finish(epoch_start, events, done, n);
     }
     anyhow::ensure!(
         state.clocks.iter().all(|c| c.done(quota)),
@@ -901,7 +1097,50 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             0
         };
 
-    Ok(FleetOutcome { metrics, cloud_timeline: timeline, makespan_s, bytes_per_device })
+    // Merge telemetry: block collectors in block (= device-id) order so
+    // FP window sums reduce in a layout-independent sequence; worker
+    // histograms in any order (commutative); cloud samples last (they
+    // only touch their own fields). Trace rings drain block-ordered, then
+    // one stable time-sort makes the final event order fully
+    // deterministic (ties keep device-id order).
+    let telemetry = if obs_on {
+        let mut t = Telemetry::default();
+        if cfg.obs.timeline {
+            let mut tl = Timeline::new(cfg.obs.window_s);
+            for col in &collectors {
+                if let Some(block_tl) = &col.timeline {
+                    tl.merge(block_tl);
+                }
+            }
+            for w in &worker_state {
+                if let Some(wh) = &w.win_hists {
+                    tl.merge_hists(wh);
+                }
+            }
+            for s in &cloud_samples {
+                tl.record_cloud(s);
+            }
+            t.timeline = Some(tl);
+        }
+        if cfg.obs.trace {
+            let mut log = TraceLog::new(cfg.obs.trace_sample);
+            for col in &collectors {
+                if let Some(ring) = &col.trace {
+                    log.absorb(ring);
+                }
+            }
+            if let Some(ring) = &cloud_ring {
+                log.absorb(ring);
+            }
+            log.sort_by_time();
+            t.trace = Some(log);
+        }
+        Some(Box::new(t))
+    } else {
+        None
+    };
+
+    Ok(FleetOutcome { metrics, cloud_timeline: timeline, makespan_s, bytes_per_device, telemetry })
 }
 
 #[cfg(test)]

@@ -64,6 +64,23 @@
 //! ([`agent::reward::REMOTE_FAILURE_PENALTY`]). The trace interchange
 //! format (CSV/JSONL, record/replay) is documented in [`scenario::trace`].
 //!
+//! ## Observability
+//!
+//! Runs expose their *dynamics* — not just end-of-episode aggregates —
+//! through the deterministic, opt-in telemetry layer ([`obs`]): a
+//! windowed time-series collector ([`obs::Timeline`]: per-window request
+//! and per-action decision counts, energy, a latency sketch, cloud
+//! backlog/queue samples, failures, mean RSSI), typed event tracing
+//! ([`obs::TraceEvent`]) into bounded per-shard rings with a
+//! hash-sampled device predicate, and a stderr `--progress` heartbeat.
+//! `serve`/`fleet --telemetry out.jsonl --trace tr.jsonl` emit JSONL;
+//! `figure timeline` renders the backlog/decision-share trajectory.
+//! Telemetry never perturbs a fingerprint: no RNG draws, FP window sums
+//! grouped by a fixed device-block layout merged in device-id order, and
+//! `Option`-gated collectors that keep the off path allocation-free —
+//! pinned by `tests/obs.rs` and a dedicated bench row. See the [`obs`]
+//! module docs for the full contract.
+//!
 //! ## Performance trajectory
 //!
 //! Benchmarks live in [`benchsuite`] (shared by `cargo bench` and the
@@ -100,6 +117,7 @@ pub mod fleet;
 pub mod interference;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod policy;
 pub mod power;
 pub mod runtime;

@@ -5,12 +5,18 @@
 //!   all [--seed N] [--full]           regenerate every figure/table
 //!   serve [--device D] [--env E] [--scenario-env K|all] [--requests N]
 //!         [--policy P] [--seed N] [--runtime]
+//!         [--telemetry OUT.jsonl] [--telemetry-window S]
+//!         [--trace OUT.jsonl] [--trace-sample N]
 //!                                     run the serving loop once and report
 //!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
 //!         [--scenario-env K|mix|all] [--policy P] [--arrival A] [--rate HZ]
 //!         [--epoch S] [--cloud-capacity MMACS] [--batch-window S]
 //!         [--metrics auto|exact|sketch]
+//!         [--telemetry OUT.jsonl] [--telemetry-window S]
+//!         [--trace OUT.jsonl] [--trace-sample N] [--trace-cap N] [--progress]
 //!                                     multi-device shared-cloud simulation
+//!   telemetry-check [--timeline F] [--trace F]
+//!                                     validate emitted telemetry JSONL schemas
 //!   bench [--quick|--full] [--suite S] [--out DIR] [--check DIR]
 //!         [--tolerance F]             run the bench suites, write BENCH_*.json,
 //!                                     optionally gate against a baseline
@@ -42,6 +48,7 @@ use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::serve::{ServeConfig, Server};
 use autoscale::experiments;
 use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig, MetricsMode};
+use autoscale::obs::{validate_timeline_jsonl, validate_trace_jsonl, ObsConfig, Telemetry};
 use autoscale::policy::{PolicySpec, ScalingPolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
@@ -147,8 +154,56 @@ fn parse_env(s: &str) -> anyhow::Result<EnvKind> {
     EnvKind::from_name(s).ok_or_else(|| anyhow::anyhow!("unknown env '{s}' (S1-S5|D1-D3)"))
 }
 
+/// Parse the shared telemetry flags into an [`ObsConfig`] plus the output
+/// paths. `--telemetry`/`--trace` take the JSONL paths and turn their
+/// collectors on; the remaining flags tune them.
+fn parse_obs(cli: &Cli) -> anyhow::Result<(ObsConfig, Option<String>, Option<String>)> {
+    let timeline_path = cli.value("--telemetry").map(str::to_string);
+    let trace_path = cli.value("--trace").map(str::to_string);
+    let ocfg = ObsConfig {
+        timeline: timeline_path.is_some(),
+        window_s: cli.num("--telemetry-window", 1.0)?,
+        trace: trace_path.is_some(),
+        trace_sample: cli.num("--trace-sample", 1)?,
+        trace_cap: cli.num("--trace-cap", 4096)?,
+        progress: cli.switches.contains("--progress"),
+    };
+    anyhow::ensure!(ocfg.window_s > 0.0, "--telemetry-window must be > 0");
+    anyhow::ensure!(ocfg.trace_sample >= 1, "--trace-sample must be >= 1");
+    anyhow::ensure!(ocfg.trace_cap >= 1, "--trace-cap must be >= 1");
+    Ok((ocfg, timeline_path, trace_path))
+}
+
+/// Write collected telemetry to the requested JSONL files and report what
+/// landed where. A `None` telemetry (collection off) is a no-op.
+fn write_telemetry(
+    t: Option<&Telemetry>,
+    timeline_path: Option<&str>,
+    trace_path: Option<&str>,
+) -> anyhow::Result<()> {
+    let Some(t) = t else { return Ok(()) };
+    if let (Some(path), Some(tl)) = (timeline_path, t.timeline.as_ref()) {
+        std::fs::write(path, tl.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        println!("telemetry    : {} windows -> {path}", tl.n_windows());
+    }
+    if let (Some(path), Some(log)) = (trace_path, t.trace.as_ref()) {
+        std::fs::write(path, log.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        println!(
+            "trace        : {} events ({} dropped, sample 1/{}) -> {path}",
+            log.events.len(),
+            log.dropped,
+            log.sample
+        );
+    }
+    Ok(())
+}
+
 /// Build and run one single-device serving episode; returns the policy's
-/// display name, the resolved scenario key, and the episode metrics.
+/// display name, the resolved scenario key, the episode metrics and the
+/// collected telemetry (None unless `obs` enables a collector).
+#[allow(clippy::type_complexity)]
 fn serve_episode(
     device: DeviceId,
     env: EnvKind,
@@ -157,7 +212,13 @@ fn serve_episode(
     policy_key: &str,
     requests: usize,
     runtime: bool,
-) -> anyhow::Result<(&'static str, String, autoscale::coordinator::metrics::EpisodeMetrics)> {
+    obs: Option<&ObsConfig>,
+) -> anyhow::Result<(
+    &'static str,
+    String,
+    autoscale::coordinator::metrics::EpisodeMetrics,
+    Option<Telemetry>,
+)> {
     let mut run_cfg = RunConfig::default();
     run_cfg.device = device;
     run_cfg.env = env;
@@ -183,13 +244,17 @@ fn serve_episode(
         policy,
         ServeConfig { run: run_cfg, models: vec![] },
     );
+    if let Some(ocfg) = obs {
+        server = server.with_telemetry(ocfg);
+    }
     if runtime {
         engine_store = Engine::from_default_manifest()?;
         println!("PJRT platform: {}", engine_store.platform());
         server = server.with_engine(&mut engine_store);
     }
     let metrics = server.serve(requests);
-    Ok((server.policy.name(), scenario_key, metrics))
+    let telemetry = server.take_telemetry();
+    Ok((server.policy.name(), scenario_key, metrics, telemetry))
 }
 
 fn run(args: &[String]) -> anyhow::Result<()> {
@@ -261,7 +326,19 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let cli = parse_cli(
                 cmd,
                 rest,
-                &["--device", "--env", "--scenario-env", "--requests", "--policy", "--seed"],
+                &[
+                    "--device",
+                    "--env",
+                    "--scenario-env",
+                    "--requests",
+                    "--policy",
+                    "--seed",
+                    "--telemetry",
+                    "--telemetry-window",
+                    "--trace",
+                    "--trace-sample",
+                    "--trace-cap",
+                ],
                 &["--runtime"],
                 0,
             )?;
@@ -271,16 +348,23 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let requests: usize = cli.num("--requests", 200)?;
             let policy_key = cli.value("--policy").unwrap_or("autoscale");
             let runtime = cli.switches.contains("--runtime");
+            let (ocfg, timeline_path, trace_path) = parse_obs(&cli)?;
 
             if cli.value("--scenario-env") == Some("all") {
                 // Batch smoke mode: every registered scenario key in ONE
                 // process — the CI scenario-smoke job drives this instead
                 // of one cargo invocation per key.
                 anyhow::ensure!(!runtime, "--scenario-env all does not combine with --runtime");
+                anyhow::ensure!(
+                    !ocfg.enabled(),
+                    "--telemetry/--trace do not combine with --scenario-env all \
+                     (one output file, many episodes)"
+                );
                 println!("== serve smoke: every registered scenario ({requests} requests each) ==");
                 for key in autoscale::scenario::names() {
-                    let (name, _, m) =
-                        serve_episode(device, env, Some(key), seed, policy_key, requests, false)?;
+                    let (name, _, m, _) = serve_episode(
+                        device, env, Some(key), seed, policy_key, requests, false, None,
+                    )?;
                     println!(
                         "{key:12} {name:16} PPW {:8.3} inf/J  lat {:7.2} ms  \
                          QoS miss {:5.1}%  net fail {:5.1}%",
@@ -293,7 +377,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 return Ok(());
             }
 
-            let (policy_name, scenario_key, metrics) = serve_episode(
+            let (policy_name, scenario_key, metrics, telemetry) = serve_episode(
                 device,
                 env,
                 cli.value("--scenario-env"),
@@ -301,6 +385,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 policy_key,
                 requests,
                 runtime,
+                Some(&ocfg),
             )?;
             println!("policy       : {policy_name}");
             println!("device/env   : {device} / {scenario_key}");
@@ -311,6 +396,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             println!("acc misses   : {:.1}%", metrics.accuracy_violation_ratio() * 100.0);
             println!("net failures : {:.1}%", metrics.remote_failure_ratio() * 100.0);
             println!("energy MAPE  : {:.1}%", metrics.energy_estimator_mape());
+            write_telemetry(telemetry.as_ref(), timeline_path.as_deref(), trace_path.as_deref())?;
             Ok(())
         }
         "scenarios" => {
@@ -348,10 +434,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--cloud-capacity",
                     "--batch-window",
                     "--metrics",
+                    "--telemetry",
+                    "--telemetry-window",
+                    "--trace",
+                    "--trace-sample",
+                    "--trace-cap",
                 ],
-                &[],
+                &["--progress"],
                 0,
             )?;
+            let (ocfg, timeline_path, trace_path) = parse_obs(&cli)?;
             // Workers steal device blocks, so extra cores always help;
             // no cap (the old min(8) predates work stealing).
             let default_shards = std::thread::available_parallelism()
@@ -389,10 +481,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         anyhow::anyhow!("unknown metrics mode '{name}' (auto|exact|sketch)")
                     })?
                 },
+                obs: ocfg.clone(),
                 ..Default::default()
             };
 
             if cfg.scenario_env.as_deref() == Some("all") {
+                anyhow::ensure!(
+                    !ocfg.enabled(),
+                    "--telemetry/--trace do not combine with --scenario-env all \
+                     (one output file, many runs)"
+                );
                 // Batch smoke mode: the configured fleet once per
                 // registered scenario key plus the heterogeneous "mix",
                 // all in ONE process (CI's scenario-smoke job).
@@ -486,6 +584,34 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 wall_s,
                 m.n() as f64 / wall_s.max(1e-9)
             );
+            write_telemetry(
+                out.telemetry.as_deref(),
+                timeline_path.as_deref(),
+                trace_path.as_deref(),
+            )?;
+            Ok(())
+        }
+        "telemetry-check" => {
+            let cli = parse_cli(cmd, rest, &["--timeline", "--trace"], &[], 0)?;
+            let timeline = cli.value("--timeline");
+            let trace = cli.value("--trace");
+            anyhow::ensure!(
+                timeline.is_some() || trace.is_some(),
+                "telemetry-check needs --timeline F and/or --trace F"
+            );
+            if let Some(path) = timeline {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+                let n = validate_timeline_jsonl(&text)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                println!("timeline ok  : {n} windows ({path})");
+            }
+            if let Some(path) = trace {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+                let n = validate_trace_jsonl(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                println!("trace ok     : {n} events ({path})");
+            }
             Ok(())
         }
         "bench" => {
@@ -633,13 +759,18 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "autoscale — edge-inference execution scaling (AutoScale reproduction)\n\
-                 usage: autoscale <figure|all|serve|fleet|bench|train|scenarios|runtime-check|list> [flags]\n\
+                 usage: autoscale <figure|all|serve|fleet|telemetry-check|bench|train|scenarios|runtime-check|list> [flags]\n\
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
                  \x20             --scenario-env K (see `autoscale scenarios`; `all` = batch smoke)\n\
                  serve: --runtime\n\
                  fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
                  \x20       --epoch S --cloud-capacity MMACS --batch-window S --scenario-env K|mix|all\n\
                  \x20       --metrics auto|exact|sketch (latency store; auto switches at 1M requests)\n\
+                 \x20       --progress (stderr heartbeat)\n\
+                 telemetry (serve & fleet; deterministic, fingerprint-neutral):\n\
+                 \x20       --telemetry OUT.jsonl --telemetry-window S (windowed time-series)\n\
+                 \x20       --trace OUT.jsonl --trace-sample N --trace-cap N (event trace)\n\
+                 telemetry-check: --timeline F --trace F (validate JSONL schemas)\n\
                  bench: --quick|--full --suite all|fleet|e2e|agent|models|figures\n\
                  \x20       --out DIR --check DIR --tolerance F (writes BENCH_<suite>.json)\n\
                  policies (--policy, serve & fleet):"

@@ -1,0 +1,110 @@
+//! # Deterministic, opt-in observability
+//!
+//! Telemetry for the serve and fleet loops: windowed time-series
+//! ([`Timeline`]), structured event tracing ([`TraceEvent`] /
+//! [`TraceLog`]) and a live progress heartbeat ([`Progress`]). Surfaced
+//! through `--telemetry out.jsonl`, `--trace out.jsonl --trace-sample N`
+//! and `--progress` on the `serve` and `fleet` subcommands, plus the
+//! `figure timeline` trajectory experiment.
+//!
+//! ## The determinism contract
+//!
+//! Telemetry must never perturb a result — the fleet's fingerprint pins
+//! (bit-identical across `--shards`, metrics modes, and now telemetry
+//! on/off) are the repo's core guarantee. Three rules enforce it:
+//!
+//! 1. **No RNG.** Collectors only record values the simulation computed
+//!    anyway; trace sampling is the pure hash predicate
+//!    [`trace::sampled`], not a random draw.
+//! 2. **No FP-fold reordering.** Windowed FP sums accumulate per device
+//!    block under a *fixed* block size ([`crate::fleet::OBS_BLOCK_DEVICES`],
+//!    independent of `--shards`) and merge in device-id order; latency
+//!    histograms use commutative u64 merges and may merge in any worker
+//!    order. Output is therefore a pure function of `(config, seed)`.
+//! 3. **Allocation-free off path.** Collectors live behind `Option`; with
+//!    the flags off, the hot loop sees `None` and the run is unchanged —
+//!    held by the `fleet 10k ... telemetry` bench row
+//!    (`BENCH_fleet.json`) and the parity tests in `tests/obs.rs`.
+//!
+//! JSONL schemas (one `meta` line, then one record per line) are
+//! documented in the README's Observability section and machine-checked
+//! by [`validate_timeline_jsonl`] / [`validate_trace_jsonl`] (the
+//! `telemetry-check` subcommand and the CI telemetry-smoke job).
+
+pub mod progress;
+pub mod timeline;
+pub mod trace;
+
+pub use progress::Progress;
+pub use timeline::{
+    validate_timeline_jsonl, CloudEpochSample, Timeline, WindowAcc, WindowHists, BUCKET_SLUGS,
+    MAX_TIMELINE_WINDOWS,
+};
+pub use trace::{sampled, validate_trace_jsonl, TraceEvent, TraceLog, TraceRing};
+
+/// Opt-in telemetry switches, carried by `FleetConfig::obs` and the
+/// serve builder. Defaults are all-off: the zero-cost path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Collect the windowed [`Timeline`].
+    pub timeline: bool,
+    /// Timeline window width in sim seconds.
+    pub window_s: f64,
+    /// Collect [`TraceEvent`]s.
+    pub trace: bool,
+    /// Trace every Nth id (device for fleet, request for serve) by the
+    /// deterministic [`sampled`] predicate; `1` traces everything.
+    pub trace_sample: u64,
+    /// Per-ring trace capacity (events); oldest events drop when full.
+    pub trace_cap: usize,
+    /// Emit the stderr progress heartbeat.
+    pub progress: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            timeline: false,
+            window_s: 1.0,
+            trace: false,
+            trace_sample: 1,
+            trace_cap: 4096,
+            progress: false,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// True when any collector (not the heartbeat) is requested — i.e.
+    /// when the run must switch to the fixed deterministic block layout.
+    pub fn enabled(&self) -> bool {
+        self.timeline || self.trace
+    }
+}
+
+/// Per-block collector bundle threaded through the fleet shards. One per
+/// device block so FP accumulation grouping is layout-independent.
+#[derive(Clone, Debug)]
+pub struct Collector {
+    pub timeline: Option<Timeline>,
+    pub trace: Option<TraceRing>,
+    pub trace_sample: u64,
+}
+
+impl Collector {
+    pub fn from_config(cfg: &ObsConfig) -> Collector {
+        Collector {
+            timeline: if cfg.timeline { Some(Timeline::new(cfg.window_s)) } else { None },
+            trace: if cfg.trace { Some(TraceRing::new(cfg.trace_cap)) } else { None },
+            trace_sample: cfg.trace_sample,
+        }
+    }
+}
+
+/// The merged, presentation-ready telemetry a run returns (boxed on the
+/// outcome so the common no-telemetry path pays one null pointer).
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub timeline: Option<Timeline>,
+    pub trace: Option<TraceLog>,
+}

@@ -1,0 +1,84 @@
+//! Live progress heartbeat for long runs (`--progress`).
+//!
+//! Emits a single status line to **stderr** about once a second: sim
+//! time, wall-clock event rate, devices completed and peak RSS (VmHWM).
+//! stderr only and wall-clock gated — it reads simulation state but
+//! never touches it, so it cannot perturb results (stdout, which the CI
+//! smoke jobs diff, stays byte-identical with and without the flag).
+
+use std::time::{Duration, Instant};
+
+use crate::util::bench::peak_rss_bytes;
+
+/// Wall-clock-throttled progress reporter.
+#[derive(Debug)]
+pub struct Progress {
+    label: &'static str,
+    started: Instant,
+    last_emit: Instant,
+    last_events: u64,
+    interval: Duration,
+}
+
+impl Progress {
+    pub fn new(label: &'static str) -> Progress {
+        let now = Instant::now();
+        Progress {
+            label,
+            started: now,
+            last_emit: now,
+            last_events: 0,
+            interval: Duration::from_secs(1),
+        }
+    }
+
+    /// True when at least one heartbeat interval elapsed since the last
+    /// emit — callers check this cheaply in the epoch loop.
+    pub fn due(&self) -> bool {
+        self.last_emit.elapsed() >= self.interval
+    }
+
+    /// Emit one heartbeat line. `events` is the cumulative count (served
+    /// requests); the line reports the rate since the previous emit.
+    pub fn emit(&mut self, sim_t_s: f64, events: u64, done: usize, total: usize) {
+        let dt = self.last_emit.elapsed().as_secs_f64().max(1e-9);
+        let rate = events.saturating_sub(self.last_events) as f64 / dt;
+        self.last_emit = Instant::now();
+        self.last_events = events;
+        let rss = match peak_rss_bytes() {
+            Some(b) => format!("{:.0} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "n/a".to_string(),
+        };
+        eprintln!(
+            "[{}] t={:.1}s  {:.0} ev/s  devices {}/{}  peak rss {}",
+            self.label, sim_t_s, rate, done, total, rss
+        );
+    }
+
+    /// Final summary line (always emitted, with total wall time).
+    pub fn finish(&mut self, sim_t_s: f64, events: u64, done: usize, total: usize) {
+        let wall = self.started.elapsed().as_secs_f64();
+        let rss = match peak_rss_bytes() {
+            Some(b) => format!("{:.0} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "n/a".to_string(),
+        };
+        eprintln!(
+            "[{}] done: t={:.1}s  {} events  devices {}/{}  wall {:.1}s  peak rss {}",
+            self.label, sim_t_s, events, done, total, wall, rss
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_updates_throttle_state() {
+        let mut p = Progress::new("test");
+        assert!(!p.due(), "fresh reporter is not due immediately");
+        p.emit(1.0, 100, 1, 4);
+        assert_eq!(p.last_events, 100);
+        p.finish(2.0, 200, 4, 4);
+    }
+}

@@ -1,0 +1,599 @@
+//! Windowed time-series telemetry: the [`Timeline`] collector buckets
+//! fleet/episode activity into fixed sim-time windows so trajectories
+//! (flash crowd → backlog growth → device retreat) become visible instead
+//! of collapsing into end-of-run aggregates.
+//!
+//! Determinism contract (the whole point of this module):
+//!
+//! * **No RNG.** Recording draws nothing; every value recorded is one the
+//!   simulation computed anyway.
+//! * **Shard-layout invariance.** All floating-point window sums are
+//!   accumulated per *device block* with a fixed block size
+//!   ([`crate::fleet::OBS_BLOCK_DEVICES`]) and merged in block (= device-id)
+//!   order, so the FP addition grouping is a pure function of
+//!   `(config, seed)` — never of `--shards`. The per-window latency
+//!   [`LogHistogram`]s use u64-add merges that commute exactly, so those
+//!   may be merged in any worker order.
+//! * **Seed reproducibility.** JSONL output is rendered with Rust's
+//!   deterministic shortest-roundtrip f64 formatting; two identical runs
+//!   emit byte-identical files.
+
+use crate::coordinator::metrics::SelectionStats;
+use crate::util::hash::{fnv1a_fold, FNV_OFFSET};
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Hard cap on the number of windows a [`Timeline`] materializes. Events
+/// past the cap fold into the last window and are counted in
+/// [`Timeline::truncated`] — a runaway horizon cannot exhaust memory.
+pub const MAX_TIMELINE_WINDOWS: usize = 4096;
+
+/// Index of the Cloud bucket in [`SelectionStats::BUCKETS`].
+pub(crate) const CLOUD_BUCKET: usize = 5;
+/// Index of the Connected Edge bucket in [`SelectionStats::BUCKETS`].
+pub(crate) const CONNECTED_BUCKET: usize = 6;
+
+/// Machine-friendly slugs for the decision buckets, index-aligned with
+/// [`SelectionStats::BUCKETS`] (pinned by a unit test below). These are
+/// the keys of the `decisions` object in timeline JSONL records.
+pub const BUCKET_SLUGS: [&str; SelectionStats::BUCKETS.len()] = [
+    "edge_cpu_fp32",
+    "edge_cpu_int8",
+    "edge_gpu_fp32",
+    "edge_gpu_fp16",
+    "edge_dsp",
+    "cloud",
+    "connected_edge",
+];
+
+/// One window's additive accumulators. `Copy` and histogram-free so a
+/// per-block vector of these stays compact; the latency histograms live
+/// separately (per worker, merged commutatively — see [`Timeline`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowAcc {
+    /// Requests whose service *started* in this window.
+    pub requests: u64,
+    /// Per-bucket decision counts, index-aligned with [`BUCKET_SLUGS`].
+    pub decisions: [u64; SelectionStats::BUCKETS.len()],
+    /// Requests that missed their QoS latency target.
+    pub qos_violations: u64,
+    /// Remote attempts that timed out over a dead link.
+    pub remote_failures: u64,
+    /// Sum of true energy (J) across the window's requests.
+    pub energy_j: f64,
+    /// Sum of end-to-end latency (s) across the window's requests.
+    pub latency_sum_s: f64,
+    /// Sum of observed WLAN RSSI (dBm) across the window's requests.
+    pub rssi_sum_dbm: f64,
+    /// Cloud jobs admitted during epochs starting in this window.
+    pub cloud_jobs: u64,
+    /// Cloud work admitted (M MACs) during epochs starting in this window.
+    pub cloud_macs_m: f64,
+    /// Backlog (M MACs) after the last epoch sampled in this window.
+    pub cloud_backlog_mmacs: f64,
+    /// Queue wait (s) after the last epoch sampled in this window.
+    pub cloud_queue_wait_s: f64,
+    /// Offered-load ratio after the last epoch sampled in this window.
+    pub cloud_load: f64,
+    /// Number of cloud epoch samples folded into this window.
+    pub cloud_samples: u64,
+}
+
+impl WindowAcc {
+    /// Fraction of the window's decisions that went to the shared cloud.
+    pub fn cloud_share(&self) -> f64 {
+        self.decisions[CLOUD_BUCKET] as f64 / self.requests.max(1) as f64
+    }
+
+    /// Fraction executed on-device or on the locally connected edge.
+    pub fn local_share(&self) -> f64 {
+        let remote = self.decisions[CLOUD_BUCKET];
+        (self.requests - remote.min(self.requests)) as f64 / self.requests.max(1) as f64
+    }
+
+    /// Fraction offloaded to the locally connected edge device.
+    pub fn connected_share(&self) -> f64 {
+        self.decisions[CONNECTED_BUCKET] as f64 / self.requests.max(1) as f64
+    }
+
+    /// Mean end-to-end latency over the window (0 when empty).
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.requests as f64
+        }
+    }
+
+    /// Mean observed WLAN RSSI over the window (0 when empty).
+    pub fn mean_rssi_dbm(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.rssi_sum_dbm / self.requests as f64
+        }
+    }
+}
+
+/// One shared-cloud sample, taken once per fleet epoch on the main thread.
+#[derive(Clone, Copy, Debug)]
+pub struct CloudEpochSample {
+    /// Epoch start time (the sample is attributed to this window).
+    pub t_s: f64,
+    /// Jobs admitted to the backend this epoch.
+    pub jobs: u64,
+    /// Work admitted this epoch (M MACs).
+    pub macs_m: f64,
+    /// Backlog after the epoch (M MACs).
+    pub backlog_mmacs: f64,
+    /// Queue wait behind the backlog after the epoch (s).
+    pub queue_wait_s: f64,
+    /// Offered load / effective capacity over the epoch.
+    pub load: f64,
+    /// Service-time inflation devices will see next epoch.
+    pub slowdown: f64,
+}
+
+/// Map a sim time to a window index under `window_s`-wide windows.
+/// Returns the index and whether the event fell past the
+/// [`MAX_TIMELINE_WINDOWS`] cap (it is then clamped into the last window).
+fn window_index(window_s: f64, t_s: f64) -> (usize, bool) {
+    if t_s <= 0.0 {
+        return (0, false);
+    }
+    // Saturating float->usize cast: a huge t_s clamps instead of UB.
+    let idx = (t_s / window_s) as usize;
+    if idx >= MAX_TIMELINE_WINDOWS {
+        (MAX_TIMELINE_WINDOWS - 1, true)
+    } else {
+        (idx, false)
+    }
+}
+
+/// Windowed time-series collector. One per device block during a fleet
+/// run (FP sums grouped deterministically), merged block-ordered into the
+/// single timeline the caller sees.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    window_s: f64,
+    accs: Vec<WindowAcc>,
+    hists: Vec<LogHistogram>,
+    truncated: u64,
+}
+
+impl Timeline {
+    /// A timeline with `window_s`-second windows (must be positive).
+    pub fn new(window_s: f64) -> Timeline {
+        assert!(window_s > 0.0, "timeline window must be positive");
+        Timeline { window_s, accs: Vec::new(), hists: Vec::new(), truncated: 0 }
+    }
+
+    /// The configured window width (seconds).
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    fn acc_at(&mut self, t_s: f64) -> &mut WindowAcc {
+        let (idx, trunc) = window_index(self.window_s, t_s);
+        if trunc {
+            self.truncated += 1;
+        }
+        if idx >= self.accs.len() {
+            self.accs.resize(idx + 1, WindowAcc::default());
+        }
+        &mut self.accs[idx]
+    }
+
+    /// Record one served request. `t_s` is the service start time;
+    /// `bucket` is [`SelectionStats::bucket_index`] of the chosen action.
+    pub fn record_request(
+        &mut self,
+        t_s: f64,
+        bucket: usize,
+        latency_s: f64,
+        energy_j: f64,
+        rssi_dbm: f64,
+        remote_failed: bool,
+        qos_violated: bool,
+    ) {
+        let acc = self.acc_at(t_s);
+        acc.requests += 1;
+        acc.decisions[bucket] += 1;
+        acc.energy_j += energy_j;
+        acc.latency_sum_s += latency_s;
+        acc.rssi_sum_dbm += rssi_dbm;
+        if remote_failed {
+            acc.remote_failures += 1;
+        }
+        if qos_violated {
+            acc.qos_violations += 1;
+        }
+    }
+
+    /// Fold one per-epoch cloud sample into its window. Additive fields
+    /// (jobs, work) sum; level fields (backlog, wait, load) keep the last
+    /// sample, i.e. the state at the window's end.
+    pub fn record_cloud(&mut self, s: &CloudEpochSample) {
+        let acc = self.acc_at(s.t_s);
+        acc.cloud_jobs += s.jobs;
+        acc.cloud_macs_m += s.macs_m;
+        acc.cloud_backlog_mmacs = s.backlog_mmacs;
+        acc.cloud_queue_wait_s = s.queue_wait_s;
+        acc.cloud_load = s.load;
+        acc.cloud_samples += 1;
+    }
+
+    /// Merge `other` into `self`, window-wise. FP sums add in call order —
+    /// callers MUST merge block timelines in device-id (block) order to
+    /// keep output shard-invariant. Histogram merges commute exactly.
+    pub fn merge(&mut self, other: &Timeline) {
+        debug_assert_eq!(self.window_s.to_bits(), other.window_s.to_bits());
+        if other.accs.len() > self.accs.len() {
+            self.accs.resize(other.accs.len(), WindowAcc::default());
+        }
+        for (i, o) in other.accs.iter().enumerate() {
+            let a = &mut self.accs[i];
+            a.requests += o.requests;
+            for b in 0..a.decisions.len() {
+                a.decisions[b] += o.decisions[b];
+            }
+            a.qos_violations += o.qos_violations;
+            a.remote_failures += o.remote_failures;
+            a.energy_j += o.energy_j;
+            a.latency_sum_s += o.latency_sum_s;
+            a.rssi_sum_dbm += o.rssi_sum_dbm;
+            a.cloud_jobs += o.cloud_jobs;
+            a.cloud_macs_m += o.cloud_macs_m;
+            if o.cloud_samples > 0 {
+                a.cloud_backlog_mmacs = o.cloud_backlog_mmacs;
+                a.cloud_queue_wait_s = o.cloud_queue_wait_s;
+                a.cloud_load = o.cloud_load;
+            }
+            a.cloud_samples += o.cloud_samples;
+        }
+        self.truncated += other.truncated;
+        if other.hists.len() > self.hists.len() {
+            self.hists.resize(other.hists.len(), LogHistogram::new());
+        }
+        for (i, h) in other.hists.iter().enumerate() {
+            self.hists[i].merge(h);
+        }
+    }
+
+    /// Merge a worker's per-window latency histograms. u64 bucket adds
+    /// commute, so worker order never matters — this is why histograms
+    /// are collected per *worker* while FP sums are collected per *block*.
+    pub fn merge_hists(&mut self, hists: &WindowHists) {
+        debug_assert_eq!(self.window_s.to_bits(), hists.window_s.to_bits());
+        if hists.hists.len() > self.hists.len() {
+            self.hists.resize(hists.hists.len(), LogHistogram::new());
+        }
+        for (i, h) in hists.hists.iter().enumerate() {
+            self.hists[i].merge(h);
+        }
+    }
+
+    /// Latency p50/p95/p99 for window `i` (zeros when it has no samples).
+    pub fn latency_percentiles(&self, i: usize) -> (f64, f64, f64) {
+        match self.hists.get(i) {
+            Some(h) if !h.is_empty() => {
+                let ps = h.percentiles(&[50.0, 95.0, 99.0]);
+                (ps[0], ps[1], ps[2])
+            }
+            _ => (0.0, 0.0, 0.0),
+        }
+    }
+
+    /// The accumulated windows, index 0 starting at sim time 0.
+    pub fn windows(&self) -> &[WindowAcc] {
+        &self.accs
+    }
+
+    /// Number of materialized windows.
+    pub fn n_windows(&self) -> usize {
+        self.accs.len()
+    }
+
+    /// Events clamped into the last window by [`MAX_TIMELINE_WINDOWS`].
+    pub fn truncated(&self) -> u64 {
+        self.truncated
+    }
+
+    /// FNV-1a fold over every field of every window (f64s via `to_bits`)
+    /// plus the latency sketches — equal fingerprints mean bit-identical
+    /// timelines.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a_fold(h, self.accs.len() as u64);
+        h = fnv1a_fold(h, self.truncated);
+        h = fnv1a_fold(h, self.window_s.to_bits());
+        for a in &self.accs {
+            h = fnv1a_fold(h, a.requests);
+            for &d in &a.decisions {
+                h = fnv1a_fold(h, d);
+            }
+            h = fnv1a_fold(h, a.qos_violations);
+            h = fnv1a_fold(h, a.remote_failures);
+            h = fnv1a_fold(h, a.energy_j.to_bits());
+            h = fnv1a_fold(h, a.latency_sum_s.to_bits());
+            h = fnv1a_fold(h, a.rssi_sum_dbm.to_bits());
+            h = fnv1a_fold(h, a.cloud_jobs);
+            h = fnv1a_fold(h, a.cloud_macs_m.to_bits());
+            h = fnv1a_fold(h, a.cloud_backlog_mmacs.to_bits());
+            h = fnv1a_fold(h, a.cloud_queue_wait_s.to_bits());
+            h = fnv1a_fold(h, a.cloud_load.to_bits());
+            h = fnv1a_fold(h, a.cloud_samples);
+        }
+        for hist in &self.hists {
+            h = hist.fold_fingerprint(h);
+        }
+        h
+    }
+
+    /// Serialize to JSONL: one `meta` line, then one `window` line per
+    /// materialized window. Schema documented in the README's
+    /// Observability section and validated by [`validate_timeline_jsonl`].
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        Json::obj(vec![
+            ("type", Json::string("meta")),
+            ("kind", Json::string("timeline")),
+            ("schema", Json::Num(1.0)),
+            ("window_s", Json::Num(self.window_s)),
+            ("windows", Json::Num(self.accs.len() as f64)),
+            ("truncated_events", Json::Num(self.truncated as f64)),
+        ])
+        .render_into(&mut out);
+        out.push('\n');
+        for (i, a) in self.accs.iter().enumerate() {
+            let (p50, p95, p99) = self.latency_percentiles(i);
+            let decisions: Vec<(&str, Json)> = BUCKET_SLUGS
+                .iter()
+                .zip(a.decisions.iter())
+                .map(|(slug, &n)| (*slug, Json::Num(n as f64)))
+                .collect();
+            Json::obj(vec![
+                ("type", Json::string("window")),
+                ("idx", Json::Num(i as f64)),
+                ("t0_s", Json::Num(i as f64 * self.window_s)),
+                ("t1_s", Json::Num((i + 1) as f64 * self.window_s)),
+                ("requests", Json::Num(a.requests as f64)),
+                (
+                    "decisions",
+                    Json::Obj(decisions.into_iter().map(|(k, v)| (k.to_string(), v)).collect()),
+                ),
+                ("energy_j", Json::Num(a.energy_j)),
+                ("mean_latency_s", Json::Num(a.mean_latency_s())),
+                ("lat_p50_s", Json::Num(p50)),
+                ("lat_p95_s", Json::Num(p95)),
+                ("lat_p99_s", Json::Num(p99)),
+                ("qos_violations", Json::Num(a.qos_violations as f64)),
+                ("remote_failures", Json::Num(a.remote_failures as f64)),
+                ("mean_rssi_dbm", Json::Num(a.mean_rssi_dbm())),
+                ("cloud_jobs", Json::Num(a.cloud_jobs as f64)),
+                ("cloud_macs_m", Json::Num(a.cloud_macs_m)),
+                ("cloud_backlog_mmacs", Json::Num(a.cloud_backlog_mmacs)),
+                ("cloud_queue_wait_s", Json::Num(a.cloud_queue_wait_s)),
+                ("cloud_load", Json::Num(a.cloud_load)),
+            ])
+            .render_into(&mut out);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A worker's per-window latency histograms. Workers steal arbitrary
+/// blocks, so these merge into the final [`Timeline`] in arbitrary worker
+/// order — sound because histogram merges are u64 adds that commute.
+#[derive(Clone, Debug)]
+pub struct WindowHists {
+    window_s: f64,
+    hists: Vec<LogHistogram>,
+}
+
+impl WindowHists {
+    /// Per-window histograms under `window_s`-second windows.
+    pub fn new(window_s: f64) -> WindowHists {
+        assert!(window_s > 0.0, "timeline window must be positive");
+        WindowHists { window_s, hists: Vec::new() }
+    }
+
+    /// Record one end-to-end latency sample at service start `t_s`.
+    pub fn push(&mut self, t_s: f64, latency_s: f64) {
+        let (idx, _) = window_index(self.window_s, t_s);
+        if idx >= self.hists.len() {
+            self.hists.resize(idx + 1, LogHistogram::new());
+        }
+        self.hists[idx].push(latency_s);
+    }
+}
+
+/// Validate a timeline JSONL document: first line is the `meta` record,
+/// every following line is a `window` record carrying the full documented
+/// schema (including one decision count per [`BUCKET_SLUGS`] entry).
+/// Returns the number of window records.
+pub fn validate_timeline_jsonl(text: &str) -> anyhow::Result<usize> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let meta = Json::parse(lines.next().ok_or_else(|| anyhow::anyhow!("empty timeline file"))?)?;
+    let kind = meta.get("kind").and_then(|j| j.as_str()).unwrap_or("");
+    anyhow::ensure!(
+        meta.get("type").and_then(|j| j.as_str()) == Some("meta") && kind == "timeline",
+        "first line is not a timeline meta record"
+    );
+    for key in ["schema", "window_s", "windows", "truncated_events"] {
+        anyhow::ensure!(meta.get(key).and_then(|j| j.as_f64()).is_some(), "meta missing `{key}`");
+    }
+    let declared = meta.get("windows").and_then(|j| j.as_f64()).unwrap_or(0.0) as usize;
+    let mut n = 0usize;
+    for line in lines {
+        let w = Json::parse(line)?;
+        anyhow::ensure!(
+            w.get("type").and_then(|j| j.as_str()) == Some("window"),
+            "line {} is not a window record",
+            n + 2
+        );
+        for key in [
+            "idx",
+            "t0_s",
+            "t1_s",
+            "requests",
+            "energy_j",
+            "mean_latency_s",
+            "lat_p50_s",
+            "lat_p95_s",
+            "lat_p99_s",
+            "qos_violations",
+            "remote_failures",
+            "mean_rssi_dbm",
+            "cloud_jobs",
+            "cloud_macs_m",
+            "cloud_backlog_mmacs",
+            "cloud_queue_wait_s",
+            "cloud_load",
+        ] {
+            anyhow::ensure!(
+                w.get(key).and_then(|j| j.as_f64()).is_some(),
+                "window record missing numeric `{key}`"
+            );
+        }
+        let decisions =
+            w.get("decisions").ok_or_else(|| anyhow::anyhow!("window record missing `decisions`"))?;
+        for slug in BUCKET_SLUGS {
+            anyhow::ensure!(
+                decisions.get(slug).and_then(|j| j.as_f64()).is_some(),
+                "decisions object missing `{slug}`"
+            );
+        }
+        n += 1;
+    }
+    anyhow::ensure!(n == declared, "meta declares {declared} windows, found {n}");
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Action, Precision, ProcKind, Site};
+
+    #[test]
+    fn bucket_slugs_align_with_selection_buckets() {
+        // The slug order is load-bearing for the JSONL schema: pin it to
+        // the human-readable bucket list it mirrors.
+        assert_eq!(BUCKET_SLUGS.len(), SelectionStats::BUCKETS.len());
+        let cloud = Action {
+            site: Site::Cloud,
+            proc: ProcKind::Gpu,
+            vf_step: 0,
+            precision: Precision::Fp32,
+        };
+        assert_eq!(SelectionStats::bucket_index(cloud), CLOUD_BUCKET);
+        let connected = Action {
+            site: Site::ConnectedEdge,
+            proc: ProcKind::Gpu,
+            vf_step: 0,
+            precision: Precision::Fp32,
+        };
+        assert_eq!(SelectionStats::bucket_index(connected), CONNECTED_BUCKET);
+        assert_eq!(BUCKET_SLUGS[CLOUD_BUCKET], "cloud");
+        assert_eq!(BUCKET_SLUGS[CONNECTED_BUCKET], "connected_edge");
+    }
+
+    #[test]
+    fn window_indexing_clamps_and_truncates() {
+        assert_eq!(window_index(1.0, -3.0), (0, false));
+        assert_eq!(window_index(1.0, 0.0), (0, false));
+        assert_eq!(window_index(1.0, 0.999), (0, false));
+        assert_eq!(window_index(1.0, 1.0), (1, false));
+        assert_eq!(window_index(2.0, 9.0), (4, false));
+        let (idx, trunc) = window_index(1.0, 1e12);
+        assert_eq!(idx, MAX_TIMELINE_WINDOWS - 1);
+        assert!(trunc);
+        // NaN-ish / infinite times also clamp rather than panic.
+        let (idx, trunc) = window_index(1.0, f64::INFINITY);
+        assert_eq!(idx, MAX_TIMELINE_WINDOWS - 1);
+        assert!(trunc);
+    }
+
+    #[test]
+    fn truncated_events_fold_into_last_window() {
+        let mut t = Timeline::new(1.0);
+        t.record_request(1e13, 0, 0.1, 0.5, -60.0, false, false);
+        assert_eq!(t.truncated(), 1);
+        assert_eq!(t.n_windows(), MAX_TIMELINE_WINDOWS);
+        assert_eq!(t.windows()[MAX_TIMELINE_WINDOWS - 1].requests, 1);
+    }
+
+    #[test]
+    fn merge_matches_single_collector() {
+        // Splitting the same record stream across two collectors and
+        // merging must reproduce the single-collector timeline exactly.
+        let recs = [
+            (0.2, 0usize, 0.05, 0.4, -55.0, false, false),
+            (1.7, 5usize, 0.30, 0.9, -80.0, false, true),
+            (1.9, 5usize, 0.25, 0.8, -75.0, true, true),
+            (3.1, 2usize, 0.08, 0.6, -60.0, false, false),
+        ];
+        let mut single = Timeline::new(1.0);
+        for &(t, b, l, e, r, rf, q) in &recs {
+            single.record_request(t, b, l, e, r, rf, q);
+        }
+        let mut a = Timeline::new(1.0);
+        let mut b = Timeline::new(1.0);
+        for (i, &(t, bk, l, e, r, rf, q)) in recs.iter().enumerate() {
+            if i < 2 {
+                a.record_request(t, bk, l, e, r, rf, q);
+            } else {
+                b.record_request(t, bk, l, e, r, rf, q);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.fingerprint(), single.fingerprint());
+        assert_eq!(a.to_jsonl(), single.to_jsonl());
+    }
+
+    #[test]
+    fn cloud_samples_sum_flows_and_keep_last_levels() {
+        let mut t = Timeline::new(10.0);
+        t.record_cloud(&CloudEpochSample {
+            t_s: 0.0,
+            jobs: 5,
+            macs_m: 100.0,
+            backlog_mmacs: 1.0,
+            queue_wait_s: 0.1,
+            load: 0.5,
+            slowdown: 1.0,
+        });
+        t.record_cloud(&CloudEpochSample {
+            t_s: 5.0,
+            jobs: 7,
+            macs_m: 200.0,
+            backlog_mmacs: 3.0,
+            queue_wait_s: 0.4,
+            load: 1.2,
+            slowdown: 1.4,
+        });
+        let w = t.windows()[0];
+        assert_eq!(w.cloud_jobs, 12);
+        assert_eq!(w.cloud_macs_m, 300.0);
+        assert_eq!(w.cloud_backlog_mmacs, 3.0);
+        assert_eq!(w.cloud_queue_wait_s, 0.4);
+        assert_eq!(w.cloud_samples, 2);
+    }
+
+    #[test]
+    fn jsonl_roundtrips_and_validates() {
+        let mut t = Timeline::new(2.0);
+        t.record_request(0.5, 0, 0.05, 0.4, -55.0, false, false);
+        t.record_request(3.0, 5, 0.30, 0.9, -80.0, true, true);
+        let mut hists = WindowHists::new(2.0);
+        hists.push(0.5, 0.05);
+        hists.push(3.0, 0.30);
+        t.merge_hists(&hists);
+        let text = t.to_jsonl();
+        assert_eq!(validate_timeline_jsonl(&text).unwrap(), 2);
+        for line in text.lines() {
+            Json::parse(line).expect("every line parses standalone");
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! Structured event tracing: typed [`TraceEvent`]s captured into
+//! per-shard ring buffers and drained to JSONL.
+//!
+//! Sampling is the deterministic predicate [`sampled`] — a pure hash of
+//! the device id (fleet) or request id (serve), so which entities are
+//! traced is a function of `(id, --trace-sample)` alone: no RNG draws,
+//! no perturbation of the simulation's random streams, identical picks
+//! for every `--shards` setting.
+
+use crate::types::Action;
+use crate::util::json::Json;
+
+/// One traced event. `id` is the **device id** in fleet traces and the
+/// **request id** in single-device serve traces (the serve loop has one
+/// device, so per-request sampling is the useful knob there).
+#[derive(Clone, Copy, Debug)]
+pub enum TraceEvent {
+    /// A policy decision at service start.
+    Decision {
+        t_s: f64,
+        id: u64,
+        nn: &'static str,
+        action: Action,
+        catalogue_idx: u32,
+        /// Cloud pre-service delay the decision was priced against.
+        cloud_wait_s: f64,
+    },
+    /// A request finished executing (local or remote).
+    ExecDone {
+        t_s: f64,
+        id: u64,
+        nn: &'static str,
+        action: Action,
+        latency_s: f64,
+        energy_j: f64,
+        accuracy: f64,
+        qos_s: f64,
+    },
+    /// A remote attempt timed out over a disconnected link.
+    RemoteTimeout { t_s: f64, id: u64, nn: &'static str, latency_s: f64, energy_j: f64 },
+    /// A learning policy consumed a reward.
+    Feedback { t_s: f64, id: u64, reward: f64, catalogue_idx: u32 },
+    /// One shared-cloud epoch advanced (fleet only; never sampled out).
+    CloudBatch {
+        t_s: f64,
+        jobs: u64,
+        macs_m: f64,
+        backlog_mmacs: f64,
+        queue_wait_s: f64,
+        load: f64,
+        slowdown: f64,
+    },
+}
+
+impl TraceEvent {
+    /// Sim time the event occurred at.
+    pub fn t_s(&self) -> f64 {
+        match self {
+            TraceEvent::Decision { t_s, .. }
+            | TraceEvent::ExecDone { t_s, .. }
+            | TraceEvent::RemoteTimeout { t_s, .. }
+            | TraceEvent::Feedback { t_s, .. }
+            | TraceEvent::CloudBatch { t_s, .. } => *t_s,
+        }
+    }
+
+    /// The `type` field of the JSONL record.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Decision { .. } => "decision",
+            TraceEvent::ExecDone { .. } => "exec_done",
+            TraceEvent::RemoteTimeout { .. } => "remote_timeout",
+            TraceEvent::Feedback { .. } => "feedback",
+            TraceEvent::CloudBatch { .. } => "cloud_batch",
+        }
+    }
+
+    /// The JSONL record for this event. Actions render through their
+    /// `Display` form (`site/proc@vf<step>/<precision>`).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            TraceEvent::Decision { t_s, id, nn, action, catalogue_idx, cloud_wait_s } => {
+                Json::obj(vec![
+                    ("type", Json::string(self.kind())),
+                    ("t_s", Json::Num(t_s)),
+                    ("id", Json::Num(id as f64)),
+                    ("nn", Json::string(nn)),
+                    ("action", Json::string(&action.to_string())),
+                    ("catalogue_idx", Json::Num(catalogue_idx as f64)),
+                    ("cloud_wait_s", Json::Num(cloud_wait_s)),
+                ])
+            }
+            TraceEvent::ExecDone { t_s, id, nn, action, latency_s, energy_j, accuracy, qos_s } => {
+                Json::obj(vec![
+                    ("type", Json::string(self.kind())),
+                    ("t_s", Json::Num(t_s)),
+                    ("id", Json::Num(id as f64)),
+                    ("nn", Json::string(nn)),
+                    ("action", Json::string(&action.to_string())),
+                    ("latency_s", Json::Num(latency_s)),
+                    ("energy_j", Json::Num(energy_j)),
+                    ("accuracy", Json::Num(accuracy)),
+                    ("qos_s", Json::Num(qos_s)),
+                ])
+            }
+            TraceEvent::RemoteTimeout { t_s, id, nn, latency_s, energy_j } => Json::obj(vec![
+                ("type", Json::string(self.kind())),
+                ("t_s", Json::Num(t_s)),
+                ("id", Json::Num(id as f64)),
+                ("nn", Json::string(nn)),
+                ("latency_s", Json::Num(latency_s)),
+                ("energy_j", Json::Num(energy_j)),
+            ]),
+            TraceEvent::Feedback { t_s, id, reward, catalogue_idx } => Json::obj(vec![
+                ("type", Json::string(self.kind())),
+                ("t_s", Json::Num(t_s)),
+                ("id", Json::Num(id as f64)),
+                ("reward", Json::Num(reward)),
+                ("catalogue_idx", Json::Num(catalogue_idx as f64)),
+            ]),
+            TraceEvent::CloudBatch {
+                t_s,
+                jobs,
+                macs_m,
+                backlog_mmacs,
+                queue_wait_s,
+                load,
+                slowdown,
+            } => {
+                Json::obj(vec![
+                    ("type", Json::string(self.kind())),
+                    ("t_s", Json::Num(t_s)),
+                    ("jobs", Json::Num(jobs as f64)),
+                    ("macs_m", Json::Num(macs_m)),
+                    ("backlog_mmacs", Json::Num(backlog_mmacs)),
+                    ("queue_wait_s", Json::Num(queue_wait_s)),
+                    ("load", Json::Num(load)),
+                    ("slowdown", Json::Num(slowdown)),
+                ])
+            }
+        }
+    }
+}
+
+/// SplitMix64 finalizer — a well-mixed pure hash (no RNG state, no
+/// draws). Distinct from the stream-derivation splitmix in `fleet::sim`
+/// only in role: this one gates trace sampling.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Deterministic sampling predicate: trace `id` iff
+/// `mix64(id) % sample == 0` (every id when `sample <= 1`). Roughly one
+/// in `sample` ids pass, chosen by hash so the kept set is stable across
+/// runs, shard layouts and platforms.
+pub fn sampled(id: u64, sample: u64) -> bool {
+    sample <= 1 || mix64(id) % sample == 0
+}
+
+/// Fixed-capacity event ring. When full, the oldest event is overwritten
+/// and `dropped` counts it — a long run cannot exhaust memory, and the
+/// tail of the run (usually the interesting part) survives.
+#[derive(Clone, Debug)]
+pub struct TraceRing {
+    cap: usize,
+    events: Vec<TraceEvent>,
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `cap` events (`cap >= 1`).
+    pub fn new(cap: usize) -> TraceRing {
+        assert!(cap >= 1, "trace ring capacity must be >= 1");
+        TraceRing { cap, events: Vec::with_capacity(cap.min(1024)), head: 0, dropped: 0 }
+    }
+
+    /// Append an event, overwriting the oldest once at capacity.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Events oldest-first (un-rotates the ring).
+    pub fn iter_in_order(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events[self.head..].iter().chain(self.events[..self.head].iter())
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The drained trace: every surviving event plus bookkeeping, ready for
+/// JSONL serialization.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub events: Vec<TraceEvent>,
+    pub dropped: u64,
+    /// The `--trace-sample` divisor the events were captured under.
+    pub sample: u64,
+}
+
+impl TraceLog {
+    pub fn new(sample: u64) -> TraceLog {
+        TraceLog { events: Vec::new(), dropped: 0, sample }
+    }
+
+    /// Drain one ring (oldest-first) into the log.
+    pub fn absorb(&mut self, ring: &TraceRing) {
+        self.events.extend(ring.iter_in_order().copied());
+        self.dropped += ring.dropped();
+    }
+
+    /// Stable sort by sim time. Rings absorb in block (device-id) order,
+    /// so after this stable sort ties resolve by device id — the final
+    /// event order is fully deterministic and shard-layout-invariant.
+    pub fn sort_by_time(&mut self) {
+        self.events.sort_by(|a, b| a.t_s().total_cmp(&b.t_s()));
+    }
+
+    /// Serialize to JSONL: one `meta` line then one line per event.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        Json::obj(vec![
+            ("type", Json::string("meta")),
+            ("kind", Json::string("trace")),
+            ("schema", Json::Num(1.0)),
+            ("events", Json::Num(self.events.len() as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("sample", Json::Num(self.sample as f64)),
+        ])
+        .render_into(&mut out);
+        out.push('\n');
+        for ev in &self.events {
+            ev.to_json().render_into(&mut out);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Validate a trace JSONL document: a `meta` first line, then per-event
+/// records each carrying the fields documented for its `type`. Returns
+/// the number of event records.
+pub fn validate_trace_jsonl(text: &str) -> anyhow::Result<usize> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let meta = Json::parse(lines.next().ok_or_else(|| anyhow::anyhow!("empty trace file"))?)?;
+    anyhow::ensure!(
+        meta.get("type").and_then(|j| j.as_str()) == Some("meta")
+            && meta.get("kind").and_then(|j| j.as_str()) == Some("trace"),
+        "first line is not a trace meta record"
+    );
+    for key in ["schema", "events", "dropped", "sample"] {
+        anyhow::ensure!(meta.get(key).and_then(|j| j.as_f64()).is_some(), "meta missing `{key}`");
+    }
+    let declared = meta.get("events").and_then(|j| j.as_f64()).unwrap_or(0.0) as usize;
+    let mut n = 0usize;
+    for line in lines {
+        let ev = Json::parse(line)?;
+        let kind = ev
+            .get("type")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow::anyhow!("event record missing `type`"))?;
+        let numeric: &[&str] = match kind {
+            "decision" => &["t_s", "id", "catalogue_idx", "cloud_wait_s"],
+            "exec_done" => &["t_s", "id", "latency_s", "energy_j", "accuracy", "qos_s"],
+            "remote_timeout" => &["t_s", "id", "latency_s", "energy_j"],
+            "feedback" => &["t_s", "id", "reward", "catalogue_idx"],
+            "cloud_batch" => {
+                &["t_s", "jobs", "macs_m", "backlog_mmacs", "queue_wait_s", "load", "slowdown"]
+            }
+            other => anyhow::bail!("unknown trace event type `{other}`"),
+        };
+        for key in numeric {
+            anyhow::ensure!(
+                ev.get(key).and_then(|j| j.as_f64()).is_some(),
+                "`{kind}` record missing numeric `{key}`"
+            );
+        }
+        if matches!(kind, "decision" | "exec_done" | "remote_timeout") {
+            anyhow::ensure!(
+                ev.get("nn").and_then(|j| j.as_str()).is_some(),
+                "`{kind}` record missing `nn`"
+            );
+        }
+        if matches!(kind, "decision" | "exec_done") {
+            anyhow::ensure!(
+                ev.get("action").and_then(|j| j.as_str()).is_some(),
+                "`{kind}` record missing `action`"
+            );
+        }
+        n += 1;
+    }
+    anyhow::ensure!(n == declared, "meta declares {declared} events, found {n}");
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(t_s: f64, id: u64) -> TraceEvent {
+        TraceEvent::Feedback { t_s, id, reward: -1.0, catalogue_idx: 0 }
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(fb(i as f64, i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let times: Vec<f64> = r.iter_in_order().map(|e| e.t_s()).collect();
+        assert_eq!(times, vec![2.0, 3.0, 4.0], "oldest-first, oldest two evicted");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_spread() {
+        for id in 0..100u64 {
+            assert!(sampled(id, 0));
+            assert!(sampled(id, 1));
+            assert_eq!(sampled(id, 7), sampled(id, 7), "pure function of (id, sample)");
+        }
+        let kept = (0..10_000u64).filter(|&id| sampled(id, 10)).count();
+        // Hash spread: ~1/10 of ids pass, within a loose band.
+        assert!((700..=1300).contains(&kept), "kept {kept} of 10000 at sample 10");
+    }
+
+    #[test]
+    fn log_absorbs_rings_in_order_and_sorts_stably() {
+        let mut r1 = TraceRing::new(8);
+        let mut r2 = TraceRing::new(8);
+        r1.push(fb(2.0, 1));
+        r1.push(fb(5.0, 1));
+        r2.push(fb(2.0, 9));
+        r2.push(fb(1.0, 9));
+        let mut log = TraceLog::new(1);
+        log.absorb(&r1);
+        log.absorb(&r2);
+        log.sort_by_time();
+        let ids: Vec<u64> = log
+            .events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Feedback { id, .. } => *id,
+                _ => unreachable!(),
+            })
+            .collect();
+        // t=1.0 first; the t=2.0 tie keeps absorb order (device 1 then 9).
+        assert_eq!(ids, vec![9, 1, 9, 1]);
+    }
+
+    #[test]
+    fn jsonl_validates_and_rejects_junk() {
+        let mut log = TraceLog::new(4);
+        let mut ring = TraceRing::new(8);
+        ring.push(fb(0.5, 3));
+        ring.push(TraceEvent::CloudBatch {
+            t_s: 1.0,
+            jobs: 2,
+            macs_m: 50.0,
+            backlog_mmacs: 0.0,
+            queue_wait_s: 0.0,
+            load: 0.1,
+            slowdown: 1.0,
+        });
+        log.absorb(&ring);
+        log.sort_by_time();
+        let text = log.to_jsonl();
+        assert_eq!(validate_trace_jsonl(&text).unwrap(), 2);
+        assert!(validate_trace_jsonl("{\"type\":\"meta\"}\n").is_err());
+        assert!(validate_trace_jsonl("").is_err());
+    }
+}

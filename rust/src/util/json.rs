@@ -1,11 +1,20 @@
-//! Minimal JSON reader for the bench trajectory files (`BENCH_*.json`).
+//! Minimal JSON reader **and writer** (no `serde` in the offline cache).
 //!
-//! The offline cache has no `serde`, and the only JSON this crate reads is
-//! the schema it writes itself (see [`crate::util::bench::SuiteReport`]),
-//! so this is a small strict recursive-descent parser over the full JSON
-//! grammar — objects, arrays, strings with the standard escapes, numbers,
-//! booleans, null — with descriptive errors. It is a *reader*: emission
-//! stays with the hand-formatted writers, which control layout.
+//! The reader is a small strict recursive-descent parser over the full
+//! JSON grammar — objects, arrays, strings with the standard escapes,
+//! numbers, booleans, null — with descriptive errors; the only JSON this
+//! crate reads is what it writes itself (the `BENCH_*.json` trajectory
+//! files and the telemetry JSONL from [`crate::obs`]).
+//!
+//! The writer ([`Json::render`]) emits compact single-line JSON with a
+//! **deterministic** byte representation: object fields keep insertion
+//! order, numbers use Rust's shortest-roundtrip `f64` formatting (stable
+//! across platforms), and non-finite numbers render as `null` (JSON has
+//! no NaN/Inf). Two equal `Json` trees always render to identical bytes —
+//! the telemetry layer's seed-reproducibility guarantee leans on this.
+//! The hand-formatted multi-line writers (e.g.
+//! [`crate::util::bench::SuiteReport`]) stay as they are; this writer is
+//! for machine-consumed single-line records.
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +77,83 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Convenience: a `Json::Str` from a borrowed string.
+    pub fn string(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    /// Convenience: a `Json::Obj` from `(&str, Json)` pairs in order.
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render as compact single-line JSON (see the module docs for the
+    /// determinism contract).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    /// Append the compact rendering to `out` (allocation-frugal variant
+    /// for line-per-record JSONL writers).
+    pub fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    // JSON has no NaN/Infinity literal.
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append `s` as a quoted JSON string, escaping the characters RFC 8259
+/// requires: quote, backslash, and all control characters below 0x20.
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 fn skip_ws(bytes: &[u8], pos: &mut usize) {
@@ -304,5 +390,38 @@ mod tests {
     fn duplicate_keys_keep_the_first() {
         let v = Json::parse(r#"{"k": 1, "k": 2}"#).unwrap();
         assert_eq!(v.get("k").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let v = Json::obj(vec![
+            ("name", Json::string("fleet \"q\"\nµJ")),
+            ("n", Json::Num(-2.5e-3)),
+            ("flag", Json::Bool(true)),
+            ("none", Json::Null),
+            ("arr", Json::Arr(vec![Json::Num(1.0), Json::string("x\ty")])),
+        ]);
+        let text = v.render();
+        assert!(!text.contains('\n'), "rendering is single-line: {text:?}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // Rendering is a fixed point: parse(render(v)) renders identically.
+        assert_eq!(Json::parse(&text).unwrap().render(), text);
+    }
+
+    #[test]
+    fn render_escapes_controls_and_nulls_non_finite() {
+        assert_eq!(Json::string("a\u{1}b").render(), "\"a\\u0001b\"");
+        assert_eq!(Json::string("x\n\r\t").render(), r#""x\n\r\t""#);
+        assert_eq!(Json::string("q\"\\").render(), r#""q\"\\""#);
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(0.1).render(), "0.1");
+        assert_eq!(Json::Num(3.0).render(), "3");
+    }
+
+    #[test]
+    fn object_field_order_is_preserved() {
+        let v = Json::obj(vec![("z", Json::Num(1.0)), ("a", Json::Num(2.0))]);
+        assert_eq!(v.render(), r#"{"z":1,"a":2}"#);
     }
 }

@@ -32,12 +32,16 @@ impl Table {
         self.rows.push(cells);
     }
 
-    /// Aligned console rendering.
+    /// Aligned console rendering. Column widths count *characters*, not
+    /// bytes — figure tables carry non-ASCII cells ("µJ", "±") whose
+    /// UTF-8 length exceeds their display width, and `format!`'s padding
+    /// is char-based, so byte widths would misalign whole columns.
     pub fn render(&self) -> String {
-        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let width_of = |s: &str| s.chars().count();
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| width_of(c)).collect();
         for row in &self.rows {
             for (i, cell) in row.iter().enumerate() {
-                widths[i] = widths[i].max(cell.len());
+                widths[i] = widths[i].max(width_of(cell));
             }
         }
         let mut out = format!("== {} ==\n", self.title);
@@ -76,11 +80,14 @@ impl Table {
     }
 }
 
+/// RFC 4180 field quoting: a cell containing a comma, quote, LF **or CR**
+/// is wrapped in quotes with embedded quotes doubled. CR matters: a bare
+/// `\r` inside an unquoted field splits the record in strict readers.
 fn csv_line(cells: &[String]) -> String {
     cells
         .iter()
         .map(|c| {
-            if c.contains(',') || c.contains('"') || c.contains('\n') {
+            if c.contains(',') || c.contains('"') || c.contains('\n') || c.contains('\r') {
                 format!("\"{}\"", c.replace('"', "\"\""))
             } else {
                 c.clone()
@@ -135,7 +142,38 @@ mod tests {
     }
 
     #[test]
-    fn csv_written(){
+    fn csv_quotes_bare_carriage_returns() {
+        // RFC 4180: CR is a record delimiter character and must be quoted
+        // even without an accompanying LF.
+        assert_eq!(
+            csv_line(&["a\rb".into(), "c\nd".into(), "ok".into()]),
+            "\"a\rb\",\"c\nd\",ok"
+        );
+    }
+
+    #[test]
+    fn render_aligns_non_ascii_cells() {
+        // "µJ" is 3 UTF-8 bytes but 2 chars; byte-based widths used to
+        // push every other cell in the column one space right.
+        let mut t = Table::new("demo", &["metric", "unit"]);
+        t.row(vec!["energy".into(), "µJ".into()]);
+        t.row(vec!["delta".into(), "±3".into()]);
+        t.row(vec!["latency".into(), "ms".into()]);
+        let r = t.render();
+        let data_widths: Vec<usize> = r
+            .lines()
+            .skip(1) // title
+            .filter(|l| !l.starts_with('-'))
+            .map(|l| l.chars().count())
+            .collect();
+        assert!(
+            data_widths.windows(2).all(|w| w[0] == w[1]),
+            "all header/data lines must have equal char width: {data_widths:?}\n{r}"
+        );
+    }
+
+    #[test]
+    fn csv_written() {
         let dir = std::env::temp_dir().join("autoscale_report_test");
         let mut t = Table::new("demo", &["a"]);
         t.row(vec!["1".into()]);

@@ -1,0 +1,231 @@
+//! Telemetry determinism pins: with collection on, every simulation
+//! result must stay bit-identical to the telemetry-off run (fingerprint
+//! neutrality), and the telemetry itself must be a pure function of
+//! `(config, seed)` — invariant to the shard layout and byte-reproducible
+//! across runs.
+
+use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
+use autoscale::coordinator::envs::Environment;
+use autoscale::coordinator::serve::{ServeConfig, Server};
+use autoscale::fleet::{run_fleet, ArrivalKind, FleetConfig};
+use autoscale::obs::{validate_timeline_jsonl, validate_trace_jsonl, ObsConfig, Telemetry};
+use autoscale::policy::PolicySpec;
+use autoscale::types::DeviceId;
+
+fn full_obs() -> ObsConfig {
+    ObsConfig {
+        timeline: true,
+        window_s: 2.0,
+        trace: true,
+        trace_sample: 1,
+        trace_cap: 1 << 16,
+        ..ObsConfig::default()
+    }
+}
+
+fn fleet_cfg(devices: usize, requests: usize, shards: usize, policy: &str) -> FleetConfig {
+    FleetConfig {
+        devices,
+        requests_per_device: requests,
+        shards,
+        rate_hz: 2.0,
+        seed: 42,
+        policy: policy.to_string(),
+        env: EnvKind::D3RandomWlan, // stochastic signal: the hard case
+        ..Default::default()
+    }
+}
+
+/// The headline acceptance pin: the CLI-default 1000-device fleet with
+/// `--telemetry` + `--trace` produces a bit-identical fingerprint to the
+/// plain run, for a fixed, a state-machine and a learning policy, at one
+/// worker and at eight.
+#[test]
+fn thousand_device_fleet_fingerprint_is_telemetry_neutral() {
+    for policy in ["best", "autoscale", "hysteresis"] {
+        for shards in [1usize, 8] {
+            let plain = fleet_cfg(1000, 4, shards, policy);
+            let mut instrumented = plain.clone();
+            instrumented.obs = full_obs();
+            let a = run_fleet(&plain).unwrap();
+            let b = run_fleet(&instrumented).unwrap();
+            assert!(a.telemetry.is_none() && b.telemetry.is_some());
+            assert_eq!(
+                a.metrics.fingerprint(),
+                b.metrics.fingerprint(),
+                "telemetry must not perturb the run (policy {policy}, shards {shards})"
+            );
+            assert_eq!(
+                a.metrics.total_energy_j().to_bits(),
+                b.metrics.total_energy_j().to_bits(),
+                "energy fold diverged (policy {policy}, shards {shards})"
+            );
+            assert_eq!(a.cloud_timeline.len(), b.cloud_timeline.len());
+        }
+    }
+}
+
+/// Telemetry *content* is shard-layout-invariant: the timeline
+/// fingerprint and both JSONL documents are byte-identical across 1, 2
+/// and 8 workers. 600 devices span several `OBS_BLOCK_DEVICES`-sized
+/// blocks, so the block-ordered merge path is genuinely exercised.
+#[test]
+fn timeline_and_trace_are_shard_layout_invariant() {
+    let telemetry_at = |shards: usize| -> Telemetry {
+        let mut cfg = fleet_cfg(600, 5, shards, "autoscale");
+        cfg.obs = full_obs();
+        cfg.obs.trace_sample = 4; // exercise the hash-sampled path too
+        *run_fleet(&cfg).unwrap().telemetry.unwrap()
+    };
+    let base = telemetry_at(1);
+    let base_tl = base.timeline.as_ref().unwrap();
+    let base_tr = base.trace.as_ref().unwrap();
+    assert!(base_tl.n_windows() > 1);
+    assert!(!base_tr.events.is_empty());
+    for shards in [2usize, 8] {
+        let t = telemetry_at(shards);
+        let tl = t.timeline.as_ref().unwrap();
+        assert_eq!(
+            base_tl.fingerprint(),
+            tl.fingerprint(),
+            "timeline diverged at shards={shards}"
+        );
+        assert_eq!(base_tl.to_jsonl(), tl.to_jsonl(), "timeline JSONL at shards={shards}");
+        assert_eq!(
+            base_tr.to_jsonl(),
+            t.trace.as_ref().unwrap().to_jsonl(),
+            "trace JSONL at shards={shards}"
+        );
+    }
+}
+
+/// Fingerprint neutrality across the whole registries: every policy, and
+/// every scenario key (plus the heterogeneous mix), on a small fleet.
+#[test]
+fn telemetry_parity_holds_for_every_policy_and_scenario() {
+    for policy in autoscale::policy::names() {
+        let plain = fleet_cfg(48, 4, 4, policy);
+        let mut instrumented = plain.clone();
+        instrumented.obs = full_obs();
+        assert_eq!(
+            run_fleet(&plain).unwrap().metrics.fingerprint(),
+            run_fleet(&instrumented).unwrap().metrics.fingerprint(),
+            "policy {policy}"
+        );
+    }
+    let keys: Vec<String> = autoscale::scenario::names()
+        .into_iter()
+        .map(str::to_string)
+        .chain(std::iter::once("mix".to_string()))
+        .collect();
+    for key in keys {
+        let mut plain = fleet_cfg(24, 4, 4, "autoscale");
+        plain.scenario_env = Some(key.clone());
+        plain.arrival = ArrivalKind::Bursty;
+        let mut instrumented = plain.clone();
+        instrumented.obs = full_obs();
+        assert_eq!(
+            run_fleet(&plain).unwrap().metrics.fingerprint(),
+            run_fleet(&instrumented).unwrap().metrics.fingerprint(),
+            "scenario {key}"
+        );
+    }
+}
+
+/// Two identical instrumented runs emit byte-identical JSONL; a different
+/// seed emits different telemetry (the collector is not a constant).
+#[test]
+fn telemetry_jsonl_is_seed_reproducible() {
+    let run_with_seed = |seed: u64| -> (String, String) {
+        let mut cfg = fleet_cfg(100, 5, 4, "autoscale");
+        cfg.seed = seed;
+        cfg.obs = full_obs();
+        let t = run_fleet(&cfg).unwrap().telemetry.unwrap();
+        (t.timeline.as_ref().unwrap().to_jsonl(), t.trace.as_ref().unwrap().to_jsonl())
+    };
+    let (tl_a, tr_a) = run_with_seed(7);
+    let (tl_b, tr_b) = run_with_seed(7);
+    assert_eq!(tl_a, tl_b, "same seed, same timeline bytes");
+    assert_eq!(tr_a, tr_b, "same seed, same trace bytes");
+    let (tl_c, _) = run_with_seed(8);
+    assert_ne!(tl_a, tl_c, "different seeds must differ");
+
+    // Both documents pass the schema validators the CLI and CI use, and
+    // the window request counts account for every served request.
+    let windows = validate_timeline_jsonl(&tl_a).unwrap();
+    assert!(windows > 0);
+    let events = validate_trace_jsonl(&tr_a).unwrap();
+    assert!(events > 0);
+}
+
+/// The fleet timeline accounts for every request and every cloud epoch,
+/// and trace sampling thins events monotonically.
+#[test]
+fn fleet_timeline_accounts_and_sampling_thins() {
+    let mut cfg = fleet_cfg(200, 5, 4, "autoscale");
+    cfg.obs = full_obs();
+    let out = run_fleet(&cfg).unwrap();
+    let t = out.telemetry.unwrap();
+    let tl = t.timeline.as_ref().unwrap();
+    let windowed: u64 = tl.windows().iter().map(|w| w.requests).sum();
+    assert_eq!(windowed as usize, out.metrics.n());
+    assert!(tl.windows().iter().any(|w| w.cloud_samples > 0));
+    let full_events = t.trace.as_ref().unwrap().events.len();
+
+    cfg.obs.trace_sample = 8;
+    let sampled = run_fleet(&cfg).unwrap().telemetry.unwrap();
+    let sampled_events = sampled.trace.as_ref().unwrap().events.len();
+    assert!(
+        sampled_events < full_events,
+        "sampling 1/8 must thin the trace: {sampled_events} vs {full_events}"
+    );
+    assert!(sampled_events > 0, "a 200-device fleet keeps some sampled devices");
+}
+
+fn serve_metrics(
+    obs: Option<&ObsConfig>,
+) -> (autoscale::coordinator::metrics::EpisodeMetrics, Option<Telemetry>) {
+    let device = DeviceId::Mi8Pro;
+    let seed = 7;
+    let mut run_cfg = RunConfig::default();
+    run_cfg.device = device;
+    run_cfg.env = EnvKind::D3RandomWlan;
+    run_cfg.seed = seed;
+    run_cfg.scenario = Scenario::NonStreaming;
+    let mut spec = PolicySpec::new(device, seed);
+    spec.scenario = run_cfg.scenario;
+    spec.accuracy_target = run_cfg.accuracy_target;
+    let policy = autoscale::policy::build("autoscale", &spec).unwrap();
+    let env = Environment::build_keyed(device, &run_cfg.scenario_key(), seed).unwrap();
+    let mut server = Server::new(env, policy, ServeConfig { run: run_cfg, models: vec![] });
+    if let Some(ocfg) = obs {
+        server = server.with_telemetry(ocfg);
+    }
+    let metrics = server.serve(300);
+    let telemetry = server.take_telemetry();
+    (metrics, telemetry)
+}
+
+/// The single-device serve loop holds the same contract: identical
+/// episode fingerprint with telemetry on, valid JSONL out, and per-window
+/// requests summing to the episode length.
+#[test]
+fn serve_episode_is_telemetry_neutral_and_emits_valid_jsonl() {
+    let (plain, none) = serve_metrics(None);
+    assert!(none.is_none());
+    let ocfg = full_obs();
+    let (instrumented, telemetry) = serve_metrics(Some(&ocfg));
+    assert_eq!(plain.fingerprint(), instrumented.fingerprint());
+    assert_eq!(plain.n(), instrumented.n());
+
+    let t = telemetry.unwrap();
+    let tl = t.timeline.as_ref().unwrap();
+    let windowed: u64 = tl.windows().iter().map(|w| w.requests).sum();
+    assert_eq!(windowed as usize, instrumented.n());
+    assert!(validate_timeline_jsonl(&tl.to_jsonl()).unwrap() > 0);
+    let tr = t.trace.as_ref().unwrap();
+    assert!(validate_trace_jsonl(&tr.to_jsonl()).unwrap() > 0);
+    // Full sampling on a learning policy: a decision, a completion and a
+    // feedback event per request (rings sized to keep them all).
+    assert_eq!(tr.events.len(), 3 * instrumented.n());
+}
