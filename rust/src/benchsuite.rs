@@ -95,6 +95,21 @@ pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
     });
     report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)).optional());
 
+    // Elastic cloud at scale: the same 10k-device fleet with the replica
+    // autoscaler, admission control and the adaptive batch schedule
+    // engaged. The delta against the plain 10k row is the cost of the
+    // per-epoch pool fold — which runs on the main thread exactly once
+    // per epoch, so it should be noise at this scale.
+    let mut cfg = fleet_cfg(10_000, 5, 8, "best");
+    cfg.elastic.autoscaler.max_replicas = 4;
+    cfg.elastic.autoscaler.warmup_s = 5.0;
+    cfg.elastic.admit_backlog_s = 20.0;
+    cfg.elastic.batch = crate::cloudscale::BatchSchedule::Adaptive;
+    let r = Bencher::once("fleet 10k x5 best shards=8 elastic", || {
+        black_box(run_fleet(&cfg).unwrap());
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)).optional());
+
     if full {
         let cfg = fleet_cfg(100_000, 2, 8, "best");
         let mut bpd = None;

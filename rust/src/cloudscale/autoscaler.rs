@@ -1,0 +1,240 @@
+//! The estimator-driven autoscaler: pooled utilization and queue-wait
+//! estimates feed a threshold/cooldown [`ScalingRule`], evaluated once
+//! per epoch on the main thread. The output is a *target replica count*
+//! moving by at most one replica per evaluation — smooth, bounded, and a
+//! pure function of the epoch-aggregate sequence (so the trajectory is
+//! shard-invariant and seed-reproducible by construction).
+
+use super::estimator::Estimator;
+
+/// Threshold/cooldown policy deciding when the pool grows or shrinks.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingRule {
+    /// Scale up when the utilization estimate exceeds this.
+    pub up_utilization: f64,
+    /// Scale down when the utilization estimate falls below this.
+    pub down_utilization: f64,
+    /// Scale up (regardless of utilization) when the queue-wait estimate
+    /// exceeds this many seconds — the backlog escape hatch.
+    pub up_queue_wait_s: f64,
+    /// Minimum seconds between consecutive scale-ups.
+    pub up_cooldown_s: f64,
+    /// Minimum seconds between consecutive scale-downs (longer than up,
+    /// so the pool is quick to grow and reluctant to shrink).
+    pub down_cooldown_s: f64,
+}
+
+impl Default for ScalingRule {
+    fn default() -> Self {
+        ScalingRule {
+            up_utilization: 0.75,
+            down_utilization: 0.30,
+            up_queue_wait_s: 1.0,
+            up_cooldown_s: 10.0,
+            down_cooldown_s: 30.0,
+        }
+    }
+}
+
+/// Autoscaler configuration: replica bounds, the rule, and the warm-up
+/// lag a fresh replica sits out before serving. Neutral default:
+/// `min == max == 1` pins the pool to one replica — the autoscaler then
+/// never changes anything and the elastic cloud is bit-identical to the
+/// fixed one.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalerParams {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    pub rule: ScalingRule,
+    /// Seconds between a scale-up decision and the new replica serving
+    /// its first request.
+    pub warmup_s: f64,
+}
+
+impl Default for AutoscalerParams {
+    fn default() -> Self {
+        AutoscalerParams {
+            min_replicas: 1,
+            max_replicas: 1,
+            rule: ScalingRule::default(),
+            warmup_s: 20.0,
+        }
+    }
+}
+
+/// Estimator variances: utilization is a fairly clean per-epoch ratio,
+/// queue wait is spikier — smooth it harder.
+const UTIL_PROCESS_VAR: f64 = 0.05;
+const UTIL_MEASURE_VAR: f64 = 0.25;
+const WAIT_PROCESS_VAR: f64 = 0.05;
+const WAIT_MEASURE_VAR: f64 = 1.0;
+
+/// The live autoscaler: two estimators plus per-direction cooldown
+/// clocks. `evaluate` is the only entry point and must be called exactly
+/// once per epoch, on the main thread, with the pooled aggregates.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    params: AutoscalerParams,
+    util: Estimator,
+    wait: Estimator,
+    last_up_s: f64,
+    last_down_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(params: AutoscalerParams) -> Self {
+        Autoscaler {
+            params,
+            util: Estimator::new(UTIL_PROCESS_VAR, UTIL_MEASURE_VAR),
+            wait: Estimator::new(WAIT_PROCESS_VAR, WAIT_MEASURE_VAR),
+            last_up_s: f64::NEG_INFINITY,
+            last_down_s: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn params(&self) -> &AutoscalerParams {
+        &self.params
+    }
+
+    /// Smoothed utilization estimate (for telemetry / experiments).
+    #[inline]
+    pub fn utilization_estimate(&self) -> f64 {
+        self.util.value()
+    }
+
+    /// Fold this epoch's pooled utilization and queue wait, then return
+    /// the target replica count given `current` provisioned replicas.
+    /// Moves by at most one replica per call; respects bounds and
+    /// per-direction cooldowns.
+    pub fn evaluate(&mut self, t_s: f64, utilization: f64, queue_wait_s: f64, current: usize) -> usize {
+        let u = self.util.update(utilization);
+        let w = self.wait.update(queue_wait_s);
+        let p = self.params;
+        // Bounds first: a reconfigured pool snaps toward the band one
+        // step at a time even when no threshold fires.
+        if current < p.min_replicas {
+            return current + 1;
+        }
+        if current > p.max_replicas {
+            return current - 1;
+        }
+        let want_up = u > p.rule.up_utilization || w > p.rule.up_queue_wait_s;
+        if want_up && current < p.max_replicas && t_s - self.last_up_s >= p.rule.up_cooldown_s {
+            self.last_up_s = t_s;
+            return current + 1;
+        }
+        let want_down = u < p.rule.down_utilization && w < p.rule.up_queue_wait_s;
+        if want_down && current > p.min_replicas && t_s - self.last_down_s >= p.rule.down_cooldown_s
+        {
+            self.last_down_s = t_s;
+            return current - 1;
+        }
+        current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elastic_params(max: usize) -> AutoscalerParams {
+        AutoscalerParams { min_replicas: 1, max_replicas: max, ..Default::default() }
+    }
+
+    /// Drive the autoscaler with a constant signal and return the
+    /// replica-count trajectory, one entry per epoch.
+    fn trajectory(p: AutoscalerParams, util: f64, wait: f64, epochs: usize) -> Vec<usize> {
+        let mut a = Autoscaler::new(p);
+        let mut n = p.min_replicas;
+        let mut out = Vec::with_capacity(epochs);
+        for e in 0..epochs {
+            n = a.evaluate(e as f64, util, wait, n);
+            out.push(n);
+        }
+        out
+    }
+
+    #[test]
+    fn sustained_overload_scales_monotonically_up_to_max() {
+        let traj = trajectory(elastic_params(4), 0.95, 0.0, 120);
+        assert!(traj.windows(2).all(|w| w[1] >= w[0]), "monotone under overload: {traj:?}");
+        assert_eq!(*traj.last().unwrap(), 4, "reaches max_replicas");
+        assert!(traj.iter().all(|&n| (1..=4).contains(&n)));
+    }
+
+    #[test]
+    fn sustained_underload_scales_monotonically_down_to_min() {
+        let p = elastic_params(4);
+        let mut a = Autoscaler::new(p);
+        let mut n = 4;
+        let mut traj = Vec::new();
+        for e in 0..300 {
+            n = a.evaluate(e as f64, 0.05, 0.0, n);
+            traj.push(n);
+        }
+        assert!(traj.windows(2).all(|w| w[1] <= w[0]), "monotone under underload: {traj:?}");
+        assert_eq!(*traj.last().unwrap(), 1, "reaches min_replicas");
+    }
+
+    #[test]
+    fn cooldown_spaces_consecutive_scale_ups() {
+        let p = elastic_params(8);
+        let traj = trajectory(p, 0.95, 0.0, 60);
+        // Find epochs where the count grew; consecutive growth events
+        // must be at least up_cooldown_s apart (epochs are 1 s here).
+        let ups: Vec<usize> =
+            traj.windows(2).enumerate().filter(|(_, w)| w[1] > w[0]).map(|(i, _)| i + 1).collect();
+        assert!(ups.len() >= 2, "need multiple scale-ups to test spacing: {traj:?}");
+        for pair in ups.windows(2) {
+            assert!(
+                (pair[1] - pair[0]) as f64 >= p.rule.up_cooldown_s,
+                "scale-ups at {ups:?} violate the {}s cooldown",
+                p.rule.up_cooldown_s
+            );
+        }
+    }
+
+    #[test]
+    fn bounds_are_never_violated_under_any_signal() {
+        let p = elastic_params(3);
+        let mut a = Autoscaler::new(p);
+        let mut n = 1;
+        // Adversarial alternating signal: saturated then idle.
+        for e in 0..500 {
+            let (u, w) = if e % 3 == 0 { (5.0, 30.0) } else { (0.0, 0.0) };
+            n = a.evaluate(e as f64, u, w, n);
+            assert!((1..=3).contains(&n), "bounds violated at epoch {e}: {n}");
+        }
+    }
+
+    #[test]
+    fn queue_wait_alone_triggers_scale_up() {
+        // Utilization below the up threshold, but the queue is deep:
+        // the wait estimator must force growth.
+        let traj = trajectory(elastic_params(2), 0.5, 10.0, 60);
+        assert_eq!(*traj.last().unwrap(), 2);
+    }
+
+    #[test]
+    fn pinned_bounds_pin_the_count() {
+        let traj = trajectory(AutoscalerParams::default(), 5.0, 100.0, 50);
+        assert!(traj.iter().all(|&n| n == 1), "min=max=1 must never move: {traj:?}");
+    }
+
+    #[test]
+    fn out_of_band_counts_snap_back_one_step_at_a_time() {
+        let p = elastic_params(2);
+        let mut a = Autoscaler::new(p);
+        assert_eq!(a.evaluate(0.0, 0.0, 0.0, 5), 4, "above max: shrink");
+        let mut a = Autoscaler::new(AutoscalerParams { min_replicas: 3, max_replicas: 4, ..Default::default() });
+        assert_eq!(a.evaluate(0.0, 0.0, 0.0, 1), 2, "below min: grow");
+    }
+
+    #[test]
+    fn trajectory_is_reproducible() {
+        let t1 = trajectory(elastic_params(6), 0.9, 2.0, 200);
+        let t2 = trajectory(elastic_params(6), 0.9, 2.0, 200);
+        assert_eq!(t1, t2);
+    }
+}

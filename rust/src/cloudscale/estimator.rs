@@ -1,0 +1,96 @@
+//! Scalar Kalman-style estimator: the smoothing stage between raw
+//! per-epoch measurements (pooled utilization, queue wait) and the
+//! scaling rule. A one-dimensional Kalman filter with constant process
+//! and measurement variance reduces to an EWMA whose gain adapts while
+//! the variance converges — it reacts fast from a cold start, then
+//! settles into steady smoothing. Pure f64 arithmetic, no RNG: the same
+//! measurement sequence always produces the same estimate sequence,
+//! which is what keeps the autoscaler trajectory seed-reproducible.
+
+/// One-dimensional Kalman filter over a noisy scalar signal.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimator {
+    value: f64,
+    variance: f64,
+    /// How fast the underlying signal is allowed to drift per step.
+    process_var: f64,
+    /// How noisy one measurement is.
+    measure_var: f64,
+    primed: bool,
+}
+
+impl Estimator {
+    pub fn new(process_var: f64, measure_var: f64) -> Self {
+        assert!(process_var > 0.0 && measure_var > 0.0);
+        Estimator { value: 0.0, variance: 0.0, process_var, measure_var, primed: false }
+    }
+
+    /// Fold one measurement; returns the updated estimate. The first
+    /// measurement primes the filter directly (no stale-zero transient).
+    pub fn update(&mut self, z: f64) -> f64 {
+        if !self.primed {
+            self.value = z;
+            self.variance = self.measure_var;
+            self.primed = true;
+            return self.value;
+        }
+        self.variance += self.process_var;
+        let gain = self.variance / (self.variance + self.measure_var);
+        self.value += gain * (z - self.value);
+        self.variance *= 1.0 - gain;
+        self.value
+    }
+
+    /// Current estimate (0.0 before the first measurement).
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_measurement_primes_the_filter() {
+        let mut e = Estimator::new(0.05, 0.5);
+        assert_eq!(e.value(), 0.0);
+        assert_eq!(e.update(0.8), 0.8);
+    }
+
+    #[test]
+    fn estimate_tracks_a_step_change() {
+        let mut e = Estimator::new(0.05, 0.5);
+        for _ in 0..20 {
+            e.update(0.2);
+        }
+        assert!((e.value() - 0.2).abs() < 1e-6);
+        for _ in 0..30 {
+            e.update(0.9);
+        }
+        assert!((e.value() - 0.9).abs() < 0.05, "estimate {} lags the step", e.value());
+    }
+
+    #[test]
+    fn smoothing_damps_single_spikes() {
+        let mut e = Estimator::new(0.05, 0.5);
+        for _ in 0..10 {
+            e.update(0.3);
+        }
+        e.update(5.0); // one outlier epoch
+        assert!(e.value() < 2.0, "one spike must not dominate: {}", e.value());
+    }
+
+    #[test]
+    fn identical_inputs_give_identical_estimates() {
+        let feed = |n: usize| {
+            let mut e = Estimator::new(0.05, 0.5);
+            for i in 0..n {
+                e.update((i % 7) as f64 * 0.1);
+            }
+            e.value().to_bits()
+        };
+        assert_eq!(feed(50), feed(50));
+    }
+}

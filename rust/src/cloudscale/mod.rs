@@ -1,0 +1,255 @@
+//! Elastic cloud: a pool of autoscaled [`CloudModel`] replicas behind
+//! deterministic dispatch, with estimator-driven scaling, admission
+//! control and a load-dependent batch schedule.
+//!
+//! The fleet's fixed-capacity cloud (`fleet::cloud`) prices congestion
+//! but can never *react* to it. This subsystem closes that loop the way
+//! a serving cluster would:
+//!
+//! * a **replica pool** ([`ReplicaPool`]) generalizes the single
+//!   `CloudModel` to N homogeneous replicas behind round-robin or
+//!   least-backlog dispatch, folding per-replica queue state into one
+//!   pooled [`CloudSnapshot`] so every existing policy keeps working
+//!   unchanged;
+//! * an **autoscaler** ([`Autoscaler`]) runs Kalman-style scalar
+//!   estimators ([`Estimator`]) over pooled utilization and queue wait,
+//!   feeding a [`ScalingRule`] (up/down thresholds, per-direction
+//!   cooldowns, min/max bounds). New replicas serve nothing during a
+//!   configurable warm-up lag — the scale-up-lag dynamic the `figure
+//!   elastic` experiment measures;
+//! * **admission control**: above a configurable backlog bound the pool
+//!   stops admitting offloads for the next epoch; devices see a fast-fail
+//!   `remote_failed` (distinct from a link timeout) so Q-learners and
+//!   hysteresis retreat;
+//! * a **load-dependent batch schedule** ([`BatchSchedule`]): the batch
+//!   window widens stepwise under high utilization, trading per-request
+//!   latency for throughput.
+//!
+//! Everything is evaluated **once per epoch on the main thread**, from
+//! the same deterministically-reduced epoch aggregates the fixed cloud
+//! already consumes — so the replica-count trajectory is a pure function
+//! of the seed and is shard-invariant by construction. With the neutral
+//! defaults (`min_replicas == max_replicas == 1`, admission off, static
+//! batch schedule) the pool is bit-identical to the pre-existing single
+//! `CloudModel`: the subsystem is strictly additive, pinned by the
+//! driver-parity test in `tests/fleet.rs`.
+
+pub mod autoscaler;
+pub mod estimator;
+pub mod pool;
+
+pub use autoscaler::{Autoscaler, AutoscalerParams, ScalingRule};
+pub use estimator::Estimator;
+pub use pool::ReplicaPool;
+
+use crate::fleet::{CloudModel, CloudSnapshot};
+
+/// How the pool splits one epoch's offload traffic across active
+/// replicas. Both variants are deterministic functions of the epoch
+/// aggregate and replica state — no RNG, no thread ordering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchKind {
+    /// Even split; the remainder jobs rotate across replicas between
+    /// epochs (a persistent cursor plays the role of the round-robin
+    /// pointer a per-request dispatcher would keep).
+    RoundRobin,
+    /// Even split; the remainder jobs go to the replicas with the least
+    /// backlog (ties broken by replica id).
+    LeastBacklog,
+}
+
+impl DispatchKind {
+    pub fn parse(s: &str) -> Option<DispatchKind> {
+        match s {
+            "rr" | "round-robin" => Some(DispatchKind::RoundRobin),
+            "least" | "least-backlog" => Some(DispatchKind::LeastBacklog),
+            _ => None,
+        }
+    }
+}
+
+/// Load-dependent batch window schedule: a small stepwise lookup from
+/// pooled utilization to a multiplier on the configured base window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchSchedule {
+    /// Never touch the window (the neutral default — bit-identical to
+    /// the fixed cloud).
+    Static,
+    /// Widen the window stepwise as utilization climbs: 1x below 0.5,
+    /// 2x below 0.75, 3x below 0.9, 4x at saturation. Wider windows
+    /// form bigger batches (higher effective capacity) at the price of
+    /// batch-wait latency.
+    Adaptive,
+}
+
+impl BatchSchedule {
+    pub fn parse(s: &str) -> Option<BatchSchedule> {
+        match s {
+            "static" => Some(BatchSchedule::Static),
+            "adaptive" => Some(BatchSchedule::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// Window multiplier for a given pooled utilization.
+    pub fn multiplier(&self, utilization: f64) -> f64 {
+        match self {
+            BatchSchedule::Static => 1.0,
+            BatchSchedule::Adaptive => {
+                if utilization < 0.5 {
+                    1.0
+                } else if utilization < 0.75 {
+                    2.0
+                } else if utilization < 0.9 {
+                    3.0
+                } else {
+                    4.0
+                }
+            }
+        }
+    }
+}
+
+/// Everything elastic about the cloud, bundled so `FleetConfig` (and the
+/// TOML `[cloud.autoscaler]` section) carries one field. The default is
+/// **neutral**: one pinned replica, admission off, static batching —
+/// exactly the pre-existing fixed-capacity cloud.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticParams {
+    pub autoscaler: AutoscalerParams,
+    pub dispatch: DispatchKind,
+    /// Admission bound in seconds of pooled queue wait: above it the
+    /// cloud rejects new offloads for the next epoch. `f64::INFINITY`
+    /// disables admission control entirely.
+    pub admit_backlog_s: f64,
+    pub batch: BatchSchedule,
+}
+
+impl Default for ElasticParams {
+    fn default() -> Self {
+        ElasticParams {
+            autoscaler: AutoscalerParams::default(),
+            dispatch: DispatchKind::RoundRobin,
+            admit_backlog_s: f64::INFINITY,
+            batch: BatchSchedule::Static,
+        }
+    }
+}
+
+impl ElasticParams {
+    /// True when every elastic mechanism is at its neutral setting (the
+    /// pool then reduces to a single fixed `CloudModel`).
+    pub fn is_neutral(&self) -> bool {
+        self.autoscaler.min_replicas == 1
+            && self.autoscaler.max_replicas == 1
+            && self.admit_backlog_s.is_infinite()
+            && self.batch == BatchSchedule::Static
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let a = &self.autoscaler;
+        if a.min_replicas < 1 {
+            return Err("autoscaler min_replicas must be >= 1".into());
+        }
+        if a.max_replicas < a.min_replicas {
+            return Err("autoscaler max_replicas must be >= min_replicas".into());
+        }
+        if !(a.warmup_s >= 0.0) {
+            return Err("autoscaler warmup_s must be >= 0".into());
+        }
+        let r = &a.rule;
+        if !(r.up_utilization > 0.0) || !(r.down_utilization > 0.0) {
+            return Err("scaling thresholds must be > 0".into());
+        }
+        if r.down_utilization >= r.up_utilization {
+            return Err("down_utilization must be below up_utilization".into());
+        }
+        if !(r.up_queue_wait_s > 0.0) {
+            return Err("up_queue_wait_s must be > 0".into());
+        }
+        if !(r.up_cooldown_s >= 0.0) || !(r.down_cooldown_s >= 0.0) {
+            return Err("cooldowns must be >= 0".into());
+        }
+        if !(self.admit_backlog_s > 0.0) {
+            return Err("admit_backlog_s must be > 0 (inf disables admission control)".into());
+        }
+        Ok(())
+    }
+}
+
+/// One replica: a full `CloudModel` plus the time it becomes ready.
+/// During warm-up (`ready_at_s` in the future) the replica receives no
+/// traffic and contributes nothing to the pooled snapshot.
+#[derive(Clone, Debug)]
+pub struct Replica {
+    pub model: CloudModel,
+    pub ready_at_s: f64,
+}
+
+/// The pooled congestion view one fleet epoch runs against: the frozen
+/// snapshot plus the admission decision and the replica count, all fixed
+/// at the epoch boundary.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolView {
+    pub snapshot: CloudSnapshot,
+    /// False = the cloud fast-fails every offload this epoch.
+    pub admitting: bool,
+    /// Provisioned replicas (including any still warming up).
+    pub replicas: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_elastic_params_are_neutral() {
+        let p = ElasticParams::default();
+        assert!(p.is_neutral());
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        let mut p = ElasticParams::default();
+        p.autoscaler.min_replicas = 0;
+        assert!(p.validate().is_err());
+
+        let mut p = ElasticParams::default();
+        p.autoscaler.min_replicas = 4;
+        p.autoscaler.max_replicas = 2;
+        assert!(p.validate().is_err());
+
+        let mut p = ElasticParams::default();
+        p.autoscaler.rule.down_utilization = 0.9;
+        p.autoscaler.rule.up_utilization = 0.5;
+        assert!(p.validate().is_err());
+
+        let mut p = ElasticParams::default();
+        p.admit_backlog_s = 0.0;
+        assert!(p.validate().is_err());
+
+        let mut p = ElasticParams::default();
+        p.autoscaler.warmup_s = -1.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn batch_schedule_steps_widen_with_load() {
+        let s = BatchSchedule::Adaptive;
+        assert_eq!(s.multiplier(0.1), 1.0);
+        assert_eq!(s.multiplier(0.6), 2.0);
+        assert_eq!(s.multiplier(0.8), 3.0);
+        assert_eq!(s.multiplier(1.5), 4.0);
+        assert_eq!(BatchSchedule::Static.multiplier(1.5), 1.0);
+    }
+
+    #[test]
+    fn dispatch_and_schedule_parse_cli_spellings() {
+        assert_eq!(DispatchKind::parse("rr"), Some(DispatchKind::RoundRobin));
+        assert_eq!(DispatchKind::parse("least-backlog"), Some(DispatchKind::LeastBacklog));
+        assert!(DispatchKind::parse("random").is_none());
+        assert_eq!(BatchSchedule::parse("adaptive"), Some(BatchSchedule::Adaptive));
+        assert!(BatchSchedule::parse("wide").is_none());
+    }
+}

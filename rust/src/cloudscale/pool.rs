@@ -1,0 +1,431 @@
+//! The replica pool: N homogeneous [`CloudModel`] replicas behind
+//! deterministic dispatch, folded into one pooled [`CloudSnapshot`] per
+//! epoch. The pool is the drop-in replacement for the single fixed
+//! cloud in `fleet/sim.rs` — with the neutral [`ElasticParams`] defaults
+//! it holds exactly one replica forever and every arithmetic step
+//! reduces to the single-model path bit-for-bit (pinned below and by
+//! the driver-parity test in `tests/fleet.rs`).
+//!
+//! Epoch-boundary order of operations (all on the main thread):
+//! 1. split the epoch's offload aggregate across the replicas that were
+//!    ready when the epoch started, advance each replica's queue;
+//! 2. fold pooled utilization / queue wait, feed the [`Autoscaler`];
+//! 3. apply the batch schedule (window changes refresh every replica's
+//!    frozen `batch_wait_s` — see `CloudModel::set_batch_window`);
+//! 4. apply the scaling decision: grow by one warming replica, or
+//!    retire the tail replica and redistribute its backlog evenly;
+//! 5. freeze the pooled view ([`PoolView`]) the next epoch runs
+//!    against: snapshot, admission decision, replica count.
+//!
+//! A retired replica's backlog is absorbed by the survivors immediately
+//! but shows up in their snapshots only after their next advance — a
+//! one-epoch reporting lag the fluid approximation tolerates by design.
+
+use super::autoscaler::Autoscaler;
+use super::{BatchSchedule, DispatchKind, ElasticParams, PoolView, Replica};
+use crate::fleet::{CloudModel, CloudParams, CloudSnapshot};
+
+/// The elastic cloud: replicas + autoscaler + admission state.
+#[derive(Clone, Debug)]
+pub struct ReplicaPool {
+    base: CloudParams,
+    elastic: ElasticParams,
+    replicas: Vec<Replica>,
+    autoscaler: Autoscaler,
+    /// Round-robin remainder cursor, persisted across epochs.
+    rr_cursor: usize,
+    /// Simulation clock: start time of the next epoch to fold.
+    t_s: f64,
+    view: PoolView,
+}
+
+impl ReplicaPool {
+    /// Build a pool with `min_replicas` pre-provisioned (ready) replicas.
+    pub fn new(base: CloudParams, elastic: ElasticParams) -> Self {
+        let n0 = elastic.autoscaler.min_replicas.max(1);
+        let replicas: Vec<Replica> = (0..n0)
+            .map(|_| Replica { model: CloudModel::new(base), ready_at_s: 0.0 })
+            .collect();
+        let autoscaler = Autoscaler::new(elastic.autoscaler);
+        let mut pool = ReplicaPool {
+            base,
+            elastic,
+            replicas,
+            autoscaler,
+            rr_cursor: 0,
+            t_s: 0.0,
+            view: PoolView {
+                snapshot: CloudSnapshot {
+                    queue_wait_s: 0.0,
+                    batch_wait_s: 0.5 * base.batch_window_s,
+                    load: 0.0,
+                    slowdown: 1.0,
+                },
+                admitting: true,
+                replicas: n0 as u32,
+            },
+        };
+        pool.refresh_view();
+        pool
+    }
+
+    /// The frozen view the coming epoch runs against.
+    #[inline]
+    pub fn view(&self) -> PoolView {
+        self.view
+    }
+
+    /// Pooled congestion snapshot (the same shape devices always read).
+    #[inline]
+    pub fn snapshot(&self) -> CloudSnapshot {
+        self.view.snapshot
+    }
+
+    /// False = every offload this epoch fast-fails at admission.
+    #[inline]
+    pub fn admitting(&self) -> bool {
+        self.view.admitting
+    }
+
+    /// Provisioned replicas, warming ones included.
+    #[inline]
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Replicas ready to serve at the current epoch boundary.
+    pub fn n_active(&self) -> usize {
+        self.replicas.iter().filter(|r| r.ready_at_s <= self.t_s).count()
+    }
+
+    /// Total pending work across every replica (deterministic id-order
+    /// sum; with one replica this is exactly that replica's backlog).
+    pub fn backlog_mmacs(&self) -> f64 {
+        self.replicas.iter().map(|r| r.model.backlog_mmacs()).sum()
+    }
+
+    /// Smoothed utilization estimate the autoscaler is acting on.
+    #[inline]
+    pub fn utilization_estimate(&self) -> f64 {
+        self.autoscaler.utilization_estimate()
+    }
+
+    /// Indices of replicas ready at epoch start `t`.
+    fn active_indices(&self, t: f64) -> Vec<usize> {
+        (0..self.replicas.len()).filter(|&i| self.replicas[i].ready_at_s <= t).collect()
+    }
+
+    /// Fold one epoch of offered traffic (the deterministically-reduced
+    /// fleet aggregate), run the autoscaler, and freeze the next view.
+    /// Mirrors `CloudModel::advance_epoch` exactly when one replica is
+    /// pinned.
+    pub fn advance_epoch(&mut self, jobs: u64, macs_m: f64, epoch_s: f64) {
+        assert!(epoch_s > 0.0);
+        let t_start = self.t_s;
+        let active = self.active_indices(t_start);
+        debug_assert!(!active.is_empty(), "pool always keeps a ready replica");
+        let k = active.len();
+
+        // 1. dispatch: even integer job split, remainder placed per the
+        // dispatch kind; MACs follow the job shares proportionally. With
+        // one active replica the whole aggregate passes through exactly.
+        let base_jobs = jobs / k as u64;
+        let rem = (jobs % k as u64) as usize;
+        let mut share = vec![base_jobs; k];
+        match self.elastic.dispatch {
+            DispatchKind::RoundRobin => {
+                for j in 0..rem {
+                    share[(self.rr_cursor + j) % k] += 1;
+                }
+                self.rr_cursor = (self.rr_cursor + rem) % k;
+            }
+            DispatchKind::LeastBacklog => {
+                let mut order: Vec<usize> = (0..k).collect();
+                order.sort_by(|&a, &b| {
+                    let ba = self.replicas[active[a]].model.backlog_mmacs();
+                    let bb = self.replicas[active[b]].model.backlog_mmacs();
+                    ba.partial_cmp(&bb).unwrap().then(a.cmp(&b))
+                });
+                for j in 0..rem {
+                    share[order[j]] += 1;
+                }
+            }
+        }
+        for (pos, &i) in active.iter().enumerate() {
+            let macs_i = if jobs > 0 {
+                macs_m * (share[pos] as f64 / jobs as f64)
+            } else {
+                macs_m / k as f64
+            };
+            self.replicas[i].model.advance_epoch(share[pos], macs_i, epoch_s);
+        }
+        // Warming replicas idle through the epoch (their queues stay
+        // empty, their snapshots stay fresh for the moment they join).
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].ready_at_s > t_start {
+                self.replicas[i].model.advance_epoch(0, 0.0, epoch_s);
+            }
+        }
+        let t_end = t_start + epoch_s;
+        self.t_s = t_end;
+
+        // 2. pooled aggregates over the replicas that served this epoch.
+        let kf = k as f64;
+        let util: f64 = active.iter().map(|&i| self.replicas[i].model.snapshot().load).sum::<f64>() / kf;
+        let wait: f64 =
+            active.iter().map(|&i| self.replicas[i].model.snapshot().queue_wait_s).sum::<f64>() / kf;
+
+        // 3. load-dependent batch schedule (Static never touches it).
+        if self.elastic.batch != BatchSchedule::Static {
+            let w = self.base.batch_window_s * self.elastic.batch.multiplier(util);
+            for r in &mut self.replicas {
+                r.model.set_batch_window(w);
+            }
+        }
+
+        // 4. scaling: at most one replica per epoch, warm-up lag on the
+        // way up, deterministic tail retirement + even backlog
+        // redistribution on the way down.
+        let target = self.autoscaler.evaluate(t_end, util, wait, self.replicas.len());
+        if target > self.replicas.len() {
+            // Inherit the pool's current (possibly widened) window so
+            // the pool stays homogeneous.
+            let params = self.replicas[0].model.params;
+            self.replicas.push(Replica {
+                model: CloudModel::new(params),
+                ready_at_s: t_end + self.elastic.autoscaler.warmup_s,
+            });
+        } else if target < self.replicas.len() {
+            let mut dead = self.replicas.pop().expect("target >= min >= 1");
+            let (macs, jobs) = dead.model.take_backlog();
+            let kf = self.replicas.len() as f64;
+            for r in &mut self.replicas {
+                r.model.absorb_backlog(macs / kf, jobs / kf);
+            }
+            self.rr_cursor = 0; // active set changed: reset the cursor
+        }
+
+        // 5. freeze the view for the coming epoch.
+        self.refresh_view();
+    }
+
+    /// Recompute the frozen [`PoolView`] from the replicas that will be
+    /// ready when the next epoch starts. One active replica passes its
+    /// snapshot through verbatim (the bit-exact neutral path); several
+    /// average field-wise — the expectation a round-robin-dispatched
+    /// request sees.
+    fn refresh_view(&mut self) {
+        let active = self.active_indices(self.t_s);
+        let snapshot = if active.len() == 1 {
+            self.replicas[active[0]].model.snapshot()
+        } else {
+            let kf = active.len() as f64;
+            let mut queue_wait_s = 0.0;
+            let mut batch_wait_s = 0.0;
+            let mut load = 0.0;
+            let mut slowdown = 0.0;
+            for &i in &active {
+                let s = self.replicas[i].model.snapshot();
+                queue_wait_s += s.queue_wait_s;
+                batch_wait_s += s.batch_wait_s;
+                load += s.load;
+                slowdown += s.slowdown;
+            }
+            CloudSnapshot {
+                queue_wait_s: queue_wait_s / kf,
+                batch_wait_s: batch_wait_s / kf,
+                load: load / kf,
+                slowdown: slowdown / kf,
+            }
+        };
+        let admitting = snapshot.queue_wait_s <= self.elastic.admit_backlog_s;
+        self.view = PoolView { snapshot, admitting, replicas: self.replicas.len() as u32 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudscale::AutoscalerParams;
+
+    fn overload_epochs() -> Vec<(u64, f64)> {
+        let cap = CloudParams::default().capacity_mmacs_per_s;
+        (0..40)
+            .map(|i| match i % 5 {
+                0 => (0, 0.0),
+                1 => (500, 0.3 * cap),
+                _ => (20_000, 2.5 * cap),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn neutral_pool_is_bit_identical_to_a_single_cloud_model() {
+        let params = CloudParams::default();
+        let mut pool = ReplicaPool::new(params, ElasticParams::default());
+        let mut single = CloudModel::new(params);
+        for &(jobs, macs) in &overload_epochs() {
+            pool.advance_epoch(jobs, macs, 1.0);
+            single.advance_epoch(jobs, macs, 1.0);
+            let (p, s) = (pool.snapshot(), single.snapshot());
+            assert_eq!(p.queue_wait_s.to_bits(), s.queue_wait_s.to_bits());
+            assert_eq!(p.batch_wait_s.to_bits(), s.batch_wait_s.to_bits());
+            assert_eq!(p.load.to_bits(), s.load.to_bits());
+            assert_eq!(p.slowdown.to_bits(), s.slowdown.to_bits());
+            assert_eq!(pool.backlog_mmacs().to_bits(), single.backlog_mmacs().to_bits());
+            assert!(pool.admitting());
+            assert_eq!(pool.n_replicas(), 1);
+        }
+    }
+
+    fn elastic(max: usize) -> ElasticParams {
+        ElasticParams {
+            autoscaler: AutoscalerParams {
+                min_replicas: 1,
+                max_replicas: max,
+                warmup_s: 5.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn overload_grows_the_pool_and_drains_the_queue_faster() {
+        let params = CloudParams::default();
+        let cap = params.capacity_mmacs_per_s;
+        let mut fixed = ReplicaPool::new(params, ElasticParams::default());
+        let mut pool = ReplicaPool::new(params, elastic(4));
+        for _ in 0..60 {
+            fixed.advance_epoch(20_000, 2.0 * cap, 1.0);
+            pool.advance_epoch(20_000, 2.0 * cap, 1.0);
+        }
+        assert!(pool.n_replicas() > 1, "sustained overload must scale up");
+        assert!(
+            pool.snapshot().queue_wait_s < fixed.snapshot().queue_wait_s,
+            "elastic wait {} must beat fixed wait {}",
+            pool.snapshot().queue_wait_s,
+            fixed.snapshot().queue_wait_s
+        );
+    }
+
+    #[test]
+    fn warming_replicas_serve_nothing_until_ready() {
+        let params = CloudParams::default();
+        let cap = params.capacity_mmacs_per_s;
+        let mut pool = ReplicaPool::new(params, elastic(2));
+        // Push until the pool provisions a second replica.
+        let mut epochs = 0;
+        while pool.n_replicas() == 1 && epochs < 50 {
+            pool.advance_epoch(20_000, 2.0 * cap, 1.0);
+            epochs += 1;
+        }
+        assert_eq!(pool.n_replicas(), 2, "scale-up never happened");
+        // During warm-up (5 s) only one replica is active.
+        assert_eq!(pool.n_active(), 1);
+        for _ in 0..5 {
+            pool.advance_epoch(20_000, 2.0 * cap, 1.0);
+        }
+        assert_eq!(pool.n_active(), 2, "replica must join after warm-up");
+    }
+
+    #[test]
+    fn idle_pool_scales_back_down_and_redistributes_backlog() {
+        let params = CloudParams::default();
+        let cap = params.capacity_mmacs_per_s;
+        let mut pool = ReplicaPool::new(params, elastic(4));
+        for _ in 0..40 {
+            pool.advance_epoch(20_000, 2.5 * cap, 1.0);
+        }
+        let peak = pool.n_replicas();
+        assert!(peak > 1);
+        for _ in 0..400 {
+            pool.advance_epoch(0, 0.0, 1.0);
+        }
+        assert_eq!(pool.n_replicas(), 1, "idle pool must retire extra replicas");
+        assert!(pool.snapshot().queue_wait_s < 1e-6, "queue drained");
+    }
+
+    #[test]
+    fn admission_flag_trips_above_the_bound_and_recovers() {
+        let params = CloudParams::default();
+        let cap = params.capacity_mmacs_per_s;
+        let mut pool = ReplicaPool::new(
+            params,
+            ElasticParams { admit_backlog_s: 2.0, ..ElasticParams::default() },
+        );
+        assert!(pool.admitting());
+        for _ in 0..10 {
+            pool.advance_epoch(20_000, 3.0 * cap, 1.0);
+        }
+        assert!(!pool.admitting(), "deep backlog must trip admission control");
+        for _ in 0..60 {
+            pool.advance_epoch(0, 0.0, 1.0);
+        }
+        assert!(pool.admitting(), "drained pool must admit again");
+    }
+
+    #[test]
+    fn adaptive_schedule_widens_the_batch_window_under_load() {
+        let params = CloudParams::default();
+        let cap = params.capacity_mmacs_per_s;
+        let mut pool = ReplicaPool::new(
+            params,
+            ElasticParams { batch: BatchSchedule::Adaptive, ..ElasticParams::default() },
+        );
+        let idle_wait = pool.snapshot().batch_wait_s;
+        for _ in 0..5 {
+            pool.advance_epoch(20_000, 2.0 * cap, 1.0);
+        }
+        assert!(
+            pool.snapshot().batch_wait_s > idle_wait,
+            "window must widen under load: {} vs {}",
+            pool.snapshot().batch_wait_s,
+            idle_wait
+        );
+        // And narrow again once the load is gone and the queue drains.
+        for _ in 0..200 {
+            pool.advance_epoch(0, 0.0, 1.0);
+        }
+        assert_eq!(pool.snapshot().batch_wait_s.to_bits(), idle_wait.to_bits());
+    }
+
+    #[test]
+    fn least_backlog_dispatch_balances_unequal_replicas() {
+        let params = CloudParams::default();
+        let cap = params.capacity_mmacs_per_s;
+        let mk = |dispatch| {
+            let mut e = elastic(2);
+            e.dispatch = dispatch;
+            e.autoscaler.min_replicas = 2;
+            ReplicaPool::new(params, e)
+        };
+        let mut pool = mk(DispatchKind::LeastBacklog);
+        assert_eq!(pool.n_active(), 2, "min_replicas pre-provisions the pool");
+        // Odd job counts leave a remainder every epoch; least-backlog
+        // must keep steering it to the lighter replica, so the pooled
+        // queue stays no worse than round-robin's.
+        let mut rr = mk(DispatchKind::RoundRobin);
+        for _ in 0..30 {
+            pool.advance_epoch(10_001, 2.2 * cap, 1.0);
+            rr.advance_epoch(10_001, 2.2 * cap, 1.0);
+        }
+        assert!(pool.snapshot().queue_wait_s <= rr.snapshot().queue_wait_s + 1e-9);
+    }
+
+    #[test]
+    fn pool_trajectory_is_deterministic() {
+        let run = || {
+            let params = CloudParams::default();
+            let cap = params.capacity_mmacs_per_s;
+            let mut pool = ReplicaPool::new(params, elastic(4));
+            let mut traj = Vec::new();
+            for &(jobs, macs) in &overload_epochs() {
+                pool.advance_epoch(jobs, 1.5 * macs / cap * cap, 1.0);
+                traj.push((pool.n_replicas(), pool.snapshot().queue_wait_s.to_bits()));
+            }
+            traj
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,204 @@
+//! TOML keys for the shared cloud tier and its elastic replica pool:
+//! the `[cloud]` section maps onto [`CloudParams`] (plus the elastic
+//! dispatch / admission / batch-schedule knobs of [`ElasticParams`]),
+//! and `[cloud.autoscaler]` onto [`crate::cloudscale::AutoscalerParams`]
+//! and its [`crate::cloudscale::ScalingRule`]. Both sections are
+//! optional; unspecified keys keep the neutral defaults, so a config
+//! file without them describes exactly the pre-elastic fixed cloud.
+//!
+//! ```toml
+//! [cloud]
+//! capacity_mmacs_per_s = 3.3e6
+//! batch_window_s = 0.010
+//! max_batch = 32
+//! single_stream_efficiency = 0.30
+//! max_backlog_s = 30.0
+//! dispatch = "rr"            # rr | least
+//! admit_backlog_s = 5.0      # omit for admission off
+//! batch_schedule = "static"  # static | adaptive
+//!
+//! [cloud.autoscaler]
+//! min_replicas = 1
+//! max_replicas = 4
+//! warmup_s = 20.0
+//! up_utilization = 0.75
+//! down_utilization = 0.30
+//! up_queue_wait_s = 1.0
+//! up_cooldown_s = 10.0
+//! down_cooldown_s = 30.0
+//! ```
+
+use super::toml::TomlDoc;
+use crate::cloudscale::{BatchSchedule, DispatchKind, ElasticParams};
+use crate::fleet::CloudParams;
+
+/// Build [`CloudParams`] from the `[cloud]` section (defaults when the
+/// section or a key is absent). Values are validated the same way the
+/// fleet CLI validates its flags.
+pub fn cloud_params_from_doc(doc: &TomlDoc) -> anyhow::Result<CloudParams> {
+    let mut p = CloudParams::default();
+    if let Some(cloud) = doc.get("cloud") {
+        if let Some(v) = cloud.get("capacity_mmacs_per_s").and_then(|v| v.as_f64()) {
+            p.capacity_mmacs_per_s = v;
+        }
+        if let Some(v) = cloud.get("batch_window_s").and_then(|v| v.as_f64()) {
+            p.batch_window_s = v;
+        }
+        if let Some(v) = cloud.get("max_batch").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v >= 1, "cloud.max_batch must be >= 1");
+            p.max_batch = v as usize;
+        }
+        if let Some(v) = cloud.get("single_stream_efficiency").and_then(|v| v.as_f64()) {
+            p.single_stream_efficiency = v;
+        }
+        if let Some(v) = cloud.get("max_backlog_s").and_then(|v| v.as_f64()) {
+            p.max_backlog_s = v;
+        }
+    }
+    anyhow::ensure!(p.capacity_mmacs_per_s > 0.0, "cloud.capacity_mmacs_per_s must be > 0");
+    anyhow::ensure!(p.batch_window_s > 0.0, "cloud.batch_window_s must be > 0");
+    anyhow::ensure!(
+        p.single_stream_efficiency > 0.0 && p.single_stream_efficiency <= 1.0,
+        "cloud.single_stream_efficiency out of (0,1]"
+    );
+    anyhow::ensure!(p.max_backlog_s > 0.0, "cloud.max_backlog_s must be > 0");
+    Ok(p)
+}
+
+/// Build [`ElasticParams`] from the elastic keys of `[cloud]` plus the
+/// `[cloud.autoscaler]` section. With neither present this returns the
+/// neutral default (one pinned replica, admission off, static batching).
+pub fn elastic_params_from_doc(doc: &TomlDoc) -> anyhow::Result<ElasticParams> {
+    let mut e = ElasticParams::default();
+    if let Some(cloud) = doc.get("cloud") {
+        if let Some(v) = cloud.get("dispatch").and_then(|v| v.as_str()) {
+            e.dispatch = DispatchKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown cloud.dispatch '{v}' (rr|least)"))?;
+        }
+        if let Some(v) = cloud.get("admit_backlog_s").and_then(|v| v.as_f64()) {
+            e.admit_backlog_s = v;
+        }
+        if let Some(v) = cloud.get("batch_schedule").and_then(|v| v.as_str()) {
+            e.batch = BatchSchedule::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown cloud.batch_schedule '{v}' (static|adaptive)")
+            })?;
+        }
+    }
+    if let Some(auto) = doc.get("cloud.autoscaler") {
+        let a = &mut e.autoscaler;
+        if let Some(v) = auto.get("min_replicas").and_then(|v| v.as_i64()) {
+            a.min_replicas = v.max(0) as usize;
+        }
+        if let Some(v) = auto.get("max_replicas").and_then(|v| v.as_i64()) {
+            a.max_replicas = v.max(0) as usize;
+        }
+        if let Some(v) = auto.get("warmup_s").and_then(|v| v.as_f64()) {
+            a.warmup_s = v;
+        }
+        if let Some(v) = auto.get("up_utilization").and_then(|v| v.as_f64()) {
+            a.rule.up_utilization = v;
+        }
+        if let Some(v) = auto.get("down_utilization").and_then(|v| v.as_f64()) {
+            a.rule.down_utilization = v;
+        }
+        if let Some(v) = auto.get("up_queue_wait_s").and_then(|v| v.as_f64()) {
+            a.rule.up_queue_wait_s = v;
+        }
+        if let Some(v) = auto.get("up_cooldown_s").and_then(|v| v.as_f64()) {
+            a.rule.up_cooldown_s = v;
+        }
+        if let Some(v) = auto.get("down_cooldown_s").and_then(|v| v.as_f64()) {
+            a.rule.down_cooldown_s = v;
+        }
+    }
+    e.validate().map_err(|m| anyhow::anyhow!("elastic cloud: {m}"))?;
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configsys::toml::parse_toml;
+
+    #[test]
+    fn absent_sections_yield_neutral_defaults() {
+        let doc = parse_toml("seed = 1\n").unwrap();
+        let cloud = cloud_params_from_doc(&doc).unwrap();
+        assert_eq!(cloud.max_batch, CloudParams::default().max_batch);
+        let elastic = elastic_params_from_doc(&doc).unwrap();
+        assert!(elastic.is_neutral());
+    }
+
+    #[test]
+    fn full_cloud_sections_round_trip() {
+        let doc = parse_toml(
+            r#"
+[cloud]
+capacity_mmacs_per_s = 5000.0
+batch_window_s = 0.02
+max_batch = 16
+single_stream_efficiency = 0.4
+max_backlog_s = 10.0
+dispatch = "least"
+admit_backlog_s = 5.0
+batch_schedule = "adaptive"
+
+[cloud.autoscaler]
+min_replicas = 2
+max_replicas = 6
+warmup_s = 8.0
+up_utilization = 0.8
+down_utilization = 0.2
+up_queue_wait_s = 0.5
+up_cooldown_s = 4.0
+down_cooldown_s = 12.0
+"#,
+        )
+        .unwrap();
+        let cloud = cloud_params_from_doc(&doc).unwrap();
+        assert_eq!(cloud.capacity_mmacs_per_s, 5000.0);
+        assert_eq!(cloud.batch_window_s, 0.02);
+        assert_eq!(cloud.max_batch, 16);
+        assert_eq!(cloud.single_stream_efficiency, 0.4);
+        assert_eq!(cloud.max_backlog_s, 10.0);
+        let e = elastic_params_from_doc(&doc).unwrap();
+        assert!(!e.is_neutral());
+        assert_eq!(e.dispatch, DispatchKind::LeastBacklog);
+        assert_eq!(e.admit_backlog_s, 5.0);
+        assert_eq!(e.batch, BatchSchedule::Adaptive);
+        assert_eq!(e.autoscaler.min_replicas, 2);
+        assert_eq!(e.autoscaler.max_replicas, 6);
+        assert_eq!(e.autoscaler.warmup_s, 8.0);
+        assert_eq!(e.autoscaler.rule.up_utilization, 0.8);
+        assert_eq!(e.autoscaler.rule.down_utilization, 0.2);
+        assert_eq!(e.autoscaler.rule.up_queue_wait_s, 0.5);
+        assert_eq!(e.autoscaler.rule.up_cooldown_s, 4.0);
+        assert_eq!(e.autoscaler.rule.down_cooldown_s, 12.0);
+    }
+
+    #[test]
+    fn invalid_cloud_values_are_rejected() {
+        for text in [
+            "[cloud]\ncapacity_mmacs_per_s = 0.0\n",
+            "[cloud]\nbatch_window_s = -1.0\n",
+            "[cloud]\nmax_batch = 0\n",
+            "[cloud]\nsingle_stream_efficiency = 1.5\n",
+            "[cloud]\nmax_backlog_s = 0.0\n",
+        ] {
+            let doc = parse_toml(text).unwrap();
+            assert!(cloud_params_from_doc(&doc).is_err(), "{text} must be rejected");
+        }
+        for text in [
+            "[cloud]\ndispatch = \"random\"\n",
+            "[cloud]\nbatch_schedule = \"wide\"\n",
+            "[cloud]\nadmit_backlog_s = 0.0\n",
+            "[cloud.autoscaler]\nmin_replicas = 0\n",
+            "[cloud.autoscaler]\nmin_replicas = 4\nmax_replicas = 2\n",
+            "[cloud.autoscaler]\nup_utilization = 0.2\ndown_utilization = 0.5\n",
+            "[cloud.autoscaler]\nwarmup_s = -2.0\n",
+        ] {
+            let doc = parse_toml(text).unwrap();
+            assert!(elastic_params_from_doc(&doc).is_err(), "{text} must be rejected");
+        }
+    }
+}

@@ -2,8 +2,10 @@
 //! crate cache has no serde/toml) plus typed run configuration with
 //! validation and built-in presets for the paper's environments (Table 4).
 
+pub mod cloudcfg;
 pub mod runconfig;
 pub mod toml;
 
+pub use cloudcfg::{cloud_params_from_doc, elastic_params_from_doc};
 pub use runconfig::{EnvKind, RunConfig, Scenario};
 pub use toml::{parse_toml, TomlValue};

@@ -14,8 +14,11 @@ use crate::coordinator::envs::Environment;
 use crate::coordinator::metrics::EpisodeMetrics;
 use crate::exec::latency::RunContext;
 use crate::exec::outcome::ExecOutcome;
+use crate::fleet::{CloudModel, CloudParams};
 use crate::nn::zoo::{by_name, NnDesc, Workload};
-use crate::obs::{sampled, Collector, ObsConfig, Telemetry, TraceEvent, TraceLog, WindowHists};
+use crate::obs::{
+    sampled, CloudEpochSample, Collector, ObsConfig, Telemetry, TraceEvent, TraceLog, WindowHists,
+};
 use crate::policy::{CloudCtx, DecisionCtx, Feedback, ScalingPolicy};
 use crate::runtime::Engine;
 use crate::types::Action;
@@ -63,6 +66,20 @@ pub struct Server<'a, P: ScalingPolicy> {
     /// here, so one collector bundle covers the whole episode; in serve
     /// traces the sampled `id` is the *request* id.
     telemetry: Option<ServeObs>,
+    /// Optional congestion-priced cloud (None = the paper's unloaded
+    /// round-trip pricing, bit-identical to the pre-cloud server).
+    cloud: Option<ServeCloud>,
+}
+
+/// Single-tenant congestion model for the serving loop: the device's own
+/// offload stream drives a [`CloudModel`], folded on fixed virtual-clock
+/// epoch boundaries exactly like the fleet's epoch fold.
+struct ServeCloud {
+    model: CloudModel,
+    epoch_s: f64,
+    next_epoch_t: f64,
+    jobs: u64,
+    macs_m: f64,
 }
 
 /// Serve-side telemetry state: the collector plus the per-window latency
@@ -85,7 +102,24 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
             rng: Pcg64::with_stream(seed, 1001),
             engine: None,
             telemetry: None,
+            cloud: None,
         }
+    }
+
+    /// Attach a congestion-priced cloud: cloud offloads then pay the
+    /// queue/batch wait and contention slowdown of a [`CloudModel`] fed
+    /// by this device's own offload stream (folded once per virtual
+    /// second). Without this the server keeps the paper's unloaded
+    /// pricing — the default is bit-identical to the pre-cloud loop.
+    pub fn with_cloud(mut self, params: CloudParams) -> Server<'a, P> {
+        self.cloud = Some(ServeCloud {
+            model: CloudModel::new(params),
+            epoch_s: 1.0,
+            next_epoch_t: 1.0,
+            jobs: 0,
+            macs_m: 0.0,
+        });
+        self
     }
 
     /// Attach a PJRT engine: local executions then run the real artifact
@@ -160,7 +194,20 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
         let qos = self.qos_for(nn);
 
         // ② decide: the policy sees the noisy sensor reading, the action
-        // catalogue and a shadow-simulator handle (Opt-style what-ifs).
+        // catalogue, a shadow-simulator handle (Opt-style what-ifs) and
+        // the cloud congestion view (unloaded unless a cloud model is
+        // attached via `with_cloud`).
+        let cloud_ctx = match &self.cloud {
+            Some(c) => {
+                let snap = c.model.snapshot();
+                CloudCtx {
+                    slowdown: snap.slowdown,
+                    queue_wait_s: snap.wait_s(),
+                    admitting: true,
+                }
+            }
+            None => CloudCtx::default(),
+        };
         let decision = {
             let ctx = DecisionCtx {
                 obs: &obs,
@@ -170,11 +217,12 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
                 accuracy_target: self.cfg.run.accuracy_target,
                 catalogue: &self.catalogue,
                 sim: &self.env.sim,
-                cloud: CloudCtx::default(),
+                cloud: cloud_ctx,
             };
             self.policy.decide(&ctx)
         };
         let action = decision.action;
+        let is_cloud = action.site == crate::types::Site::Cloud;
 
         // ③ execute (optionally grounding compute in a real PJRT run).
         // The physics see the TRUE interference; the policy saw the noisy
@@ -182,8 +230,8 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
         let mut ctx = RunContext {
             interference: true_inter,
             thermal_cap: 1.0, // simulator applies its own thermal state
-            compute_factor: 1.0,
-            remote_queue_s: 0.0,
+            compute_factor: if is_cloud { cloud_ctx.slowdown } else { 1.0 },
+            remote_queue_s: if is_cloud { cloud_ctx.queue_wait_s } else { 0.0 },
         };
         if let Some(engine) = self.engine.as_deref_mut() {
             if action.site == crate::types::Site::Local {
@@ -246,7 +294,7 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
                         nn: nn.name,
                         action,
                         catalogue_idx: decision.catalogue_idx as u32,
-                        cloud_wait_s: 0.0,
+                        cloud_wait_s: cloud_ctx.queue_wait_s,
                     });
                     if m.remote_failed {
                         ring.push(TraceEvent::RemoteTimeout {
@@ -295,6 +343,41 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
             self.env.sim.thermal.advance(0.2, idle);
             self.clock.advance(idle);
             outcome.t_s = self.clock.now();
+        }
+
+        // Fold the offload stream into the attached cloud model once the
+        // clock crosses an epoch boundary (idle epochs fold too, so a
+        // built-up backlog drains at the same rate it would in the fleet).
+        if let Some(c) = self.cloud.as_mut() {
+            if is_cloud && !m.remote_failed {
+                c.jobs += 1;
+                c.macs_m += nn.macs_m;
+            }
+            let now = self.clock.now();
+            while now >= c.next_epoch_t {
+                let t_epoch = c.next_epoch_t - c.epoch_s;
+                let (jobs, macs_m) = (c.jobs, c.macs_m);
+                c.model.advance_epoch(jobs, macs_m, c.epoch_s);
+                c.jobs = 0;
+                c.macs_m = 0.0;
+                c.next_epoch_t += c.epoch_s;
+                if let Some(tel) = self.telemetry.as_mut() {
+                    if let Some(tl) = tel.col.timeline.as_mut() {
+                        let snap = c.model.snapshot();
+                        tl.record_cloud(&CloudEpochSample {
+                            t_s: t_epoch,
+                            jobs,
+                            macs_m,
+                            backlog_mmacs: c.model.backlog_mmacs(),
+                            queue_wait_s: snap.queue_wait_s,
+                            load: snap.load,
+                            slowdown: snap.slowdown,
+                            replicas: 1,
+                            rejected: 0,
+                        });
+                    }
+                }
+            }
         }
         outcome
     }

@@ -19,6 +19,11 @@ pub const DISCONNECT_TIMEOUT_S: f64 = 1.0;
 /// re-transmitting (the rest idles between backoffs).
 pub const DISCONNECT_RETRY_DUTY: f64 = 0.3;
 
+/// Payload of the admission-control exchange (KB each way): the request
+/// header goes out, the reject notice comes back — the inference input
+/// never leaves the device.
+pub const REJECT_CONTROL_KB: f64 = 1.0;
+
 /// The three Table-1 layer classes the paper found most correlated with
 /// energy/latency (§4.1 ρ² test).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -311,6 +316,58 @@ impl Simulator {
         }
     }
 
+    /// Fast-fail outcome of a remote request the backend refused at
+    /// admission (elastic cloud above its backlog bound). Unlike a
+    /// dead-zone timeout the link is usually up: the device pays one
+    /// small control exchange ([`REJECT_CONTROL_KB`] each way) instead
+    /// of the full [`DISCONNECT_TIMEOUT_S`] window, so rejection is an
+    /// order of magnitude cheaper than a timeout — the signal a policy
+    /// needs to retreat without being punished like a disconnection.
+    /// If the link *is* dead the request dies exactly like any other
+    /// remote attempt ([`Simulator::disconnect_outcome`]).
+    ///
+    /// Consumes exactly one truth-noise draw and advances thermal state,
+    /// mirroring [`Simulator::run`], so an epoch flipping between
+    /// admitting and rejecting never desynchronizes a device's RNG or
+    /// thermal stream relative to the admitted path.
+    pub fn run_rejected(&mut self, action: Action) -> Measurement {
+        debug_assert!(action.site != Site::Local, "only remote requests can be rejected");
+        let link = if action.site == Site::Cloud { &self.wlan } else { &self.p2p };
+        let (latency_s, energy_est, power_for_thermal) = if !link.rssi.is_connected() {
+            self.disconnect_outcome(link)
+        } else {
+            let rt = link.round_trip(REJECT_CONTROL_KB, REJECT_CONTROL_KB);
+            let latency = rt.tx_s + rt.rx_s;
+            let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
+            let energy = power::network_energy_j(&NetTransaction {
+                tx_s: rt.tx_s,
+                tx_power_w: rt.tx_power_w,
+                rx_s: rt.rx_s,
+                rx_power_w: rt.rx_power_w,
+                idle_power_w: idle,
+                total_latency_s: latency,
+            }) + rt.tail_energy_j;
+            (latency, energy, rt.tx_power_w * DISCONNECT_RETRY_DUTY)
+        };
+
+        let noise = 1.0 + self.rng.normal(0.0, self.truth_noise).clamp(-0.25, 0.25);
+        let energy_true = energy_est * noise;
+
+        if self.local.is_mobile {
+            self.thermal.advance(power_for_thermal, latency_s);
+        } else {
+            self.thermal.advance(0.2, latency_s);
+        }
+
+        Measurement {
+            latency_s,
+            energy_est_j: energy_est,
+            energy_true_j: energy_true,
+            accuracy: 0.0,
+            remote_failed: true,
+        }
+    }
+
     /// (latency, device energy, thermal power) of a timed-out attempt over
     /// a dead `link` — shared by [`Simulator::run`] and the split-execution
     /// path so the disconnection contract cannot diverge between them.
@@ -589,6 +646,59 @@ mod tests {
         // Local execution is unaffected by connectivity.
         let m3 = s.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &RunContext::default());
         assert!(!m3.remote_failed);
+    }
+
+    #[test]
+    fn rejection_is_cheaper_than_a_timeout_and_flags_failure() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let m = s.run_rejected(Action::cloud());
+        assert!(m.remote_failed, "a rejected offload is a failed offload");
+        assert_eq!(m.accuracy, 0.0, "no result was produced");
+        assert!(m.latency_s > 0.0 && m.energy_est_j > 0.0, "the control exchange is charged");
+        assert!(
+            m.latency_s < 0.2 * DISCONNECT_TIMEOUT_S,
+            "fast-fail ({}) must be far quicker than a timeout",
+            m.latency_s
+        );
+
+        // A timeout on the same link costs much more energy.
+        let (t_lat, t_energy, _) = s.disconnect_outcome(&s.wlan);
+        assert!(m.energy_est_j < 0.5 * t_energy, "reject {} vs timeout {t_energy}", m.energy_est_j);
+        assert!(m.latency_s < t_lat);
+    }
+
+    #[test]
+    fn rejection_over_a_dead_link_matches_the_disconnect_contract() {
+        let mut s = sim(DeviceId::Mi8Pro);
+        let dead = crate::net::SignalModel::Markov(crate::net::MarkovChannel::cycle(vec![
+            crate::net::Regime::dead_zone("tunnel", 10.0),
+        ]));
+        s.wlan = Link::new(LinkKind::Wlan, RssiProcess::from_model(dead));
+        let (lat, energy, _) = s.disconnect_outcome(&s.wlan);
+        let m = s.run_rejected(Action::cloud());
+        assert_eq!(m.latency_s, lat, "dead link: rejection degenerates to the timeout");
+        assert_eq!(m.energy_est_j.to_bits(), energy.to_bits());
+        assert!(m.remote_failed);
+    }
+
+    #[test]
+    fn rejection_consumes_exactly_one_noise_draw() {
+        // Two sims take different first steps (admitted vs rejected cloud
+        // request); if both consume one noise draw, the *second* request's
+        // truth-noise ratio is bit-identical across them.
+        let nn = by_name("mobilenet_v1").unwrap();
+        let ctx = RunContext::default();
+        let mut a = sim(DeviceId::Mi8Pro);
+        let mut b = sim(DeviceId::Mi8Pro);
+        a.run(nn, Action::cloud(), &ctx);
+        b.run_rejected(Action::cloud());
+        a.thermal.reset();
+        b.thermal.reset();
+        let ma = a.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
+        let mb = b.run(nn, Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
+        let ra = ma.energy_true_j / ma.energy_est_j;
+        let rb = mb.energy_true_j / mb.energy_est_j;
+        assert_eq!(ra.to_bits(), rb.to_bits(), "RNG streams must stay in lockstep");
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Fixed vs elastic cloud under a flash crowd (beyond the paper): the
+//! same bursty fleet against (a) the fixed single-replica cloud and (b)
+//! the elastic replica pool with the autoscaler, admission control and
+//! the adaptive batch schedule on. The summary table shows what
+//! elasticity buys end to end; the trajectory table shows *how* — the
+//! scale-up lag (replicas stay at the floor until the estimators cross
+//! the threshold and the warm-up elapses) followed by a visibly lower
+//! steady-state queue wait once the added capacity lands.
+
+use crate::cloudscale::{AutoscalerParams, BatchSchedule, ElasticParams, ScalingRule};
+use crate::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig, FleetOutcome};
+use crate::obs::ObsConfig;
+use crate::util::report::{f, pct, Table};
+
+/// The flash-crowd fleet both variants face: bursty arrivals at 2 Hz per
+/// device into a cloud with 1/8 the default capacity (the same pressure
+/// cooker as `figure timeline`), timeline windows of 4 s.
+fn config(seed: u64, quick: bool, policy: &str, elastic: ElasticParams) -> FleetConfig {
+    let (devices, requests) = if quick { (96, 20) } else { (384, 40) };
+    let cloud = CloudParams::default();
+    FleetConfig {
+        devices,
+        requests_per_device: requests,
+        shards: 4,
+        seed,
+        policy: policy.to_string(),
+        arrival: ArrivalKind::Bursty,
+        rate_hz: 2.0,
+        cloud: CloudParams {
+            capacity_mmacs_per_s: cloud.capacity_mmacs_per_s / 8.0,
+            ..cloud
+        },
+        elastic,
+        obs: ObsConfig { timeline: true, window_s: 4.0, ..ObsConfig::default() },
+        ..Default::default()
+    }
+}
+
+/// The elastic variant: up to 4 replicas behind a short warm-up, with
+/// admission control and the adaptive batch schedule engaged. Thresholds
+/// are tightened relative to the defaults so the short experiment
+/// episode exercises both directions of the scaling loop.
+fn elastic_params() -> ElasticParams {
+    ElasticParams {
+        autoscaler: AutoscalerParams {
+            min_replicas: 1,
+            max_replicas: 4,
+            warmup_s: 8.0,
+            rule: ScalingRule {
+                up_cooldown_s: 4.0,
+                down_cooldown_s: 16.0,
+                ..ScalingRule::default()
+            },
+        },
+        admit_backlog_s: 20.0,
+        batch: BatchSchedule::Adaptive,
+        ..ElasticParams::default()
+    }
+}
+
+fn peak_replicas(out: &FleetOutcome) -> u32 {
+    out.cloud_timeline.iter().map(|p| p.replicas).max().unwrap_or(1)
+}
+
+fn peak_wait_s(out: &FleetOutcome) -> f64 {
+    out.cloud_timeline.iter().map(|p| p.queue_wait_s).fold(0.0f64, f64::max)
+}
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    let mut summary = Table::new(
+        "Fixed vs elastic cloud under a bursty flash crowd (1/8-capacity base replica)",
+        &[
+            "policy",
+            "cloud",
+            "PPW_inf_per_J",
+            "p95_lat_ms",
+            "qos_miss",
+            "net_fail",
+            "rejected",
+            "peak_wait_ms",
+            "peak_replicas",
+        ],
+    );
+    let mut trajectories: Vec<(FleetOutcome, FleetOutcome)> = Vec::new();
+    for policy in ["cloud", "autoscale"] {
+        let fixed = run_fleet(&config(seed, quick, policy, ElasticParams::default()))
+            .expect("fixed elastic config is valid");
+        let elastic = run_fleet(&config(seed, quick, policy, elastic_params()))
+            .expect("elastic config is valid");
+        for (label, out) in [("fixed", &fixed), ("elastic", &elastic)] {
+            let m = &out.metrics;
+            let (_p50, p95, _p99) = m.latency_p50_p95_p99_s();
+            summary.row(vec![
+                policy.to_string(),
+                label.to_string(),
+                f(m.ppw(), 3),
+                f(p95 * 1e3, 2),
+                pct(m.qos_violation_ratio()),
+                pct(m.remote_failure_ratio()),
+                m.remote_rejections().to_string(),
+                f(peak_wait_s(out) * 1e3, 1),
+                peak_replicas(out).to_string(),
+            ]);
+        }
+        trajectories.push((fixed, elastic));
+    }
+
+    // Per-window trajectory for the always-offload policy — the cleanest
+    // view of the scale-up lag and the post-scale-up wait collapse.
+    let (fixed, elastic) = &trajectories[0];
+    let take = |out: &FleetOutcome| {
+        out.telemetry
+            .as_ref()
+            .and_then(|t| t.timeline.as_ref())
+            .expect("timeline collection was requested")
+            .clone()
+    };
+    let (tl_fixed, tl_elastic) = (take(fixed), take(elastic));
+    let mut traj = Table::new(
+        "Flash-crowd trajectory, policy=cloud: fixed vs elastic per telemetry window",
+        &[
+            "t0_s",
+            "requests",
+            "fixed_wait_ms",
+            "elastic_wait_ms",
+            "replicas",
+            "rejected",
+            "cloud_share",
+        ],
+    );
+    let n = tl_fixed.n_windows().max(tl_elastic.n_windows());
+    for i in 0..n {
+        let fw = tl_fixed.windows().get(i);
+        let ew = tl_elastic.windows().get(i);
+        traj.row(vec![
+            f(i as f64 * tl_elastic.window_s(), 0),
+            ew.map(|w| w.requests).unwrap_or(0).to_string(),
+            f(fw.map(|w| w.cloud_queue_wait_s).unwrap_or(0.0) * 1e3, 1),
+            f(ew.map(|w| w.cloud_queue_wait_s).unwrap_or(0.0) * 1e3, 1),
+            ew.map(|w| w.cloud_replicas).unwrap_or(0).to_string(),
+            ew.map(|w| w.admission_rejects).unwrap_or(0).to_string(),
+            pct(ew.map(|w| w.cloud_share()).unwrap_or(0.0)),
+        ]);
+    }
+    vec![summary, traj]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elastic_scales_up_and_cuts_the_steady_state_wait() {
+        let fixed = run_fleet(&config(11, true, "cloud", ElasticParams::default())).unwrap();
+        let elastic = run_fleet(&config(11, true, "cloud", elastic_params())).unwrap();
+        assert_eq!(peak_replicas(&fixed), 1, "the fixed cloud never scales");
+        assert!(peak_replicas(&elastic) > 1, "the flash crowd must trigger a scale-up");
+        // Scale-up lag: the pool starts at the floor, so the first epoch
+        // of the trajectory still runs a single replica.
+        assert_eq!(elastic.cloud_timeline.first().map(|p| p.replicas), Some(1));
+        // Once scaled, the added capacity must beat the fixed backend's
+        // terminal queue wait (the acceptance shape of `figure elastic`).
+        let last = |out: &FleetOutcome| out.cloud_timeline.last().map(|p| p.queue_wait_s).unwrap();
+        assert!(
+            last(&elastic) < last(&fixed),
+            "elastic terminal wait {} must be below fixed {}",
+            last(&elastic),
+            last(&fixed)
+        );
+    }
+
+    #[test]
+    fn tables_render_summary_and_trajectory() {
+        let t = run(11, true);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].rows.len(), 4, "two policies x fixed/elastic");
+        assert!(!t[1].rows.is_empty());
+        // Fixed rows report exactly one replica and no rejections.
+        for row in t[0].rows.iter().step_by(2) {
+            assert_eq!(row[8], "1");
+            assert_eq!(row[6], "0");
+        }
+    }
+}

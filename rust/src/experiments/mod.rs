@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod common;
+pub mod elastic;
 pub mod fig10_streaming;
 pub mod fig11_dynamic;
 pub mod fig12_accuracy;
@@ -50,6 +51,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "tab4", about: "Execution environments (Table 4)", run: tables::run_tab4 },
         Experiment { id: "scen", about: "Scenario sweep: every registry key (Markov/trace/dead zones)", run: scenarios::run },
         Experiment { id: "timeline", about: "Fleet trajectory per telemetry window (flash crowd vs small cloud)", run: timeline::run },
+        Experiment { id: "elastic", about: "Fixed vs elastic cloud under a flash crowd (autoscaler + admission)", run: elastic::run },
         Experiment { id: "ablation_hparams", about: "Hyperparameter sensitivity (§5.3)", run: ablations::run_hparams },
         Experiment { id: "ablation_bins", about: "DBSCAN bins vs coarse binning", run: ablations::run_bins },
         Experiment { id: "ablation_split", about: "Static split-computing vs AutoScale (§7)", run: ablations::run_split },

@@ -114,6 +114,36 @@ impl CloudModel {
         self.backlog_mmacs
     }
 
+    /// Change the batching window mid-episode (the elastic cloud's
+    /// load-dependent schedule does this between epochs). The frozen
+    /// snapshot's `batch_wait_s` is refreshed in the same step: it was
+    /// derived from the old window, and devices read the snapshot for a
+    /// whole epoch before `advance_epoch` recomputes it — leaving it
+    /// stale would price requests against a window that no longer
+    /// exists.
+    pub fn set_batch_window(&mut self, window_s: f64) {
+        assert!(window_s > 0.0);
+        self.params.batch_window_s = window_s;
+        self.snapshot.batch_wait_s = 0.5 * window_s;
+    }
+
+    /// Drain this replica's queue for redistribution at scale-down:
+    /// returns `(backlog_mmacs, backlog_jobs)` and leaves it empty.
+    pub fn take_backlog(&mut self) -> (f64, f64) {
+        let out = (self.backlog_mmacs, self.backlog_jobs);
+        self.backlog_mmacs = 0.0;
+        self.backlog_jobs = 0.0;
+        out
+    }
+
+    /// Accept queue state handed over from a retiring replica. The
+    /// snapshot reflects it after the next `advance_epoch` (the fluid
+    /// model's one-epoch reporting granularity).
+    pub fn absorb_backlog(&mut self, macs_m: f64, jobs: f64) {
+        self.backlog_mmacs += macs_m;
+        self.backlog_jobs += jobs;
+    }
+
     /// Batch-size-dependent efficiency in (0, 1]: rises linearly from the
     /// single-stream floor to 1.0 at `max_batch`.
     fn efficiency(&self, batch: f64) -> f64 {
@@ -257,6 +287,41 @@ mod tests {
             dense.backlog_mmacs(),
             sparse.backlog_mmacs()
         );
+    }
+
+    #[test]
+    fn snapshot_stays_consistent_across_a_window_change() {
+        let mut c = CloudModel::new(CloudParams::default());
+        c.advance_epoch(1000, 0.5 * CloudParams::default().capacity_mmacs_per_s, 1.0);
+        let before = c.snapshot();
+        assert!((before.batch_wait_s - 0.005).abs() < 1e-12);
+        // Widen the window mid-episode: the frozen snapshot must track
+        // it immediately — devices price the NEXT epoch's batching off
+        // this snapshot, not off the stale initialization value.
+        c.set_batch_window(0.040);
+        let after = c.snapshot();
+        assert!((after.batch_wait_s - 0.020).abs() < 1e-12, "batch wait follows the new window");
+        assert_eq!(after.queue_wait_s.to_bits(), before.queue_wait_s.to_bits());
+        assert_eq!(after.load.to_bits(), before.load.to_bits());
+        assert_eq!(after.slowdown.to_bits(), before.slowdown.to_bits());
+        assert!((after.wait_s() - after.queue_wait_s - 0.020).abs() < 1e-12);
+        // And the next epoch keeps the new half-window, no snap-back.
+        c.advance_epoch(1000, 0.5 * CloudParams::default().capacity_mmacs_per_s, 1.0);
+        assert!((c.snapshot().batch_wait_s - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backlog_handover_conserves_queue_state() {
+        let mut a = CloudModel::new(CloudParams::default());
+        let mut b = CloudModel::new(CloudParams::default());
+        a.advance_epoch(10_000, 2.0 * CloudParams::default().capacity_mmacs_per_s, 1.0);
+        let before = a.backlog_mmacs();
+        assert!(before > 0.0);
+        let (macs, jobs) = a.take_backlog();
+        assert_eq!(a.backlog_mmacs(), 0.0);
+        assert!(jobs > 0.0);
+        b.absorb_backlog(macs, jobs);
+        assert_eq!(b.backlog_mmacs().to_bits(), before.to_bits());
     }
 
     #[test]

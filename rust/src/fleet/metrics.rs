@@ -39,6 +39,10 @@ pub struct FleetRecord {
     pub accuracy_target: f64,
     /// The remote attempt timed out over a disconnected link.
     pub remote_failed: bool,
+    /// The cloud refused the request at admission (elastic admission
+    /// control) — a fast-fail, distinct from a link timeout. Rejected
+    /// requests also carry `remote_failed: true` (no inference ran).
+    pub remote_rejected: bool,
 }
 
 /// How a [`FleetMetrics`] stores latencies for percentile queries.
@@ -69,6 +73,7 @@ pub struct FleetMetrics {
     qos_violations: usize,
     accuracy_violations: usize,
     remote_failures: usize,
+    remote_rejections: usize,
     selections: SelectionStats,
 }
 
@@ -113,6 +118,9 @@ impl FleetMetrics {
         if r.remote_failed {
             self.remote_failures += 1;
         }
+        if r.remote_rejected {
+            self.remote_rejections += 1;
+        }
         self.selections.add(r.action);
     }
 
@@ -152,6 +160,7 @@ impl FleetMetrics {
         self.qos_violations += other.qos_violations;
         self.accuracy_violations += other.accuracy_violations;
         self.remote_failures += other.remote_failures;
+        self.remote_rejections += other.remote_rejections;
         self.selections.merge(&other.selections);
     }
 
@@ -169,6 +178,7 @@ impl FleetMetrics {
         self.qos_violations += dev.qos_violations as usize;
         self.accuracy_violations += dev.accuracy_violations as usize;
         self.remote_failures += dev.remote_failures as usize;
+        self.remote_rejections += dev.remote_rejections as usize;
         self.selections.add_bucket_counts(&dev.selections);
     }
 
@@ -262,6 +272,21 @@ impl FleetMetrics {
         }
     }
 
+    /// Requests the cloud refused at admission (elastic admission
+    /// control). A subset of `remote_failures`.
+    pub fn remote_rejections(&self) -> usize {
+        self.remote_rejections
+    }
+
+    /// Fraction of requests fast-failed by cloud admission control.
+    pub fn remote_rejection_ratio(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.remote_rejections as f64 / self.n() as f64
+        }
+    }
+
     pub fn selections(&self) -> &SelectionStats {
         &self.selections
     }
@@ -287,6 +312,7 @@ impl FleetMetrics {
         fold(self.qos_violations as u64);
         fold(self.accuracy_violations as u64);
         fold(self.remote_failures as u64);
+        fold(self.remote_rejections as u64);
         fold(self.total_energy_j.to_bits());
         fold(self.lat_sum.to_bits());
         for bucket in SelectionStats::BUCKETS {
@@ -320,6 +346,7 @@ pub struct DeviceMetrics {
     qos_violations: u32,
     accuracy_violations: u32,
     remote_failures: u32,
+    remote_rejections: u32,
     lat_sum: f64,
     energy_j: f64,
     selections: [u32; SelectionStats::BUCKETS.len()],
@@ -363,6 +390,9 @@ impl DeviceMetrics {
         if r.remote_failed {
             self.remote_failures += 1;
         }
+        if r.remote_rejected {
+            self.remote_rejections += 1;
+        }
         self.selections[SelectionStats::bucket_index(r.action)] += 1;
         if self.record_samples {
             self.samples.push(r.latency_s);
@@ -386,6 +416,11 @@ pub struct CloudTimelinePoint {
     pub backlog_mmacs: f64,
     pub queue_wait_s: f64,
     pub load: f64,
+    /// Provisioned replicas at the epoch boundary (1 for the fixed
+    /// cloud; the elastic pool's trajectory otherwise).
+    pub replicas: u32,
+    /// Offloads fast-failed by admission control during the epoch.
+    pub rejected: u64,
 }
 
 /// Everything a fleet run returns.
@@ -417,7 +452,37 @@ mod tests {
             accuracy: 0.7,
             accuracy_target: 0.5,
             remote_failed: false,
+            remote_rejected: false,
         }
+    }
+
+    #[test]
+    fn rejections_count_separately_from_failures() {
+        let mut m = FleetMetrics::default();
+        let mut r = record(Action::cloud(), 0.02, 0.01);
+        r.remote_failed = true;
+        m.push(&r); // plain timeout
+        r.remote_rejected = true;
+        m.push(&r); // admission reject
+        assert_eq!(m.remote_rejections(), 1);
+        assert!((m.remote_rejection_ratio() - 0.5).abs() < 1e-12);
+        assert!((m.remote_failure_ratio() - 1.0).abs() < 1e-12);
+        // the fingerprint distinguishes a reject from a bare timeout
+        let mut only_failures = FleetMetrics::default();
+        let mut f = record(Action::cloud(), 0.02, 0.01);
+        f.remote_failed = true;
+        only_failures.push(&f);
+        only_failures.push(&f);
+        assert_ne!(m.fingerprint(), only_failures.fingerprint());
+        // ...and both merge paths carry the counter.
+        let mut via_merge = FleetMetrics::default();
+        via_merge.merge(&m);
+        assert_eq!(via_merge.remote_rejections(), 1);
+        let mut d = DeviceMetrics::streaming();
+        d.push(&r);
+        let mut via_device = FleetMetrics::default();
+        via_device.merge_device(&d);
+        assert_eq!(via_device.remote_rejections(), 1);
     }
 
     #[test]

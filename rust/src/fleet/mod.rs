@@ -17,7 +17,8 @@
 //! * [`arrivals`] — per-device request processes: Poisson, diurnal
 //!   (thinned nonhomogeneous Poisson), bursty (ON/OFF MMPP);
 //! * [`cloud`] — the shared backend: backlog queue, batching window,
-//!   load-dependent service-time inflation;
+//!   load-dependent service-time inflation (generalized to an elastic
+//!   replica pool by [`crate::cloudscale`]);
 //! * [`sim`] — the sharded driver: epoch-frozen cloud snapshots make
 //!   device execution embarrassingly parallel within an epoch; workers
 //!   steal contiguous device blocks off an atomic counter while

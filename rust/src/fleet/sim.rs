@@ -4,8 +4,10 @@
 //! ## Execution model
 //!
 //! Virtual time is cut into fixed **epochs**. At each epoch boundary the
-//! shared [`CloudModel`] publishes a frozen [`CloudSnapshot`]; within the
-//! epoch every device evolves independently against that snapshot —
+//! shared cloud — a [`ReplicaPool`] of `CloudModel` replicas, one
+//! pinned replica by default — publishes a frozen [`PoolView`] (pooled
+//! congestion snapshot + admission decision + replica count); within the
+//! epoch every device evolves independently against that view —
 //! arrivals fire, policies pick targets, the per-request physics run on
 //! the device's own [`Environment`] (the same `net`/`device`/`exec`
 //! models the single-device coordinator uses). Cloud offloads are tallied
@@ -76,6 +78,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::agent::reward::{reward, RewardParams};
 use crate::agent::state::State;
+use crate::cloudscale::{ElasticParams, PoolView, ReplicaPool};
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
 use crate::coordinator::envs::Environment;
 use crate::coordinator::serve::qos_for;
@@ -95,7 +98,7 @@ use crate::util::rng::Pcg64;
 use crate::util::stats::LogHistogram;
 
 use super::arrivals::ArrivalProcess;
-use super::cloud::{CloudModel, CloudParams, CloudSnapshot};
+use super::cloud::CloudParams;
 use super::events::CalendarQueue;
 use super::metrics::{CloudTimelinePoint, DeviceMetrics, FleetMetrics, FleetOutcome, FleetRecord};
 
@@ -198,6 +201,11 @@ pub struct FleetConfig {
     /// Cloud-state refresh interval (virtual seconds).
     pub epoch_s: f64,
     pub cloud: CloudParams,
+    /// Elastic-cloud knobs (replica autoscaler, admission control, batch
+    /// schedule — see [`crate::cloudscale`]). The default is neutral:
+    /// one pinned replica, admission off, static batching — bit-identical
+    /// to the fixed-capacity cloud.
+    pub elastic: ElasticParams,
     /// Networks served (round-robin per device); empty = all-zoo mix.
     pub models: Vec<&'static str>,
     /// Latency-store selection (exact samples vs streaming sketch).
@@ -224,6 +232,7 @@ impl Default for FleetConfig {
             rate_hz: 1.0,
             epoch_s: 1.0,
             cloud: CloudParams::default(),
+            elastic: ElasticParams::default(),
             models: Vec::new(),
             metrics: MetricsMode::Auto,
             obs: ObsConfig::default(),
@@ -276,6 +285,7 @@ impl FleetConfig {
             "cloud single_stream_efficiency out of (0,1]"
         );
         anyhow::ensure!(self.cloud.max_backlog_s >= 0.0, "cloud max_backlog_s must be >= 0");
+        self.elastic.validate().map_err(|e| anyhow::anyhow!("elastic cloud: {e}"))?;
         for m in &self.models {
             anyhow::ensure!(by_name(m).is_some(), "unknown model '{m}' in fleet config");
         }
@@ -517,11 +527,12 @@ fn serve_request(
     shard: &mut Shard,
     slot: usize,
     t_arrival: f64,
-    cloud: &CloudSnapshot,
+    view: &PoolView,
     sh: &FleetShared,
     hist: Option<&mut LogHistogram>,
     win_hists: Option<&mut WindowHists>,
 ) {
+    let cloud = &view.snapshot;
     let clock = &mut shard.clocks[slot];
     let env = &mut shard.envs[slot];
     let rng = &mut shard.rngs[slot];
@@ -562,7 +573,11 @@ fn serve_request(
                 accuracy_target: sh.accuracy_target,
                 catalogue: &sh.catalogues[sh.preset_idx(shard.lo + slot)],
                 sim: &env.sim,
-                cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
+                cloud: CloudCtx {
+                    slowdown: cloud.slowdown,
+                    queue_wait_s: cloud.wait_s(),
+                    admitting: view.admitting,
+                },
             };
             (shard.policies[slot].decide(&dctx), Some(s))
         }
@@ -576,13 +591,27 @@ fn serve_request(
         compute_factor: if action.site == Site::Cloud { cloud.slowdown } else { 1.0 },
         remote_queue_s: if action.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
     };
-    let m = env.sim.run(nn, action, &ctx);
+    // Admission control: during a rejecting epoch every cloud-bound
+    // request fast-fails at the backend door instead of running. The
+    // reject path draws exactly one truth-noise sample (like `run`), so
+    // RNG streams never desynchronize between admitted and rejected
+    // epochs.
+    let rejected = action.site == Site::Cloud && !view.admitting;
+    let m = if rejected { env.sim.run_rejected(action) } else { env.sim.run(nn, action, &ctx) };
 
     // A request that timed out over a dead link never reached the
-    // backend, so it adds no cloud load.
-    if action.site == Site::Cloud && !m.remote_failed {
-        clock.tally_jobs += 1;
-        clock.tally_macs_m += nn.macs_m;
+    // backend, so it adds no cloud load. The per-epoch tally is
+    // single-purpose by construction: an epoch is either admitting
+    // (tally = admitted jobs + MACs) or rejecting (tally = refusal
+    // count, MACs stay zero) — the main thread knows which from the
+    // frozen view, so `DeviceClock` needs no extra field.
+    if action.site == Site::Cloud {
+        if rejected {
+            clock.tally_jobs += 1;
+        } else if !m.remote_failed {
+            clock.tally_jobs += 1;
+            clock.tally_macs_m += nn.macs_m;
+        }
     }
 
     // END-TO-END latency (device queue wait included): what the user
@@ -625,6 +654,7 @@ fn serve_request(
         accuracy: m.accuracy,
         accuracy_target: sh.accuracy_target,
         remote_failed: m.remote_failed,
+        remote_rejected: rejected,
     });
     if let Some(h) = hist {
         h.push(latency_e2e_s);
@@ -662,7 +692,15 @@ fn serve_request(
                     cloud_wait_s: cloud.wait_s(),
                 });
                 let t_done = t_start + m.latency_s;
-                if m.remote_failed {
+                if rejected {
+                    ring.push(TraceEvent::RemoteReject {
+                        t_s: t_done,
+                        id: device,
+                        nn: nn.name,
+                        latency_s: latency_e2e_s,
+                        energy_j: m.energy_true_j,
+                    });
+                } else if m.remote_failed {
                     ring.push(TraceEvent::RemoteTimeout {
                         t_s: t_done,
                         id: device,
@@ -709,7 +747,7 @@ fn run_epoch_shard(
     worker: &mut Worker,
     t_start: f64,
     t_end: f64,
-    cloud: &CloudSnapshot,
+    cloud: &PoolView,
     sh: &FleetShared,
 ) {
     worker.queue.reset(t_start, t_end - t_start, shard.clocks.len());
@@ -903,7 +941,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             DeviceMetrics::with_capacity(cfg.requests_per_device)
         });
     }
-    let mut cloud = CloudModel::new(cfg.cloud);
+    let mut cloud = ReplicaPool::new(cfg.cloud, cfg.elastic);
     let mut timeline = Vec::new();
 
     // Runaway guard, not a deadline: bound virtual time by ~20x the
@@ -967,7 +1005,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             break;
         }
         let t_end = epoch_start + cfg.epoch_s;
-        let snapshot = cloud.snapshot();
+        let snapshot = cloud.view();
         let parts = split_shards(&mut state, &mut collectors, block);
         if workers == 1 {
             let worker = &mut worker_state[0];
@@ -999,15 +1037,19 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
                 }
             });
         }
-        // Deterministic reduction: fold tallies in device-id order.
-        let mut jobs = 0u64;
+        // Deterministic reduction: fold tallies in device-id order. The
+        // tally is admitted work during admitting epochs and a refusal
+        // count during rejecting ones (see `serve_request`); the frozen
+        // view says which this epoch was.
+        let mut tally = 0u64;
         let mut macs_m = 0.0;
         for c in &mut state.clocks {
-            jobs += c.tally_jobs as u64;
+            tally += c.tally_jobs as u64;
             macs_m += c.tally_macs_m;
             c.tally_jobs = 0;
             c.tally_macs_m = 0.0;
         }
+        let (jobs, rejected) = if snapshot.admitting { (tally, 0) } else { (0, tally) };
         cloud.advance_epoch(jobs, macs_m, cfg.epoch_s);
         let s = cloud.snapshot();
         timeline.push(CloudTimelinePoint {
@@ -1015,6 +1057,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             backlog_mmacs: cloud.backlog_mmacs(),
             queue_wait_s: s.queue_wait_s,
             load: s.load,
+            replicas: cloud.n_replicas() as u32,
+            rejected,
         });
         if obs_on {
             let sample = CloudEpochSample {
@@ -1025,13 +1069,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
                 queue_wait_s: s.queue_wait_s,
                 load: s.load,
                 slowdown: s.slowdown,
+                replicas: cloud.n_replicas() as u32,
+                rejected,
             };
             if cfg.obs.timeline {
                 cloud_samples.push(sample);
             }
             if let Some(ring) = cloud_ring.as_mut() {
-                // Quiet epochs (no jobs, no backlog) add nothing.
-                if jobs > 0 || sample.backlog_mmacs > 0.0 {
+                // Quiet epochs (no jobs, no rejections, no backlog) add
+                // nothing.
+                if jobs > 0 || rejected > 0 || sample.backlog_mmacs > 0.0 {
                     ring.push(TraceEvent::CloudBatch {
                         t_s: epoch_start,
                         jobs,
@@ -1040,6 +1087,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
                         queue_wait_s: sample.queue_wait_s,
                         load: sample.load,
                         slowdown: sample.slowdown,
+                        replicas: sample.replicas,
+                        rejected,
                     });
                 }
             }
@@ -1328,12 +1377,93 @@ mod tests {
             |c| c.cloud.single_stream_efficiency = 0.0,
             |c| c.models = vec!["resnet_50_typo"],
             |c| c.scenario_env = Some("not-a-scenario".to_string()),
+            |c| c.elastic.autoscaler.min_replicas = 0,
+            |c| {
+                c.elastic.autoscaler.min_replicas = 4;
+                c.elastic.autoscaler.max_replicas = 2;
+            },
+            |c| c.elastic.autoscaler.warmup_s = -1.0,
+            |c| c.elastic.admit_backlog_s = 0.0,
+            |c| {
+                c.elastic.autoscaler.rule.down_utilization = 0.9;
+                c.elastic.autoscaler.rule.up_utilization = 0.5;
+            },
         ];
         for mutate in mutations {
             let mut cfg = small_cfg();
             mutate(&mut cfg);
             assert!(run_fleet(&cfg).is_err());
         }
+    }
+
+    #[test]
+    fn admission_control_fast_fails_cloud_offloads() {
+        // A tight admission bound against an all-cloud fleet must start
+        // rejecting once the backlog builds; rejections surface both in
+        // the metrics and on the cloud timeline.
+        let mut cfg = small_cfg();
+        cfg.policy = "cloud".to_string();
+        cfg.devices = 24;
+        cfg.requests_per_device = 20;
+        cfg.rate_hz = 4.0;
+        cfg.cloud.capacity_mmacs_per_s = 2_000.0; // heavily undersized
+        cfg.elastic.admit_backlog_s = 0.5;
+        let out = run_fleet(&cfg).unwrap();
+        assert!(out.metrics.remote_rejections() > 0, "the bound must trip");
+        assert!(
+            out.metrics.remote_rejections() < out.metrics.n(),
+            "the first epochs run below the bound and must be admitted"
+        );
+        let traced: u64 = out.cloud_timeline.iter().map(|p| p.rejected).sum();
+        assert_eq!(traced, out.metrics.remote_rejections() as u64);
+        // Rejections also count as failures (no result was produced)...
+        assert!(out.metrics.remote_failures() >= out.metrics.remote_rejections());
+        // ...and rejecting epochs admit no cloud load.
+        for p in &out.cloud_timeline {
+            if p.rejected > 0 {
+                assert_eq!(p.replicas, 1, "neutral autoscaler never scales");
+            }
+        }
+    }
+
+    #[test]
+    fn admission_rejection_is_shard_invariant() {
+        let mut cfg = small_cfg();
+        cfg.policy = "cloud".to_string();
+        cfg.devices = 24;
+        cfg.requests_per_device = 12;
+        cfg.rate_hz = 4.0;
+        cfg.cloud.capacity_mmacs_per_s = 2_000.0;
+        cfg.elastic.admit_backlog_s = 0.5;
+        cfg.shards = 1;
+        let a = run_fleet(&cfg).unwrap();
+        cfg.shards = 5;
+        let b = run_fleet(&cfg).unwrap();
+        assert!(a.metrics.remote_rejections() > 0);
+        assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
+    }
+
+    #[test]
+    fn elastic_fleet_scales_up_under_load_and_stays_shard_invariant() {
+        let mut cfg = small_cfg();
+        cfg.policy = "cloud".to_string();
+        cfg.devices = 24;
+        cfg.requests_per_device = 16;
+        cfg.rate_hz = 4.0;
+        cfg.cloud.capacity_mmacs_per_s = 5_000.0;
+        cfg.elastic.autoscaler.max_replicas = 4;
+        cfg.elastic.autoscaler.warmup_s = 2.0;
+        cfg.elastic.autoscaler.rule.up_cooldown_s = 2.0;
+        cfg.shards = 1;
+        let a = run_fleet(&cfg).unwrap();
+        let peak = a.cloud_timeline.iter().map(|p| p.replicas).max().unwrap();
+        assert!(peak > 1, "sustained overload must grow the pool (peak {peak})");
+        let traj: Vec<u32> = a.cloud_timeline.iter().map(|p| p.replicas).collect();
+        cfg.shards = 8;
+        let b = run_fleet(&cfg).unwrap();
+        let traj_b: Vec<u32> = b.cloud_timeline.iter().map(|p| p.replicas).collect();
+        assert_eq!(traj, traj_b, "replica trajectory must be shard-invariant");
+        assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
     }
 
     #[test]

@@ -23,7 +23,13 @@
 //!   requests latency percentiles switch to a fixed-size streaming sketch
 //!   ([`fleet::MetricsMode`], ≤5% relative error) so per-device metric
 //!   memory stays O(1). `autoscale fleet --devices 1000000 ...` drives it
-//!   from the CLI.
+//!   from the CLI. The shared backend can run **elastic**
+//!   ([`cloudscale`]): a replica pool behind deterministic dispatch, an
+//!   estimator-driven autoscaler with warm-up lag, admission control
+//!   that fast-fails offloads above a backlog bound, and a
+//!   load-dependent batch schedule — all evaluated once per epoch on
+//!   the main thread, so the replica trajectory is shard-invariant;
+//!   neutral defaults keep it bit-identical to the fixed cloud.
 //! * **L2/L1 (build-time python)** — the 10-NN model zoo in JAX calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`; loaded and
 //!   executed on the request path through PJRT by [`runtime`] (cargo
@@ -108,6 +114,7 @@
 pub mod agent;
 pub mod baselines;
 pub mod benchsuite;
+pub mod cloudscale;
 pub mod configsys;
 pub mod coordinator;
 pub mod device;

@@ -5,12 +5,20 @@
 //!   all [--seed N] [--full]           regenerate every figure/table
 //!   serve [--device D] [--env E] [--scenario-env K|all] [--requests N]
 //!         [--policy P] [--seed N] [--runtime]
+//!         [--cloud-capacity MMACS] [--batch-window S] [--max-batch N]
+//!         [--stream-eff F] [--max-backlog S]
 //!         [--telemetry OUT.jsonl] [--telemetry-window S]
 //!         [--trace OUT.jsonl] [--trace-sample N]
 //!                                     run the serving loop once and report
 //!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
 //!         [--scenario-env K|mix|all] [--policy P] [--arrival A] [--rate HZ]
-//!         [--epoch S] [--cloud-capacity MMACS] [--batch-window S]
+//!         [--epoch S] [--config RUN.toml]
+//!         [--cloud-capacity MMACS] [--batch-window S] [--max-batch N]
+//!         [--stream-eff F] [--max-backlog S]
+//!         [--replicas-min N] [--replicas-max N] [--warmup S]
+//!         [--scale-up F] [--scale-down F] [--cooldown-up S] [--cooldown-down S]
+//!         [--dispatch rr|least] [--admit-backlog S]
+//!         [--batch-schedule static|adaptive]
 //!         [--metrics auto|exact|sketch]
 //!         [--telemetry OUT.jsonl] [--telemetry-window S]
 //!         [--trace OUT.jsonl] [--trace-sample N] [--trace-cap N] [--progress]
@@ -43,7 +51,9 @@ use std::path::Path;
 use std::str::FromStr;
 
 use autoscale::benchsuite;
+use autoscale::cloudscale::{BatchSchedule, DispatchKind, ElasticParams};
 use autoscale::configsys::runconfig::{EnvKind, RunConfig, Scenario};
+use autoscale::configsys::{cloud_params_from_doc, elastic_params_from_doc, parse_toml};
 use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::serve::{ServeConfig, Server};
 use autoscale::experiments;
@@ -213,6 +223,7 @@ fn serve_episode(
     requests: usize,
     runtime: bool,
     obs: Option<&ObsConfig>,
+    cloud: Option<CloudParams>,
 ) -> anyhow::Result<(
     &'static str,
     String,
@@ -246,6 +257,9 @@ fn serve_episode(
     );
     if let Some(ocfg) = obs {
         server = server.with_telemetry(ocfg);
+    }
+    if let Some(params) = cloud {
+        server = server.with_cloud(params);
     }
     if runtime {
         engine_store = Engine::from_default_manifest()?;
@@ -333,6 +347,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--requests",
                     "--policy",
                     "--seed",
+                    "--cloud-capacity",
+                    "--batch-window",
+                    "--max-batch",
+                    "--stream-eff",
+                    "--max-backlog",
                     "--telemetry",
                     "--telemetry-window",
                     "--trace",
@@ -349,6 +368,22 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let policy_key = cli.value("--policy").unwrap_or("autoscale");
             let runtime = cli.switches.contains("--runtime");
             let (ocfg, timeline_path, trace_path) = parse_obs(&cli)?;
+            // Any cloud flag attaches the congestion-priced cloud model;
+            // without them the server keeps the paper's unloaded pricing.
+            let cloud_flags =
+                ["--cloud-capacity", "--batch-window", "--max-batch", "--stream-eff", "--max-backlog"];
+            let cloud = if cloud_flags.iter().any(|f| cli.values.contains_key(f)) {
+                let d = CloudParams::default();
+                Some(CloudParams {
+                    capacity_mmacs_per_s: cli.num("--cloud-capacity", d.capacity_mmacs_per_s)?,
+                    batch_window_s: cli.num("--batch-window", d.batch_window_s)?,
+                    max_batch: cli.num("--max-batch", d.max_batch)?,
+                    single_stream_efficiency: cli.num("--stream-eff", d.single_stream_efficiency)?,
+                    max_backlog_s: cli.num("--max-backlog", d.max_backlog_s)?,
+                })
+            } else {
+                None
+            };
 
             if cli.value("--scenario-env") == Some("all") {
                 // Batch smoke mode: every registered scenario key in ONE
@@ -363,7 +398,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 println!("== serve smoke: every registered scenario ({requests} requests each) ==");
                 for key in autoscale::scenario::names() {
                     let (name, _, m, _) = serve_episode(
-                        device, env, Some(key), seed, policy_key, requests, false, None,
+                        device, env, Some(key), seed, policy_key, requests, false, None, cloud,
                     )?;
                     println!(
                         "{key:12} {name:16} PPW {:8.3} inf/J  lat {:7.2} ms  \
@@ -386,9 +421,17 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 requests,
                 runtime,
                 Some(&ocfg),
+                cloud,
             )?;
             println!("policy       : {policy_name}");
             println!("device/env   : {device} / {scenario_key}");
+            if let Some(p) = cloud {
+                println!(
+                    "cloud        : congestion-priced ({:.0} MMAC/s, window {:.0} ms)",
+                    p.capacity_mmacs_per_s,
+                    p.batch_window_s * 1e3
+                );
+            }
             println!("requests     : {}", metrics.n());
             println!("PPW          : {:.3} inf/J", metrics.ppw());
             println!("mean latency : {:.2} ms", metrics.mean_latency_s() * 1e3);
@@ -431,8 +474,22 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--arrival",
                     "--rate",
                     "--epoch",
+                    "--config",
                     "--cloud-capacity",
                     "--batch-window",
+                    "--max-batch",
+                    "--stream-eff",
+                    "--max-backlog",
+                    "--replicas-min",
+                    "--replicas-max",
+                    "--warmup",
+                    "--scale-up",
+                    "--scale-down",
+                    "--cooldown-up",
+                    "--cooldown-down",
+                    "--dispatch",
+                    "--admit-backlog",
+                    "--batch-schedule",
                     "--metrics",
                     "--telemetry",
                     "--telemetry-window",
@@ -449,7 +506,48 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let default_shards = std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1);
-            let cloud_defaults = CloudParams::default();
+            // Cloud + elastic-pool parameters layer: built-in defaults,
+            // then the TOML [cloud] / [cloud.autoscaler] sections of
+            // --config, then explicit CLI flags (highest precedence).
+            let (mut cloud_base, mut elastic) = match cli.value("--config") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+                    let doc = parse_toml(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    (cloud_params_from_doc(&doc)?, elastic_params_from_doc(&doc)?)
+                }
+                None => (CloudParams::default(), ElasticParams::default()),
+            };
+            cloud_base.capacity_mmacs_per_s =
+                cli.num("--cloud-capacity", cloud_base.capacity_mmacs_per_s)?;
+            cloud_base.batch_window_s = cli.num("--batch-window", cloud_base.batch_window_s)?;
+            cloud_base.max_batch = cli.num("--max-batch", cloud_base.max_batch)?;
+            cloud_base.single_stream_efficiency =
+                cli.num("--stream-eff", cloud_base.single_stream_efficiency)?;
+            cloud_base.max_backlog_s = cli.num("--max-backlog", cloud_base.max_backlog_s)?;
+            elastic.autoscaler.min_replicas =
+                cli.num("--replicas-min", elastic.autoscaler.min_replicas)?;
+            elastic.autoscaler.max_replicas =
+                cli.num("--replicas-max", elastic.autoscaler.max_replicas)?;
+            elastic.autoscaler.warmup_s = cli.num("--warmup", elastic.autoscaler.warmup_s)?;
+            elastic.autoscaler.rule.up_utilization =
+                cli.num("--scale-up", elastic.autoscaler.rule.up_utilization)?;
+            elastic.autoscaler.rule.down_utilization =
+                cli.num("--scale-down", elastic.autoscaler.rule.down_utilization)?;
+            elastic.autoscaler.rule.up_cooldown_s =
+                cli.num("--cooldown-up", elastic.autoscaler.rule.up_cooldown_s)?;
+            elastic.autoscaler.rule.down_cooldown_s =
+                cli.num("--cooldown-down", elastic.autoscaler.rule.down_cooldown_s)?;
+            elastic.admit_backlog_s = cli.num("--admit-backlog", elastic.admit_backlog_s)?;
+            if let Some(v) = cli.value("--dispatch") {
+                elastic.dispatch = DispatchKind::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dispatch '{v}' (rr|least)"))?;
+            }
+            if let Some(v) = cli.value("--batch-schedule") {
+                elastic.batch = BatchSchedule::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown batch schedule '{v}' (static|adaptive)")
+                })?;
+            }
             let arrival_name = cli.value("--arrival").unwrap_or("poisson");
             let cfg = FleetConfig {
                 devices: cli.num("--devices", 1000)?,
@@ -469,12 +567,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 })?,
                 rate_hz: cli.num("--rate", 1.0)?,
                 epoch_s: cli.num("--epoch", 1.0)?,
-                cloud: CloudParams {
-                    capacity_mmacs_per_s: cli
-                        .num("--cloud-capacity", cloud_defaults.capacity_mmacs_per_s)?,
-                    batch_window_s: cli.num("--batch-window", cloud_defaults.batch_window_s)?,
-                    ..cloud_defaults
-                },
+                cloud: cloud_base,
+                elastic,
                 metrics: {
                     let name = cli.value("--metrics").unwrap_or("auto");
                     MetricsMode::from_name(name).ok_or_else(|| {
@@ -571,6 +665,17 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 peak_load,
                 peak_wait * 1e3
             );
+            if !cfg.elastic.is_neutral() {
+                let peak_replicas =
+                    out.cloud_timeline.iter().map(|p| p.replicas).max().unwrap_or(1);
+                println!(
+                    "elastic      : replicas peak {} (bounds {}..{}), {} offloads rejected",
+                    peak_replicas,
+                    cfg.elastic.autoscaler.min_replicas,
+                    cfg.elastic.autoscaler.max_replicas,
+                    m.remote_rejections(),
+                );
+            }
             println!("selection mix:");
             for bucket in autoscale::coordinator::metrics::SelectionStats::BUCKETS {
                 let rate = m.selections().rate(bucket);
@@ -763,8 +868,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
                  \x20             --scenario-env K (see `autoscale scenarios`; `all` = batch smoke)\n\
                  serve: --runtime\n\
+                 \x20       --cloud-capacity MMACS --batch-window S --max-batch N --stream-eff F\n\
+                 \x20       --max-backlog S (any of these attaches a congestion-priced cloud)\n\
                  fleet: --devices N --shards N --arrival poisson|diurnal|bursty --rate HZ\n\
-                 \x20       --epoch S --cloud-capacity MMACS --batch-window S --scenario-env K|mix|all\n\
+                 \x20       --epoch S --scenario-env K|mix|all --config RUN.toml ([cloud] sections)\n\
+                 \x20       --cloud-capacity MMACS --batch-window S --max-batch N --stream-eff F\n\
+                 \x20       --max-backlog S (the shared cloud tier)\n\
+                 \x20       --replicas-min N --replicas-max N --warmup S --scale-up F --scale-down F\n\
+                 \x20       --cooldown-up S --cooldown-down S --dispatch rr|least\n\
+                 \x20       --admit-backlog S --batch-schedule static|adaptive (elastic replica pool)\n\
                  \x20       --metrics auto|exact|sketch (latency store; auto switches at 1M requests)\n\
                  \x20       --progress (stderr heartbeat)\n\
                  telemetry (serve & fleet; deterministic, fingerprint-neutral):\n\

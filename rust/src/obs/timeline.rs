@@ -75,6 +75,12 @@ pub struct WindowAcc {
     pub cloud_queue_wait_s: f64,
     /// Offered-load ratio after the last epoch sampled in this window.
     pub cloud_load: f64,
+    /// Provisioned cloud replicas (warming included) after the last epoch
+    /// sampled in this window — 1 forever under the neutral fixed cloud.
+    pub cloud_replicas: u32,
+    /// Offloads refused at admission during epochs starting in this
+    /// window (elastic admission control; 0 with admission off).
+    pub admission_rejects: u64,
     /// Number of cloud epoch samples folded into this window.
     pub cloud_samples: u64,
 }
@@ -132,6 +138,10 @@ pub struct CloudEpochSample {
     pub load: f64,
     /// Service-time inflation devices will see next epoch.
     pub slowdown: f64,
+    /// Provisioned replicas (warming included) after the epoch.
+    pub replicas: u32,
+    /// Offloads refused at admission this epoch.
+    pub rejected: u64,
 }
 
 /// Map a sim time to a window index under `window_s`-wide windows.
@@ -220,6 +230,8 @@ impl Timeline {
         acc.cloud_backlog_mmacs = s.backlog_mmacs;
         acc.cloud_queue_wait_s = s.queue_wait_s;
         acc.cloud_load = s.load;
+        acc.cloud_replicas = s.replicas;
+        acc.admission_rejects += s.rejected;
         acc.cloud_samples += 1;
     }
 
@@ -244,10 +256,12 @@ impl Timeline {
             a.rssi_sum_dbm += o.rssi_sum_dbm;
             a.cloud_jobs += o.cloud_jobs;
             a.cloud_macs_m += o.cloud_macs_m;
+            a.admission_rejects += o.admission_rejects;
             if o.cloud_samples > 0 {
                 a.cloud_backlog_mmacs = o.cloud_backlog_mmacs;
                 a.cloud_queue_wait_s = o.cloud_queue_wait_s;
                 a.cloud_load = o.cloud_load;
+                a.cloud_replicas = o.cloud_replicas;
             }
             a.cloud_samples += o.cloud_samples;
         }
@@ -322,6 +336,8 @@ impl Timeline {
             h = fnv1a_fold(h, a.cloud_backlog_mmacs.to_bits());
             h = fnv1a_fold(h, a.cloud_queue_wait_s.to_bits());
             h = fnv1a_fold(h, a.cloud_load.to_bits());
+            h = fnv1a_fold(h, a.cloud_replicas as u64);
+            h = fnv1a_fold(h, a.admission_rejects);
             h = fnv1a_fold(h, a.cloud_samples);
         }
         for hist in &self.hists {
@@ -375,6 +391,8 @@ impl Timeline {
                 ("cloud_backlog_mmacs", Json::Num(a.cloud_backlog_mmacs)),
                 ("cloud_queue_wait_s", Json::Num(a.cloud_queue_wait_s)),
                 ("cloud_load", Json::Num(a.cloud_load)),
+                ("cloud_replicas", Json::Num(a.cloud_replicas as f64)),
+                ("admission_rejects", Json::Num(a.admission_rejects as f64)),
             ])
             .render_into(&mut out);
             out.push('\n');
@@ -451,6 +469,8 @@ pub fn validate_timeline_jsonl(text: &str) -> anyhow::Result<usize> {
             "cloud_backlog_mmacs",
             "cloud_queue_wait_s",
             "cloud_load",
+            "cloud_replicas",
+            "admission_rejects",
         ] {
             anyhow::ensure!(
                 w.get(key).and_then(|j| j.as_f64()).is_some(),
@@ -563,6 +583,8 @@ mod tests {
             queue_wait_s: 0.1,
             load: 0.5,
             slowdown: 1.0,
+            replicas: 1,
+            rejected: 2,
         });
         t.record_cloud(&CloudEpochSample {
             t_s: 5.0,
@@ -572,6 +594,8 @@ mod tests {
             queue_wait_s: 0.4,
             load: 1.2,
             slowdown: 1.4,
+            replicas: 3,
+            rejected: 4,
         });
         let w = t.windows()[0];
         assert_eq!(w.cloud_jobs, 12);
@@ -579,6 +603,8 @@ mod tests {
         assert_eq!(w.cloud_backlog_mmacs, 3.0);
         assert_eq!(w.cloud_queue_wait_s, 0.4);
         assert_eq!(w.cloud_samples, 2);
+        assert_eq!(w.cloud_replicas, 3, "replica count is a level: keep the last");
+        assert_eq!(w.admission_rejects, 6, "rejects are additive across epochs");
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub enum TraceEvent {
     },
     /// A remote attempt timed out over a disconnected link.
     RemoteTimeout { t_s: f64, id: u64, nn: &'static str, latency_s: f64, energy_j: f64 },
+    /// A cloud offload was refused at admission (elastic cloud above its
+    /// backlog bound) — a fast-fail, distinct from a link timeout.
+    RemoteReject { t_s: f64, id: u64, nn: &'static str, latency_s: f64, energy_j: f64 },
     /// A learning policy consumed a reward.
     Feedback { t_s: f64, id: u64, reward: f64, catalogue_idx: u32 },
     /// One shared-cloud epoch advanced (fleet only; never sampled out).
@@ -49,6 +52,8 @@ pub enum TraceEvent {
         queue_wait_s: f64,
         load: f64,
         slowdown: f64,
+        replicas: u32,
+        rejected: u64,
     },
 }
 
@@ -59,6 +64,7 @@ impl TraceEvent {
             TraceEvent::Decision { t_s, .. }
             | TraceEvent::ExecDone { t_s, .. }
             | TraceEvent::RemoteTimeout { t_s, .. }
+            | TraceEvent::RemoteReject { t_s, .. }
             | TraceEvent::Feedback { t_s, .. }
             | TraceEvent::CloudBatch { t_s, .. } => *t_s,
         }
@@ -70,6 +76,7 @@ impl TraceEvent {
             TraceEvent::Decision { .. } => "decision",
             TraceEvent::ExecDone { .. } => "exec_done",
             TraceEvent::RemoteTimeout { .. } => "remote_timeout",
+            TraceEvent::RemoteReject { .. } => "remote_reject",
             TraceEvent::Feedback { .. } => "feedback",
             TraceEvent::CloudBatch { .. } => "cloud_batch",
         }
@@ -103,7 +110,8 @@ impl TraceEvent {
                     ("qos_s", Json::Num(qos_s)),
                 ])
             }
-            TraceEvent::RemoteTimeout { t_s, id, nn, latency_s, energy_j } => Json::obj(vec![
+            TraceEvent::RemoteTimeout { t_s, id, nn, latency_s, energy_j }
+            | TraceEvent::RemoteReject { t_s, id, nn, latency_s, energy_j } => Json::obj(vec![
                 ("type", Json::string(self.kind())),
                 ("t_s", Json::Num(t_s)),
                 ("id", Json::Num(id as f64)),
@@ -126,6 +134,8 @@ impl TraceEvent {
                 queue_wait_s,
                 load,
                 slowdown,
+                replicas,
+                rejected,
             } => {
                 Json::obj(vec![
                     ("type", Json::string(self.kind())),
@@ -136,6 +146,8 @@ impl TraceEvent {
                     ("queue_wait_s", Json::Num(queue_wait_s)),
                     ("load", Json::Num(load)),
                     ("slowdown", Json::Num(slowdown)),
+                    ("replicas", Json::Num(replicas as f64)),
+                    ("rejected", Json::Num(rejected as f64)),
                 ])
             }
         }
@@ -283,11 +295,19 @@ pub fn validate_trace_jsonl(text: &str) -> anyhow::Result<usize> {
         let numeric: &[&str] = match kind {
             "decision" => &["t_s", "id", "catalogue_idx", "cloud_wait_s"],
             "exec_done" => &["t_s", "id", "latency_s", "energy_j", "accuracy", "qos_s"],
-            "remote_timeout" => &["t_s", "id", "latency_s", "energy_j"],
+            "remote_timeout" | "remote_reject" => &["t_s", "id", "latency_s", "energy_j"],
             "feedback" => &["t_s", "id", "reward", "catalogue_idx"],
-            "cloud_batch" => {
-                &["t_s", "jobs", "macs_m", "backlog_mmacs", "queue_wait_s", "load", "slowdown"]
-            }
+            "cloud_batch" => &[
+                "t_s",
+                "jobs",
+                "macs_m",
+                "backlog_mmacs",
+                "queue_wait_s",
+                "load",
+                "slowdown",
+                "replicas",
+                "rejected",
+            ],
             other => anyhow::bail!("unknown trace event type `{other}`"),
         };
         for key in numeric {
@@ -296,7 +316,7 @@ pub fn validate_trace_jsonl(text: &str) -> anyhow::Result<usize> {
                 "`{kind}` record missing numeric `{key}`"
             );
         }
-        if matches!(kind, "decision" | "exec_done" | "remote_timeout") {
+        if matches!(kind, "decision" | "exec_done" | "remote_timeout" | "remote_reject") {
             anyhow::ensure!(
                 ev.get("nn").and_then(|j| j.as_str()).is_some(),
                 "`{kind}` record missing `nn`"
@@ -383,11 +403,20 @@ mod tests {
             queue_wait_s: 0.0,
             load: 0.1,
             slowdown: 1.0,
+            replicas: 1,
+            rejected: 0,
+        });
+        ring.push(TraceEvent::RemoteReject {
+            t_s: 1.5,
+            id: 3,
+            nn: "mobilenet_v1",
+            latency_s: 0.02,
+            energy_j: 0.05,
         });
         log.absorb(&ring);
         log.sort_by_time();
         let text = log.to_jsonl();
-        assert_eq!(validate_trace_jsonl(&text).unwrap(), 2);
+        assert_eq!(validate_trace_jsonl(&text).unwrap(), 3);
         assert!(validate_trace_jsonl("{\"type\":\"meta\"}\n").is_err());
         assert!(validate_trace_jsonl("").is_err());
     }

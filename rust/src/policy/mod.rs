@@ -92,11 +92,16 @@ pub struct CloudCtx {
     pub slowdown: f64,
     /// Queueing + batching wait at the shared backend (seconds).
     pub queue_wait_s: f64,
+    /// False = the cloud is rejecting new offloads this epoch (elastic
+    /// admission control); a cloud-bound request will fast-fail with
+    /// `remote_failed`. Policies that consult congestion can skip cloud
+    /// arms outright instead of paying the rejection.
+    pub admitting: bool,
 }
 
 impl Default for CloudCtx {
     fn default() -> Self {
-        CloudCtx { slowdown: 1.0, queue_wait_s: 0.0 }
+        CloudCtx { slowdown: 1.0, queue_wait_s: 0.0, admitting: true }
     }
 }
 
@@ -255,5 +260,6 @@ mod tests {
         let c = CloudCtx::default();
         assert_eq!(c.slowdown, 1.0);
         assert_eq!(c.queue_wait_s, 0.0);
+        assert!(c.admitting, "an unloaded cloud admits everything");
     }
 }

@@ -78,23 +78,33 @@ impl ScalingPolicy for OptPolicy {
             cpu_util: ctx.obs.co_cpu,
             mem_pressure: ctx.obs.co_mem,
         };
-        let action = oracle_best_action(
-            ctx.sim,
-            ctx.nn,
-            ctx.catalogue,
-            ctx.accuracy_target,
-            ctx.qos_s,
-            |a| RunContext {
-                interference: sensed,
-                thermal_cap: 1.0,
-                compute_factor: if a.site == Site::Cloud { ctx.cloud.slowdown } else { 1.0 },
-                remote_queue_s: if a.site == Site::Cloud {
-                    ctx.cloud.queue_wait_s
-                } else {
-                    0.0
-                },
+        let ctx_for = |a: Action| RunContext {
+            interference: sensed,
+            thermal_cap: 1.0,
+            compute_factor: if a.site == Site::Cloud { ctx.cloud.slowdown } else { 1.0 },
+            remote_queue_s: if a.site == Site::Cloud {
+                ctx.cloud.queue_wait_s
+            } else {
+                0.0
             },
-        );
+        };
+        let action = if ctx.cloud.admitting {
+            oracle_best_action(
+                ctx.sim,
+                ctx.nn,
+                ctx.catalogue,
+                ctx.accuracy_target,
+                ctx.qos_s,
+                ctx_for,
+            )
+        } else {
+            // The cloud is rejecting offloads this epoch: a cloud arm
+            // would fast-fail at admission, so drop those arms from the
+            // what-if instead of pricing them as if they would run.
+            let open: Vec<Action> =
+                ctx.catalogue.iter().copied().filter(|a| a.site != Site::Cloud).collect();
+            oracle_best_action(ctx.sim, ctx.nn, &open, ctx.accuracy_target, ctx.qos_s, ctx_for)
+        };
         Decision::from_catalogue(ctx.catalogue, action)
     }
 
@@ -138,10 +148,20 @@ mod tests {
         let melted = p.decide(&mk_ctx(super::super::CloudCtx {
             slowdown: 4.0,
             queue_wait_s: 30.0,
+            admitting: true,
         }));
         assert_eq!(unloaded.action.site, Site::Cloud, "resnet50 favours an unloaded cloud");
         assert_ne!(melted.action.site, Site::Cloud, "a melted cloud must be avoided");
         assert_eq!(catalogue[melted.catalogue_idx], melted.action);
+
+        // A rejecting cloud is avoided even when its snapshot looks
+        // healthy: the offload would fast-fail at admission.
+        let rejecting = p.decide(&mk_ctx(super::super::CloudCtx {
+            slowdown: 1.0,
+            queue_wait_s: 0.0,
+            admitting: false,
+        }));
+        assert_ne!(rejecting.action.site, Site::Cloud, "rejecting cloud must be skipped");
     }
 
     #[test]

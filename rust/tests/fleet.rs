@@ -5,6 +5,7 @@
 //! (a scarce shared cloud pushes congestion-aware agents back toward local
 //! execution).
 
+use autoscale::cloudscale::{AutoscalerParams, ElasticParams};
 use autoscale::configsys::runconfig::EnvKind;
 use autoscale::fleet::sim::device_seed;
 use autoscale::fleet::{run_fleet, ArrivalKind, CloudParams, FleetConfig};
@@ -143,7 +144,12 @@ mod reference {
                     accuracy_target: cfg.accuracy_target,
                     catalogue: &self.catalogue,
                     sim: &self.env.sim,
-                    cloud: CloudCtx { slowdown: cloud.slowdown, queue_wait_s: cloud.wait_s() },
+                    // The pre-refactor cloud always admitted offloads.
+                    cloud: CloudCtx {
+                        slowdown: cloud.slowdown,
+                        queue_wait_s: cloud.wait_s(),
+                        admitting: true,
+                    },
                 };
                 self.policy.decide(&dctx)
             };
@@ -192,6 +198,7 @@ mod reference {
                 accuracy: m.accuracy,
                 accuracy_target: cfg.accuracy_target,
                 remote_failed: m.remote_failed,
+                remote_rejected: false,
             });
         }
     }
@@ -431,6 +438,58 @@ fn identical_seeds_reproduce_identical_fleets() {
         c.metrics.fingerprint(),
         "different seeds must explore different trajectories"
     );
+}
+
+#[test]
+fn replica_trajectory_is_shard_invariant_and_seed_reproducible() {
+    // Determinism pin for the elastic cloud: the autoscaler is evaluated
+    // once per epoch on the main thread from shard-invariant aggregates,
+    // so the replica-count trajectory must be bit-identical across 1, 2
+    // and 8 workers and across repeated runs of the same seed.
+    let mut cfg = FleetConfig {
+        devices: 300,
+        requests_per_device: 12,
+        rate_hz: 4.0,
+        seed: 77,
+        policy: "cloud".to_string(),
+        env: EnvKind::D3RandomWlan,
+        cloud: CloudParams {
+            capacity_mmacs_per_s: 5_000.0, // small enough that 300 devices saturate it
+            ..Default::default()
+        },
+        elastic: ElasticParams {
+            autoscaler: AutoscalerParams {
+                min_replicas: 1,
+                max_replicas: 4,
+                warmup_s: 2.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.shards = 1;
+    let a = run_fleet(&cfg).unwrap();
+    let trajectory: Vec<u32> = a.cloud_timeline.iter().map(|p| p.replicas).collect();
+    assert!(
+        trajectory.iter().any(|&r| r > 1),
+        "the flash-crowd config must actually trigger a scale-up (got {trajectory:?})"
+    );
+    for shards in [2usize, 8] {
+        cfg.shards = shards;
+        let b = run_fleet(&cfg).unwrap();
+        assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
+        let other: Vec<u32> = b.cloud_timeline.iter().map(|p| p.replicas).collect();
+        assert_eq!(
+            trajectory, other,
+            "replica trajectory must not depend on shard layout (shards={shards})"
+        );
+    }
+    // Same seed, same trajectory — reproducible end to end.
+    cfg.shards = 1;
+    let again = run_fleet(&cfg).unwrap();
+    let replay: Vec<u32> = again.cloud_timeline.iter().map(|p| p.replicas).collect();
+    assert_eq!(trajectory, replay, "a rerun of the same seed must replay the trajectory");
 }
 
 #[test]
