@@ -95,6 +95,18 @@ pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
     });
     report.entries.push(SuiteEntry::from_result(&r, Some(50_000.0)).optional());
 
+    // Catalogue-growth overhead: the 128x25 learning fleet again, with
+    // the partitioned-execution arms appended to every catalogue. The
+    // delta against "fleet 128x25 shards=4" is what the larger action
+    // space (and any split executions the learner picks) costs the loop.
+    let mut cfg = fleet_cfg(128, 25, 4, "autoscale");
+    cfg.split_points = true;
+    let name = "fleet 128x25 shards=4 split-catalogue";
+    let r = b.bench(name, || {
+        black_box(run_fleet(black_box(&cfg)).unwrap());
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some((128 * 25) as f64)).optional());
+
     // Elastic cloud at scale: the same 10k-device fleet with the replica
     // autoscaler, admission control and the adaptive batch schedule
     // engaged. The delta against the plain 10k row is the cost of the

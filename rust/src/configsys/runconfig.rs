@@ -139,6 +139,15 @@ pub struct RunConfig {
     /// Use real PJRT execution for local targets (examples/benches); the
     /// pure-simulation path keeps unit tests hermetic and fast.
     pub use_runtime: bool,
+    /// Registry key of the scaling policy the server runs
+    /// (see [`crate::policy::registry::REGISTRY`]).
+    pub policy: String,
+    /// Append partitioned-execution arms to the action catalogue (see
+    /// [`crate::policy::action_catalogue_with_splits`]). Off by default:
+    /// catalogue shapes and fingerprints are then bit-identical to the
+    /// pre-partition server. Split-native policies (`neurosurgeon`) get
+    /// split arms regardless.
+    pub split_points: bool,
 }
 
 impl Default for RunConfig {
@@ -153,6 +162,8 @@ impl Default for RunConfig {
             requests: 300,
             seed: 7,
             use_runtime: false,
+            policy: "autoscale".to_string(),
+            split_points: false,
         }
     }
 }
@@ -203,6 +214,12 @@ impl RunConfig {
             if let Some(v) = root.get("use_runtime").and_then(|v| v.as_bool()) {
                 cfg.use_runtime = v;
             }
+            if let Some(v) = root.get("policy").and_then(|v| v.as_str()) {
+                cfg.policy = v.to_string();
+            }
+            if let Some(v) = root.get("split_points").and_then(|v| v.as_bool()) {
+                cfg.split_points = v;
+            }
         }
         if let Some(agent) = doc.get("agent") {
             let mut p = cfg.agent;
@@ -251,6 +268,12 @@ impl RunConfig {
             "accuracy_target out of [0,1]"
         );
         anyhow::ensure!(self.requests > 0, "requests must be > 0");
+        anyhow::ensure!(
+            crate::policy::is_known(&self.policy),
+            "unknown policy '{}' (known: {})",
+            self.policy,
+            crate::policy::names().join("|")
+        );
         Ok(())
     }
 }
@@ -294,6 +317,8 @@ scenario = "streaming"
 accuracy_target = 0.65
 requests = 42
 seed = 99
+policy = "neurosurgeon"
+split_points = true
 
 [agent]
 epsilon = 0.2
@@ -310,6 +335,12 @@ learning_rate = 0.5
         assert_eq!(cfg.agent.epsilon, 0.2);
         assert_eq!(cfg.agent.learning_rate, 0.5);
         assert_eq!(cfg.agent.discount, 0.1); // default retained
+        assert_eq!(cfg.policy, "neurosurgeon");
+        assert!(cfg.split_points);
+        // omitted keys keep their defaults
+        let cfg = RunConfig::from_doc(&parse_toml("requests = 3\n").unwrap()).unwrap();
+        assert_eq!(cfg.policy, "autoscale");
+        assert!(!cfg.split_points);
     }
 
     #[test]
@@ -321,6 +352,8 @@ learning_rate = 0.5
         let doc = parse_toml("requests = 0\n").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
         let doc = parse_toml("scenario_env = \"warp-zone\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = parse_toml("policy = \"not-a-policy\"\n").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
     }
 

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use crate::exec::outcome::ExecOutcome;
-use crate::types::{Action, Precision, ProcKind, Site};
+use crate::types::{Action, Precision, ProcKind, Site, SplitPoint};
 
 /// Aggregated metrics for one served episode.
 #[derive(Clone, Debug, Default)]
@@ -125,7 +125,13 @@ fn action_code(a: Action) -> u64 {
         Precision::Fp16 => 1,
         Precision::Int8 => 2,
     };
-    site | (proc << 8) | ((a.vf_step as u64) << 16) | (prec << 24)
+    // Split index in bits >= 32 with Mono encoded as 0: default (all-Mono)
+    // episodes keep their pre-partition fingerprints bit-identically.
+    let split = match a.split {
+        SplitPoint::Mono => 0u64,
+        SplitPoint::At(k) => 1 + k as u64,
+    };
+    site | (proc << 8) | ((a.vf_step as u64) << 16) | (prec << 24) | (split << 32)
 }
 
 /// Fig. 13 selection-rate buckets.
@@ -136,8 +142,14 @@ pub struct SelectionStats {
 }
 
 impl SelectionStats {
-    /// Bucket an action into the paper's Fig. 13 rows.
+    /// Bucket an action into the paper's Fig. 13 rows. Partitioned plans
+    /// get their own "Split" row (checked first: a split's *site* is Local
+    /// but its execution is collaborative, so neither a pure-edge nor the
+    /// Cloud row describes it).
     pub fn bucket(a: Action) -> &'static str {
+        if a.split.is_split() {
+            return "Split";
+        }
         match (a.site, a.proc, a.precision) {
             (Site::Cloud, _, _) => "Cloud",
             (Site::ConnectedEdge, _, _) => "Connected Edge",
@@ -149,7 +161,9 @@ impl SelectionStats {
         }
     }
 
-    pub const BUCKETS: [&'static str; 7] = [
+    /// The "Split" row is appended last so every pre-partition bucket
+    /// keeps its index (telemetry columns, fingerprints).
+    pub const BUCKETS: [&'static str; 8] = [
         "Edge(CPU FP32) w/DVFS",
         "Edge(CPU INT8) w/DVFS",
         "Edge(GPU FP32) w/DVFS",
@@ -157,13 +171,17 @@ impl SelectionStats {
         "Edge(DSP)",
         "Cloud",
         "Connected Edge",
+        "Split",
     ];
 
     /// Position of an action's bucket in [`Self::BUCKETS`]. Lets hot-path
-    /// collectors count selections in a fixed `[u32; 7]` array (no hash
+    /// collectors count selections in a fixed `[u32; 8]` array (no hash
     /// map, no heap) and fold into a `SelectionStats` afterwards via
     /// [`Self::add_bucket_counts`].
     pub fn bucket_index(a: Action) -> usize {
+        if a.split.is_split() {
+            return 7;
+        }
         match (a.site, a.proc, a.precision) {
             (Site::Local, ProcKind::Cpu, Precision::Fp32) => 0,
             (Site::Local, ProcKind::Cpu, _) => 1,
@@ -280,6 +298,13 @@ mod tests {
             SelectionStats::bucket(Action::connected_edge()),
             "Connected Edge"
         );
+        // Partitioned plans land in the dedicated Split row, not Edge/Cloud.
+        let split = Action::split_at(2, ProcKind::Dsp, Precision::Int8);
+        assert_eq!(SelectionStats::bucket(split), "Split");
+        assert_eq!(
+            SelectionStats::BUCKETS[SelectionStats::bucket_index(split)],
+            "Split"
+        );
     }
 
     #[test]
@@ -352,6 +377,24 @@ mod tests {
         let mut c = EpisodeMetrics::default();
         c.push(outcome(Action::connected_edge(), 0.04, 0.2));
         assert_ne!(a.fingerprint(), c.fingerprint(), "action must be digested");
+    }
+
+    #[test]
+    fn fingerprint_digests_the_split_dimension() {
+        use crate::types::{Precision, ProcKind};
+        // Same (site, proc, vf, precision) but different partition points
+        // must fingerprint differently — and the Mono encoding is 0, so
+        // all-Mono episodes keep their pre-partition digests.
+        let mono = Action::local(ProcKind::Dsp, Precision::Int8);
+        let split = Action::split_at(2, ProcKind::Dsp, Precision::Int8);
+        let mut a = EpisodeMetrics::default();
+        let mut b = EpisodeMetrics::default();
+        a.push(outcome(mono, 0.04, 0.2));
+        b.push(outcome(split, 0.04, 0.2));
+        assert_ne!(a.fingerprint(), b.fingerprint(), "split point must be digested");
+        let mut c = EpisodeMetrics::default();
+        c.push(outcome(Action::split_at(1, ProcKind::Dsp, Precision::Int8), 0.04, 0.2));
+        assert_ne!(b.fingerprint(), c.fingerprint(), "different k must differ");
     }
 
     #[test]

@@ -222,7 +222,9 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
             self.policy.decide(&ctx)
         };
         let action = decision.action;
-        let is_cloud = action.site == crate::types::Site::Cloud;
+        // Any plan with a cloud leg — monolithic offload or split tail —
+        // pays the congestion snapshot.
+        let uses_cloud = action.uses_cloud();
 
         // ③ execute (optionally grounding compute in a real PJRT run).
         // The physics see the TRUE interference; the policy saw the noisy
@@ -230,17 +232,20 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
         let mut ctx = RunContext {
             interference: true_inter,
             thermal_cap: 1.0, // simulator applies its own thermal state
-            compute_factor: if is_cloud { cloud_ctx.slowdown } else { 1.0 },
-            remote_queue_s: if is_cloud { cloud_ctx.queue_wait_s } else { 0.0 },
+            compute_factor: if uses_cloud { cloud_ctx.slowdown } else { 1.0 },
+            remote_queue_s: if uses_cloud { cloud_ctx.queue_wait_s } else { 0.0 },
         };
         if let Some(engine) = self.engine.as_deref_mut() {
-            if action.site == crate::types::Site::Local {
+            // Engine grounding applies only to fully-local Mono plans:
+            // for split plans `compute_factor` prices the *cloud tail*,
+            // so folding a local PJRT wall-time there would be wrong.
+            if action.site == crate::types::Site::Local && !action.split.is_split() {
                 if let Ok(f) = engine.compute_factor(nn.name, action.precision, req_id) {
                     ctx.compute_factor = f;
                 }
             }
         }
-        let m = self.env.sim.run(nn, action, &ctx);
+        let m = self.env.sim.run_plan(nn, action, &ctx);
         self.clock.advance(m.latency_s.max(1e-6));
 
         // ④ reward
@@ -349,9 +354,10 @@ impl<'a, P: ScalingPolicy> Server<'a, P> {
         // clock crosses an epoch boundary (idle epochs fold too, so a
         // built-up backlog drains at the same rate it would in the fleet).
         if let Some(c) = self.cloud.as_mut() {
-            if is_cloud && !m.remote_failed {
+            if uses_cloud && !m.remote_failed {
                 c.jobs += 1;
-                c.macs_m += nn.macs_m;
+                // Split plans only ship their tail's share of the MACs.
+                c.macs_m += nn.macs_m * crate::exec::split::remote_mac_share(action.split);
             }
             let now = self.clock.now();
             while now >= c.next_epoch_t {

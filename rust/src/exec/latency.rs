@@ -294,18 +294,13 @@ impl Simulator {
         };
 
         // True energy = estimate ± bounded noise (estimation error source).
-        let noise = 1.0 + self.rng.normal(0.0, self.truth_noise).clamp(-0.25, 0.25);
-        let energy_true = energy_est * noise;
+        let energy_true = energy_est * self.truth_noise_factor();
 
         // Thermal integration. Local runs heat by their own dissipated
         // power; remote runs heat by the radio's duty-cycled TX power
         // (regression fix: this used to be a hard-coded 0.2 W, so radio TX
         // heat never reached the thermal model).
-        if self.local.is_mobile {
-            self.thermal.advance(power_for_thermal, latency_s);
-        } else {
-            self.thermal.advance(0.2, latency_s);
-        }
+        self.advance_thermal(power_for_thermal, latency_s);
 
         Measurement {
             latency_s,
@@ -313,6 +308,24 @@ impl Simulator {
             energy_true_j: energy_true,
             accuracy: if remote_failed { 0.0 } else { nn.accuracy(precision) },
             remote_failed,
+        }
+    }
+
+    /// One bounded truth-noise factor. Every execution path — [`Simulator::run`],
+    /// [`Simulator::run_rejected`] and the split path — consumes exactly one
+    /// per request, so per-device RNG streams stay in lockstep no matter
+    /// which plan a policy picks.
+    pub(crate) fn truth_noise_factor(&mut self) -> f64 {
+        1.0 + self.rng.normal(0.0, self.truth_noise).clamp(-0.25, 0.25)
+    }
+
+    /// Thermal integration shared by every execution path: mobile devices
+    /// heat by the dissipated power, plugged-in hosts by a nominal 0.2 W.
+    pub(crate) fn advance_thermal(&mut self, power_w: f64, latency_s: f64) {
+        if self.local.is_mobile {
+            self.thermal.advance(power_w, latency_s);
+        } else {
+            self.thermal.advance(0.2, latency_s);
         }
     }
 
@@ -331,8 +344,14 @@ impl Simulator {
     /// admitting and rejecting never desynchronizes a device's RNG or
     /// thermal stream relative to the admitted path.
     pub fn run_rejected(&mut self, action: Action) -> Measurement {
-        debug_assert!(action.site != Site::Local, "only remote requests can be rejected");
-        let link = if action.site == Site::Cloud { &self.wlan } else { &self.p2p };
+        debug_assert!(
+            action.site != Site::Local || action.split.is_split(),
+            "only plans with a remote leg can be rejected"
+        );
+        // Split plans ship their activation over the WLAN — the cloud's
+        // admission control rejects them through the same link as a
+        // monolithic cloud offload.
+        let link = if action.uses_cloud() { &self.wlan } else { &self.p2p };
         let (latency_s, energy_est, power_for_thermal) = if !link.rssi.is_connected() {
             self.disconnect_outcome(link)
         } else {
@@ -350,14 +369,8 @@ impl Simulator {
             (latency, energy, rt.tx_power_w * DISCONNECT_RETRY_DUTY)
         };
 
-        let noise = 1.0 + self.rng.normal(0.0, self.truth_noise).clamp(-0.25, 0.25);
-        let energy_true = energy_est * noise;
-
-        if self.local.is_mobile {
-            self.thermal.advance(power_for_thermal, latency_s);
-        } else {
-            self.thermal.advance(0.2, latency_s);
-        }
+        let energy_true = energy_est * self.truth_noise_factor();
+        self.advance_thermal(power_for_thermal, latency_s);
 
         Measurement {
             latency_s,
@@ -381,8 +394,9 @@ impl Simulator {
         (DISCONNECT_TIMEOUT_S, energy, tx_power * DISCONNECT_RETRY_DUTY)
     }
 
-    /// Eq.(1)/(2)/(3) energy for a local run.
-    fn local_energy_j(&self, proc: &Processor, vf: u8, busy_s: f64) -> f64 {
+    /// Eq.(1)/(2)/(3) energy for a local run. Shared with the
+    /// split-execution head so DVFS energy accounting cannot diverge.
+    pub(crate) fn local_energy_j(&self, proc: &Processor, vf: u8, busy_s: f64) -> f64 {
         match proc.kind {
             ProcKind::Cpu => power::cpu_energy_j(
                 proc,
@@ -679,6 +693,20 @@ mod tests {
         assert_eq!(m.latency_s, lat, "dead link: rejection degenerates to the timeout");
         assert_eq!(m.energy_est_j.to_bits(), energy.to_bits());
         assert!(m.remote_failed);
+    }
+
+    #[test]
+    fn split_plan_rejection_uses_the_wlan_like_a_cloud_offload() {
+        // A split plan's head is sited locally, but its activation leg is
+        // WLAN traffic — admission control must reject it with the same
+        // control exchange (and cost) as a monolithic cloud offload.
+        let mut a = sim(DeviceId::Mi8Pro);
+        let mut b = sim(DeviceId::Mi8Pro);
+        let ma = a.run_rejected(Action::cloud());
+        let mb = b.run_rejected(Action::split_at(2, ProcKind::Dsp, Precision::Int8));
+        assert!(mb.remote_failed);
+        assert_eq!(ma.latency_s.to_bits(), mb.latency_s.to_bits());
+        assert_eq!(ma.energy_est_j.to_bits(), mb.energy_est_j.to_bits());
     }
 
     #[test]

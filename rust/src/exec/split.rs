@@ -5,8 +5,8 @@
 //! between the cloud and local mobile device").
 
 use crate::nn::zoo::NnDesc;
-use crate::power::{self, NetTransaction, Residency};
-use crate::types::{Measurement, Precision, ProcKind};
+use crate::power::{self, NetTransaction};
+use crate::types::{Action, Measurement, Precision, ProcKind, SplitPoint};
 
 use super::latency::{layer_costs, RunContext, Simulator};
 
@@ -37,15 +37,45 @@ pub fn activation_kb(nn: &NnDesc, frac: f64) -> f64 {
     }
 }
 
+/// Fraction of a network's MACs a plan executes on the cloud: 1.0 for a
+/// monolithic offload, `1 - SPLIT_POINTS[k]` for a split tail. Hosts use
+/// this to fold the right share of MACs into the cloud congestion model.
+pub fn remote_mac_share(split: SplitPoint) -> f64 {
+    match split {
+        SplitPoint::Mono => 1.0,
+        SplitPoint::At(k) => 1.0 - SPLIT_POINTS[(k as usize).min(SPLIT_POINTS.len() - 1)],
+    }
+}
+
 impl Simulator {
+    /// Execute one inference for `nn` under an execution *plan*: routes
+    /// [`SplitPoint::Mono`] to [`Simulator::run`] (today's semantics,
+    /// bit-identical) and [`SplitPoint::At(k)`] to [`Simulator::run_split`]
+    /// at `SPLIT_POINTS[k]`, honoring the action's processor, DVFS step and
+    /// precision on the head. This is the single dispatch seam every
+    /// serving loop goes through.
+    pub fn run_plan(&mut self, nn: &NnDesc, action: Action, ctx: &RunContext) -> Measurement {
+        match action.split {
+            SplitPoint::Mono => self.run(nn, action, ctx),
+            SplitPoint::At(k) => {
+                let frac = SPLIT_POINTS[(k as usize).min(SPLIT_POINTS.len() - 1)];
+                self.run_split(nn, frac, action.proc, action.precision, action.vf_step, ctx)
+            }
+        }
+    }
+
     /// Execute `nn` split at `frac` (device share) between the local
-    /// processor `proc_kind` and the cloud's best processor.
+    /// processor `proc_kind` (at DVFS step `vf_step`) and the cloud's best
+    /// processor. Consumes exactly one truth-noise draw and advances
+    /// thermal state — the same per-request RNG/thermal contract as
+    /// [`Simulator::run`] — on both the success and dead-WLAN paths.
     pub fn run_split(
         &mut self,
         nn: &NnDesc,
         frac: f64,
         proc_kind: ProcKind,
         precision: Precision,
+        vf_step: u8,
         ctx: &RunContext,
     ) -> Measurement {
         let frac = frac.clamp(0.0, 1.0);
@@ -53,11 +83,13 @@ impl Simulator {
         // semantics as Simulator::run apply — a dead link times the
         // request out and charges the wasted TX energy.
         if frac < 1.0 && !self.wlan.rssi.is_connected() {
-            let (latency_s, energy, _) = self.disconnect_outcome(&self.wlan);
+            let (latency_s, energy, heat) = self.disconnect_outcome(&self.wlan);
+            let energy_true = energy * self.truth_noise_factor();
+            self.advance_thermal(heat, latency_s);
             return Measurement {
                 latency_s,
                 energy_est_j: energy,
-                energy_true_j: energy,
+                energy_true_j: energy_true,
                 accuracy: 0.0,
                 remote_failed: true,
             };
@@ -78,7 +110,8 @@ impl Simulator {
             .clone();
 
         // Device-side compute: fraction of every layer class (a layer-count
-        // split at class granularity).
+        // split at class granularity). The head runs at the plan's DVFS
+        // step so partitioning and frequency scaling compose.
         let mut local_s = 0.0;
         let mut cloud_s = 0.0;
         for lc in layer_costs(nn) {
@@ -94,7 +127,7 @@ impl Simulator {
                 local_s += self.layer_latency_s(
                     &head,
                     &proc,
-                    0,
+                    vf_step,
                     precision,
                     ctx,
                     crate::types::Site::Local,
@@ -111,10 +144,16 @@ impl Simulator {
                 );
             }
         }
-        local_s *= ctx.compute_factor;
+        // The tail runs on the shared cloud: load-dependent service-time
+        // inflation lands on the cloud leg (the fleet prices split plans
+        // with the cloud's congestion view, like any other cloud traffic).
+        cloud_s *= ctx.compute_factor;
+        // Server-side queueing ahead of the tail's service, like a
+        // monolithic offload — splits are not free under a backlogged cloud.
+        let queue_s = if frac < 1.0 { ctx.remote_queue_s.max(0.0) } else { 0.0 };
 
         // Network leg (skipped for pure on-device).
-        let (net_latency, net_energy) = if frac < 1.0 {
+        let (net_latency, net_energy, tx_power_w) = if frac < 1.0 {
             let rt = self.wlan.round_trip(activation_kb(nn, frac), nn.output_kb);
             let latency = rt.tx_s + rt.rx_s;
             let idle = self.local.proc(ProcKind::Cpu).unwrap().idle_power_w;
@@ -124,34 +163,38 @@ impl Simulator {
                 rx_s: rt.rx_s,
                 rx_power_w: rt.rx_power_w,
                 idle_power_w: idle,
-                total_latency_s: latency + cloud_s,
+                // the device idles while the tail queues and computes
+                total_latency_s: latency + queue_s + cloud_s,
             }) + rt.tail_energy_j;
-            (latency, energy)
+            (latency, energy, rt.tx_power_w)
         } else {
-            (0.0, 0.0)
+            (0.0, 0.0, 0.0)
         };
 
-        let latency_s = local_s + net_latency + cloud_s;
+        let latency_s = local_s + net_latency + queue_s + cloud_s;
         let local_energy = if frac > 0.0 {
-            match proc.kind {
-                ProcKind::Cpu => power::cpu_energy_j(
-                    &proc,
-                    &[Residency { vf_step: 0, busy_s: local_s, idle_s: 0.0 }],
-                ),
-                ProcKind::Gpu => power::gpu_energy_j(
-                    &proc,
-                    Residency { vf_step: 0, busy_s: local_s, idle_s: 0.0 },
-                ),
-                ProcKind::Dsp => power::dsp_energy_j(proc.vf[0].busy_power_w, local_s),
-            }
+            self.local_energy_j(&proc, vf_step, local_s)
         } else {
             0.0
         };
         let energy_est = local_energy + net_energy;
+        // True energy = estimate ± bounded noise, so split arms contribute
+        // to the estimator's MAPE like every other execution path.
+        let energy_true = energy_est * self.truth_noise_factor();
+
+        // Thermal: time-weighted blend of the head's own dissipation and
+        // the radio's duty-cycled TX heat over the remote window — the
+        // frac=1.0 / frac=0.0 extremes degenerate to Simulator::run's
+        // local and remote heat models respectively.
+        let remote_window = latency_s - local_s;
+        let heat_w =
+            (local_energy + tx_power_w * 0.3 * remote_window) / latency_s.max(1e-9);
+        self.advance_thermal(heat_w, latency_s);
+
         Measurement {
             latency_s,
             energy_est_j: energy_est,
-            energy_true_j: energy_est,
+            energy_true_j: energy_true,
             accuracy: nn.accuracy(if frac > 0.0 { precision } else { Precision::Fp32 }),
             remote_failed: false,
         }
@@ -185,12 +228,12 @@ mod tests {
         let mut s = sim(EnvKind::S1NoVariance);
         let nn = by_name("inception_v3").unwrap();
         let ctx = RunContext::default();
-        let full_local = s.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, &ctx);
-        let full_cloud = s.run_split(nn, 0.0, ProcKind::Cpu, Precision::Fp32, &ctx);
+        let full_local = s.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        let full_cloud = s.run_split(nn, 0.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
         // pure-local has no net energy; pure-cloud has little local compute
         assert!(full_local.latency_s > 0.0 && full_cloud.latency_s > 0.0);
         // heavy NN: cloud split cheaper than all-local (strong signal)
-        assert!(full_cloud.energy_true_j < full_local.energy_true_j);
+        assert!(full_cloud.energy_est_j < full_local.energy_est_j);
     }
 
     #[test]
@@ -202,7 +245,7 @@ mod tests {
         let costs: Vec<f64> = SPLIT_POINTS
             .iter()
             .map(|f| {
-                s.run_split(nn, *f, ProcKind::Dsp, Precision::Int8, &ctx).energy_true_j
+                s.run_split(nn, *f, ProcKind::Dsp, Precision::Int8, 0, &ctx).energy_est_j
             })
             .collect();
         let best_mid = costs[1..4].iter().copied().fold(f64::INFINITY, f64::min);
@@ -232,11 +275,11 @@ mod tests {
         );
         let nn = by_name("resnet50").unwrap();
         let ctx = RunContext::default();
-        let m = s.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, &ctx);
+        let m = s.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
         assert!(m.remote_failed, "a split with a WLAN leg fails over a dead link");
         assert_eq!(m.accuracy, 0.0);
         assert!(m.energy_est_j > 0.0, "wasted TX energy is charged");
-        let local = s.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, &ctx);
+        let local = s.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
         assert!(!local.remote_failed, "pure on-device split has no network leg");
     }
 
@@ -247,21 +290,132 @@ mod tests {
         let nn = by_name("resnet50").unwrap();
         let ctx = RunContext::default();
         // pure offload: transmission dominates, weak signal blows it up
-        let e_s = strong.run_split(nn, 0.0, ProcKind::Cpu, Precision::Fp32, &ctx);
-        let e_w = weak.run_split(nn, 0.0, ProcKind::Cpu, Precision::Fp32, &ctx);
+        let e_s = strong.run_split(nn, 0.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        let e_w = weak.run_split(nn, 0.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
         assert!(
-            e_w.energy_true_j > 2.0 * e_s.energy_true_j,
+            e_w.energy_est_j > 2.0 * e_s.energy_est_j,
             "offload: weak {} vs strong {}",
-            e_w.energy_true_j,
-            e_s.energy_true_j
+            e_w.energy_est_j,
+            e_s.energy_est_j
         );
         // mid split: local compute dilutes the ratio but weak still costs more
-        let m_s = strong.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, &ctx);
-        let m_w = weak.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, &ctx);
-        assert!(m_w.energy_true_j > m_s.energy_true_j);
+        let m_s = strong.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        let m_w = weak.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        assert!(m_w.energy_est_j > m_s.energy_est_j);
         // fully local is signal-independent
-        let l_s = strong.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, &ctx);
-        let l_w = weak.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, &ctx);
-        assert!((l_s.energy_true_j - l_w.energy_true_j).abs() < 1e-9);
+        let l_s = strong.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        let l_w = weak.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        assert!((l_s.energy_est_j - l_w.energy_est_j).abs() < 1e-9);
+        // ... and the *noise draws* stayed in lockstep too: both sims made
+        // the same number of draws from the same seed, so the truth ratio
+        // of the fully-local run is bit-identical.
+        let ratio_s = l_s.energy_true_j / l_s.energy_est_j;
+        let ratio_w = l_w.energy_true_j / l_w.energy_est_j;
+        assert_eq!(ratio_s.to_bits(), ratio_w.to_bits());
+    }
+
+    #[test]
+    fn dvfs_step_composes_with_split() {
+        // Regression (the step used to be hard-coded to 0 in both the
+        // latency and the Residency energy accounting): a throttled head
+        // is slower but runs at lower power.
+        let mut s = sim(EnvKind::S1NoVariance);
+        let nn = by_name("inception_v1").unwrap();
+        let ctx = RunContext::default();
+        let fast = s.run_split(nn, 0.75, ProcKind::Cpu, Precision::Fp32, 0, &ctx);
+        s.thermal.reset();
+        let slow = s.run_split(nn, 0.75, ProcKind::Cpu, Precision::Fp32, 20, &ctx);
+        assert!(slow.latency_s > fast.latency_s, "lower V/F step must slow the head");
+        let p_fast = fast.energy_est_j / fast.latency_s;
+        let p_slow = slow.energy_est_j / slow.latency_s;
+        assert!(p_slow < p_fast, "power must drop at the lower V/F point");
+    }
+
+    #[test]
+    fn split_tail_pays_the_cloud_queue() {
+        // Regression: the split cloud leg used to bypass congestion
+        // entirely, making splits look free under a backlogged cloud.
+        let nn = by_name("resnet50").unwrap();
+        let quiet = RunContext::default();
+        let queued = RunContext { remote_queue_s: 0.5, ..Default::default() };
+        let mut a = sim(EnvKind::S1NoVariance);
+        let mut b = sim(EnvKind::S1NoVariance);
+        let ma = a.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, 0, &quiet);
+        let mb = b.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, 0, &queued);
+        assert!((mb.latency_s - ma.latency_s - 0.5).abs() < 1e-9, "queue adds its wait");
+        assert!(mb.energy_est_j > ma.energy_est_j, "waiting burns idle power");
+        // slowdown lands on the tail leg too
+        let slowed = RunContext { compute_factor: 3.0, ..Default::default() };
+        let mut c = sim(EnvKind::S1NoVariance);
+        let mc = c.run_split(nn, 0.5, ProcKind::Cpu, Precision::Fp32, 0, &slowed);
+        assert!(mc.latency_s > ma.latency_s, "cloud slowdown must reach the tail");
+        // a fully-local plan has no cloud leg: the queue is ignored
+        let mut d = sim(EnvKind::S1NoVariance);
+        let mut e = sim(EnvKind::S1NoVariance);
+        let ld = d.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, 0, &quiet);
+        let le = e.run_split(nn, 1.0, ProcKind::Cpu, Precision::Fp32, 0, &queued);
+        assert!((ld.latency_s - le.latency_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_true_energy_carries_estimator_noise() {
+        // Regression: run_split used to report energy_true_j == energy_est_j,
+        // so split arms contributed 0 error to the estimator MAPE.
+        let mut s = sim(EnvKind::S1NoVariance);
+        let nn = by_name("resnet50").unwrap();
+        let ctx = RunContext::default();
+        let mut est = Vec::new();
+        let mut truth = Vec::new();
+        for _ in 0..100 {
+            s.thermal.reset();
+            let m = s.run_split(nn, 0.5, ProcKind::Dsp, Precision::Int8, 0, &ctx);
+            est.push(m.energy_est_j);
+            truth.push(m.energy_true_j);
+        }
+        let mape = crate::util::stats::mape(&est, &truth);
+        assert!(mape > 1.0 && mape < 15.0, "split mape {mape}% (paper: 7.3%)");
+    }
+
+    #[test]
+    fn split_consumes_exactly_one_noise_draw() {
+        // A split (success or dead-WLAN timeout) must advance the RNG by
+        // exactly one draw, like run/run_rejected, so per-device streams
+        // stay in lockstep no matter which plan the policy picks.
+        let nn = by_name("resnet50").unwrap();
+        let ctx = RunContext::default();
+        let mut a = sim(EnvKind::S1NoVariance);
+        let mut b = sim(EnvKind::S1NoVariance);
+        a.run(nn, crate::types::Action::cloud(), &ctx);
+        b.run_split(nn, 0.5, ProcKind::Dsp, Precision::Int8, 0, &ctx);
+        a.thermal.reset();
+        b.thermal.reset();
+        let ma = a.run(nn, crate::types::Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
+        let mb = b.run(nn, crate::types::Action::local(ProcKind::Cpu, Precision::Fp32), &ctx);
+        let ra = ma.energy_true_j / ma.energy_est_j;
+        let rb = mb.energy_true_j / mb.energy_est_j;
+        assert_eq!(ra.to_bits(), rb.to_bits(), "RNG streams must stay in lockstep");
+    }
+
+    #[test]
+    fn run_plan_routes_mono_and_split() {
+        let nn = by_name("resnet50").unwrap();
+        let ctx = RunContext::default();
+        // Mono routes to run() bit-identically.
+        let mono = crate::types::Action::local(ProcKind::Dsp, Precision::Int8);
+        let mut a = sim(EnvKind::S1NoVariance);
+        let mut b = sim(EnvKind::S1NoVariance);
+        let ma = a.run(nn, mono, &ctx);
+        let mb = b.run_plan(nn, mono, &ctx);
+        assert_eq!(ma.latency_s.to_bits(), mb.latency_s.to_bits());
+        assert_eq!(ma.energy_true_j.to_bits(), mb.energy_true_j.to_bits());
+        // At(k) routes to run_split at SPLIT_POINTS[k], honoring vf_step.
+        let mut split = crate::types::Action::split_at(2, ProcKind::Dsp, Precision::Int8);
+        split.vf_step = 1;
+        let mut c = sim(EnvKind::S1NoVariance);
+        let mut d = sim(EnvKind::S1NoVariance);
+        let mc = c.run_plan(nn, split, &ctx);
+        let md = d.run_split(nn, SPLIT_POINTS[2], ProcKind::Dsp, Precision::Int8, 1, &ctx);
+        assert_eq!(mc.latency_s.to_bits(), md.latency_s.to_bits());
+        assert_eq!(mc.energy_true_j.to_bits(), md.energy_true_j.to_bits());
     }
 }

@@ -194,7 +194,7 @@ pub fn run_split(seed: u64, quick: bool) -> Vec<Table> {
             let qos = if nn.s_rc > 0 { 0.100 } else { 0.050 };
             let mut best = (1.0, f64::INFINITY, false);
             for f in SPLIT_POINTS {
-                let m = quiet.run_split(nn, f, ProcKind::Dsp, Precision::Int8, &ctx);
+                let m = quiet.run_split(nn, f, ProcKind::Dsp, Precision::Int8, 0, &ctx);
                 let feasible = m.latency_s < qos;
                 let better = (feasible && !best.2)
                     || (feasible == best.2 && m.energy_true_j < best.1);
@@ -235,6 +235,7 @@ pub fn run_split(seed: u64, quick: bool) -> Vec<Table> {
                 chosen[nn.name],
                 ProcKind::Dsp,
                 Precision::Int8,
+                0,
                 &ctx,
             );
             energy += m.energy_true_j;

@@ -18,6 +18,7 @@ pub mod fig5_interference;
 pub mod fig6_signal;
 pub mod fig7_predictors;
 pub mod fig9_main;
+pub mod partition;
 pub mod scenarios;
 pub mod tables;
 pub mod timeline;
@@ -50,6 +51,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "tab3", about: "NN workloads (Table 3)", run: tables::run_tab3 },
         Experiment { id: "tab4", about: "Execution environments (Table 4)", run: tables::run_tab4 },
         Experiment { id: "scen", about: "Scenario sweep: every registry key (Markov/trace/dead zones)", run: scenarios::run },
+        Experiment { id: "partition", about: "Learned DNN partition point vs monolithic scaling (strong/weak/dead-zone)", run: partition::run },
         Experiment { id: "timeline", about: "Fleet trajectory per telemetry window (flash crowd vs small cloud)", run: timeline::run },
         Experiment { id: "elastic", about: "Fixed vs elastic cloud under a flash crowd (autoscaler + admission)", run: elastic::run },
         Experiment { id: "ablation_hparams", about: "Hyperparameter sensitivity (§5.3)", run: ablations::run_hparams },

@@ -1,0 +1,137 @@
+//! `figure partition` (beyond the paper): partitioned execution as a
+//! first-class action dimension. Compares the online-learned
+//! `neurosurgeon` partition policy against the paper's monolithic
+//! scalers (AutoScale, Opt, always-cloud) and a static offline-profiled
+//! split, across three signal regimes — strong (S1), weak (S4) and the
+//! Markov dead-zone chain. The point the table makes: a learned
+//! partition point tracks the channel, so it keeps the cloud's energy
+//! advantage under strong signal, retreats on-device when shipping the
+//! activation stops paying, and never strands requests in a tunnel the
+//! way a fixed split does.
+
+use crate::configsys::runconfig::Scenario;
+use crate::policy::{FixedTargetPolicy, PolicySpec, ScalingPolicy};
+use crate::types::DeviceId;
+use crate::util::report::{f, pct, Table};
+
+use super::common::{episode_len, named_policy, run_episode_keyed};
+
+/// The signal regimes swept: strong, weak, Markov dead zones.
+const REGIMES: [&str; 3] = ["S1", "S4", "deadzone"];
+
+/// Registry-built policy with the partitioned-execution arms enabled
+/// (Opt then what-ifs the split arms alongside the Mono catalogue).
+fn split_policy(name: &str, dev: DeviceId, seed: u64) -> Box<dyn ScalingPolicy> {
+    let mut spec = PolicySpec::new(dev, seed);
+    spec.splits = true;
+    crate::policy::build(name, &spec).expect("experiment drivers use registered policy names")
+}
+
+/// The offline-profiled static split the §7 contrast argues against.
+fn static_split(dev: DeviceId) -> Box<dyn ScalingPolicy> {
+    let d = crate::device::presets::device(dev);
+    Box::new(FixedTargetPolicy::static_split(crate::policy::action_catalogue_with_splits(
+        &d, true,
+    )))
+}
+
+pub fn run(seed: u64, quick: bool) -> Vec<Table> {
+    let n = episode_len(quick);
+    let dev = DeviceId::Mi8Pro;
+    let mut table = Table::new(
+        "Partitioned execution (Mi8Pro): learned split point vs monolithic scaling",
+        &["scenario", "policy", "ppw", "qos_violation", "net_failures", "split_rate"],
+    );
+    for key in REGIMES {
+        for policy in ["neurosurgeon", "opt", "autoscale", "cloud", "split-static"] {
+            let built: Box<dyn ScalingPolicy> = match policy {
+                "neurosurgeon" => named_policy(policy, dev, seed),
+                "opt" => split_policy(policy, dev, seed),
+                "split-static" => static_split(dev),
+                _ => named_policy(policy, dev, seed),
+            };
+            let m = run_episode_keyed(
+                dev,
+                key,
+                Scenario::NonStreaming,
+                built,
+                vec![],
+                n,
+                0.5,
+                seed,
+            )
+            .expect("every regime key is registered");
+            table.row(vec![
+                key.to_string(),
+                policy.to_string(),
+                f(m.ppw(), 3),
+                pct(m.qos_violation_ratio()),
+                pct(m.remote_failure_ratio()),
+                pct(m.selections().rate("Split")),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::EpisodeMetrics;
+
+    fn episode(policy: &str, key: &str, n: usize, seed: u64) -> EpisodeMetrics {
+        let dev = DeviceId::Mi8Pro;
+        let built: Box<dyn ScalingPolicy> = match policy {
+            "split-static" => static_split(dev),
+            _ => named_policy(policy, dev, seed),
+        };
+        run_episode_keyed(dev, key, Scenario::NonStreaming, built, vec![], n, 0.5, seed)
+            .expect("registered regime key")
+    }
+
+    #[test]
+    fn table_covers_every_regime_and_policy() {
+        let t = run(11, true);
+        let rows = &t[0].rows;
+        assert_eq!(rows.len(), REGIMES.len() * 5);
+        for key in REGIMES {
+            assert!(rows.iter().any(|r| r[0] == key), "missing regime '{key}'");
+        }
+    }
+
+    #[test]
+    fn neurosurgeon_beats_pure_cloud_where_the_link_is_bad() {
+        // Under weak signal and in the dead-zone chain, shipping the whole
+        // input to the cloud burns TX energy (or strands the request);
+        // the learned partition policy must come out ahead on PPW.
+        for key in ["S4", "deadzone"] {
+            let ns = episode("neurosurgeon", key, 400, 5);
+            let cloud = episode("cloud", key, 400, 5);
+            assert!(
+                ns.ppw() > cloud.ppw(),
+                "{key}: neurosurgeon ppw {:.3} must beat cloud {:.3}",
+                ns.ppw(),
+                cloud.ppw()
+            );
+        }
+    }
+
+    #[test]
+    fn neurosurgeon_never_times_out_more_than_the_static_split() {
+        // The static split keeps shipping activations into the tunnel;
+        // the online policy retreats to Mono at the dead-zone floor, so
+        // its timeout rate must not exceed the fixed baseline's.
+        let ns = episode("neurosurgeon", "deadzone", 400, 5);
+        let fixed = episode("split-static", "deadzone", 400, 5);
+        assert!(
+            ns.remote_failure_ratio() <= fixed.remote_failure_ratio(),
+            "neurosurgeon {:.3} vs static split {:.3}",
+            ns.remote_failure_ratio(),
+            fixed.remote_failure_ratio()
+        );
+        assert!(
+            fixed.remote_failure_ratio() > 0.0,
+            "the static split must actually hit the tunnel for the contrast to mean anything"
+        );
+    }
+}

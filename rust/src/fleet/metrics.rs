@@ -291,14 +291,15 @@ impl FleetMetrics {
         &self.selections
     }
 
-    /// Fraction of requests sent to the shared cloud.
+    /// Fraction of requests with a cloud leg: monolithic offloads plus
+    /// split plans (their tail runs on the shared cloud).
     pub fn cloud_rate(&self) -> f64 {
-        self.selections.rate("Cloud")
+        self.selections.rate("Cloud") + self.selections.rate("Split")
     }
 
-    /// Fraction executed on-device (any local bucket).
+    /// Fraction executed fully on-device (any local Mono bucket).
     pub fn local_rate(&self) -> f64 {
-        1.0 - self.selections.rate("Cloud") - self.selections.rate("Connected Edge")
+        1.0 - self.cloud_rate() - self.selections.rate("Connected Edge")
     }
 
     /// Order-sensitive 64-bit digest of the aggregates — equal fingerprints

@@ -93,7 +93,7 @@ use crate::policy::{
     ScalingPolicy,
 };
 use crate::scenario::ScenarioCache;
-use crate::types::{Action, DeviceId, Measurement, Site};
+use crate::types::{Action, DeviceId, Measurement};
 use crate::util::rng::Pcg64;
 use crate::util::stats::LogHistogram;
 
@@ -195,6 +195,12 @@ pub struct FleetConfig {
     /// Registry key of the policy every device runs
     /// (see [`crate::policy::registry::REGISTRY`]).
     pub policy: String,
+    /// Append partitioned-execution arms to every device catalogue
+    /// (see [`crate::policy::action_catalogue_with_splits`]). Off by
+    /// default: catalogue shapes and run fingerprints are then
+    /// bit-identical to the pre-partition fleet. Split-native policies
+    /// (`neurosurgeon`) get split arms regardless of this flag.
+    pub split_points: bool,
     pub arrival: ArrivalKind,
     /// Mean request rate per device (Hz).
     pub rate_hz: f64,
@@ -228,6 +234,7 @@ impl Default for FleetConfig {
             accuracy_target: 0.5,
             agent: AgentParams::default(),
             policy: "autoscale".to_string(),
+            split_points: false,
             arrival: ArrivalKind::Poisson,
             rate_hz: 1.0,
             epoch_s: 1.0,
@@ -583,34 +590,39 @@ fn serve_request(
         }
     };
     let action = decision.action;
+    // Any plan with a cloud leg — monolithic offload or split tail —
+    // pays the congestion snapshot and counts toward cloud load.
+    let uses_cloud = action.uses_cloud();
 
     // Physics: true interference; shared-cloud congestion priced in.
     let ctx = RunContext {
         interference: true_inter,
         thermal_cap: 1.0, // simulator applies its own thermal state
-        compute_factor: if action.site == Site::Cloud { cloud.slowdown } else { 1.0 },
-        remote_queue_s: if action.site == Site::Cloud { cloud.wait_s() } else { 0.0 },
+        compute_factor: if uses_cloud { cloud.slowdown } else { 1.0 },
+        remote_queue_s: if uses_cloud { cloud.wait_s() } else { 0.0 },
     };
     // Admission control: during a rejecting epoch every cloud-bound
-    // request fast-fails at the backend door instead of running. The
-    // reject path draws exactly one truth-noise sample (like `run`), so
-    // RNG streams never desynchronize between admitted and rejected
-    // epochs.
-    let rejected = action.site == Site::Cloud && !view.admitting;
-    let m = if rejected { env.sim.run_rejected(action) } else { env.sim.run(nn, action, &ctx) };
+    // request — including a split plan's activation leg — fast-fails at
+    // the backend door instead of running. The reject path draws exactly
+    // one truth-noise sample (like `run`), so RNG streams never
+    // desynchronize between admitted and rejected epochs.
+    let rejected = uses_cloud && !view.admitting;
+    let m =
+        if rejected { env.sim.run_rejected(action) } else { env.sim.run_plan(nn, action, &ctx) };
 
     // A request that timed out over a dead link never reached the
     // backend, so it adds no cloud load. The per-epoch tally is
     // single-purpose by construction: an epoch is either admitting
     // (tally = admitted jobs + MACs) or rejecting (tally = refusal
     // count, MACs stay zero) — the main thread knows which from the
-    // frozen view, so `DeviceClock` needs no extra field.
-    if action.site == Site::Cloud {
+    // frozen view, so `DeviceClock` needs no extra field. Split plans
+    // submit only their tail's share of the MACs.
+    if uses_cloud {
         if rejected {
             clock.tally_jobs += 1;
         } else if !m.remote_failed {
             clock.tally_jobs += 1;
-            clock.tally_macs_m += nn.macs_m;
+            clock.tally_macs_m += nn.macs_m * crate::exec::split::remote_mac_share(action.split);
         }
     }
 
@@ -844,6 +856,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         spec.scope = CatalogueScope::Compact;
         spec.scenario = cfg.scenario;
         spec.accuracy_target = cfg.accuracy_target;
+        spec.splits = cfg.split_points;
         spec
     };
 
@@ -1296,6 +1309,32 @@ mod tests {
                 a.metrics.fingerprint(),
                 b.metrics.fingerprint(),
                 "plan-mode shard variance for {policy}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_enabled_fleet_is_reproducible_and_shard_invariant() {
+        // Partition arms in the catalogue (and a split-native policy)
+        // must not break the fleet's determinism contracts.
+        for policy in ["autoscale", "neurosurgeon"] {
+            let mut cfg = small_cfg();
+            cfg.policy = policy.to_string();
+            cfg.split_points = true;
+            cfg.shards = 1;
+            let a = run_fleet(&cfg).unwrap();
+            let again = run_fleet(&cfg).unwrap();
+            assert_eq!(
+                a.metrics.fingerprint(),
+                again.metrics.fingerprint(),
+                "seed reproducibility for {policy} with splits"
+            );
+            cfg.shards = 4;
+            let b = run_fleet(&cfg).unwrap();
+            assert_eq!(
+                a.metrics.fingerprint(),
+                b.metrics.fingerprint(),
+                "shard invariance for {policy} with splits"
             );
         }
     }

@@ -52,6 +52,23 @@
 //! bandit`. To add a policy, implement the trait and register a builder —
 //! see the [`policy`] module docs for the two-step recipe.
 //!
+//! ## Partitioned execution
+//!
+//! An [`Action`] is a full execution *plan*: processor, DVFS step,
+//! precision **and** a [`types::SplitPoint`] — `Mono` (run everything at
+//! `site`, the historical semantics) or `At(k)`, which runs the head of
+//! the network on the chosen local processor, ships the intermediate
+//! activation over the WLAN, and finishes the tail on the shared cloud
+//! ([`exec::split`]). Split plans price the cloud's epoch queue wait and
+//! load slowdown on the tail leg, fold their remote MAC share into the
+//! shared backlog, and fail at the transfer point inside a dead zone.
+//! Split arms are opt-in (`--split-points`, [`policy::PolicySpec`]
+//! `splits`); the default catalogue — and every fingerprint — is
+//! bit-identical to the monolithic build. The split-native
+//! [`policy::NeurosurgeonPolicy`] (`--policy neurosurgeon`) learns the
+//! partition point online from the decision context; `figure partition`
+//! compares it against monolithic scaling and a static middle split.
+//!
 //! ## Scenario engine
 //!
 //! Execution environments live behind the same open pattern ([`scenario`]):

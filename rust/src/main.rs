@@ -4,14 +4,15 @@
 //!   figure <id> [--seed N] [--full]   regenerate one paper figure/table
 //!   all [--seed N] [--full]           regenerate every figure/table
 //!   serve [--device D] [--env E] [--scenario-env K|all] [--requests N]
-//!         [--policy P] [--seed N] [--runtime]
+//!         [--policy P] [--split-points] [--seed N] [--runtime]
 //!         [--cloud-capacity MMACS] [--batch-window S] [--max-batch N]
 //!         [--stream-eff F] [--max-backlog S]
 //!         [--telemetry OUT.jsonl] [--telemetry-window S]
 //!         [--trace OUT.jsonl] [--trace-sample N]
 //!                                     run the serving loop once and report
 //!   fleet [--devices N] [--requests N] [--shards N] [--seed N] [--env E]
-//!         [--scenario-env K|mix|all] [--policy P] [--arrival A] [--rate HZ]
+//!         [--scenario-env K|mix|all] [--policy P] [--split-points]
+//!         [--arrival A] [--rate HZ]
 //!         [--epoch S] [--config RUN.toml]
 //!         [--cloud-capacity MMACS] [--batch-window S] [--max-batch N]
 //!         [--stream-eff F] [--max-backlog S]
@@ -220,6 +221,7 @@ fn serve_episode(
     scenario_env: Option<&str>,
     seed: u64,
     policy_key: &str,
+    split_points: bool,
     requests: usize,
     runtime: bool,
     obs: Option<&ObsConfig>,
@@ -242,6 +244,9 @@ fn serve_episode(
     let mut spec = PolicySpec::new(device, seed);
     spec.scenario = run_cfg.scenario;
     spec.accuracy_target = run_cfg.accuracy_target;
+    // `--split-points` appends the partitioned-execution arms; split-native
+    // policies (neurosurgeon) force them on in their own builder.
+    spec.splits = split_points;
     let policy = autoscale::policy::build(policy_key, &spec)?;
 
     // `--scenario-env` (any scenario-registry key, or `trace:<path>`)
@@ -358,7 +363,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--trace-sample",
                     "--trace-cap",
                 ],
-                &["--runtime"],
+                &["--runtime", "--split-points"],
                 0,
             )?;
             let seed: u64 = cli.num("--seed", 7)?;
@@ -366,6 +371,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let env = parse_env(cli.value("--env").unwrap_or("S1"))?;
             let requests: usize = cli.num("--requests", 200)?;
             let policy_key = cli.value("--policy").unwrap_or("autoscale");
+            let split_points = cli.switches.contains("--split-points");
             let runtime = cli.switches.contains("--runtime");
             let (ocfg, timeline_path, trace_path) = parse_obs(&cli)?;
             // Any cloud flag attaches the congestion-priced cloud model;
@@ -398,7 +404,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 println!("== serve smoke: every registered scenario ({requests} requests each) ==");
                 for key in autoscale::scenario::names() {
                     let (name, _, m, _) = serve_episode(
-                        device, env, Some(key), seed, policy_key, requests, false, None, cloud,
+                        device,
+                        env,
+                        Some(key),
+                        seed,
+                        policy_key,
+                        split_points,
+                        requests,
+                        false,
+                        None,
+                        cloud,
                     )?;
                     println!(
                         "{key:12} {name:16} PPW {:8.3} inf/J  lat {:7.2} ms  \
@@ -418,6 +433,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 cli.value("--scenario-env"),
                 seed,
                 policy_key,
+                split_points,
                 requests,
                 runtime,
                 Some(&ocfg),
@@ -497,7 +513,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--trace-sample",
                     "--trace-cap",
                 ],
-                &["--progress"],
+                &["--progress", "--split-points"],
                 0,
             )?;
             let (ocfg, timeline_path, trace_path) = parse_obs(&cli)?;
@@ -562,6 +578,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 // Any registry key; FleetConfig::validate rejects unknown
                 // names with the key list straight from the registry.
                 policy: cli.value("--policy").unwrap_or("autoscale").to_string(),
+                split_points: cli.switches.contains("--split-points"),
                 arrival: ArrivalKind::from_name(arrival_name).ok_or_else(|| {
                     anyhow::anyhow!("unknown arrival '{arrival_name}' (poisson|diurnal|bursty)")
                 })?,
@@ -866,6 +883,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "autoscale — edge-inference execution scaling (AutoScale reproduction)\n\
                  usage: autoscale <figure|all|serve|fleet|telemetry-check|bench|train|scenarios|runtime-check|list> [flags]\n\
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
+                 \x20             --split-points (append partitioned-execution arms to the catalogue)\n\
                  \x20             --scenario-env K (see `autoscale scenarios`; `all` = batch smoke)\n\
                  serve: --runtime\n\
                  \x20       --cloud-capacity MMACS --batch-window S --max-batch N --stream-eff F\n\

@@ -32,6 +32,9 @@ pub const MAX_TIMELINE_WINDOWS: usize = 4096;
 pub(crate) const CLOUD_BUCKET: usize = 5;
 /// Index of the Connected Edge bucket in [`SelectionStats::BUCKETS`].
 pub(crate) const CONNECTED_BUCKET: usize = 6;
+/// Index of the Split (partitioned execution) bucket in
+/// [`SelectionStats::BUCKETS`].
+pub(crate) const SPLIT_BUCKET: usize = 7;
 
 /// Machine-friendly slugs for the decision buckets, index-aligned with
 /// [`SelectionStats::BUCKETS`] (pinned by a unit test below). These are
@@ -44,6 +47,7 @@ pub const BUCKET_SLUGS: [&str; SelectionStats::BUCKETS.len()] = [
     "edge_dsp",
     "cloud",
     "connected_edge",
+    "split",
 ];
 
 /// One window's additive accumulators. `Copy` and histogram-free so a
@@ -86,14 +90,18 @@ pub struct WindowAcc {
 }
 
 impl WindowAcc {
-    /// Fraction of the window's decisions that went to the shared cloud.
+    /// Fraction of the window's decisions that put traffic on the shared
+    /// cloud: monolithic offloads plus partitioned (split) plans, whose
+    /// tail runs there.
     pub fn cloud_share(&self) -> f64 {
-        self.decisions[CLOUD_BUCKET] as f64 / self.requests.max(1) as f64
+        (self.decisions[CLOUD_BUCKET] + self.decisions[SPLIT_BUCKET]) as f64
+            / self.requests.max(1) as f64
     }
 
-    /// Fraction executed on-device or on the locally connected edge.
+    /// Fraction executed entirely on-device or on the locally connected
+    /// edge (split plans have a cloud leg, so they don't count).
     pub fn local_share(&self) -> f64 {
-        let remote = self.decisions[CLOUD_BUCKET];
+        let remote = self.decisions[CLOUD_BUCKET] + self.decisions[SPLIT_BUCKET];
         (self.requests - remote.min(self.requests)) as f64 / self.requests.max(1) as f64
     }
 
@@ -501,22 +509,16 @@ mod tests {
         // The slug order is load-bearing for the JSONL schema: pin it to
         // the human-readable bucket list it mirrors.
         assert_eq!(BUCKET_SLUGS.len(), SelectionStats::BUCKETS.len());
-        let cloud = Action {
-            site: Site::Cloud,
-            proc: ProcKind::Gpu,
-            vf_step: 0,
-            precision: Precision::Fp32,
-        };
+        let cloud = Action::new(Site::Cloud, ProcKind::Gpu, 0, Precision::Fp32);
         assert_eq!(SelectionStats::bucket_index(cloud), CLOUD_BUCKET);
-        let connected = Action {
-            site: Site::ConnectedEdge,
-            proc: ProcKind::Gpu,
-            vf_step: 0,
-            precision: Precision::Fp32,
-        };
+        let connected =
+            Action::new(Site::ConnectedEdge, ProcKind::Gpu, 0, Precision::Fp32);
         assert_eq!(SelectionStats::bucket_index(connected), CONNECTED_BUCKET);
+        let split = Action::split_at(2, ProcKind::Dsp, Precision::Int8);
+        assert_eq!(SelectionStats::bucket_index(split), SPLIT_BUCKET);
         assert_eq!(BUCKET_SLUGS[CLOUD_BUCKET], "cloud");
         assert_eq!(BUCKET_SLUGS[CONNECTED_BUCKET], "connected_edge");
+        assert_eq!(BUCKET_SLUGS[SPLIT_BUCKET], "split");
     }
 
     #[test]

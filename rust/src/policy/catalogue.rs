@@ -1,7 +1,12 @@
 //! Action-catalogue construction: the action spaces policies decide over.
 
 use crate::device::processor::Device;
-use crate::types::{Action, Site};
+use crate::types::{Action, Precision, ProcKind, Site};
+
+/// Interior indices of [`crate::exec::split::SPLIT_POINTS`] — the
+/// partition points that actually split the network (0 and 4 are the
+/// pure-local / pure-cloud extremes the Mono catalogue already covers).
+pub const INTERIOR_SPLITS: [u8; 3] = [1, 2, 3];
 
 /// Build the action catalogue for a device (§5.3 "Actions"): every local
 /// (processor, V/F step, supported precision) plus the two scale-out
@@ -37,6 +42,53 @@ pub fn compact_action_catalogue(dev: &Device) -> Vec<Action> {
     out
 }
 
+/// [`action_catalogue`] plus (optionally) the partitioned-execution arms:
+/// every interior split point crossed with each max-frequency
+/// (processor, precision) head combination. The split arms are appended
+/// strictly *after* the Mono catalogue, so with `splits == false` the
+/// result is bit-identical to [`action_catalogue`] — existing Q-table
+/// shapes and fingerprints don't move unless a policy opts in.
+pub fn action_catalogue_with_splits(dev: &Device, splits: bool) -> Vec<Action> {
+    let mut out = action_catalogue(dev);
+    if splits {
+        for &k in &INTERIOR_SPLITS {
+            for p in &dev.processors {
+                for &prec in &p.precisions {
+                    out.push(Action::split_at(k, p.kind, prec));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`compact_action_catalogue`] plus (optionally) one split arm per
+/// interior point, using the device's best head processor — the compact
+/// catalogue trades coverage for Q-table size, and the head processor is
+/// the device's dominant local target (DSP INT8 where present, else GPU
+/// FP16, else CPU FP32).
+pub fn compact_action_catalogue_with_splits(dev: &Device, splits: bool) -> Vec<Action> {
+    let mut out = compact_action_catalogue(dev);
+    if splits {
+        let (proc, prec) = best_split_head(dev);
+        for &k in &INTERIOR_SPLITS {
+            out.push(Action::split_at(k, proc, prec));
+        }
+    }
+    out
+}
+
+/// The head (processor, precision) a compact split arm runs at.
+pub(crate) fn best_split_head(dev: &Device) -> (ProcKind, Precision) {
+    if dev.has(ProcKind::Dsp) {
+        (ProcKind::Dsp, Precision::Int8)
+    } else if dev.has(ProcKind::Gpu) {
+        (ProcKind::Gpu, Precision::Fp16)
+    } else {
+        (ProcKind::Cpu, Precision::Fp32)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +122,45 @@ mod tests {
         // strict subset of the full catalogue
         let full = action_catalogue(&dev);
         assert!(acts.iter().all(|a| full.contains(a)));
+    }
+
+    #[test]
+    fn split_flag_off_is_bit_identical_to_the_default_catalogues() {
+        for id in [DeviceId::Mi8Pro, DeviceId::GalaxyS10e, DeviceId::MotoXForce] {
+            let dev = device(id);
+            assert_eq!(action_catalogue_with_splits(&dev, false), action_catalogue(&dev));
+            assert_eq!(
+                compact_action_catalogue_with_splits(&dev, false),
+                compact_action_catalogue(&dev)
+            );
+        }
+    }
+
+    #[test]
+    fn split_arms_are_appended_after_the_mono_prefix() {
+        let dev = device(DeviceId::Mi8Pro);
+        let base = action_catalogue(&dev);
+        let full = action_catalogue_with_splits(&dev, true);
+        // Mono catalogue is an untouched prefix; only split arms follow.
+        assert_eq!(&full[..base.len()], &base[..]);
+        // 3 interior points x 5 max-freq (proc, precision) pairs
+        assert_eq!(full.len(), base.len() + 3 * 5);
+        assert!(full[base.len()..].iter().all(|a| a.split.is_split()));
+        assert!(full[base.len()..].iter().all(|a| a.vf_step == 0));
+
+        let cbase = compact_action_catalogue(&dev);
+        let compact = compact_action_catalogue_with_splits(&dev, true);
+        assert_eq!(&compact[..cbase.len()], &cbase[..]);
+        assert_eq!(compact.len(), cbase.len() + 3); // one arm per interior point
+        // Mi8Pro has a DSP: compact split heads run on it at INT8.
+        assert!(compact[cbase.len()..]
+            .iter()
+            .all(|a| a.proc == ProcKind::Dsp && a.split.is_split()));
+        // all unique
+        let mut dedup = full.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), full.len());
     }
 
     #[test]

@@ -55,6 +55,23 @@ impl FixedTargetPolicy {
             choose: |_, _| Action::connected_edge(),
         }
     }
+
+    /// Static split-computing baseline (§7): always partition at the
+    /// middle split point with the head on the device's dominant local
+    /// processor — the offline-profiled Neurosurgeon-style plan the
+    /// online learner is contrasted against. The catalogue must include
+    /// the split arms (build it with
+    /// [`super::action_catalogue_with_splits`]).
+    pub fn static_split(catalogue: Vec<Action>) -> FixedTargetPolicy {
+        FixedTargetPolicy {
+            name: "Split(static)",
+            catalogue,
+            choose: |dev, _| {
+                let (proc, prec) = super::catalogue::best_split_head(dev);
+                Action::split_at(2, proc, prec)
+            },
+        }
+    }
 }
 
 impl ScalingPolicy for FixedTargetPolicy {

@@ -20,6 +20,13 @@
 //! policies what-if the catalogue on the ctx's shadow simulator instead of
 //! forcing dispatch logic to live inside the hosts.
 //!
+//! Actions are execution *plans*: besides site/processor/DVFS/precision
+//! they carry a [`crate::types::SplitPoint`] partition dimension. The
+//! split arms are appended to a catalogue only when
+//! [`PolicySpec::splits`] opts in (or the policy is split-native, like
+//! [`neurosurgeon`]), so default action spaces are bit-identical to the
+//! pre-partition ones.
+//!
 //! ## Adding a policy
 //!
 //! 1. Implement [`ScalingPolicy`] (see [`hysteresis`] or [`bandit`] for a
@@ -34,6 +41,7 @@ pub mod bandit;
 pub mod catalogue;
 pub mod fixed;
 pub mod hysteresis;
+pub mod neurosurgeon;
 pub mod oracle;
 pub mod predictors;
 pub mod registry;
@@ -46,15 +54,21 @@ use crate::nn::zoo::NnDesc;
 use crate::types::Action;
 
 pub use bandit::BanditPolicy;
-pub use catalogue::{action_catalogue, compact_action_catalogue};
+pub use catalogue::{
+    action_catalogue, action_catalogue_with_splits, compact_action_catalogue,
+    compact_action_catalogue_with_splits,
+};
 pub use fixed::{edge_best_action, FixedTargetPolicy};
 pub use hysteresis::HysteresisPolicy;
+pub use neurosurgeon::NeurosurgeonPolicy;
 pub use oracle::{oracle_best_action, OptPolicy};
 pub use predictors::{
     collect_dataset, features, fit_classifier, fit_regression, ClassifierPolicy, ClsModel,
     RegModel, RegressionPolicy, Sample,
 };
-pub use registry::{build, is_known, names, CatalogueScope, PolicySpec, PrototypeArena, REGISTRY};
+pub use registry::{
+    build, is_known, names, wants_splits, CatalogueScope, PolicySpec, PrototypeArena, REGISTRY,
+};
 pub use rl::AutoScalePolicy;
 
 /// Everything a policy may consult for one decision. The hosts (server,

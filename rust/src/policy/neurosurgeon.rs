@@ -1,0 +1,375 @@
+//! Online-learned DNN partitioning — an *Autodidactic Neurosurgeon*-class
+//! policy (PAPERS.md, arXiv 2102.02638): the partition point is picked per
+//! request by an online linear-contextual regressor, with no offline
+//! profiling stage.
+//!
+//! Where [`super::bandit::BanditPolicy`] keeps one weight vector *per arm*
+//! over the raw Table-1 observables, this policy keeps ONE shared
+//! regressor over *plan-aware* features — split activation size, remote
+//! share, WLAN signal, cloud congestion, NN depth/MACs — so what it learns
+//! about one partition point generalizes to every other plan immediately
+//! (the arms differ only through their features). Exploration is
+//! optimism-driven (a LinUCB-style per-arm bonus that decays with pulls)
+//! plus a small seeded ε, and a hard guard retreats to Mono on-device
+//! plans when the WLAN reads dead or the cloud is rejecting — the
+//! half-shipped-activation-hits-a-tunnel case static split tables fumble.
+
+use crate::agent::state::StateObs;
+use crate::exec::split::{activation_kb, SPLIT_POINTS};
+use crate::nn::zoo::NnDesc;
+use crate::types::{Action, Site, SplitPoint};
+use crate::util::rng::Pcg64;
+
+use super::{CloudCtx, Decision, DecisionCtx, Feedback, ScalingPolicy};
+
+/// Feature count: plan-aware features plus a bias term.
+const NF: usize = 10;
+
+/// Below this WLAN RSSI the link is presumed dead (the simulator's dead
+/// zones sit at the −95 dBm floor): any plan with a cloud leg would time
+/// out half-shipped, so the policy retreats to Mono on-device plans.
+pub const DEAD_ZONE_RETREAT_DBM: f64 = -90.0;
+
+/// Fraction of the network a plan executes on-device.
+fn plan_frac(a: &Action) -> f64 {
+    match a.split {
+        SplitPoint::At(k) => SPLIT_POINTS[(k as usize).min(SPLIT_POINTS.len() - 1)],
+        SplitPoint::Mono => {
+            if a.site == Site::Local {
+                1.0
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Plan-aware context: what *this* plan would ship, over *this* link,
+/// into *this* cloud, for *this* network. Scaled to roughly [0, 1].
+fn plan_features(a: &Action, nn: &NnDesc, obs: &StateObs, cloud: &CloudCtx) -> [f64; NF] {
+    let frac = plan_frac(a);
+    let remote_share = 1.0 - frac;
+    // Bytes the plan puts on the air: the activation at its split point
+    // (Mono cloud ships the raw input; Mono local ships nothing).
+    let ship_kb = if remote_share > 0.0 { activation_kb(nn, frac) } else { 0.0 };
+    let signal = (obs.rssi_wlan + 100.0) / 50.0;
+    [
+        remote_share,
+        ship_kb / 512.0,
+        // shipping cost interaction: big activations hurt most on weak links
+        (ship_kb / 512.0) * (1.0 - signal),
+        signal,
+        cloud.queue_wait_s.min(2.0) / 2.0,
+        (cloud.slowdown - 1.0).min(4.0) / 4.0,
+        (obs.s_conv + obs.s_fc + obs.s_rc) as f64 / 100.0,
+        obs.s_mac_m / 6000.0,
+        obs.co_cpu / 100.0,
+        1.0,
+    ]
+}
+
+fn dot(w: &[f64; NF], x: &[f64; NF]) -> f64 {
+    let mut acc = 0.0;
+    for k in 0..NF {
+        acc += w[k] * x[k];
+    }
+    acc
+}
+
+/// Online linear-contextual partition-point policy.
+pub struct NeurosurgeonPolicy {
+    catalogue: Vec<Action>,
+    /// ONE shared reward regressor over plan-aware features.
+    w: [f64; NF],
+    /// Per-arm pull counts, for the optimism bonus.
+    pulls: Vec<u64>,
+    /// Optimism scale: bonus = alpha / sqrt(1 + pulls).
+    alpha: f64,
+    learning_rate: f64,
+    epsilon: f64,
+    rng: Pcg64,
+    /// Features of the most recent decision (consumed by `feedback`).
+    last_x: [f64; NF],
+}
+
+impl NeurosurgeonPolicy {
+    pub fn new(catalogue: Vec<Action>, seed: u64) -> NeurosurgeonPolicy {
+        NeurosurgeonPolicy::with_params(catalogue, 0.3, 0.1, 0.05, seed)
+    }
+
+    pub fn with_params(
+        catalogue: Vec<Action>,
+        alpha: f64,
+        learning_rate: f64,
+        epsilon: f64,
+        seed: u64,
+    ) -> NeurosurgeonPolicy {
+        assert!(!catalogue.is_empty());
+        let n = catalogue.len();
+        NeurosurgeonPolicy {
+            catalogue,
+            w: [0.0; NF],
+            pulls: vec![0; n],
+            alpha,
+            learning_rate,
+            epsilon,
+            rng: Pcg64::with_stream(seed, 31),
+            last_x: [0.0; NF],
+        }
+    }
+
+    /// One regressor step toward a realized reward (exposed for tests).
+    pub(crate) fn sgd_step(&mut self, x: &[f64; NF], reward: f64) {
+        let err = reward - dot(&self.w, x);
+        for k in 0..NF {
+            self.w[k] += self.learning_rate * err * x[k];
+        }
+    }
+
+    /// Candidate arm indices for this request. While the WLAN reads dead
+    /// or the cloud is rejecting, every plan with a cloud leg is off the
+    /// table — the policy retreats to Mono on-device plans rather than
+    /// paying a timeout on a half-shipped activation.
+    fn candidates(&self, obs: &StateObs, cloud: &CloudCtx) -> Vec<usize> {
+        let avoid_cloud =
+            obs.rssi_wlan <= DEAD_ZONE_RETREAT_DBM || !cloud.admitting;
+        let mut out: Vec<usize> = (0..self.catalogue.len())
+            .filter(|&i| !(avoid_cloud && self.catalogue[i].uses_cloud()))
+            .collect();
+        if out.is_empty() {
+            // Degenerate catalogue (cloud-only): fall back to everything.
+            out = (0..self.catalogue.len()).collect();
+        }
+        out
+    }
+
+    /// Resident size of the learner state, for fleet-memory comparisons.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<[f64; NF]>() + self.pulls.len() * std::mem::size_of::<u64>()
+    }
+}
+
+impl ScalingPolicy for NeurosurgeonPolicy {
+    fn name(&self) -> &'static str {
+        "Neurosurgeon(online)"
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Decision {
+        let candidates = self.candidates(ctx.obs, &ctx.cloud);
+        let catalogue_idx = if self.rng.chance(self.epsilon) {
+            candidates[self.rng.below(candidates.len())]
+        } else {
+            // Optimistic score: predicted reward plus a per-arm bonus that
+            // decays as the arm accumulates pulls (ties → lower index).
+            let mut best = candidates[0];
+            let mut best_v = f64::NEG_INFINITY;
+            for &i in &candidates {
+                let x = plan_features(&self.catalogue[i], ctx.nn, ctx.obs, &ctx.cloud);
+                let v = dot(&self.w, &x)
+                    + self.alpha / (1.0 + self.pulls[i] as f64).sqrt();
+                if v > best_v {
+                    best = i;
+                    best_v = v;
+                }
+            }
+            best
+        };
+        self.pulls[catalogue_idx] += 1;
+        self.last_x =
+            plan_features(&self.catalogue[catalogue_idx], ctx.nn, ctx.obs, &ctx.cloud);
+        Decision { action: self.catalogue[catalogue_idx], catalogue_idx }
+    }
+
+    fn feedback(&mut self, fb: &Feedback) {
+        // The shared regressor learns from whichever plan executed,
+        // against the features stored by the most recent `decide` (the
+        // trait contract guarantees decide/feedback alternate).
+        let x = self.last_x;
+        self.sgd_step(&x, fb.reward);
+    }
+
+    fn is_learning(&self) -> bool {
+        true
+    }
+
+    fn catalogue(&self) -> &[Action] {
+        &self.catalogue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::state::State;
+    use crate::configsys::runconfig::EnvKind;
+    use crate::coordinator::envs::Environment;
+    use crate::nn::zoo::by_name;
+    use crate::types::{DeviceId, Precision, ProcKind};
+
+    fn arms() -> Vec<Action> {
+        vec![
+            Action::local(ProcKind::Cpu, Precision::Fp32),
+            Action::split_at(2, ProcKind::Dsp, Precision::Int8),
+            Action::cloud(),
+        ]
+    }
+
+    fn obs_with_rssi(rssi: f64) -> StateObs {
+        StateObs::from_parts(
+            by_name("resnet50").unwrap(),
+            Default::default(),
+            rssi,
+            -55.0,
+        )
+    }
+
+    fn ctx_for<'a>(
+        obs: &'a StateObs,
+        catalogue: &'a [Action],
+        env: &'a Environment,
+        cloud: CloudCtx,
+    ) -> DecisionCtx<'a> {
+        DecisionCtx {
+            obs,
+            state: State::discretize(obs),
+            nn: by_name("resnet50").unwrap(),
+            qos_s: 0.1,
+            accuracy_target: 0.5,
+            catalogue,
+            sim: &env.sim,
+            cloud,
+        }
+    }
+
+    #[test]
+    fn sgd_step_matches_the_update_rule() {
+        let mut p = NeurosurgeonPolicy::with_params(arms(), 0.0, 0.5, 0.0, 1);
+        let mut x = [0.0; NF];
+        x[0] = 1.0;
+        x[NF - 1] = 1.0;
+        // w = 0: prediction 0, error = reward, step = lr * reward * x
+        p.sgd_step(&x, 1.0);
+        assert_eq!(p.w[0], 0.5);
+        assert_eq!(p.w[NF - 1], 0.5);
+        assert_eq!(p.w[1], 0.0, "untouched features stay zero");
+        // second step: prediction = 1.0, error = 0 → no movement
+        p.sgd_step(&x, 1.0);
+        assert_eq!(p.w[0], 0.5);
+        // repeated steps converge toward the target on these features
+        for _ in 0..100 {
+            p.sgd_step(&x, 2.0);
+        }
+        assert!((dot(&p.w, &x) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn learns_signal_dependent_partitioning() {
+        // Synthetic task: under strong signal the split arm pays off,
+        // under weak signal the local arm does. The shared regressor must
+        // separate them through the shipping-cost features alone.
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 3);
+        let catalogue = arms();
+        let mut p = NeurosurgeonPolicy::with_params(catalogue.clone(), 0.3, 0.1, 0.05, 7);
+        for i in 0..600 {
+            let strong = i % 2 == 0;
+            let obs = obs_with_rssi(if strong { -55.0 } else { -85.0 });
+            let ctx = ctx_for(&obs, &catalogue, &env, CloudCtx::default());
+            let d = p.decide(&ctx);
+            let reward = match (strong, d.action.split.is_split(), d.action.site) {
+                (true, true, _) => 1.0,
+                (false, false, Site::Local) => 1.0,
+                _ => 0.0,
+            };
+            p.feedback(&Feedback {
+                state: ctx.state,
+                next_state: ctx.state,
+                catalogue_idx: d.catalogue_idx,
+                reward,
+            });
+        }
+        // Greedy choices (ε and optimism aside) now depend on the signal:
+        // count the last 100 decisions per regime.
+        let mut split_strong = 0;
+        let mut local_weak = 0;
+        for i in 0..100 {
+            let strong = i % 2 == 0;
+            let obs = obs_with_rssi(if strong { -55.0 } else { -85.0 });
+            let ctx = ctx_for(&obs, &catalogue, &env, CloudCtx::default());
+            let d = p.decide(&ctx);
+            if strong && d.action.split.is_split() {
+                split_strong += 1;
+            }
+            if !strong && !d.action.uses_cloud() {
+                local_weak += 1;
+            }
+        }
+        assert!(split_strong > 35, "strong signal should pick the split: {split_strong}/50");
+        assert!(local_weak > 35, "weak signal should retreat local: {local_weak}/50");
+    }
+
+    #[test]
+    fn dead_zone_retreats_to_mono_local() {
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 5);
+        let catalogue = arms();
+        let mut p = NeurosurgeonPolicy::new(catalogue.clone(), 11);
+        // Teach it to love the split arm first.
+        for _ in 0..200 {
+            let obs = obs_with_rssi(-55.0);
+            let ctx = ctx_for(&obs, &catalogue, &env, CloudCtx::default());
+            let d = p.decide(&ctx);
+            let reward = if d.action.split.is_split() { 1.0 } else { 0.0 };
+            p.feedback(&Feedback {
+                state: ctx.state,
+                next_state: ctx.state,
+                catalogue_idx: d.catalogue_idx,
+                reward,
+            });
+        }
+        // A dead-zone reading must force Mono local — every time, even
+        // through the ε-exploration branch.
+        for _ in 0..100 {
+            let obs = obs_with_rssi(-95.0);
+            let ctx = ctx_for(&obs, &catalogue, &env, CloudCtx::default());
+            let d = p.decide(&ctx);
+            assert!(
+                !d.action.uses_cloud(),
+                "dead WLAN must retreat to Mono local, got {}",
+                d.action
+            );
+        }
+        // The same retreat applies while the cloud is rejecting.
+        let obs = obs_with_rssi(-55.0);
+        let rejecting = CloudCtx { admitting: false, ..Default::default() };
+        for _ in 0..50 {
+            let ctx = ctx_for(&obs, &catalogue, &env, rejecting);
+            assert!(!p.decide(&ctx).action.uses_cloud());
+        }
+    }
+
+    #[test]
+    fn plan_features_reflect_the_split_point() {
+        let nn = by_name("resnet50").unwrap();
+        let obs = obs_with_rssi(-55.0);
+        let cloud = CloudCtx::default();
+        let local = plan_features(&Action::local(ProcKind::Cpu, Precision::Fp32), nn, &obs, &cloud);
+        let split = plan_features(
+            &Action::split_at(3, ProcKind::Dsp, Precision::Int8),
+            nn,
+            &obs,
+            &cloud,
+        );
+        let offload = plan_features(&Action::cloud(), nn, &obs, &cloud);
+        assert_eq!(local[0], 0.0, "Mono local ships nothing");
+        assert_eq!(local[1], 0.0);
+        assert!(split[0] > 0.0 && split[0] < 1.0, "interior split: partial remote share");
+        assert_eq!(offload[0], 1.0, "Mono cloud is a full offload");
+        // late split ships the small late activation, not the raw input
+        assert!(split[1] < offload[1], "split {} vs offload {}", split[1], offload[1]);
+    }
+
+    #[test]
+    fn memory_is_fleet_scale_tiny() {
+        let p = NeurosurgeonPolicy::new(arms(), 0);
+        assert!(p.memory_bytes() < 1024);
+    }
+}

@@ -28,9 +28,10 @@ pub fn oracle_best_action(
     let mut best: Option<(Action, f64, bool)> = None; // (action, energy, feasible)
     for &a in catalogue {
         // Shadow run: clone the simulator so thermal/noise state is not
-        // consumed by what-if evaluation.
+        // consumed by what-if evaluation. run_plan routes split plans to
+        // the partitioned path, so the oracle searches those arms too.
         let mut shadow = sim.clone();
-        let m = shadow.run(nn, a, &ctx_for(a));
+        let m = shadow.run_plan(nn, a, &ctx_for(a));
         if m.accuracy < accuracy_target {
             continue;
         }
@@ -78,15 +79,13 @@ impl ScalingPolicy for OptPolicy {
             cpu_util: ctx.obs.co_cpu,
             mem_pressure: ctx.obs.co_mem,
         };
+        // Any plan with a cloud leg — monolithic offload or split tail —
+        // is priced at the cloud's congestion view.
         let ctx_for = |a: Action| RunContext {
             interference: sensed,
             thermal_cap: 1.0,
-            compute_factor: if a.site == Site::Cloud { ctx.cloud.slowdown } else { 1.0 },
-            remote_queue_s: if a.site == Site::Cloud {
-                ctx.cloud.queue_wait_s
-            } else {
-                0.0
-            },
+            compute_factor: if a.uses_cloud() { ctx.cloud.slowdown } else { 1.0 },
+            remote_queue_s: if a.uses_cloud() { ctx.cloud.queue_wait_s } else { 0.0 },
         };
         let action = if ctx.cloud.admitting {
             oracle_best_action(
@@ -98,11 +97,12 @@ impl ScalingPolicy for OptPolicy {
                 ctx_for,
             )
         } else {
-            // The cloud is rejecting offloads this epoch: a cloud arm
-            // would fast-fail at admission, so drop those arms from the
+            // The cloud is rejecting offloads this epoch: a cloud arm —
+            // monolithic or a split plan's activation leg — would
+            // fast-fail at admission, so drop those arms from the
             // what-if instead of pricing them as if they would run.
             let open: Vec<Action> =
-                ctx.catalogue.iter().copied().filter(|a| a.site != Site::Cloud).collect();
+                ctx.catalogue.iter().copied().filter(|a| !a.uses_cloud()).collect();
             oracle_best_action(ctx.sim, ctx.nn, &open, ctx.accuracy_target, ctx.qos_s, ctx_for)
         };
         Decision::from_catalogue(ctx.catalogue, action)
@@ -162,6 +162,36 @@ mod tests {
             admitting: false,
         }));
         assert_ne!(rejecting.action.site, Site::Cloud, "rejecting cloud must be skipped");
+    }
+
+    #[test]
+    fn rejecting_cloud_skips_split_arms_too() {
+        // A split plan's activation leg fast-fails at admission exactly
+        // like a monolithic offload, so Opt must drop split arms from the
+        // what-if while the cloud rejects.
+        let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 7);
+        let catalogue =
+            crate::policy::action_catalogue_with_splits(&env.sim.local, true);
+        let nn = crate::nn::zoo::by_name("resnet50").unwrap();
+        let obs = StateObs::from_parts(nn, Default::default(), -55.0, -50.0);
+        let mut p = OptPolicy::new(catalogue.clone());
+        let ctx = DecisionCtx {
+            obs: &obs,
+            state: State::discretize(&obs),
+            nn,
+            qos_s: 0.05,
+            accuracy_target: 0.5,
+            catalogue: &catalogue,
+            sim: &env.sim,
+            cloud: super::super::CloudCtx {
+                slowdown: 1.0,
+                queue_wait_s: 0.0,
+                admitting: false,
+            },
+        };
+        let d = p.decide(&ctx);
+        assert!(!d.action.uses_cloud(), "no plan with a cloud leg while rejecting");
+        assert_eq!(catalogue[d.catalogue_idx], d.action);
     }
 
     #[test]

@@ -12,9 +12,10 @@ use crate::device::presets::device;
 use crate::types::{Action, DeviceId};
 
 use super::bandit::BanditPolicy;
-use super::catalogue::{action_catalogue, compact_action_catalogue};
+use super::catalogue::{action_catalogue_with_splits, compact_action_catalogue_with_splits};
 use super::fixed::FixedTargetPolicy;
 use super::hysteresis::HysteresisPolicy;
+use super::neurosurgeon::NeurosurgeonPolicy;
 use super::oracle::OptPolicy;
 use super::predictors::{collect_dataset, fit_classifier, fit_regression};
 use super::rl::AutoScalePolicy;
@@ -53,6 +54,10 @@ pub struct PolicySpec {
     pub train_envs: Vec<EnvKind>,
     /// Profiling samples per training environment.
     pub train_per_env: usize,
+    /// Append the partitioned-execution (split) arms to the catalogue.
+    /// Off by default: existing catalogues and Q-table shapes stay
+    /// bit-identical unless a host (or a split-native policy) opts in.
+    pub splits: bool,
 }
 
 impl PolicySpec {
@@ -66,14 +71,19 @@ impl PolicySpec {
             accuracy_target: 0.5,
             train_envs: EnvKind::STATIC.to_vec(),
             train_per_env: 40,
+            splits: false,
         }
     }
 
-    /// The catalogue this spec's scope selects.
+    /// The catalogue this spec's scope (and split flag) selects.
     pub fn catalogue(&self) -> Vec<Action> {
         match self.scope {
-            CatalogueScope::Full => action_catalogue(&device(self.device)),
-            CatalogueScope::Compact => compact_action_catalogue(&device(self.device)),
+            CatalogueScope::Full => {
+                action_catalogue_with_splits(&device(self.device), self.splits)
+            }
+            CatalogueScope::Compact => {
+                compact_action_catalogue_with_splits(&device(self.device), self.splits)
+            }
         }
     }
 }
@@ -111,8 +121,12 @@ pub const REGISTRY: &[PolicyEntry] = &[
         key: "opt",
         about: "oracle: shadow-simulate every action, pick the true optimum",
         build: |spec| {
-            // The oracle always what-ifs the full DVFS catalogue.
-            Box::new(OptPolicy::new(action_catalogue(&device(spec.device))))
+            // The oracle always what-ifs the full DVFS catalogue (plus the
+            // split arms when the spec opts in — Opt searches those too).
+            Box::new(OptPolicy::new(action_catalogue_with_splits(
+                &device(spec.device),
+                spec.splits,
+            )))
         },
     },
     PolicyEntry {
@@ -156,7 +170,26 @@ pub const REGISTRY: &[PolicyEntry] = &[
         about: "eps-greedy linear contextual bandit (fleet-scale learner)",
         build: |spec| Box::new(BanditPolicy::new(spec.catalogue(), spec.seed)),
     },
+    PolicyEntry {
+        key: "neurosurgeon",
+        about: "online-learned DNN partition point (split-computing)",
+        build: |spec| {
+            // Split-native: the partition arms ARE its decision space, so
+            // it forces the split flag on regardless of the host's spec.
+            let mut with_splits = spec.clone();
+            with_splits.splits = true;
+            Box::new(NeurosurgeonPolicy::new(with_splits.catalogue(), spec.seed))
+        },
+    },
 ];
+
+/// Does this policy key require the split (partitioned-execution) arms in
+/// its catalogue? Hosts OR this into [`PolicySpec::splits`] so a
+/// split-native policy works with zero caller changes, while every other
+/// key keeps the default (bit-identical) catalogue.
+pub fn wants_splits(key: &str) -> bool {
+    key == "neurosurgeon"
+}
 
 fn fit_regression_spec(spec: &PolicySpec, svr: bool) -> super::predictors::RegressionPolicy {
     let (samples, actions) = profile(spec);
@@ -332,10 +365,30 @@ mod tests {
     fn required_keys_are_registered() {
         for key in [
             "cpu", "best", "cloud", "connected", "opt", "autoscale", "lr", "svr", "svm",
-            "knn", "hysteresis", "bandit",
+            "knn", "hysteresis", "bandit", "neurosurgeon",
         ] {
             assert!(is_known(key), "missing registry key '{key}'");
         }
         assert!(!is_known("nope"));
+    }
+
+    #[test]
+    fn split_flag_grows_the_catalogue_and_neurosurgeon_forces_it() {
+        let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        let base = spec.catalogue().len();
+        spec.splits = true;
+        let grown = spec.catalogue().len();
+        assert!(grown > base, "{grown} vs {base}");
+        // the Mono prefix is untouched; split arms are a strict suffix
+        spec.splits = false;
+        let default_cat = spec.catalogue();
+        spec.splits = true;
+        assert_eq!(&spec.catalogue()[..base], &default_cat[..]);
+        // neurosurgeon opts in by itself, even from a default spec
+        assert!(wants_splits("neurosurgeon") && !wants_splits("autoscale"));
+        let spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        let p = build("neurosurgeon", &spec).unwrap();
+        assert!(p.catalogue().iter().any(|a| a.split.is_split()));
+        assert!(p.is_learning());
     }
 }

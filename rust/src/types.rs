@@ -93,7 +93,33 @@ impl fmt::Display for Precision {
     }
 }
 
-/// One execution-scaling decision (the RL action).
+/// DNN partition point of an execution plan (§7 Neurosurgeon-class
+/// split computing, promoted to a first-class action dimension).
+///
+/// `Mono` is today's semantics — the whole network runs at
+/// [`Action::site`]. `At(k)` indexes an *interior* point of
+/// [`crate::exec::split::SPLIT_POINTS`] (1..=3): layers up to
+/// `SPLIT_POINTS[k]` run on the local device, the activation ships over
+/// the WLAN and the tail finishes on the cloud. `Mono` sorts first so
+/// all-Mono catalogues keep their pre-refactor relative order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SplitPoint {
+    /// No partition: the whole network runs at the action's site.
+    Mono,
+    /// Split at `SPLIT_POINTS[k]`: head local, tail on the cloud.
+    At(u8),
+}
+
+impl SplitPoint {
+    /// Is this a partitioned plan (head local, tail over the WLAN)?
+    pub fn is_split(self) -> bool {
+        matches!(self, SplitPoint::At(_))
+    }
+}
+
+/// One execution-scaling decision (the RL action): an execution *plan* —
+/// site, processor, DVFS step, precision, and (optionally) a DNN
+/// partition point.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Action {
     pub site: Site,
@@ -102,11 +128,15 @@ pub struct Action {
     /// Remote sites run at a fixed operating point; use 0.
     pub vf_step: u8,
     pub precision: Precision,
+    /// DNN partition point. `Mono` (the default everywhere) preserves the
+    /// pre-partition semantics; `At(k)` runs the head locally on
+    /// (`proc`, `vf_step`, `precision`) and the tail on the cloud.
+    pub split: SplitPoint,
 }
 
 impl Action {
     pub fn new(site: Site, proc: ProcKind, vf_step: u8, precision: Precision) -> Self {
-        Action { site, proc, vf_step, precision }
+        Action { site, proc, vf_step, precision, split: SplitPoint::Mono }
     }
 
     /// Shorthand for the common "max frequency" actions.
@@ -121,6 +151,27 @@ impl Action {
     pub fn connected_edge() -> Self {
         Action::new(Site::ConnectedEdge, ProcKind::Gpu, 0, Precision::Fp16)
     }
+
+    /// A partitioned plan: head on the local (`proc`, `precision`) at max
+    /// frequency, tail on the cloud. `k` indexes
+    /// [`crate::exec::split::SPLIT_POINTS`] and must be interior (1..=3).
+    pub fn split_at(k: u8, proc: ProcKind, precision: Precision) -> Self {
+        Action {
+            site: Site::Local,
+            proc,
+            vf_step: 0,
+            precision,
+            split: SplitPoint::At(k),
+        }
+    }
+
+    /// Does this plan put traffic on the cloud's WLAN leg? True for a
+    /// monolithic cloud offload *and* for any split plan — both must be
+    /// priced with the cloud's congestion view, both are rejected while
+    /// admission control fast-fails, and both count as cloud load.
+    pub fn uses_cloud(&self) -> bool {
+        self.site == Site::Cloud || self.split.is_split()
+    }
 }
 
 impl fmt::Display for Action {
@@ -129,7 +180,13 @@ impl fmt::Display for Action {
             f,
             "{}/{}@vf{}/{}",
             self.site, self.proc, self.vf_step, self.precision
-        )
+        )?;
+        // Mono renders exactly the pre-partition grammar, so default
+        // traces/logs stay byte-identical.
+        if let SplitPoint::At(k) = self.split {
+            write!(f, "+split{k}")?;
+        }
+        Ok(())
     }
 }
 
@@ -204,6 +261,30 @@ mod tests {
         let a = Action::local(ProcKind::Gpu, Precision::Fp16);
         assert_eq!(a.site, Site::Local);
         assert_eq!(format!("{a}"), "local/gpu@vf0/fp16");
+    }
+
+    #[test]
+    fn split_action_display_appends_suffix() {
+        let a = Action::split_at(2, ProcKind::Dsp, Precision::Int8);
+        assert_eq!(a.site, Site::Local);
+        assert_eq!(a.split, SplitPoint::At(2));
+        assert!(a.uses_cloud(), "a split plan has a cloud leg");
+        assert_eq!(format!("{a}"), "local/dsp@vf0/int8+split2");
+    }
+
+    #[test]
+    fn mono_actions_do_not_use_cloud_unless_sited_there() {
+        assert!(!Action::local(ProcKind::Cpu, Precision::Fp32).uses_cloud());
+        assert!(!Action::connected_edge().uses_cloud());
+        assert!(Action::cloud().uses_cloud());
+    }
+
+    #[test]
+    fn mono_sorts_before_any_split() {
+        let mono = Action::local(ProcKind::Cpu, Precision::Fp32);
+        let split = Action::split_at(1, ProcKind::Cpu, Precision::Fp32);
+        assert!(mono < split, "Mono must sort first so default catalogues keep order");
+        assert!(SplitPoint::Mono < SplitPoint::At(0));
     }
 
     #[test]

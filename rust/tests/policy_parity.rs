@@ -282,3 +282,31 @@ fn fleet_fingerprints_stable_across_shards_for_every_policy() {
         );
     }
 }
+
+#[test]
+fn default_catalogue_fleet_parity_across_shards_for_the_full_registry() {
+    // Partition-refactor pin: with `split_points` off (the default) the
+    // catalogues carry no split arms and the fleet fingerprint of EVERY
+    // registry policy — including the split-native `neurosurgeon`, which
+    // forces its own arms on — stays a pure function of (config, seed)
+    // at shards 1, 2 and 8.
+    use autoscale::fleet::{run_fleet, FleetConfig};
+    for name in autoscale::policy::names() {
+        let fp = |shards: usize| {
+            let mut cfg = FleetConfig {
+                devices: 8,
+                requests_per_device: 3,
+                rate_hz: 2.0,
+                seed: 29,
+                policy: name.to_string(),
+                env: EnvKind::D3RandomWlan,
+                ..Default::default()
+            };
+            cfg.shards = shards;
+            run_fleet(&cfg).unwrap().metrics.fingerprint()
+        };
+        let (a, b, c) = (fp(1), fp(2), fp(8));
+        assert_eq!(a, b, "'{name}' fleet fingerprint differs between shards 1 and 2");
+        assert_eq!(b, c, "'{name}' fleet fingerprint differs between shards 2 and 8");
+    }
+}
