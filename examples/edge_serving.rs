@@ -12,7 +12,7 @@ use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, RunConfig};
 use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::serve::{ServeConfig, Server};
-use autoscale::policy::{action_catalogue, AutoScalePolicy, PolicySpec, ScalingPolicy};
+use autoscale::policy::{AutoScalePolicy, CatalogueSpec, PolicySpec, ScalingPolicy};
 use autoscale::runtime::Engine;
 use autoscale::types::DeviceId;
 use autoscale::util::stats;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     println!("artifact models: {:?}", engine.manifest().models().len());
 
     // ---- Phase 1: online training with real compute ----
-    let catalogue = action_catalogue(&autoscale::device::presets::device(device));
+    let catalogue = CatalogueSpec::new(device).build();
     let mut agent = AutoScaleAgent::new(catalogue, Default::default(), seed);
     let train_envs = [
         EnvKind::S1NoVariance,

@@ -8,7 +8,7 @@ use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, RunConfig};
 use autoscale::coordinator::envs::Environment;
 use autoscale::coordinator::serve::{ServeConfig, Server};
-use autoscale::policy::{action_catalogue, AutoScalePolicy};
+use autoscale::policy::{AutoScalePolicy, CatalogueSpec};
 use autoscale::runtime::Engine;
 use autoscale::types::{DeviceId, Precision};
 
@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. The AutoScale loop: observe -> select -> execute -> reward -> learn.
     let device = DeviceId::Mi8Pro;
-    let catalogue = action_catalogue(&autoscale::device::presets::device(device));
+    let catalogue = CatalogueSpec::new(device).build();
     println!("action space  : {} targets", catalogue.len());
     let agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
 

@@ -22,14 +22,13 @@ use crate::agent::state::{State, StateObs, STATE_CARDINALITY};
 use crate::configsys::runconfig::{EnvKind, RunConfig};
 use crate::coordinator::envs::Environment;
 use crate::coordinator::serve::{ServeConfig, Server};
-use crate::device::presets::device as preset;
 use crate::exec::latency::RunContext;
 use crate::experiments;
 use crate::fleet::{run_fleet, FleetConfig};
 use crate::interference::Interference;
 use crate::nn::zoo::by_name;
 use crate::obs::ObsConfig;
-use crate::policy::{action_catalogue, AutoScalePolicy};
+use crate::policy::{AutoScalePolicy, CatalogueSpec};
 use crate::runtime::Engine;
 use crate::types::{Action, DeviceId, Precision, ProcKind};
 use crate::util::bench::{black_box, Bencher, SuiteEntry, SuiteReport};
@@ -107,6 +106,19 @@ pub fn run_fleet_suite(b: &Bencher, full: bool) -> SuiteReport {
     });
     report.entries.push(SuiteEntry::from_result(&r, Some((128 * 25) as f64)).optional());
 
+    // DVFS-catalogue overhead: the 128x25 learning fleet with two interior
+    // DVFS rungs appended per local processor (and the sparsity-aware
+    // physics those rungs switch on). The delta against
+    // "fleet 128x25 shards=4" prices the larger action space plus the
+    // per-layer sparsity discount on the hot path.
+    let mut cfg = fleet_cfg(128, 25, 4, "autoscale");
+    cfg.dvfs_steps = 2;
+    let name = "fleet 128x25 shards=4 dvfs-catalogue";
+    let r = b.bench(name, || {
+        black_box(run_fleet(black_box(&cfg)).unwrap());
+    });
+    report.entries.push(SuiteEntry::from_result(&r, Some((128 * 25) as f64)).optional());
+
     // Elastic cloud at scale: the same 10k-device fleet with the replica
     // autoscaler, admission control and the adaptive batch schedule
     // engaged. The delta against the plain 10k row is the cost of the
@@ -171,7 +183,7 @@ pub fn sharding_speedup(report: &SuiteReport) -> Option<f64> {
 
 fn run_serving(n: usize, with_engine: bool) -> Option<usize> {
     let dev = DeviceId::Mi8Pro;
-    let catalogue = action_catalogue(&preset(dev));
+    let catalogue = CatalogueSpec::new(dev).build();
     let agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
     let mut cfg = RunConfig::default();
     cfg.device = dev;
@@ -222,7 +234,7 @@ pub fn run_e2e_suite() -> SuiteReport {
 /// callers can assert the paper bands.
 pub fn run_agent_suite(b: &Bencher) -> (SuiteReport, f64, f64) {
     let mut report = SuiteReport::new("agent");
-    let catalogue = action_catalogue(&preset(DeviceId::Mi8Pro));
+    let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
     let mut agent = AutoScaleAgent::new(catalogue, Default::default(), 7);
     let nn = by_name("mobilenet_v3").unwrap();
     let obs = StateObs::from_parts(nn, Interference::default(), -60.0, -55.0);
@@ -257,7 +269,7 @@ pub fn run_agent_suite(b: &Bencher) -> (SuiteReport, f64, f64) {
 
 /// The agent suite's memory headline: (catalogue size, Q-table KB).
 pub fn qtable_footprint() -> (usize, usize) {
-    let catalogue = action_catalogue(&preset(DeviceId::Mi8Pro));
+    let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
     let kb = catalogue.len() * STATE_CARDINALITY * 8 / 1024;
     (catalogue.len(), kb)
 }

@@ -143,11 +143,18 @@ pub struct RunConfig {
     /// (see [`crate::policy::registry::REGISTRY`]).
     pub policy: String,
     /// Append partitioned-execution arms to the action catalogue (see
-    /// [`crate::policy::action_catalogue_with_splits`]). Off by default:
+    /// [`crate::policy::CatalogueSpec::splits`]). Off by default:
     /// catalogue shapes and fingerprints are then bit-identical to the
     /// pre-partition server. Split-native policies (`neurosurgeon`) get
     /// split arms regardless.
     pub split_points: bool,
+    /// Number of interior DVFS-ladder arms appended per (processor,
+    /// precision) to a compact catalogue, and the switch that turns on
+    /// the sparsity-/DVFS-aware execution model (see
+    /// [`crate::policy::CatalogueSpec::dvfs`]). `0` (default) keeps the
+    /// dense model and the pre-DVFS catalogues bit-identical; bounded by
+    /// [`crate::policy::MAX_DVFS_STEPS`].
+    pub dvfs_steps: usize,
 }
 
 impl Default for RunConfig {
@@ -164,6 +171,7 @@ impl Default for RunConfig {
             use_runtime: false,
             policy: "autoscale".to_string(),
             split_points: false,
+            dvfs_steps: 0,
         }
     }
 }
@@ -220,6 +228,10 @@ impl RunConfig {
             if let Some(v) = root.get("split_points").and_then(|v| v.as_bool()) {
                 cfg.split_points = v;
             }
+            if let Some(v) = root.get("dvfs_steps").and_then(|v| v.as_i64()) {
+                anyhow::ensure!(v >= 0, "dvfs_steps must be >= 0, got {v}");
+                cfg.dvfs_steps = v as usize;
+            }
         }
         if let Some(agent) = doc.get("agent") {
             let mut p = cfg.agent;
@@ -274,6 +286,9 @@ impl RunConfig {
             self.policy,
             crate::policy::names().join("|")
         );
+        // Registry-validated bound: the error text is produced by the
+        // catalogue module itself, so it can never drift from the cap.
+        crate::policy::validate_dvfs_steps(self.dvfs_steps)?;
         Ok(())
     }
 }
@@ -341,6 +356,10 @@ learning_rate = 0.5
         let cfg = RunConfig::from_doc(&parse_toml("requests = 3\n").unwrap()).unwrap();
         assert_eq!(cfg.policy, "autoscale");
         assert!(!cfg.split_points);
+        assert_eq!(cfg.dvfs_steps, 0, "DVFS arms default off");
+        let cfg =
+            RunConfig::from_doc(&parse_toml("dvfs_steps = 3\n").unwrap()).unwrap();
+        assert_eq!(cfg.dvfs_steps, 3);
     }
 
     #[test]
@@ -354,6 +373,16 @@ learning_rate = 0.5
         let doc = parse_toml("scenario_env = \"warp-zone\"\n").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
         let doc = parse_toml("policy = \"not-a-policy\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        // out-of-range dvfs_steps carries the catalogue module's bound
+        let doc = parse_toml("dvfs_steps = 99\n").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("dvfs_steps"), "{err}");
+        assert!(
+            err.contains(&crate::policy::MAX_DVFS_STEPS.to_string()),
+            "bound must come from the registry: {err}"
+        );
+        let doc = parse_toml("dvfs_steps = -1\n").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
     }
 

@@ -308,6 +308,22 @@ mod tests {
     }
 
     #[test]
+    fn interior_dvfs_rungs_are_observable_and_fingerprint_distinct() {
+        use crate::types::{Precision, ProcKind, Site};
+        // Telemetry renders the rung (`@vf<step>`) and the episode
+        // fingerprint separates rungs via the vf bits of `action_code` —
+        // a laddered arm can never alias its max-frequency sibling.
+        let top = Action::local(ProcKind::Gpu, Precision::Fp16);
+        let rung = Action::new(Site::Local, ProcKind::Gpu, 4, Precision::Fp16);
+        assert_eq!(rung.to_string(), "local/gpu@vf4/fp16");
+        assert_ne!(action_code(top), action_code(rung));
+        assert_eq!((action_code(rung) >> 16) & 0xFF, 4);
+        // Selection-rate buckets stay rung-agnostic (Fig. 13 rows are
+        // per processor family, "w/DVFS" by construction).
+        assert_eq!(SelectionStats::bucket(top), SelectionStats::bucket(rung));
+    }
+
+    #[test]
     fn bucket_index_agrees_with_bucket_names() {
         use crate::types::{Precision, ProcKind};
         let actions = [

@@ -10,7 +10,7 @@
 use crate::agent::qlearn::AutoScaleAgent;
 use crate::agent::state::{State, StateObs};
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
-use crate::policy::{action_catalogue, AutoScalePolicy};
+use crate::policy::{AutoScalePolicy, CatalogueSpec};
 use crate::types::DeviceId;
 use crate::util::report::{f, pct, Table};
 
@@ -44,7 +44,7 @@ fn eval_agent(agent: &AutoScaleAgent, n: usize, seed: u64) -> (f64, f64) {
 }
 
 fn train_with(params: AgentParams, runs_per_nn: usize, seed: u64) -> AutoScaleAgent {
-    let catalogue = action_catalogue(&crate::device::presets::device(DeviceId::Mi8Pro));
+    let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
     let agent = AutoScaleAgent::new(catalogue, params, seed);
     train_existing(
         agent,
@@ -103,7 +103,7 @@ pub fn run_bins(seed: u64, quick: bool) -> Vec<Table> {
     // it by quantizing the observation stream (util -> {0,100},
     // conv count -> {small, large}) and training on the coarse states.
     let coarse_agent = {
-        let catalogue = action_catalogue(&crate::device::presets::device(DeviceId::Mi8Pro));
+        let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
         let mut agent = AutoScaleAgent::new(catalogue, AgentParams::default(), seed);
         // Train with coarse observations by snapping every feature to the
         // extreme of its Table-1 bin (information destroyed on purpose).
@@ -283,7 +283,7 @@ pub fn run_split(seed: u64, quick: bool) -> Vec<Table> {
 /// reduced sample counts so `figure overhead` is fast).
 pub fn run_overhead(seed: u64, _quick: bool) -> Vec<Table> {
     use crate::util::bench::{black_box, Bencher};
-    let catalogue = action_catalogue(&crate::device::presets::device(DeviceId::Mi8Pro));
+    let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
     let n_actions = catalogue.len();
     let mut agent = AutoScaleAgent::new(catalogue, AgentParams::default(), seed);
     let nn = crate::nn::zoo::by_name("mobilenet_v3").unwrap();

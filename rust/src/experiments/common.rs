@@ -81,8 +81,7 @@ pub fn train_autoscale(
     runs_per_nn: usize,
     seed: u64,
 ) -> AutoScaleAgent {
-    let catalogue =
-        crate::policy::action_catalogue(&crate::device::presets::device(dev));
+    let catalogue = crate::policy::CatalogueSpec::new(dev).build();
     let mut agent = AutoScaleAgent::new(catalogue, Default::default(), seed);
     agent = train_existing(agent, dev, envs, scenario, accuracy_target, runs_per_nn, seed);
     agent

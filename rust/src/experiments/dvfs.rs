@@ -1,0 +1,199 @@
+//! `figure dvfs` (beyond the paper): the DVFS ladder as a real action
+//! dimension. A deterministic what-if sweep prices every arm of the
+//! compact catalogue extended with interior DVFS rungs
+//! (`CatalogueSpec::new(dev).scope(Compact).dvfs(3)`) under the
+//! sparsity-aware execution model, then compares three groups at
+//! iso-latency (the NonStreaming QoS bound): the best max-frequency
+//! local arm, the best interior-rung arm, and the monolithic cloud
+//! offload — across strong (S1), weak (S4) and dead-zone signal
+//! regimes. The point the table makes: racing to idle is not the energy
+//! floor. An interior GPU rung finishes inside the QoS bound at a
+//! fraction of the max-frequency energy, and under strong signal it
+//! beats the cloud too — the rung is only reachable when the DVFS axis
+//! is in the action space, which is exactly what `--dvfs-steps` adds.
+
+use crate::configsys::runconfig::Scenario;
+use crate::coordinator::envs::Environment;
+use crate::coordinator::serve::qos_for;
+use crate::exec::latency::RunContext;
+use crate::nn::zoo::{by_name, NnDesc};
+use crate::policy::{CatalogueScope, CatalogueSpec};
+use crate::types::{Action, DeviceId, Site};
+use crate::util::report::{f, Table};
+use crate::util::rng::Pcg64;
+
+/// The signal regimes swept: strong, weak, Markov dead zones.
+const REGIMES: [&str; 3] = ["S1", "S4", "deadzone"];
+
+/// The device and workload the sweep prices. inception_v1 is the
+/// interesting case: too heavy for the CPU inside the 50 ms QoS bound,
+/// light enough that several GPU rungs (not just the top one) make it.
+const DEV: DeviceId = DeviceId::Mi8Pro;
+const MODEL: &str = "inception_v1";
+
+/// One priced arm of the what-if sweep.
+struct Priced {
+    action: Action,
+    latency_s: f64,
+    energy_j: f64,
+    failed: bool,
+}
+
+/// Price every arm of the DVFS-extended compact catalogue in `key`'s
+/// environment: truth noise off, a fresh (cool) simulator clone per arm,
+/// so rows are pure physics at a common operating point.
+fn price_catalogue(key: &str, nn: &NnDesc, seed: u64) -> anyhow::Result<Vec<Priced>> {
+    let mut env = Environment::build_keyed(DEV, key, seed)?;
+    env.sim.sparsity_aware = true;
+    env.sim.truth_noise = 0.0;
+    // Settle the scenario's RSSI processes for a few epochs so Markov
+    // regimes (the dead-zone chain) are priced mid-trajectory, not at
+    // their arbitrary initial state. Deterministic: seeded stream.
+    let mut rng = Pcg64::with_stream(seed, 4242);
+    for t in 0..8 {
+        env.sim.wlan.rssi.step(t as f64, &mut rng);
+        env.sim.p2p.rssi.step(t as f64, &mut rng);
+    }
+    let catalogue = CatalogueSpec::new(DEV)
+        .scope(CatalogueScope::Compact)
+        .dvfs(3)
+        .build();
+    Ok(catalogue
+        .into_iter()
+        .map(|action| {
+            let mut sim = env.sim.clone();
+            let m = sim.run(nn, action, &RunContext::default());
+            Priced { action, latency_s: m.latency_s, energy_j: m.energy_true_j, failed: m.remote_failed }
+        })
+        .collect())
+}
+
+/// The group's winner: minimum energy among arms meeting the QoS bound
+/// (and not dead-zone-failed); falls back to the fastest matching arm so
+/// a regime where nothing makes the bound still reports a row.
+fn best<'a>(
+    arms: &'a [Priced],
+    qos_s: f64,
+    pred: impl Fn(&Action) -> bool,
+) -> Option<&'a Priced> {
+    let matching: Vec<&Priced> = arms.iter().filter(|p| pred(&p.action)).collect();
+    matching
+        .iter()
+        .filter(|p| !p.failed && p.latency_s <= qos_s)
+        .min_by(|a, b| a.energy_j.total_cmp(&b.energy_j))
+        .or_else(|| matching.iter().min_by(|a, b| a.latency_s.total_cmp(&b.latency_s)))
+        .copied()
+}
+
+fn is_local_max_freq(a: &Action) -> bool {
+    a.site == Site::Local && !a.split.is_split() && a.vf_step == 0
+}
+
+fn is_interior_rung(a: &Action) -> bool {
+    a.site == Site::Local && a.vf_step > 0
+}
+
+pub fn run(seed: u64, _quick: bool) -> Vec<Table> {
+    let nn = by_name(MODEL).expect("the swept model is in the zoo");
+    let qos_s = qos_for(Scenario::NonStreaming, nn);
+    let mut table = Table::new(
+        "DVFS as an action dimension (Mi8Pro, inception_v1): energy at iso-latency",
+        &["scenario", "group", "action", "latency_ms", "energy_mj", "meets_qos"],
+    );
+    for key in REGIMES {
+        let arms = price_catalogue(key, nn, seed).expect("every regime key is registered");
+        let groups: [(&str, &dyn Fn(&Action) -> bool); 3] = [
+            ("local max-freq", &is_local_max_freq),
+            ("local dvfs rung", &is_interior_rung),
+            ("cloud", &|a: &Action| a.site == Site::Cloud),
+        ];
+        for (label, pred) in groups {
+            let Some(p) = best(&arms, qos_s, pred) else { continue };
+            table.row(vec![
+                key.to_string(),
+                label.to_string(),
+                p.action.to_string(),
+                f(p.latency_s * 1e3, 2),
+                f(p.energy_j * 1e3, 2),
+                (!p.failed && p.latency_s <= qos_s).to_string(),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_covers_every_regime_and_group() {
+        let t = run(7, true);
+        let rows = &t[0].rows;
+        assert_eq!(rows.len(), REGIMES.len() * 3);
+        for key in REGIMES {
+            assert!(rows.iter().any(|r| r[0] == key), "missing regime '{key}'");
+        }
+    }
+
+    #[test]
+    fn an_interior_rung_wins_energy_at_iso_latency_under_strong_signal() {
+        // The acceptance pin: under strong signal an interior vf_step arm
+        // must beat BOTH the best max-frequency local arm and the cloud
+        // offload on energy, while meeting the same QoS bound. The margins
+        // are wide by hand calculation (the interior GPU rung is >2x
+        // cheaper than either); 1.3x keeps the test robust to model
+        // parameter drift.
+        let nn = by_name(MODEL).unwrap();
+        let qos_s = qos_for(Scenario::NonStreaming, nn);
+        let arms = price_catalogue("S1", nn, 7).unwrap();
+
+        let rung = best(&arms, qos_s, is_interior_rung).expect("interior rungs exist");
+        let maxf = best(&arms, qos_s, is_local_max_freq).expect("base local arms exist");
+        let cloud = best(&arms, qos_s, |a: &Action| a.site == Site::Cloud).expect("cloud arm");
+
+        assert!(
+            rung.latency_s <= qos_s && !rung.failed,
+            "winning rung {} must meet QoS ({:.1} ms > {:.1} ms)",
+            rung.action,
+            rung.latency_s * 1e3,
+            qos_s * 1e3
+        );
+        assert!(
+            rung.energy_j * 1.3 < maxf.energy_j,
+            "rung {} ({:.2} mJ) must clearly beat max-freq {} ({:.2} mJ)",
+            rung.action,
+            rung.energy_j * 1e3,
+            maxf.action,
+            maxf.energy_j * 1e3
+        );
+        assert!(
+            rung.energy_j * 1.3 < cloud.energy_j,
+            "rung {} ({:.2} mJ) must clearly beat cloud ({:.2} mJ)",
+            rung.action,
+            rung.energy_j * 1e3,
+            cloud.energy_j * 1e3
+        );
+    }
+
+    #[test]
+    fn the_deepest_rung_is_not_always_the_winner_or_the_loser() {
+        // Sanity on the sweep itself: interior rungs are real arms with
+        // finite physics in every regime, and at least one of them makes
+        // the QoS bound under strong signal.
+        let nn = by_name(MODEL).unwrap();
+        let qos_s = qos_for(Scenario::NonStreaming, nn);
+        let arms = price_catalogue("S1", nn, 7).unwrap();
+        let rungs: Vec<&Priced> =
+            arms.iter().filter(|p| is_interior_rung(&p.action)).collect();
+        assert!(!rungs.is_empty(), "dvfs(3) must emit interior rungs");
+        for p in &rungs {
+            assert!(p.latency_s.is_finite() && p.latency_s > 0.0, "{}", p.action);
+            assert!(p.energy_j.is_finite() && p.energy_j > 0.0, "{}", p.action);
+        }
+        assert!(
+            rungs.iter().any(|p| p.latency_s <= qos_s),
+            "some interior rung must make the QoS bound under strong signal"
+        );
+    }
+}

@@ -8,7 +8,7 @@ use crate::agent::state::State;
 use crate::configsys::runconfig::{EnvKind, RunConfig, Scenario};
 use crate::coordinator::envs::Environment;
 use crate::coordinator::serve::{ServeConfig, Server};
-use crate::policy::{action_catalogue, AutoScalePolicy};
+use crate::policy::{AutoScalePolicy, CatalogueSpec};
 use crate::types::DeviceId;
 use crate::util::report::{f, Table};
 use crate::util::stats::Ema;
@@ -97,7 +97,7 @@ pub fn run(seed: u64, quick: bool) -> Vec<Table> {
     );
 
     for dev in [DeviceId::GalaxyS10e, DeviceId::MotoXForce] {
-        let catalogue = action_catalogue(&crate::device::presets::device(dev));
+        let catalogue = CatalogueSpec::new(dev).build();
         let scratch = AutoScaleAgent::new(catalogue.clone(), Default::default(), seed);
         let (scratch_curve, scratch_conv) = training_curve(dev, scratch, runs, seed + 1);
 

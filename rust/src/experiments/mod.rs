@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod common;
+pub mod dvfs;
 pub mod elastic;
 pub mod fig10_streaming;
 pub mod fig11_dynamic;
@@ -52,6 +53,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "tab4", about: "Execution environments (Table 4)", run: tables::run_tab4 },
         Experiment { id: "scen", about: "Scenario sweep: every registry key (Markov/trace/dead zones)", run: scenarios::run },
         Experiment { id: "partition", about: "Learned DNN partition point vs monolithic scaling (strong/weak/dead-zone)", run: partition::run },
+        Experiment { id: "dvfs", about: "Interior DVFS rungs vs max-frequency local and cloud: energy at iso-latency", run: dvfs::run },
         Experiment { id: "timeline", about: "Fleet trajectory per telemetry window (flash crowd vs small cloud)", run: timeline::run },
         Experiment { id: "elastic", about: "Fixed vs elastic cloud under a flash crowd (autoscaler + admission)", run: elastic::run },
         Experiment { id: "ablation_hparams", about: "Hyperparameter sensitivity (§5.3)", run: ablations::run_hparams },

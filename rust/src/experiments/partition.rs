@@ -23,16 +23,15 @@ const REGIMES: [&str; 3] = ["S1", "S4", "deadzone"];
 /// (Opt then what-ifs the split arms alongside the Mono catalogue).
 fn split_policy(name: &str, dev: DeviceId, seed: u64) -> Box<dyn ScalingPolicy> {
     let mut spec = PolicySpec::new(dev, seed);
-    spec.splits = true;
+    spec.catalogue = spec.catalogue.splits(true);
     crate::policy::build(name, &spec).expect("experiment drivers use registered policy names")
 }
 
 /// The offline-profiled static split the §7 contrast argues against.
 fn static_split(dev: DeviceId) -> Box<dyn ScalingPolicy> {
-    let d = crate::device::presets::device(dev);
-    Box::new(FixedTargetPolicy::static_split(crate::policy::action_catalogue_with_splits(
-        &d, true,
-    )))
+    Box::new(FixedTargetPolicy::static_split(
+        crate::policy::CatalogueSpec::new(dev).splits(true).build(),
+    ))
 }
 
 pub fn run(seed: u64, quick: bool) -> Vec<Table> {

@@ -196,11 +196,18 @@ pub struct FleetConfig {
     /// (see [`crate::policy::registry::REGISTRY`]).
     pub policy: String,
     /// Append partitioned-execution arms to every device catalogue
-    /// (see [`crate::policy::action_catalogue_with_splits`]). Off by
+    /// (see [`crate::policy::CatalogueSpec::splits`]). Off by
     /// default: catalogue shapes and run fingerprints are then
     /// bit-identical to the pre-partition fleet. Split-native policies
     /// (`neurosurgeon`) get split arms regardless of this flag.
     pub split_points: bool,
+    /// Append interior DVFS rungs to every device catalogue and turn on
+    /// the sparsity-aware execution model (see
+    /// [`crate::policy::CatalogueSpec::dvfs`] and
+    /// [`crate::exec::latency::Simulator`]). 0 (the default) keeps
+    /// catalogue shapes, physics and run fingerprints bit-identical to
+    /// the pre-DVFS fleet.
+    pub dvfs_steps: usize,
     pub arrival: ArrivalKind,
     /// Mean request rate per device (Hz).
     pub rate_hz: f64,
@@ -235,6 +242,7 @@ impl Default for FleetConfig {
             agent: AgentParams::default(),
             policy: "autoscale".to_string(),
             split_points: false,
+            dvfs_steps: 0,
             arrival: ArrivalKind::Poisson,
             rate_hz: 1.0,
             epoch_s: 1.0,
@@ -256,6 +264,8 @@ impl FleetConfig {
             "requests per device must fit in u32"
         );
         anyhow::ensure!(self.shards > 0, "shards must be > 0");
+        // Registry-validated bound: the error text names MAX_DVFS_STEPS.
+        crate::policy::validate_dvfs_steps(self.dvfs_steps)?;
         anyhow::ensure!(self.rate_hz > 0.0, "rate must be > 0");
         anyhow::ensure!(self.epoch_s > 0.0, "epoch must be > 0");
         anyhow::ensure!(
@@ -842,7 +852,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
     let mut arena = PrototypeArena::new(&cfg.policy);
     let mk_spec = |i: usize| {
         // Compact catalogue scope: a dense learner per device at fleet
-        // scale must stay small (see compact_action_catalogue); the Opt
+        // scale must stay small (see CatalogueScope::Compact); the Opt
         // builder overrides it with the full DVFS sweep it what-ifs.
         // Predictor training keeps the PolicySpec defaults (the STATIC
         // envs, 40 samples each) deliberately: offline profiling happens
@@ -853,10 +863,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
             device_seed(cfg.seed, i),
         );
         spec.agent = cfg.agent;
-        spec.scope = CatalogueScope::Compact;
+        spec.catalogue = spec
+            .catalogue
+            .scope(CatalogueScope::Compact)
+            .splits(cfg.split_points)
+            .dvfs(cfg.dvfs_steps as u8);
         spec.scenario = cfg.scenario;
         spec.accuracy_target = cfg.accuracy_target;
-        spec.splits = cfg.split_points;
         spec
     };
 
@@ -923,7 +936,11 @@ pub fn run_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetOutcome> {
         let sc = scenarios.get(&key)?;
         let dev_id = DeviceId::PHONES[i % DeviceId::PHONES.len()];
         let dseed = device_seed(cfg.seed, i);
-        state.envs.push(Environment::from_scenario_shared(dev_id, &sc, dseed));
+        let mut env = Environment::from_scenario_shared(dev_id, &sc, dseed);
+        // DVFS-laddered catalogues come with the sparsity-aware physics;
+        // 0 steps keeps the simulator (and fingerprints) bit-identical.
+        env.sim.sparsity_aware = cfg.dvfs_steps > 0;
+        state.envs.push(env);
 
         if per_device_policies {
             // Per-device policy through the prototype arena; the probe
@@ -1337,6 +1354,40 @@ mod tests {
                 "shard invariance for {policy} with splits"
             );
         }
+    }
+
+    #[test]
+    fn dvfs_enabled_fleet_is_reproducible_and_shard_invariant() {
+        // Interior DVFS rungs in the catalogue plus the sparsity-aware
+        // physics must not break the fleet's determinism contracts.
+        for policy in ["autoscale", "neurosurgeon"] {
+            let mut cfg = small_cfg();
+            cfg.policy = policy.to_string();
+            cfg.dvfs_steps = 2;
+            cfg.shards = 1;
+            let a = run_fleet(&cfg).unwrap();
+            let again = run_fleet(&cfg).unwrap();
+            assert_eq!(
+                a.metrics.fingerprint(),
+                again.metrics.fingerprint(),
+                "seed reproducibility for {policy} with dvfs"
+            );
+            cfg.shards = 4;
+            let b = run_fleet(&cfg).unwrap();
+            assert_eq!(
+                a.metrics.fingerprint(),
+                b.metrics.fingerprint(),
+                "shard invariance for {policy} with dvfs"
+            );
+        }
+    }
+
+    #[test]
+    fn dvfs_steps_out_of_range_is_a_config_error() {
+        let mut cfg = small_cfg();
+        cfg.dvfs_steps = 99;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("dvfs_steps"), "got: {err}");
     }
 
     #[test]

@@ -62,12 +62,33 @@
 //! ([`exec::split`]). Split plans price the cloud's epoch queue wait and
 //! load slowdown on the tail leg, fold their remote MAC share into the
 //! shared backlog, and fail at the transfer point inside a dead zone.
-//! Split arms are opt-in (`--split-points`, [`policy::PolicySpec`]
-//! `splits`); the default catalogue — and every fingerprint — is
-//! bit-identical to the monolithic build. The split-native
-//! [`policy::NeurosurgeonPolicy`] (`--policy neurosurgeon`) learns the
-//! partition point online from the decision context; `figure partition`
-//! compares it against monolithic scaling and a static middle split.
+//! Split arms are opt-in (`--split-points`,
+//! [`policy::CatalogueSpec::splits`]); the default catalogue — and every
+//! fingerprint — is bit-identical to the monolithic build. The
+//! split-native [`policy::NeurosurgeonPolicy`] (`--policy neurosurgeon`)
+//! learns the partition point online from the decision context;
+//! `figure partition` compares it against monolithic scaling and a
+//! static middle split.
+//!
+//! ## Sparsity- and DVFS-aware execution
+//!
+//! Action spaces are declared through one builder,
+//! [`policy::CatalogueSpec`]
+//! (`CatalogueSpec::new(device).scope(..).splits(..).dvfs(..)`), which
+//! replaced the old `action_catalogue*` free functions (thin deprecated
+//! shims remain for one release). `.dvfs(n)` appends `n` interior DVFS
+//! rungs per local processor to the compact catalogue — the fleet-scale
+//! action space finally gets the paper's §5.3 frequency axis without
+//! paying for the full 63-arm sweep — and `--dvfs-steps N` exposes it on
+//! `serve` and `fleet` (TOML: `dvfs_steps`). Those rungs are priced by a
+//! sparsity-aware per-layer model ([`exec::latency`]): every zoo entry
+//! carries measured activation/weight sparsity, and each processor
+//! recovers the skippable MACs at its own exploitation rate
+//! ([`exec::latency::sparsity_exploitation`] — CPUs gate zeros well,
+//! dense systolic DSPs barely). Both extensions default **off** and are
+//! bit-identical to the dense, max-frequency model when off; `figure
+//! dvfs` shows an interior rung beating both max-frequency local and
+//! cloud offload on energy at iso-latency.
 //!
 //! ## Scenario engine
 //!

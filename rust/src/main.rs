@@ -222,6 +222,7 @@ fn serve_episode(
     seed: u64,
     policy_key: &str,
     split_points: bool,
+    dvfs_steps: usize,
     requests: usize,
     runtime: bool,
     obs: Option<&ObsConfig>,
@@ -246,14 +247,18 @@ fn serve_episode(
     spec.accuracy_target = run_cfg.accuracy_target;
     // `--split-points` appends the partitioned-execution arms; split-native
     // policies (neurosurgeon) force them on in their own builder.
-    spec.splits = split_points;
+    // `--dvfs-steps N` appends N interior DVFS rungs per local processor.
+    spec.catalogue = spec.catalogue.splits(split_points).dvfs(dvfs_steps as u8);
     let policy = autoscale::policy::build(policy_key, &spec)?;
 
     // `--scenario-env` (any scenario-registry key, or `trace:<path>`)
     // overrides the legacy `--env` enum; both construct through the
     // scenario registry.
     let scenario_key = run_cfg.scenario_key();
-    let environment = Environment::build_keyed(device, &scenario_key, seed)?;
+    let mut environment = Environment::build_keyed(device, &scenario_key, seed)?;
+    // DVFS-laddered catalogues come with the sparsity-aware physics;
+    // 0 steps keeps the simulator (and every metric) bit-identical.
+    environment.sim.sparsity_aware = dvfs_steps > 0;
     let mut engine_store;
     let mut server = Server::new(
         environment,
@@ -362,6 +367,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--trace",
                     "--trace-sample",
                     "--trace-cap",
+                    "--dvfs-steps",
                 ],
                 &["--runtime", "--split-points"],
                 0,
@@ -372,6 +378,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let requests: usize = cli.num("--requests", 200)?;
             let policy_key = cli.value("--policy").unwrap_or("autoscale");
             let split_points = cli.switches.contains("--split-points");
+            let dvfs_steps =
+                autoscale::policy::validate_dvfs_steps(cli.num("--dvfs-steps", 0usize)?)? as usize;
             let runtime = cli.switches.contains("--runtime");
             let (ocfg, timeline_path, trace_path) = parse_obs(&cli)?;
             // Any cloud flag attaches the congestion-priced cloud model;
@@ -410,6 +418,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         seed,
                         policy_key,
                         split_points,
+                        dvfs_steps,
                         requests,
                         false,
                         None,
@@ -434,6 +443,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 seed,
                 policy_key,
                 split_points,
+                dvfs_steps,
                 requests,
                 runtime,
                 Some(&ocfg),
@@ -512,6 +522,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "--trace",
                     "--trace-sample",
                     "--trace-cap",
+                    "--dvfs-steps",
                 ],
                 &["--progress", "--split-points"],
                 0,
@@ -579,6 +590,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 // names with the key list straight from the registry.
                 policy: cli.value("--policy").unwrap_or("autoscale").to_string(),
                 split_points: cli.switches.contains("--split-points"),
+                // FleetConfig::validate re-checks the bound; parsing here
+                // only needs a plain usize.
+                dvfs_steps: cli.num("--dvfs-steps", 0usize)?,
                 arrival: ArrivalKind::from_name(arrival_name).ok_or_else(|| {
                     anyhow::anyhow!("unknown arrival '{arrival_name}' (poisson|diurnal|bursty)")
                 })?,
@@ -884,6 +898,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                  usage: autoscale <figure|all|serve|fleet|telemetry-check|bench|train|scenarios|runtime-check|list> [flags]\n\
                  common flags: --seed N --full --device D --env E --requests N --policy P\n\
                  \x20             --split-points (append partitioned-execution arms to the catalogue)\n\
+                 \x20             --dvfs-steps N (append N interior DVFS rungs per local processor\n\
+                 \x20             and turn on the sparsity-aware execution model; default 0 = off)\n\
                  \x20             --scenario-env K (see `autoscale scenarios`; `all` = batch smoke)\n\
                  serve: --runtime\n\
                  \x20       --cloud-capacity MMACS --batch-window S --max-batch N --stream-eff F\n\

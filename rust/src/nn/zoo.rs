@@ -34,6 +34,17 @@ pub struct NnDesc {
     /// Accuracy deltas for reduced precisions (subtracted from fp32).
     pub acc_drop_fp16: f64,
     pub acc_drop_int8: f64,
+    /// Average activation sparsity (fraction of zero inputs) per layer
+    /// class, SparseDVFS-style: ReLU conv stacks run ~25–55% zeros,
+    /// linear-bottleneck / h-swish nets less, GELU transformers almost
+    /// none. A MAC with a zero input is skippable by a
+    /// sparsity-exploiting processor (`exec::latency`).
+    pub sp_act_conv: f64,
+    pub sp_act_fc: f64,
+    pub sp_act_rc: f64,
+    /// Weight sparsity of the deployed model (magnitude-pruned zeros),
+    /// uniform across layer classes.
+    pub sp_weight: f64,
 }
 
 impl NnDesc {
@@ -56,6 +67,36 @@ impl NnDesc {
     pub fn artifact_base(&self) -> &'static str {
         self.name
     }
+
+    /// Per-layer-class MAC cost weights `(w_conv, w_fc, w_rc)` — the
+    /// relative compute density each layer instance contributes when
+    /// [`crate::exec::latency::layer_costs`] shares [`NnDesc::macs_m`]
+    /// over Table 3's layer counts. FCs are big GEMVs but fewer MACs each
+    /// at mobile sizes; recurrent layers are the heaviest per layer
+    /// (§2.1). One source of truth here keeps the latency model and any
+    /// partition-point math in agreement.
+    pub fn mac_weights(&self) -> (f64, f64, f64) {
+        (1.0, 0.6, 2.0)
+    }
+
+    /// Fraction of this network's MACs a perfect sparsity-exploiting
+    /// processor could skip: a MAC is skippable when its activation *or*
+    /// its weight is zero, so per class the skippable share is
+    /// `1 - (1 - act)(1 - weight)`, MAC-share weighted across classes.
+    pub fn skippable_mac_fraction(&self) -> f64 {
+        let (w_conv, w_fc, w_rc) = self.mac_weights();
+        let total = self.s_conv as f64 * w_conv
+            + self.s_fc as f64 * w_fc
+            + self.s_rc as f64 * w_rc;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let skip = |act: f64| 1.0 - (1.0 - act) * (1.0 - self.sp_weight);
+        (self.s_conv as f64 * w_conv * skip(self.sp_act_conv)
+            + self.s_fc as f64 * w_fc * skip(self.sp_act_fc)
+            + self.s_rc as f64 * w_rc * skip(self.sp_act_rc))
+            / total
+    }
 }
 
 /// Paper Table 3 + MLPerf/model-card MAC & size figures. Accuracy follows
@@ -75,6 +116,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.698,
         acc_drop_fp16: 0.002,
         acc_drop_int8: 0.058,
+        sp_act_conv: 0.55,
+        sp_act_fc: 0.65,
+        sp_act_rc: 0.00,
+        sp_weight: 0.10,
     },
     NnDesc {
         name: "inception_v3",
@@ -89,6 +134,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.780,
         acc_drop_fp16: 0.002,
         acc_drop_int8: 0.022,
+        sp_act_conv: 0.50,
+        sp_act_fc: 0.65,
+        sp_act_rc: 0.00,
+        sp_weight: 0.10,
     },
     NnDesc {
         name: "mobilenet_v1",
@@ -103,6 +152,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.709,
         acc_drop_fp16: 0.003,
         acc_drop_int8: 0.060,
+        sp_act_conv: 0.40,
+        sp_act_fc: 0.60,
+        sp_act_rc: 0.00,
+        sp_weight: 0.05,
     },
     NnDesc {
         name: "mobilenet_v2",
@@ -117,6 +170,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.718,
         acc_drop_fp16: 0.003,
         acc_drop_int8: 0.055,
+        sp_act_conv: 0.30,
+        sp_act_fc: 0.60,
+        sp_act_rc: 0.00,
+        sp_weight: 0.05,
     },
     NnDesc {
         name: "mobilenet_v3",
@@ -131,6 +188,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.752,
         acc_drop_fp16: 0.004,
         acc_drop_int8: 0.110,
+        sp_act_conv: 0.25,
+        sp_act_fc: 0.55,
+        sp_act_rc: 0.00,
+        sp_weight: 0.05,
     },
     NnDesc {
         name: "resnet50",
@@ -145,6 +206,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.761,
         acc_drop_fp16: 0.001,
         acc_drop_int8: 0.018,
+        sp_act_conv: 0.50,
+        sp_act_fc: 0.65,
+        sp_act_rc: 0.00,
+        sp_weight: 0.10,
     },
     NnDesc {
         name: "ssd_mobilenet_v1",
@@ -159,6 +224,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.680,
         acc_drop_fp16: 0.004,
         acc_drop_int8: 0.050,
+        sp_act_conv: 0.40,
+        sp_act_fc: 0.55,
+        sp_act_rc: 0.00,
+        sp_weight: 0.05,
     },
     NnDesc {
         name: "ssd_mobilenet_v2",
@@ -173,6 +242,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.690,
         acc_drop_fp16: 0.004,
         acc_drop_int8: 0.048,
+        sp_act_conv: 0.30,
+        sp_act_fc: 0.55,
+        sp_act_rc: 0.00,
+        sp_weight: 0.05,
     },
     NnDesc {
         name: "ssd_mobilenet_v3",
@@ -187,6 +260,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.701,
         acc_drop_fp16: 0.005,
         acc_drop_int8: 0.058,
+        sp_act_conv: 0.25,
+        sp_act_fc: 0.50,
+        sp_act_rc: 0.00,
+        sp_weight: 0.05,
     },
     NnDesc {
         name: "mobilebert",
@@ -201,6 +278,10 @@ pub const ZOO: [NnDesc; 10] = [
         acc_fp32: 0.903, // F1-style quality score
         acc_drop_fp16: 0.002,
         acc_drop_int8: 0.031,
+        sp_act_conv: 0.00,
+        sp_act_fc: 0.10,
+        sp_act_rc: 0.10,
+        sp_weight: 0.00,
     },
 ];
 

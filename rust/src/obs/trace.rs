@@ -83,7 +83,9 @@ impl TraceEvent {
     }
 
     /// The JSONL record for this event. Actions render through their
-    /// `Display` form (`site/proc@vf<step>/<precision>`).
+    /// `Display` form (`site/proc@vf<step>/<precision>`), so interior
+    /// DVFS rungs from `--dvfs-steps` catalogues are distinguishable in
+    /// traces without any schema change (`@vf4` vs the base `@vf0`).
     pub fn to_json(&self) -> Json {
         match *self {
             TraceEvent::Decision { t_s, id, nn, action, catalogue_idx, cloud_wait_s } => {

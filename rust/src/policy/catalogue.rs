@@ -1,18 +1,159 @@
 //! Action-catalogue construction: the action spaces policies decide over.
+//!
+//! One builder — [`CatalogueSpec`] — replaces the old
+//! `action_catalogue` / `compact_action_catalogue` / `*_with_splits`
+//! function family, so each new action dimension (split arms in PR 9,
+//! the DVFS ladder here) composes instead of spawning another
+//! `*_with_x_and_y(dev, bool, bool)` signature:
+//!
+//! ```
+//! use autoscale::policy::{CatalogueScope, CatalogueSpec};
+//! use autoscale::types::DeviceId;
+//! let acts = CatalogueSpec::new(DeviceId::Mi8Pro)
+//!     .scope(CatalogueScope::Compact)
+//!     .splits(true)
+//!     .dvfs(2)
+//!     .build();
+//! assert!(!acts.is_empty());
+//! ```
+//!
+//! **Ordering contract** (what every fingerprint pin relies on): the base
+//! catalogue for the chosen scope comes first, bit-identical to the
+//! pre-builder output; the split arms (if any) follow as one block; the
+//! DVFS arms (if any) are a strict suffix after the split arms. Turning a
+//! flag off never reorders what remains.
 
+use crate::device::presets::device;
 use crate::device::processor::Device;
-use crate::types::{Action, Precision, ProcKind, Site};
+use crate::types::{Action, DeviceId, Precision, ProcKind, Site};
 
 /// Interior indices of [`crate::exec::split::SPLIT_POINTS`] — the
 /// partition points that actually split the network (0 and 4 are the
 /// pure-local / pure-cloud extremes the Mono catalogue already covers).
 pub const INTERIOR_SPLITS: [u8; 3] = [1, 2, 3];
 
-/// Build the action catalogue for a device (§5.3 "Actions"): every local
-/// (processor, V/F step, supported precision) plus the two scale-out
-/// targets. Precisions below the accuracy floor are kept — the reward's
-/// accuracy gate teaches the agent to avoid them when the target is high.
-pub fn action_catalogue(dev: &Device) -> Vec<Action> {
+/// Upper bound on [`CatalogueSpec::dvfs`] — enough rungs to cover the
+/// deepest preset ladder usefully while keeping compact Q-tables small.
+/// Hosts validate user input through [`validate_dvfs_steps`] so CLI /
+/// TOML error text can never drift from the real bound.
+pub const MAX_DVFS_STEPS: u8 = 8;
+
+/// Validate a user-supplied DVFS-arm count (CLI `--dvfs-steps`, TOML
+/// `dvfs_steps`). `0` means off — the default.
+pub fn validate_dvfs_steps(steps: usize) -> anyhow::Result<u8> {
+    if steps > MAX_DVFS_STEPS as usize {
+        anyhow::bail!("dvfs_steps must be in 0..={MAX_DVFS_STEPS}, got {steps}");
+    }
+    Ok(steps as u8)
+}
+
+/// Which action space a built policy decides over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CatalogueScope {
+    /// Every (processor, V/F step, precision) plus the scale-out targets —
+    /// the single-device serving default.
+    Full,
+    /// Max-frequency (processor, precision) pairs plus scale-out — the
+    /// fleet default, bounding per-device learner memory.
+    Compact,
+}
+
+/// Declarative catalogue builder: device + scope + the opt-in action
+/// dimensions, composed in one place.
+///
+/// | old call | new call |
+/// |---|---|
+/// | `action_catalogue(&dev)` | `CatalogueSpec::new(id).build()` |
+/// | `compact_action_catalogue(&dev)` | `CatalogueSpec::new(id).scope(Compact).build()` |
+/// | `action_catalogue_with_splits(&dev, s)` | `CatalogueSpec::new(id).splits(s).build()` |
+/// | `compact_action_catalogue_with_splits(&dev, s)` | `CatalogueSpec::new(id).scope(Compact).splits(s).build()` |
+///
+/// Callers holding a constructed [`Device`] (rather than a preset id) use
+/// [`CatalogueSpec::build_on`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CatalogueSpec {
+    /// Preset whose processors/ladders the catalogue enumerates.
+    pub device: DeviceId,
+    /// Base flavour (see [`CatalogueScope`]).
+    pub scope: CatalogueScope,
+    /// Append the partitioned-execution (split) arms.
+    pub splits: bool,
+    /// Append `dvfs_steps` interior V/F rungs per (processor, precision)
+    /// to a [`CatalogueScope::Compact`] catalogue; `0` (default) is off.
+    /// The Full scope already enumerates every rung of every ladder, so
+    /// there this is a documented no-op — never a duplicate arm.
+    pub dvfs_steps: u8,
+}
+
+impl CatalogueSpec {
+    /// Default catalogue for `device`: Full scope, no split arms, no
+    /// extra DVFS arms — bit-identical to the historical
+    /// `action_catalogue`.
+    pub fn new(device: DeviceId) -> CatalogueSpec {
+        CatalogueSpec {
+            device,
+            scope: CatalogueScope::Full,
+            splits: false,
+            dvfs_steps: 0,
+        }
+    }
+
+    /// Select the base catalogue flavour.
+    pub fn scope(mut self, scope: CatalogueScope) -> CatalogueSpec {
+        self.scope = scope;
+        self
+    }
+
+    /// Opt in (or out) of the partitioned-execution arms.
+    pub fn splits(mut self, splits: bool) -> CatalogueSpec {
+        self.splits = splits;
+        self
+    }
+
+    /// Ask for `steps` interior V/F rungs per (processor, precision)
+    /// in the Compact scope (capped at [`MAX_DVFS_STEPS`]).
+    pub fn dvfs(mut self, steps: u8) -> CatalogueSpec {
+        self.dvfs_steps = steps.min(MAX_DVFS_STEPS);
+        self
+    }
+
+    /// Retarget the spec at another preset (hosts that iterate devices
+    /// reuse one spec and swap the id).
+    pub fn device(mut self, device: DeviceId) -> CatalogueSpec {
+        self.device = device;
+        self
+    }
+
+    /// Materialize the catalogue for the spec's preset device.
+    pub fn build(&self) -> Vec<Action> {
+        self.build_on(&device(self.device))
+    }
+
+    /// Materialize the catalogue on an already-constructed device (the
+    /// spec's `device` id is ignored; `dev` is the source of truth).
+    pub fn build_on(&self, dev: &Device) -> Vec<Action> {
+        let mut out = match self.scope {
+            CatalogueScope::Full => full_base(dev),
+            CatalogueScope::Compact => compact_base(dev),
+        };
+        if self.splits {
+            match self.scope {
+                CatalogueScope::Full => push_full_split_arms(dev, &mut out),
+                CatalogueScope::Compact => push_compact_split_arms(dev, &mut out),
+            }
+        }
+        if self.dvfs_steps > 0 && self.scope == CatalogueScope::Compact {
+            push_dvfs_arms(dev, self.dvfs_steps, &mut out);
+        }
+        out
+    }
+}
+
+/// Full base (§5.3 "Actions"): every local (processor, V/F step,
+/// supported precision) plus the two scale-out targets. Precisions below
+/// the accuracy floor are kept — the reward's accuracy gate teaches the
+/// agent to avoid them when the target is high.
+fn full_base(dev: &Device) -> Vec<Action> {
     let mut out: Vec<Action> = dev
         .local_actions()
         .into_iter()
@@ -23,14 +164,14 @@ pub fn action_catalogue(dev: &Device) -> Vec<Action> {
     out
 }
 
-/// Compact catalogue for fleet-scale learning: the max-frequency
+/// Compact base for fleet-scale learning: the max-frequency
 /// (processor, precision) pairs plus the two scale-out targets — every
 /// site/processor/precision choice, without the per-step DVFS sweep.
 /// One dense Q-table per device is what bounds fleet memory: dropping the
 /// DVFS axis shrinks each agent ~9x (63 -> 7 actions on the Mi8Pro), which
 /// is the difference between gigabytes and a few hundred MB at 1,000+
-/// devices. Single-device serving keeps the full [`action_catalogue`].
-pub fn compact_action_catalogue(dev: &Device) -> Vec<Action> {
+/// devices. Single-device serving keeps the full scope.
+fn compact_base(dev: &Device) -> Vec<Action> {
     let mut out: Vec<Action> = Vec::new();
     for p in &dev.processors {
         for &prec in &p.precisions {
@@ -42,43 +183,64 @@ pub fn compact_action_catalogue(dev: &Device) -> Vec<Action> {
     out
 }
 
-/// [`action_catalogue`] plus (optionally) the partitioned-execution arms:
-/// every interior split point crossed with each max-frequency
-/// (processor, precision) head combination. The split arms are appended
-/// strictly *after* the Mono catalogue, so with `splits == false` the
-/// result is bit-identical to [`action_catalogue`] — existing Q-table
-/// shapes and fingerprints don't move unless a policy opts in.
-pub fn action_catalogue_with_splits(dev: &Device, splits: bool) -> Vec<Action> {
-    let mut out = action_catalogue(dev);
-    if splits {
-        for &k in &INTERIOR_SPLITS {
-            for p in &dev.processors {
-                for &prec in &p.precisions {
-                    out.push(Action::split_at(k, p.kind, prec));
-                }
+/// Full-scope split arms: every interior split point crossed with each
+/// max-frequency (processor, precision) head combination, appended
+/// strictly *after* the Mono catalogue.
+fn push_full_split_arms(dev: &Device, out: &mut Vec<Action>) {
+    for &k in &INTERIOR_SPLITS {
+        for p in &dev.processors {
+            for &prec in &p.precisions {
+                out.push(Action::split_at(k, p.kind, prec));
             }
         }
     }
-    out
 }
 
-/// [`compact_action_catalogue`] plus (optionally) one split arm per
-/// interior point, using the device's best head processor — the compact
-/// catalogue trades coverage for Q-table size, and the head processor is
-/// the device's dominant local target (DSP INT8 where present, else GPU
-/// FP16, else CPU FP32).
-pub fn compact_action_catalogue_with_splits(dev: &Device, splits: bool) -> Vec<Action> {
-    let mut out = compact_action_catalogue(dev);
-    if splits {
-        let (proc, prec) = best_split_head(dev);
-        for &k in &INTERIOR_SPLITS {
-            out.push(Action::split_at(k, proc, prec));
+/// Compact-scope split arms: one arm per interior point on the device's
+/// best head processor — the compact catalogue trades coverage for
+/// Q-table size.
+fn push_compact_split_arms(dev: &Device, out: &mut Vec<Action>) {
+    let (proc, prec) = best_split_head(dev);
+    for &k in &INTERIOR_SPLITS {
+        out.push(Action::split_at(k, proc, prec));
+    }
+}
+
+/// Compact-scope DVFS arms: `steps` interior rungs of each processor's
+/// ladder crossed with its precisions, appended strictly after the split
+/// arms (if any). Rungs are picked evenly across `1..=last` by
+/// [`interior_vf_steps`], so the deepest rung (min frequency — the
+/// energy-floor candidate) is always included and rung 0 (max frequency,
+/// already in the base) never is. Processors whose effective ladder has a
+/// single rung — the DSP, whose §5.3 action space has no DVFS axis, and
+/// any degenerate one-entry table — contribute nothing.
+fn push_dvfs_arms(dev: &Device, steps: u8, out: &mut Vec<Action>) {
+    for p in &dev.processors {
+        let ladder = if p.kind == ProcKind::Dsp { 1 } else { p.vf.len() };
+        for idx in interior_vf_steps(ladder, steps) {
+            for &prec in &p.precisions {
+                out.push(Action::new(Site::Local, p.kind, idx, prec));
+            }
         }
     }
-    out
 }
 
-/// The head (processor, precision) a compact split arm runs at.
+/// `steps` evenly spaced interior indices of a `ladder`-entry V/F table:
+/// strictly increasing, always ending at the deepest rung `ladder - 1`,
+/// never including rung 0. Returns fewer than `steps` when the ladder is
+/// shallow, and nothing for a 0/1-entry ladder.
+pub fn interior_vf_steps(ladder: usize, steps: u8) -> Vec<u8> {
+    if ladder < 2 || steps == 0 {
+        return Vec::new();
+    }
+    let hi = ladder - 1; // deepest rung index
+    let n = (steps as usize).min(hi);
+    (1..=n).map(|j| (1 + (hi - 1) * j / n) as u8).collect()
+}
+
+/// The head (processor, precision) a compact split arm runs at: the
+/// device's dominant local target (DSP INT8 where present, else GPU
+/// FP16, else CPU FP32).
 pub(crate) fn best_split_head(dev: &Device) -> (ProcKind, Precision) {
     if dev.has(ProcKind::Dsp) {
         (ProcKind::Dsp, Precision::Int8)
@@ -89,16 +251,53 @@ pub(crate) fn best_split_head(dev: &Device) -> (ProcKind, Precision) {
     }
 }
 
+/// Deprecated shim for [`CatalogueSpec`] (`new(id).build()` /
+/// `.build_on(dev)`); kept one release for out-of-tree callers.
+#[deprecated(note = "use CatalogueSpec::new(dev.id).build_on(dev)")]
+pub fn action_catalogue(dev: &Device) -> Vec<Action> {
+    CatalogueSpec::new(dev.id).build_on(dev)
+}
+
+/// Deprecated shim for [`CatalogueSpec`] with
+/// [`CatalogueScope::Compact`]; kept one release for out-of-tree callers.
+#[deprecated(note = "use CatalogueSpec::new(dev.id).scope(CatalogueScope::Compact).build_on(dev)")]
+pub fn compact_action_catalogue(dev: &Device) -> Vec<Action> {
+    CatalogueSpec::new(dev.id).scope(CatalogueScope::Compact).build_on(dev)
+}
+
+/// Deprecated shim for [`CatalogueSpec`] with `.splits(..)`; kept one
+/// release for out-of-tree callers.
+#[deprecated(note = "use CatalogueSpec::new(dev.id).splits(splits).build_on(dev)")]
+pub fn action_catalogue_with_splits(dev: &Device, splits: bool) -> Vec<Action> {
+    CatalogueSpec::new(dev.id).splits(splits).build_on(dev)
+}
+
+/// Deprecated shim for [`CatalogueSpec`] with
+/// [`CatalogueScope::Compact`] and `.splits(..)`; kept one release for
+/// out-of-tree callers.
+#[deprecated(
+    note = "use CatalogueSpec::new(dev.id).scope(CatalogueScope::Compact).splits(splits).build_on(dev)"
+)]
+pub fn compact_action_catalogue_with_splits(dev: &Device, splits: bool) -> Vec<Action> {
+    CatalogueSpec::new(dev.id)
+        .scope(CatalogueScope::Compact)
+        .splits(splits)
+        .build_on(dev)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::device::presets::device;
     use crate::types::{DeviceId, ProcKind};
 
+    fn spec(id: DeviceId) -> CatalogueSpec {
+        CatalogueSpec::new(id)
+    }
+
     #[test]
     fn catalogue_covers_local_and_remote() {
-        let dev = device(DeviceId::Mi8Pro);
-        let acts = action_catalogue(&dev);
+        let acts = spec(DeviceId::Mi8Pro).build();
         // 23 cpu steps x 2 precisions + 7 gpu steps x 2 + 1 dsp + 2 remote
         assert_eq!(acts.len(), 23 * 2 + 7 * 2 + 1 + 2);
         assert!(acts.iter().any(|a| a.site == Site::Cloud));
@@ -112,35 +311,57 @@ mod tests {
 
     #[test]
     fn compact_catalogue_covers_sites_without_dvfs() {
-        let dev = device(DeviceId::Mi8Pro);
-        let acts = compact_action_catalogue(&dev);
+        let acts = spec(DeviceId::Mi8Pro).scope(CatalogueScope::Compact).build();
         // 2 cpu precisions + 2 gpu + 1 dsp + 2 remote
         assert_eq!(acts.len(), 7);
         assert!(acts.iter().all(|a| a.vf_step == 0));
         assert!(acts.iter().any(|a| a.site == Site::Cloud));
         assert!(acts.iter().any(|a| a.site == Site::ConnectedEdge));
         // strict subset of the full catalogue
-        let full = action_catalogue(&dev);
+        let full = spec(DeviceId::Mi8Pro).build();
         assert!(acts.iter().all(|a| full.contains(a)));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_are_bit_identical_to_the_builder() {
+        // The one-release compatibility contract: every old entry point
+        // returns exactly what the equivalent CatalogueSpec builds.
+        for id in [DeviceId::Mi8Pro, DeviceId::GalaxyS10e, DeviceId::MotoXForce] {
+            let dev = device(id);
+            assert_eq!(action_catalogue(&dev), spec(id).build());
+            assert_eq!(
+                compact_action_catalogue(&dev),
+                spec(id).scope(CatalogueScope::Compact).build()
+            );
+            for splits in [false, true] {
+                assert_eq!(
+                    action_catalogue_with_splits(&dev, splits),
+                    spec(id).splits(splits).build()
+                );
+                assert_eq!(
+                    compact_action_catalogue_with_splits(&dev, splits),
+                    spec(id).scope(CatalogueScope::Compact).splits(splits).build()
+                );
+            }
+        }
     }
 
     #[test]
     fn split_flag_off_is_bit_identical_to_the_default_catalogues() {
         for id in [DeviceId::Mi8Pro, DeviceId::GalaxyS10e, DeviceId::MotoXForce] {
-            let dev = device(id);
-            assert_eq!(action_catalogue_with_splits(&dev, false), action_catalogue(&dev));
+            assert_eq!(spec(id).splits(false).build(), spec(id).build());
             assert_eq!(
-                compact_action_catalogue_with_splits(&dev, false),
-                compact_action_catalogue(&dev)
+                spec(id).scope(CatalogueScope::Compact).splits(false).build(),
+                spec(id).scope(CatalogueScope::Compact).build()
             );
         }
     }
 
     #[test]
     fn split_arms_are_appended_after_the_mono_prefix() {
-        let dev = device(DeviceId::Mi8Pro);
-        let base = action_catalogue(&dev);
-        let full = action_catalogue_with_splits(&dev, true);
+        let base = spec(DeviceId::Mi8Pro).build();
+        let full = spec(DeviceId::Mi8Pro).splits(true).build();
         // Mono catalogue is an untouched prefix; only split arms follow.
         assert_eq!(&full[..base.len()], &base[..]);
         // 3 interior points x 5 max-freq (proc, precision) pairs
@@ -148,8 +369,9 @@ mod tests {
         assert!(full[base.len()..].iter().all(|a| a.split.is_split()));
         assert!(full[base.len()..].iter().all(|a| a.vf_step == 0));
 
-        let cbase = compact_action_catalogue(&dev);
-        let compact = compact_action_catalogue_with_splits(&dev, true);
+        let cbase = spec(DeviceId::Mi8Pro).scope(CatalogueScope::Compact).build();
+        let compact =
+            spec(DeviceId::Mi8Pro).scope(CatalogueScope::Compact).splits(true).build();
         assert_eq!(&compact[..cbase.len()], &cbase[..]);
         assert_eq!(compact.len(), cbase.len() + 3); // one arm per interior point
         // Mi8Pro has a DSP: compact split heads run on it at INT8.
@@ -164,9 +386,81 @@ mod tests {
     }
 
     #[test]
+    fn dvfs_flag_off_is_bit_identical_and_full_scope_is_a_no_op() {
+        for id in [DeviceId::Mi8Pro, DeviceId::GalaxyS10e, DeviceId::MotoXForce] {
+            // steps = 0 (the default) changes nothing in either scope.
+            assert_eq!(spec(id).dvfs(0).build(), spec(id).build());
+            let c = spec(id).scope(CatalogueScope::Compact);
+            assert_eq!(c.dvfs(0).build(), c.build());
+            // Full scope already enumerates every rung: documented no-op.
+            assert_eq!(spec(id).dvfs(3).build(), spec(id).build());
+            assert_eq!(spec(id).splits(true).dvfs(3).build(), spec(id).splits(true).build());
+        }
+    }
+
+    #[test]
+    fn dvfs_arms_are_a_strict_suffix_after_the_split_arms() {
+        let c = spec(DeviceId::Mi8Pro).scope(CatalogueScope::Compact);
+        let with_splits = c.splits(true).build();
+        let with_both = c.splits(true).dvfs(2).build();
+        // [compact base][split arms] is an untouched prefix...
+        assert_eq!(&with_both[..with_splits.len()], &with_splits[..]);
+        // ...and every appended arm is a Mono interior-rung local action:
+        // 2 rungs x 2 precisions on the CPU and GPU each; none on the DSP
+        // (its §5.3 action space has no DVFS axis).
+        let suffix = &with_both[with_splits.len()..];
+        assert_eq!(suffix.len(), 2 * 2 + 2 * 2);
+        assert!(suffix.iter().all(|a| {
+            a.site == Site::Local && a.vf_step > 0 && !a.split.is_split()
+        }));
+        assert!(suffix.iter().all(|a| a.proc != ProcKind::Dsp));
+        // uniqueness across the whole multiplied catalogue
+        let mut dedup = with_both.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), with_both.len());
+        // every DVFS arm exists in the full catalogue (same rung indices)
+        let full = spec(DeviceId::Mi8Pro).build();
+        assert!(suffix.iter().all(|a| full.contains(a)));
+    }
+
+    #[test]
+    fn dvfs_arm_construction_is_stable_and_ordered() {
+        // Rung selection is deterministic and evenly spaced: deepest rung
+        // always included, rung 0 never, strictly increasing.
+        assert_eq!(interior_vf_steps(23, 3), vec![8, 15, 22]);
+        assert_eq!(interior_vf_steps(23, 2), vec![11, 22]);
+        assert_eq!(interior_vf_steps(7, 2), vec![3, 6]);
+        assert_eq!(interior_vf_steps(7, 3), vec![2, 4, 6]);
+        // shallow ladders clamp; degenerate ladders contribute nothing
+        assert_eq!(interior_vf_steps(3, 8), vec![1, 2]);
+        assert_eq!(interior_vf_steps(1, 4), Vec::<u8>::new());
+        assert_eq!(interior_vf_steps(0, 4), Vec::<u8>::new());
+        for ladder in 2..=24usize {
+            for steps in 1..=MAX_DVFS_STEPS {
+                let v = interior_vf_steps(ladder, steps);
+                assert!(v.windows(2).all(|w| w[0] < w[1]), "{ladder}/{steps}: {v:?}");
+                assert_eq!(*v.last().unwrap() as usize, ladder - 1);
+                assert!(v.iter().all(|&i| i > 0));
+            }
+        }
+        // identical specs build identical catalogues (stable Ord inputs)
+        let c = spec(DeviceId::Mi8Pro).scope(CatalogueScope::Compact).dvfs(3);
+        assert_eq!(c.build(), c.build());
+    }
+
+    #[test]
+    fn dvfs_steps_validation_matches_the_exported_bound() {
+        assert_eq!(validate_dvfs_steps(0).unwrap(), 0);
+        assert_eq!(validate_dvfs_steps(MAX_DVFS_STEPS as usize).unwrap(), MAX_DVFS_STEPS);
+        let err = validate_dvfs_steps(MAX_DVFS_STEPS as usize + 1).unwrap_err().to_string();
+        assert!(err.contains("dvfs_steps"), "{err}");
+        assert!(err.contains(&MAX_DVFS_STEPS.to_string()), "{err}");
+    }
+
+    #[test]
     fn s10e_catalogue_has_no_dsp() {
-        let dev = device(DeviceId::GalaxyS10e);
-        let acts = action_catalogue(&dev);
+        let acts = spec(DeviceId::GalaxyS10e).build();
         assert!(acts
             .iter()
             .all(|a| !(a.site == Site::Local && a.proc == ProcKind::Dsp)));

@@ -61,7 +61,7 @@ impl FixedTargetPolicy {
     /// processor — the offline-profiled Neurosurgeon-style plan the
     /// online learner is contrasted against. The catalogue must include
     /// the split arms (build it with
-    /// [`super::action_catalogue_with_splits`]).
+    /// [`super::CatalogueSpec`]`::new(id).splits(true)`).
     pub fn static_split(catalogue: Vec<Action>) -> FixedTargetPolicy {
         FixedTargetPolicy {
             name: "Split(static)",
@@ -143,7 +143,7 @@ mod tests {
         use crate::configsys::runconfig::EnvKind;
 
         let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
-        let catalogue = super::super::action_catalogue(&env.sim.local);
+        let catalogue = super::super::CatalogueSpec::new(DeviceId::Mi8Pro).build();
         let nn = by_name("inception_v1").unwrap();
         let obs = StateObs::from_parts(nn, Default::default(), -60.0, -55.0);
         let ctx = DecisionCtx {

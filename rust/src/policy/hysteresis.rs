@@ -97,7 +97,7 @@ mod tests {
     use crate::configsys::runconfig::EnvKind;
     use crate::coordinator::envs::Environment;
     use crate::nn::zoo::by_name;
-    use crate::policy::action_catalogue;
+    use crate::policy::CatalogueSpec;
     use crate::types::{DeviceId, Site};
 
     /// Drive one decision at a given sensed WLAN RSSI.
@@ -120,7 +120,7 @@ mod tests {
 
     fn setup() -> (HysteresisPolicy, Environment) {
         let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
-        let catalogue = action_catalogue(&env.sim.local);
+        let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
         (HysteresisPolicy::with_band(catalogue, -70.0, -80.0, 2), env)
     }
 

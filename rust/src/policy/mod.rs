@@ -21,11 +21,17 @@
 //! forcing dispatch logic to live inside the hosts.
 //!
 //! Actions are execution *plans*: besides site/processor/DVFS/precision
-//! they carry a [`crate::types::SplitPoint`] partition dimension. The
-//! split arms are appended to a catalogue only when
-//! [`PolicySpec::splits`] opts in (or the policy is split-native, like
-//! [`neurosurgeon`]), so default action spaces are bit-identical to the
-//! pre-partition ones.
+//! they carry a [`crate::types::SplitPoint`] partition dimension. Action
+//! spaces are declared through one builder, [`CatalogueSpec`]
+//! (`CatalogueSpec::new(device).scope(..).splits(..).dvfs(..)` →
+//! `Vec<Action>`), which [`PolicySpec`] embeds: the split arms and the
+//! interior DVFS rungs are appended only when a host (or a split-native
+//! policy like [`neurosurgeon`]) opts in, so default action spaces are
+//! bit-identical to the pre-partition, pre-DVFS ones. The DVFS arms let
+//! compact-scope fleet learners trade frequency against offload — the
+//! sparsity-/DVFS-aware execution model in [`crate::exec::latency`]
+//! prices those rungs — while the Full scope already enumerates every
+//! ladder rung and is unchanged.
 //!
 //! ## Adding a policy
 //!
@@ -54,9 +60,13 @@ use crate::nn::zoo::NnDesc;
 use crate::types::Action;
 
 pub use bandit::BanditPolicy;
+#[allow(deprecated)]
 pub use catalogue::{
     action_catalogue, action_catalogue_with_splits, compact_action_catalogue,
     compact_action_catalogue_with_splits,
+};
+pub use catalogue::{
+    interior_vf_steps, validate_dvfs_steps, CatalogueScope, CatalogueSpec, MAX_DVFS_STEPS,
 };
 pub use fixed::{edge_best_action, FixedTargetPolicy};
 pub use hysteresis::HysteresisPolicy;
@@ -67,7 +77,7 @@ pub use predictors::{
     RegModel, RegressionPolicy, Sample,
 };
 pub use registry::{
-    build, is_known, names, wants_splits, CatalogueScope, PolicySpec, PrototypeArena, REGISTRY,
+    build, is_known, names, wants_splits, PolicySpec, PrototypeArena, REGISTRY,
 };
 pub use rl::AutoScalePolicy;
 

@@ -119,7 +119,7 @@ mod tests {
     use crate::agent::state::{State, StateObs};
     use crate::configsys::runconfig::EnvKind;
     use crate::coordinator::envs::Environment;
-    use crate::policy::action_catalogue;
+    use crate::policy::CatalogueSpec;
     use crate::types::DeviceId;
 
     #[test]
@@ -170,8 +170,7 @@ mod tests {
         // like a monolithic offload, so Opt must drop split arms from the
         // what-if while the cloud rejects.
         let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 7);
-        let catalogue =
-            crate::policy::action_catalogue_with_splits(&env.sim.local, true);
+        let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).splits(true).build();
         let nn = crate::nn::zoo::by_name("resnet50").unwrap();
         let obs = StateObs::from_parts(nn, Default::default(), -55.0, -50.0);
         let mut p = OptPolicy::new(catalogue.clone());
@@ -197,7 +196,7 @@ mod tests {
     #[test]
     fn full_catalogue_decision_indexes_correctly() {
         let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 4);
-        let catalogue = action_catalogue(&env.sim.local);
+        let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
         let nn = crate::nn::zoo::by_name("mobilenet_v1").unwrap();
         let obs = StateObs::from_parts(nn, Default::default(), -55.0, -50.0);
         let mut p = OptPolicy::new(catalogue.clone());

@@ -179,7 +179,7 @@ pub fn collect_dataset(
     per_env: usize,
     seed: u64,
 ) -> (Vec<Sample>, Vec<Action>) {
-    let catalogue = super::action_catalogue(&crate::device::presets::device(dev));
+    let catalogue = super::CatalogueSpec::new(dev).build();
     let mut samples = Vec::new();
     let mut rng = Pcg64::new(seed);
     for (ei, env) in envs.iter().enumerate() {

@@ -8,11 +8,10 @@ use std::collections::HashMap;
 
 use crate::agent::qlearn::AutoScaleAgent;
 use crate::configsys::runconfig::{AgentParams, EnvKind, Scenario};
-use crate::device::presets::device;
 use crate::types::{Action, DeviceId};
 
 use super::bandit::BanditPolicy;
-use super::catalogue::{action_catalogue_with_splits, compact_action_catalogue_with_splits};
+pub use super::catalogue::{CatalogueScope, CatalogueSpec};
 use super::fixed::FixedTargetPolicy;
 use super::hysteresis::HysteresisPolicy;
 use super::neurosurgeon::NeurosurgeonPolicy;
@@ -20,17 +19,6 @@ use super::oracle::OptPolicy;
 use super::predictors::{collect_dataset, fit_classifier, fit_regression};
 use super::rl::AutoScalePolicy;
 use super::ScalingPolicy;
-
-/// Which action space a built policy decides over.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CatalogueScope {
-    /// Every (processor, V/F step, precision) plus the scale-out targets —
-    /// the single-device serving default.
-    Full,
-    /// Max-frequency (processor, precision) pairs plus scale-out — the
-    /// fleet default, bounding per-device learner memory.
-    Compact,
-}
 
 /// Everything a registry builder may need. `PolicySpec::new` fills
 /// sensible defaults; hosts override the fields they care about.
@@ -42,9 +30,12 @@ pub struct PolicySpec {
     pub seed: u64,
     /// Q-learning hyper-parameters (AutoScale).
     pub agent: AgentParams,
-    /// Catalogue flavour ([`CatalogueScope::Full`] for single-device
-    /// serving, [`CatalogueScope::Compact`] at fleet scale).
-    pub scope: CatalogueScope,
+    /// The action space the policy decides over: scope plus the opt-in
+    /// split / DVFS arm dimensions, as one [`CatalogueSpec`]. Its
+    /// `device` field is kept in lockstep with [`PolicySpec::device`] by
+    /// [`PolicySpec::catalogue`], so hosts that retarget the spec only
+    /// touch one field.
+    pub catalogue: CatalogueSpec,
     /// Scenario whose QoS bound predictor training labels against.
     pub scenario: Scenario,
     /// Accuracy target predictor training labels against.
@@ -54,10 +45,6 @@ pub struct PolicySpec {
     pub train_envs: Vec<EnvKind>,
     /// Profiling samples per training environment.
     pub train_per_env: usize,
-    /// Append the partitioned-execution (split) arms to the catalogue.
-    /// Off by default: existing catalogues and Q-table shapes stay
-    /// bit-identical unless a host (or a split-native policy) opts in.
-    pub splits: bool,
 }
 
 impl PolicySpec {
@@ -66,25 +53,17 @@ impl PolicySpec {
             device,
             seed,
             agent: AgentParams::default(),
-            scope: CatalogueScope::Full,
+            catalogue: CatalogueSpec::new(device),
             scenario: Scenario::NonStreaming,
             accuracy_target: 0.5,
             train_envs: EnvKind::STATIC.to_vec(),
             train_per_env: 40,
-            splits: false,
         }
     }
 
-    /// The catalogue this spec's scope (and split flag) selects.
+    /// The catalogue this spec selects, built on [`PolicySpec::device`].
     pub fn catalogue(&self) -> Vec<Action> {
-        match self.scope {
-            CatalogueScope::Full => {
-                action_catalogue_with_splits(&device(self.device), self.splits)
-            }
-            CatalogueScope::Compact => {
-                compact_action_catalogue_with_splits(&device(self.device), self.splits)
-            }
-        }
+        self.catalogue.device(self.device).build()
     }
 }
 
@@ -123,10 +102,12 @@ pub const REGISTRY: &[PolicyEntry] = &[
         build: |spec| {
             // The oracle always what-ifs the full DVFS catalogue (plus the
             // split arms when the spec opts in — Opt searches those too).
-            Box::new(OptPolicy::new(action_catalogue_with_splits(
-                &device(spec.device),
-                spec.splits,
-            )))
+            Box::new(OptPolicy::new(
+                spec.catalogue
+                    .device(spec.device)
+                    .scope(CatalogueScope::Full)
+                    .build(),
+            ))
         },
     },
     PolicyEntry {
@@ -177,16 +158,16 @@ pub const REGISTRY: &[PolicyEntry] = &[
             // Split-native: the partition arms ARE its decision space, so
             // it forces the split flag on regardless of the host's spec.
             let mut with_splits = spec.clone();
-            with_splits.splits = true;
+            with_splits.catalogue = with_splits.catalogue.splits(true);
             Box::new(NeurosurgeonPolicy::new(with_splits.catalogue(), spec.seed))
         },
     },
 ];
 
 /// Does this policy key require the split (partitioned-execution) arms in
-/// its catalogue? Hosts OR this into [`PolicySpec::splits`] so a
-/// split-native policy works with zero caller changes, while every other
-/// key keeps the default (bit-identical) catalogue.
+/// its catalogue? Hosts OR this into their [`CatalogueSpec::splits`] flag
+/// so a split-native policy works with zero caller changes, while every
+/// other key keeps the default (bit-identical) catalogue.
 pub fn wants_splits(key: &str) -> bool {
     key == "neurosurgeon"
 }
@@ -202,7 +183,7 @@ fn fit_classifier_spec(spec: &PolicySpec, knn: bool) -> super::predictors::Class
 }
 
 /// Offline-profiling dataset for the predictor builders. Like the Opt
-/// oracle, the predictors ignore [`PolicySpec::scope`]: they are trained
+/// oracle, the predictors ignore the spec's [`CatalogueScope`]: they are trained
 /// over (and decide over) the full profiling catalogue, because their
 /// per-action models are labeled by what-if evaluating every DVFS step.
 /// Fleet memory stays bounded via [`ScalingPolicy::clone_box`] — one
@@ -312,12 +293,36 @@ mod tests {
     fn scope_selects_the_catalogue_flavour() {
         let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
         let full = build("autoscale", &spec).unwrap().catalogue().len();
-        spec.scope = CatalogueScope::Compact;
+        spec.catalogue = spec.catalogue.scope(CatalogueScope::Compact);
         let compact = build("autoscale", &spec).unwrap().catalogue().len();
         assert!(full > compact, "{full} vs {compact}");
         assert_eq!(compact, 7);
         // The oracle ignores scope: it always needs the full DVFS sweep.
         assert_eq!(build("opt", &spec).unwrap().catalogue().len(), full);
+    }
+
+    #[test]
+    fn dvfs_steps_grow_the_compact_catalogue_for_learners() {
+        // The DVFS dimension threads through the spec like the split flag:
+        // compact learners grow by the interior-rung arms, the oracle (and
+        // any Full-scope policy) is unchanged because the full sweep
+        // already enumerates every rung.
+        let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
+        spec.catalogue = spec.catalogue.scope(CatalogueScope::Compact);
+        let base = build("autoscale", &spec).unwrap().catalogue().len();
+        let opt_base = build("opt", &spec).unwrap().catalogue().len();
+        spec.catalogue = spec.catalogue.dvfs(2);
+        let grown = build("autoscale", &spec).unwrap().catalogue().len();
+        // 2 interior rungs x 2 precisions on CPU and GPU; none on the DSP
+        assert_eq!(grown, base + 8);
+        assert_eq!(build("opt", &spec).unwrap().catalogue().len(), opt_base);
+        // bandit and neurosurgeon see the same multiplied space
+        assert_eq!(build("bandit", &spec).unwrap().catalogue().len(), grown);
+        assert!(build("neurosurgeon", &spec)
+            .unwrap()
+            .catalogue()
+            .iter()
+            .any(|a| a.vf_step > 0));
     }
 
     #[test]
@@ -376,13 +381,13 @@ mod tests {
     fn split_flag_grows_the_catalogue_and_neurosurgeon_forces_it() {
         let mut spec = PolicySpec::new(DeviceId::Mi8Pro, 7);
         let base = spec.catalogue().len();
-        spec.splits = true;
+        spec.catalogue = spec.catalogue.splits(true);
         let grown = spec.catalogue().len();
         assert!(grown > base, "{grown} vs {base}");
         // the Mono prefix is untouched; split arms are a strict suffix
-        spec.splits = false;
+        spec.catalogue = spec.catalogue.splits(false);
         let default_cat = spec.catalogue();
-        spec.splits = true;
+        spec.catalogue = spec.catalogue.splits(true);
         assert_eq!(&spec.catalogue()[..base], &default_cat[..]);
         // neurosurgeon opts in by itself, even from a default spec
         assert!(wants_splits("neurosurgeon") && !wants_splits("autoscale"));

@@ -55,13 +55,13 @@ mod tests {
     use crate::agent::state::{State, StateObs};
     use crate::configsys::runconfig::EnvKind;
     use crate::coordinator::envs::Environment;
-    use crate::policy::action_catalogue;
+    use crate::policy::CatalogueSpec;
     use crate::types::DeviceId;
 
     #[test]
     fn decide_and_feedback_drive_the_q_table() {
         let env = Environment::build(DeviceId::Mi8Pro, EnvKind::S1NoVariance, 1);
-        let catalogue = action_catalogue(&env.sim.local);
+        let catalogue = CatalogueSpec::new(DeviceId::Mi8Pro).build();
         let mut p = AutoScalePolicy::new(AutoScaleAgent::new(
             catalogue.clone(),
             Default::default(),

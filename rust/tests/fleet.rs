@@ -70,7 +70,7 @@ mod reference {
                 None => {
                     let mut spec = PolicySpec::new(dev_id, dseed);
                     spec.agent = cfg.agent;
-                    spec.scope = CatalogueScope::Compact;
+                    spec.catalogue = spec.catalogue.scope(CatalogueScope::Compact);
                     spec.scenario = cfg.scenario;
                     spec.accuracy_target = cfg.accuracy_target;
                     let built = autoscale::policy::build(&cfg.policy, &spec).unwrap();

@@ -5,7 +5,7 @@
 use autoscale::agent::qlearn::AutoScaleAgent;
 use autoscale::configsys::runconfig::{EnvKind, Scenario};
 use autoscale::experiments::common::{run_episode, train_autoscale};
-use autoscale::policy::{action_catalogue, AutoScalePolicy, PolicySpec, ScalingPolicy};
+use autoscale::policy::{AutoScalePolicy, CatalogueSpec, PolicySpec, ScalingPolicy};
 use autoscale::types::DeviceId;
 
 /// Registry-built policy on the default single-device spec.
@@ -140,7 +140,7 @@ fn new_policies_serve_complete_episodes() {
 fn catalogue_actions_all_executable() {
     // Every action in the catalogue must produce a finite measurement.
     let dev = DeviceId::Mi8Pro;
-    let catalogue = action_catalogue(&autoscale::device::presets::device(dev));
+    let catalogue = CatalogueSpec::new(dev).build();
     let mut env = autoscale::coordinator::envs::Environment::build(dev, EnvKind::S1NoVariance, 3);
     let nn = autoscale::nn::zoo::by_name("resnet50").unwrap();
     for a in catalogue {

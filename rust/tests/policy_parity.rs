@@ -24,8 +24,8 @@ use autoscale::exec::outcome::ExecOutcome;
 use autoscale::experiments::common::run_episode;
 use autoscale::interference::Interference;
 use autoscale::policy::{
-    action_catalogue, collect_dataset, edge_best_action, fit_classifier, fit_regression,
-    oracle_best_action, ClassifierPolicy, PolicySpec, RegressionPolicy,
+    collect_dataset, edge_best_action, fit_classifier, fit_regression, oracle_best_action,
+    CatalogueSpec, ClassifierPolicy, PolicySpec, RegressionPolicy,
 };
 use autoscale::types::{Action, DeviceId, Precision, ProcKind};
 use autoscale::util::clock::VirtualClock;
@@ -84,7 +84,7 @@ mod reference {
                 OldPolicy::CloudAlways => (0, Action::cloud()),
                 OldPolicy::ConnectedEdgeAlways => (0, Action::connected_edge()),
                 OldPolicy::Opt => {
-                    let catalogue = action_catalogue(&env.sim.local);
+                    let catalogue = CatalogueSpec::new(DEV).build();
                     let ctx = RunContext {
                         interference: Interference {
                             cpu_util: obs.co_cpu,
@@ -205,11 +205,7 @@ fn parity_autoscale_learning_online() {
     // Fresh unfrozen agent, exactly as `serve --policy autoscale` built it:
     // full catalogue, default params, CLI seed.
     let seed = 13;
-    let agent = AutoScaleAgent::new(
-        action_catalogue(&autoscale::device::presets::device(DEV)),
-        AgentParams::default(),
-        seed,
-    );
+    let agent = AutoScaleAgent::new(CatalogueSpec::new(DEV).build(), AgentParams::default(), seed);
     let want =
         reference::episode(reference::OldPolicy::AutoScale(agent), EnvKind::D3RandomWlan, seed);
     let got = new_path("autoscale", EnvKind::D3RandomWlan, seed);

@@ -7,7 +7,7 @@ use autoscale::agent::reward::{reward, RewardParams};
 use autoscale::agent::state::{State, StateObs};
 use autoscale::configsys::runconfig::EnvKind;
 use autoscale::coordinator::envs::Environment;
-use autoscale::policy::action_catalogue;
+use autoscale::policy::CatalogueSpec;
 use autoscale::exec::latency::RunContext;
 use autoscale::interference::Interference;
 use autoscale::net::{LinkKind, LinkParams, RssiProcess, WEAK_RSSI_DBM};
@@ -30,7 +30,7 @@ fn prop_simulator_outputs_always_physical() {
         let env_kind = *g.choose(&envs);
         let seed = g.usize_in(0, 10_000) as u64;
         let mut env = Environment::build(dev, env_kind, seed);
-        let catalogue = action_catalogue(&env.sim.local);
+        let catalogue = CatalogueSpec::new(dev).build();
         let action = *g.choose(&catalogue);
         let nn = g.choose(&ZOO);
         let ctx = RunContext {
@@ -290,7 +290,7 @@ fn prop_catalogue_respects_device_capabilities() {
     Runner::new("catalogue_valid", 60).run(|g| {
         let dev_id = *g.choose(&DeviceId::PHONES);
         let dev = autoscale::device::presets::device(dev_id);
-        for a in action_catalogue(&dev) {
+        for a in CatalogueSpec::new(dev_id).build() {
             if a.site == autoscale::types::Site::Local {
                 let proc = dev.proc(a.proc);
                 ptassert!(proc.is_some(), "{dev_id}: catalogue references absent {}", a.proc);

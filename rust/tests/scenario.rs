@@ -108,7 +108,7 @@ fn q_learner_retreats_from_a_dead_zone() {
     // episode, and a tiny epsilon so late-episode random exploration does
     // not drown the systematic retreat the test pins.
     let mut spec = PolicySpec::new(DEV, 21);
-    spec.scope = CatalogueScope::Compact;
+    spec.catalogue = spec.catalogue.scope(CatalogueScope::Compact);
     spec.agent.epsilon = 0.01;
     let policy = autoscale::policy::build("autoscale", &spec).unwrap();
     let mut run = RunConfig::default();
